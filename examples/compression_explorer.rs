@@ -1,0 +1,104 @@
+//! compression_explorer: interactive-style tour of the compression
+//! substrate. Compresses (a) controlled synthetic distributions, (b) every
+//! benchmark's real NPU streams, and (c) a whole LCP page walk-through
+//! with address calculations — the E1/E7 machinery narrated.
+//!
+//! Run: `cargo run --release --example compression_explorer`
+//! (works without artifacts; uses trained weights when available)
+
+use anyhow::Result;
+use snnap_c::bench_suite::all_workloads;
+use snnap_c::compress::lcp::{LcpPage, VariableSizedPage, PAGE_BYTES};
+use snnap_c::compress::{compress_stream, Bdi, Compressor, Fpc, Hybrid, SchemeReport};
+use snnap_c::experiments::{load_manifest, program_from_artifact, program_from_workload};
+use snnap_c::fixed::Q7_8;
+use snnap_c::trace::{Synthetic, Trace};
+use snnap_c::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let mut rng = Rng::new(2016);
+
+    println!("== one line, three schemes ==");
+    let mut line = [0u8; 64];
+    for (i, c) in line.chunks_exact_mut(4).enumerate() {
+        c.copy_from_slice(&(0x1000_0000u32 + 4 * i as u32).to_le_bytes());
+    }
+    for c in [&Bdi as &dyn Compressor, &Fpc, &Hybrid::default()] {
+        let z = c.compress(&line);
+        println!(
+            "  {:<8} {:>4} bits ({:.2}x)  encoding {:?}",
+            c.name(),
+            z.size_bits,
+            z.ratio(),
+            z.encoding
+        );
+        assert_eq!(c.decompress(&z), line, "roundtrip");
+    }
+
+    println!("\n== synthetic distributions ==");
+    for s in Synthetic::all() {
+        let data = s.generate(64 * 256, &mut rng);
+        print!("{}", SchemeReport::measure(&s.name(), &data).table());
+    }
+
+    println!("\n== real NPU streams (per benchmark) ==");
+    let manifest = load_manifest().ok();
+    for w in all_workloads() {
+        let program = match &manifest {
+            Some(m) => program_from_artifact(m, w.name(), Q7_8)?,
+            None => program_from_workload(w.as_ref(), Q7_8, 1),
+        };
+        let weights = Trace::weights(&program);
+        print!("{}", SchemeReport::measure(&format!("{}/weights", w.name()), &weights.bytes).table());
+    }
+
+    println!("\n== LCP page anatomy ==");
+    let comp = Hybrid::default();
+    let page = {
+        let mut p = Synthetic::FixedPoint { sigma_quanta: 48 }.generate(PAGE_BYTES / 2, &mut rng);
+        p.extend(Synthetic::Noise.generate(PAGE_BYTES / 4, &mut rng));
+        p.resize(PAGE_BYTES, 0);
+        p
+    };
+    let lcp = LcpPage::pack(&page, &comp);
+    let var = VariableSizedPage::pack(&page, &comp);
+    println!(
+        "  LCP: slot={}B exceptions={} physical={}B ratio={:.2}x",
+        lcp.slot_size,
+        lcp.exception_count(),
+        lcp.physical_size(),
+        lcp.ratio()
+    );
+    println!(
+        "  variable-size baseline: physical={}B ratio={:.2}x",
+        var.physical_size(),
+        var.ratio()
+    );
+    for i in [0usize, 31, 63] {
+        let a = lcp.line_address(i);
+        let v = var.line_address(i);
+        println!(
+            "  line {i:>2}: LCP offset {:>5} ({} metadata access)   variable offset {:>5} ({} metadata accesses)",
+            a.offset, a.metadata_accesses, v.offset, v.metadata_accesses
+        );
+    }
+    // every line must read back bit-exactly through both layouts
+    for i in 0..64 {
+        assert_eq!(lcp.read_line(i, &comp), &page[i * 64..(i + 1) * 64]);
+        assert_eq!(var.read_line(i, &comp), &page[i * 64..(i + 1) * 64]);
+    }
+
+    println!("\n== compressing an arbitrary stream line by line ==");
+    let stream = Synthetic::SmallInts.generate(64 * 8, &mut rng);
+    let lines = compress_stream(&Hybrid::default(), &stream);
+    let total: usize = lines.iter().map(|l| l.size_bytes()).sum();
+    println!(
+        "  {} lines, {} -> {} bytes ({:.2}x)",
+        lines.len(),
+        stream.len(),
+        total,
+        stream.len() as f64 / total as f64
+    );
+    println!("compression_explorer OK");
+    Ok(())
+}

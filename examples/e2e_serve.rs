@@ -1,0 +1,126 @@
+//! e2e_serve — THE END-TO-END DRIVER.
+//!
+//! Proves all layers compose on a real small workload: for every
+//! benchmark, the AOT-compiled JAX/Pallas model (L1+L2) is loaded through
+//! PJRT and served behind the batching coordinator (L3) with the
+//! cycle-accurate fixed-point simulator cross-checking every output
+//! (PairedBackend); the same traffic is replayed through the compressed
+//! memory model. Prints the E1..E6 headline numbers in one table and
+//! fails loudly if any layer disagrees with another.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serve`
+//! (results recorded in EXPERIMENTS.md)
+
+use anyhow::Result;
+use snnap_c::bench_suite::{all_workloads, Workload};
+use snnap_c::coordinator::{
+    Backend, NpuServer, PairedBackend, PjrtBackend, ServerConfig,
+};
+use snnap_c::experiments as ex;
+use snnap_c::fixed::Q7_8;
+use snnap_c::npu::{NpuConfig, PuSim};
+use snnap_c::runtime::{Manifest, NpuExecutor};
+use snnap_c::util::bench::Table;
+use snnap_c::util::rng::Rng;
+
+const INVOCATIONS: usize = 1024;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(&Manifest::default_path())?;
+    let mut table = Table::new(&[
+        "workload",
+        "served",
+        "batches",
+        "quality(metric)",
+        "max|f32-fixed|",
+        "app-speedup",
+        "energy-savings",
+        "weights-ratio",
+        "bw-amplif",
+    ]);
+    let mut worst_disagreement = 0.0f32;
+
+    for w in all_workloads() {
+        let name = w.name().to_string();
+        let program = ex::program_from_artifact(&manifest, &name, Q7_8)?;
+
+        // --- L3 serving over L1/L2 via PJRT, cross-checked by the sim ---
+        let (prog2, name2) = (program.clone(), name.clone());
+        let server = NpuServer::start(
+            Box::new(move || {
+                let manifest = Manifest::load(&Manifest::default_path())?;
+                let executor = NpuExecutor::new(manifest.get(&name2)?.clone())?;
+                Ok(Box::new(PairedBackend {
+                    pjrt: PjrtBackend { executor },
+                    sim: PuSim::new(prog2, 8),
+                    // Q7.8 quantization through <=3 sigmoid layers
+                    tolerance: 0.08,
+                    max_disagreement: 0.0,
+                }) as Box<dyn Backend>)
+            }),
+            ServerConfig::default(),
+        )?;
+        let mut rng = Rng::new(0xE2E);
+        let inputs = w.gen_batch(&mut rng, INVOCATIONS);
+        let outputs = server.submit_all(&inputs)?;
+        let batches = server.metrics().batches.get();
+        let served = server.metrics().requests.get();
+
+        // --- E4: quality of the served outputs vs precise ---
+        let precise = w.run_precise(&inputs);
+        let quality = w.metric().score(&outputs, &precise);
+
+        // fixed-vs-f32 disagreement, recomputed here for the table
+        let sim = PuSim::new(program.clone(), 8);
+        let disagreement = inputs
+            .iter()
+            .zip(&outputs)
+            .flat_map(|(x, y)| {
+                sim.forward_f32(x)
+                    .into_iter()
+                    .zip(y.clone())
+                    .map(|(a, b)| (a - b).abs())
+            })
+            .fold(0.0f32, f32::max);
+        worst_disagreement = worst_disagreement.max(disagreement);
+
+        // --- E2/E3: modelled speedup + energy on the same stream ---
+        let e2 = ex::e2_speedup::measure(
+            w.as_ref(), program.clone(), NpuConfig::default(), INVOCATIONS, 128, 0xE2E)?;
+        let e3 = ex::e3_energy::measure(
+            w.as_ref(), program.clone(), NpuConfig::default(), INVOCATIONS, 128, 0xE2E)?;
+
+        // --- E1/E5: compression on this benchmark's traffic ---
+        let e1 = ex::e1_compression::measure_workload(
+            w.as_ref(), program.clone(), Q7_8, 256, 0xE2E);
+        let weights_ratio = e1[0]
+            .report
+            .stats
+            .iter()
+            .find(|s| s.scheme == "bdi+fpc")
+            .unwrap()
+            .ratio;
+        let e5 = ex::e5_bandwidth::measure(
+            w.as_ref(), program.clone(), "bdi+fpc", 128, 4, 0xE2E)?;
+
+        table.row(&[
+            name,
+            served.to_string(),
+            batches.to_string(),
+            format!("{:.4} ({})", quality, w.metric().name()),
+            format!("{disagreement:.4}"),
+            format!("{:.2}x", e2.app_speedup),
+            format!("{:.2}x", e3.savings),
+            format!("{weights_ratio:.3}x"),
+            format!("{:.3}x", e5.amplification),
+        ]);
+        server.shutdown();
+    }
+
+    println!("\n=== snnap-c end-to-end: {INVOCATIONS} invocations/benchmark, all layers ===");
+    table.print();
+    println!("\nworst f32-vs-fixed disagreement across all served outputs: {worst_disagreement:.4}");
+    println!("(PairedBackend asserts <= 0.08 per output; PJRT = AOT JAX/Pallas via HLO text)");
+    println!("e2e_serve OK");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: load an AOT artifact, run one invocation through the PJRT
+//! runtime, cross-check it against the fixed-point simulator, and print
+//! both against the precise function.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+use snnap_c::bench_suite::{workload, Workload};
+use snnap_c::experiments::program_from_artifact;
+use snnap_c::fixed::Q7_8;
+use snnap_c::npu::PuSim;
+use snnap_c::runtime::{Manifest, NpuExecutor};
+
+fn main() -> Result<()> {
+    // 1. load the artifact bundle produced by `make artifacts`
+    let manifest = Manifest::load(&Manifest::default_path())?;
+    let bench = "inversek2j";
+    let w = workload(bench).unwrap();
+
+    // 2. compile the AOT HLO on the PJRT CPU client (f32 functional path)
+    let mut executor = NpuExecutor::new(manifest.get(bench)?.clone())?;
+
+    // 3. build the same network in Q7.8 fixed point (the FPGA datapath)
+    let program = program_from_artifact(&manifest, bench, Q7_8)?;
+    let sim = PuSim::new(program, 8);
+
+    // 4. one invocation: reach for point (x0, x1) in the arm's workspace
+    let input = vec![0.7f32, 0.3];
+    let f32_out = executor.run_batch(std::slice::from_ref(&input))?;
+    let fixed_out = sim.forward_f32(&input);
+    let precise = w.target(&input);
+
+    println!("inversek2j({input:?})");
+    println!("  precise:        {precise:?}");
+    println!("  NPU (PJRT f32): {:?}", f32_out[0]);
+    println!("  NPU (Q7.8 sim): {fixed_out:?}");
+    let err: f32 = f32_out[0]
+        .iter()
+        .zip(&precise)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    println!("  max |NPU - precise| = {err:.4}");
+    assert!(err < 0.1, "approximation error out of range");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! sobel_pipeline: whole-image edge detection through the batched NPU.
+//!
+//! Renders a synthetic test card, runs (a) the precise sobel filter and
+//! (b) the NPU-approximated filter via the batching coordinator with the
+//! PJRT backend, then reports image quality, throughput, and the modelled
+//! on-accelerator timing/energy from the cycle simulator.
+//!
+//! Run: `make artifacts && cargo run --release --example sobel_pipeline`
+
+use anyhow::Result;
+use snnap_c::bench_suite::sobel::GrayImage;
+use snnap_c::coordinator::{Backend, NpuServer, PjrtBackend, ServerConfig};
+use snnap_c::energy::EnergyModel;
+use snnap_c::experiments::program_from_artifact;
+use snnap_c::fixed::Q7_8;
+use snnap_c::npu::{NpuConfig, NpuDevice};
+use snnap_c::runtime::{Manifest, NpuExecutor};
+
+fn ascii_render(img: &GrayImage, step: usize) -> String {
+    let ramp = b" .:-=+*#%@";
+    let mut out = String::new();
+    for y in (0..img.h).step_by(step) {
+        for x in (0..img.w).step_by(step) {
+            let v = (img.get(x, y).clamp(0.0, 1.0) * 9.0) as usize;
+            out.push(ramp[v] as char);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn main() -> Result<()> {
+    let img = GrayImage::test_card(96, 96);
+    println!("input test card:\n{}", ascii_render(&img, 3));
+
+    // precise path
+    let t0 = std::time::Instant::now();
+    let precise = img.sobel();
+    let t_precise = t0.elapsed();
+
+    // NPU path: all windows through the batching server (PJRT backend)
+    let server = NpuServer::start(
+        Box::new(|| {
+            let manifest = Manifest::load(&Manifest::default_path())?;
+            let ex = NpuExecutor::new(manifest.get("sobel")?.clone())?;
+            Ok(Box::new(PjrtBackend { executor: ex }) as Box<dyn Backend>)
+        }),
+        ServerConfig::default(),
+    )?;
+    let windows = img.all_windows();
+    let t0 = std::time::Instant::now();
+    let outputs = server.submit_all(&windows)?;
+    let t_npu = t0.elapsed();
+    let npu_img = GrayImage {
+        w: img.w,
+        h: img.h,
+        pixels: outputs.iter().map(|o| o[0]).collect(),
+    };
+
+    println!("precise edges:\n{}", ascii_render(&precise, 3));
+    println!("NPU edges:\n{}", ascii_render(&npu_img, 3));
+    println!("image RMSE (NPU vs precise): {:.4}", precise.rmse(&npu_img));
+    println!(
+        "host wall time: precise {:?}, NPU-served {:?} ({} windows, {})",
+        t_precise,
+        t_npu,
+        windows.len(),
+        server.metrics().report()
+    );
+
+    // modelled accelerator timing + energy for the same batch stream
+    let manifest = Manifest::load(&Manifest::default_path())?;
+    let program = program_from_artifact(&manifest, "sobel", Q7_8)?;
+    let cfg = NpuConfig::default();
+    let mut device = NpuDevice::new(cfg, program)?;
+    let mut cycles = 0u64;
+    let model = EnergyModel::default();
+    let mut energy = Vec::new();
+    for chunk in windows.chunks(128) {
+        let r = device.execute_batch(chunk)?;
+        cycles += r.total_cycles;
+        energy.push(model.npu_batch(&device, &r));
+    }
+    let npu_time_ms = cycles as f64 / (cfg.clock_mhz * 1e3);
+    let cpu_cycles = windows.len() as u64 * 60; // sobel window on A9
+    let cpu_time_ms = cpu_cycles as f64 / (667.0 * 1e3);
+    let e_npu = EnergyModel::sum(&energy).total_mj();
+    let e_cpu = model.cpu_region(cpu_cycles).total_mj();
+    println!("modelled on-device: NPU {npu_time_ms:.2} ms vs A9 {cpu_time_ms:.2} ms ({:.2}x)",
+        cpu_time_ms / npu_time_ms);
+    println!("modelled energy:    NPU {e_npu:.3} mJ vs A9 {e_cpu:.3} mJ ({:.2}x)",
+        e_cpu / e_npu);
+    assert!(precise.rmse(&npu_img) < 0.06, "edge quality out of spec");
+    println!("sobel_pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""AOT compile path: train every benchmark NPU, lower the Pallas forward to
+HLO *text*, and emit the artifact bundle the Rust runtime consumes.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (artifacts/):
+  manifest.json           benchmark -> topology, buckets, files, train stats
+  <bench>_b<batch>.hlo.txt   one module per (benchmark, batch bucket)
+  <bench>.weights.bin     f32 LE flattened params (layer-major w||b) — the
+                          byte stream the compression path (E1) analyses
+
+Deterministic end to end; ``make artifacts`` is a no-op when inputs are
+unchanged (mtime-based, via the Makefile).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model, train
+
+# Batch buckets: runtime pads each NPU batch up to the nearest bucket. Keep
+# in sync with rust/src/runtime/manifest.rs expectations.
+BATCH_BUCKETS = (1, 16, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer ELIDES constants
+    # bigger than a few elements as "constant({...})" — the text parses on
+    # the Rust side but the baked weights are gone and every output is
+    # garbage. Weights are baked as constants, so full printing is load-
+    # bearing here.
+    text = comp.as_hlo_text(True)
+    if "{...}" in text:
+        raise RuntimeError("HLO printer elided a constant; artifact would be corrupt")
+    return text
+
+
+def lower_bench(bench: str, params, batch: int) -> str:
+    """Lower the Pallas forward for one (benchmark, batch) to HLO text.
+
+    Weights are baked into the module as constants: the runtime feeds only
+    the input batch and reads only the output batch — Python never touches
+    the request path.
+    """
+    topo = model.TOPOLOGIES[bench]
+
+    def fwd(x):
+        return (model.mlp_forward(params, x, topo),)
+
+    spec = jax.ShapeDtypeStruct((batch, topo.sizes[0]), jnp.float32)
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact dir")
+    ap.add_argument(
+        "--benchmarks",
+        default=",".join(model.TOPOLOGIES),
+        help="comma-separated subset to build",
+    )
+    ap.add_argument("--steps", type=int, default=10000, help="train steps")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "batch_buckets": list(BATCH_BUCKETS), "benchmarks": {}}
+
+    for bench in args.benchmarks.split(","):
+        topo = model.TOPOLOGIES[bench]
+        print(f"[aot] {bench}: training {topo.sizes} ...", flush=True)
+        res = train.train(bench, seed=args.seed, steps=args.steps)
+        flat = np.asarray(model.flatten_params(res.params), np.float32)
+        wpath = f"{bench}.weights.bin"
+        flat.tofile(os.path.join(args.out, wpath))
+
+        files = {}
+        for b in BATCH_BUCKETS:
+            print(f"[aot] {bench}: lowering batch={b} ...", flush=True)
+            text = lower_bench(bench, res.params, b)
+            fname = f"{bench}_b{b}.hlo.txt"
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            files[str(b)] = fname
+
+        manifest["benchmarks"][bench] = {
+            "sizes": list(topo.sizes),
+            "activations": list(topo.activations),
+            "n_params": topo.n_params,
+            "weights": wpath,
+            "weights_sha256": hashlib.sha256(flat.tobytes()).hexdigest(),
+            "hlo": files,
+            "train": {
+                "final_loss": res.final_loss,
+                "val_mse": res.val_mse,
+                "val_mean_rel_err": res.val_mean_rel_err,
+                "steps": args.steps,
+                "seed": args.seed,
+            },
+        }
+        print(
+            f"[aot] {bench}: val_mse={res.val_mse:.3e} "
+            f"rel_err={res.val_mean_rel_err:.3%}",
+            flush=True,
+        )
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(manifest['benchmarks'])} benchmarks")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the Pallas systolic kernel.
+
+This is the correctness contract: ``systolic.mlp_layer`` must match
+``ref.mlp_layer_ref`` to f32 tolerance for every shape/dtype/activation the
+framework uses. pytest + hypothesis sweep the space (test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ACTIVATIONS = {
+    "linear": lambda x: x,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "relu": jax.nn.relu,
+}
+
+
+def mlp_layer_ref(x, w, b, *, activation="sigmoid"):
+    """act(x @ w + b) in plain jnp, f32 accumulation."""
+    acc = jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return ACTIVATIONS[activation](acc + b.astype(jnp.float32)[None, :])
+
+
+def mlp_forward_ref(params, x, activations):
+    """Full MLP forward with the reference layer (used by model tests)."""
+    h = x
+    for (w, b), act in zip(params, activations):
+        h = mlp_layer_ref(h, w, b, activation=act)
+    return h

@@ -1,0 +1,182 @@
+"""L1: Pallas systolic MLP-layer kernel.
+
+SNNAP's compute hot-spot is one MLP layer: ``y = act(x @ W + b)``, executed
+on an FPGA systolic array of DSP-slice MACs. On the TPU-style substrate the
+same weight-stationary schedule maps onto the MXU: we tile the GEMM with a
+``(m, n, k)`` grid where each ``(block_m, block_k) x (block_k, block_n)``
+tile is one systolic wavefront, the ``k`` axis streams partial sums through
+the output block (the moral equivalent of the FPGA's accumulator chain),
+and the bias + activation are fused into the final ``k`` step (the sigmoid
+LUT at the array's drain port).
+
+BlockSpec expresses the HBM->VMEM schedule the FPGA did with BRAM banks:
+weights are revisited once per ``m`` block (weight-stationary within a
+block-row), activations stream. ``interpret=True`` everywhere: the CPU
+PJRT plugin cannot run Mosaic custom-calls; the real-TPU VMEM/MXU numbers
+are estimated analytically (DESIGN.md SSHardware-Adaptation, SSPerf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-shaped (128x128 systolic array), shrunk to the
+# actual dimension when a layer is smaller than one tile.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "linear": lambda x: x,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "relu": jax.nn.relu,
+}
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest block <= preferred that keeps the grid exact after padding.
+
+    We always pad up to a multiple of the returned block, so any value is
+    legal; preferring the full dimension for small layers avoids degenerate
+    1-wide grids.
+    """
+    if dim <= 0:
+        raise ValueError(f"dimension must be positive, got {dim}")
+    return min(dim, preferred)
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+def _mlp_layer_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    """One (m, n, k) grid step of the tiled layer.
+
+    o_ref accumulates the f32 partial products across the k axis; the final
+    k step fuses bias-add + activation — the systolic array's drain stage.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_blk = x_ref[...]
+    w_blk = w_ref[...]
+    o_ref[...] += jnp.dot(
+        x_blk.astype(jnp.float32),
+        w_blk.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _drain():
+        acc = o_ref[...] + b_ref[...].astype(jnp.float32)[None, :]
+        o_ref[...] = ACTIVATIONS[activation](acc)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "block_n", "block_k"),
+)
+def mlp_layer(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: str = "sigmoid",
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Compute ``act(x @ w + b)`` with the Pallas systolic kernel.
+
+    Args:
+      x: ``[m, k]`` activations (f32 or bf16).
+      w: ``[k, n]`` weights.
+      b: ``[n]`` bias.
+      activation: one of ``linear|sigmoid|tanh|relu``.
+      block_*: tile sizes; clipped to the (padded) problem dims.
+
+    Returns:
+      ``[m, n]`` f32 outputs.
+    """
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(f"bad ranks: x{x.shape} w{w.shape} b{b.shape}")
+    if x.shape[1] != w.shape[0] or w.shape[1] != b.shape[0]:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+
+    m, k = x.shape
+    _, n = w.shape
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    bp = _pad_to(b, 0, bn)
+
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nm, nn, nk = mp // bm, np_ // bn, kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_mlp_layer_kernel, nk=nk, activation=activation),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(
+    block_m: int, block_n: int, block_k: int, dtype_bytes: int = 4
+) -> int:
+    """Estimated per-step VMEM residency of the kernel (x, w, b, o blocks).
+
+    Used by DESIGN.md SSPerf to check the tiling against the ~16 MiB/core
+    VMEM budget — interpret-mode wallclock is NOT a TPU proxy, so tiling is
+    judged structurally.
+    """
+    x_blk = block_m * block_k * dtype_bytes
+    w_blk = block_k * block_n * dtype_bytes
+    b_blk = block_n * dtype_bytes
+    o_blk = block_m * block_n * 4  # f32 accumulator
+    return x_blk + w_blk + b_blk + o_blk
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, block_m: int, block_n: int, block_k: int) -> float:
+    """Fraction of MXU lanes doing useful work, given padding to tiles.
+
+    The systolic array is 128x128; a (bm, bn, bk) tile keeps
+    min(bm,128)*min(bn,128) lanes busy, and padding waste is the ratio of
+    real FLOPs to padded FLOPs.
+    """
+    def _ceil(a: int, b: int) -> int:
+        return -(-a // b)
+
+    bm, bn, bk = min(m, block_m), min(n, block_n), min(k, block_k)
+    padded = _ceil(m, bm) * bm * _ceil(n, bn) * bn * _ceil(k, bk) * bk
+    real = m * n * k
+    lane_occ = (min(bm, 128) * min(bn, 128)) / (128 * 128)
+    return (real / padded) * lane_occ

@@ -1,0 +1,110 @@
+"""L2: NPU model definitions — per-benchmark MLP topologies + forward pass.
+
+Each SNNAP-offloaded benchmark region is approximated by a small MLP whose
+topology follows the NPU (MICRO'12) / SNNAP (HPCA'15) evaluations. The
+forward pass calls the L1 Pallas systolic kernel for every layer, so the
+whole network lowers into one HLO module that the Rust runtime loads via
+PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import systolic
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """An MLP topology: layer widths + per-layer activations.
+
+    ``sizes`` has ``n_layers + 1`` entries (input width first);
+    ``activations`` has ``n_layers`` entries.
+    """
+
+    name: str
+    sizes: tuple
+    activations: tuple
+
+    def __post_init__(self):
+        if len(self.sizes) < 2:
+            raise ValueError(f"{self.name}: need at least input+output sizes")
+        if len(self.activations) != len(self.sizes) - 1:
+            raise ValueError(
+                f"{self.name}: {len(self.sizes)-1} layers but "
+                f"{len(self.activations)} activations"
+            )
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.sizes) - 1
+
+    @property
+    def n_params(self) -> int:
+        return sum(
+            i * o + o for i, o in zip(self.sizes[:-1], self.sizes[1:])
+        )
+
+
+# NPU (MICRO'12) Table 2 topologies, as adopted by SNNAP (HPCA'15).
+# Hidden layers are sigmoid (the accelerator's LUT nonlinearity); output
+# layers are linear for regression targets, sigmoid for classifiers.
+TOPOLOGIES = {
+    "fft": Topology("fft", (1, 4, 4, 2), ("sigmoid", "sigmoid", "linear")),
+    "inversek2j": Topology("inversek2j", (2, 8, 2), ("sigmoid", "linear")),
+    "jmeint": Topology("jmeint", (18, 32, 8, 2), ("sigmoid", "sigmoid", "sigmoid")),
+    "jpeg": Topology("jpeg", (64, 16, 64), ("sigmoid", "linear")),
+    "kmeans": Topology("kmeans", (6, 8, 4, 1), ("sigmoid", "sigmoid", "linear")),
+    "sobel": Topology("sobel", (9, 8, 1), ("sigmoid", "linear")),
+    "blackscholes": Topology(
+        "blackscholes", (6, 8, 8, 1), ("sigmoid", "sigmoid", "linear")
+    ),
+}
+
+
+def init_params(key: jax.Array, topo: Topology):
+    """Glorot-uniform init; returns [(w, b)] per layer, f32."""
+    params = []
+    for fan_in, fan_out in zip(topo.sizes[:-1], topo.sizes[1:]):
+        key, wk = jax.random.split(key)
+        limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+        w = jax.random.uniform(
+            wk, (fan_in, fan_out), jnp.float32, -limit, limit
+        )
+        b = jnp.zeros((fan_out,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def mlp_forward(params, x, topo: Topology):
+    """Forward pass through the Pallas systolic kernel, layer by layer."""
+    h = x
+    for (w, b), act in zip(params, topo.activations):
+        h = systolic.mlp_layer(h, w, b, activation=act)
+    return h
+
+
+def flatten_params(params) -> jnp.ndarray:
+    """Layer-major [w0.ravel(), b0, w1.ravel(), b1, ...] — the byte layout
+    the Rust side reads back for the compression/trace path."""
+    return jnp.concatenate(
+        [jnp.concatenate([w.ravel(), b.ravel()]) for w, b in params]
+    )
+
+
+def unflatten_params(flat: jnp.ndarray, topo: Topology):
+    params = []
+    off = 0
+    for fan_in, fan_out in zip(topo.sizes[:-1], topo.sizes[1:]):
+        w = flat[off : off + fan_in * fan_out].reshape(fan_in, fan_out)
+        off += fan_in * fan_out
+        b = flat[off : off + fan_out]
+        off += fan_out
+        params.append((w, b))
+    if off != flat.shape[0]:
+        raise ValueError(f"param size mismatch: {off} != {flat.shape[0]}")
+    return params

@@ -1,0 +1,180 @@
+"""Target functions for the approximate regions, mirrored bit-for-bit (in
+formula and normalization constants) by the Rust precise implementations in
+``rust/src/bench_suite/``. Training data for each NPU is sampled from these.
+
+All inputs and outputs are normalized to ~[0, 1] so a sigmoid-hidden MLP
+and the accelerator's Q7.8 fixed-point path both have easy dynamic range.
+If you change a constant here, change the Rust twin (same module name) —
+test_targets.py and rust's bench_suite tests pin a few golden values.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# --- shared constants (mirrored in rust/src/bench_suite/constants.rs) ---
+IK_L1 = 0.5  # inversek2j arm segment lengths
+IK_L2 = 0.5
+BS_PRICE_SCALE = 0.25  # blackscholes output normalizer
+JPEG_QUANT = jnp.array(
+    [
+        16, 11, 10, 16, 24, 40, 51, 61,
+        12, 12, 14, 19, 26, 58, 60, 55,
+        14, 13, 16, 24, 40, 57, 69, 56,
+        14, 17, 22, 29, 51, 87, 80, 62,
+        18, 22, 37, 56, 68, 109, 103, 77,
+        24, 35, 55, 64, 81, 104, 113, 92,
+        49, 64, 78, 87, 103, 121, 120, 101,
+        72, 92, 95, 98, 112, 100, 103, 99,
+    ],
+    jnp.float32,
+).reshape(8, 8)
+
+
+def fft(x):
+    """x[n,1] phase in [0,1] -> radix-2 twiddle (re, im), remapped to [0,1]."""
+    theta = -2.0 * jnp.pi * x[:, 0]
+    return jnp.stack(
+        [(jnp.cos(theta) + 1.0) * 0.5, (jnp.sin(theta) + 1.0) * 0.5], axis=-1
+    )
+
+
+def inversek2j(x):
+    """x[n,2] = (px, py) normalized in [0,1]^2 -> (theta1, theta2)/pi in [0,1].
+
+    2-link planar arm inverse kinematics, elbow-down solution. Points are
+    mapped into the reachable annulus before solving.
+    """
+    # map [0,1]^2 into the reachable annulus in polar form:
+    # r in [0.05, 0.95]*(L1+L2), phi in [0, pi/2]
+    r = (0.05 + 0.9 * x[:, 0]) * (IK_L1 + IK_L2)
+    phi = x[:, 1] * (jnp.pi / 2.0)
+    px = r * jnp.cos(phi)
+    py = r * jnp.sin(phi)
+    r2 = px * px + py * py
+    c2 = (r2 - IK_L1**2 - IK_L2**2) / (2.0 * IK_L1 * IK_L2)
+    c2 = jnp.clip(c2, -1.0, 1.0)
+    t2 = jnp.arccos(c2)
+    t1 = jnp.arctan2(py, px) - jnp.arctan2(
+        IK_L2 * jnp.sin(t2), IK_L1 + IK_L2 * jnp.cos(t2)
+    )
+    return jnp.stack([(t1 + jnp.pi) / (2 * jnp.pi), t2 / jnp.pi], axis=-1)
+
+
+def _tri_degenerate_separating_axis(t0, t1):
+    """Cheap separating-axis test used as the jmeint ground truth.
+
+    t0, t1: [n, 9] two triangles (3 vertices x xyz). Returns [n] in {0,1}.
+    Uses each triangle's plane as a separating-plane candidate — the same
+    early-exit test tri_tri_intersect uses; adequate as a binary target.
+    """
+    def plane_sep(tri_a, tri_b):
+        p0 = tri_a[:, 0:3]
+        e1 = tri_a[:, 3:6] - p0
+        e2 = tri_a[:, 6:9] - p0
+        nrm = jnp.cross(e1, e2)
+        d = -jnp.sum(nrm * p0, axis=-1, keepdims=True)
+        dists = (
+            jnp.stack(
+                [
+                    jnp.sum(nrm * tri_b[:, 0:3], axis=-1),
+                    jnp.sum(nrm * tri_b[:, 3:6], axis=-1),
+                    jnp.sum(nrm * tri_b[:, 6:9], axis=-1),
+                ],
+                axis=-1,
+            )
+            + d
+        )
+        all_pos = jnp.all(dists > 1e-7, axis=-1)
+        all_neg = jnp.all(dists < -1e-7, axis=-1)
+        return all_pos | all_neg
+
+    separated = plane_sep(t0, t1) | plane_sep(t1, t0)
+    return (~separated).astype(jnp.float32)
+
+
+def jmeint(x):
+    """x[n,18] two triangles in [0,1]^3 -> one-hot (intersects, disjoint)."""
+    hit = _tri_degenerate_separating_axis(x[:, :9], x[:, 9:])
+    return jnp.stack([hit, 1.0 - hit], axis=-1)
+
+
+def _dct8_matrix():
+    k = jnp.arange(8, dtype=jnp.float32)
+    n = jnp.arange(8, dtype=jnp.float32)
+    c = jnp.sqrt(jnp.where(k == 0, 1.0 / 8.0, 2.0 / 8.0))
+    return c[:, None] * jnp.cos((2 * n[None, :] + 1) * k[:, None] * jnp.pi / 16.0)
+
+
+def jpeg(x):
+    """x[n,64] 8x8 pixel block in [0,1] -> quantized-DCT reconstruction [0,1].
+
+    The NPU approximates the encode(quantize)+decode round trip of one
+    block at quality ~50.
+    """
+    d = _dct8_matrix()
+    blk = x.reshape(-1, 8, 8) * 255.0 - 128.0
+    coef = jnp.einsum("ij,njk,lk->nil", d, blk, d)
+    q = jnp.round(coef / JPEG_QUANT) * JPEG_QUANT
+    rec = jnp.einsum("ji,njk,kl->nil", d, q, d)
+    return jnp.clip((rec + 128.0) / 255.0, 0.0, 1.0).reshape(-1, 64)
+
+
+def kmeans(x):
+    """x[n,6] = (r,g,b, cr,cg,cb) in [0,1] -> euclidean distance / sqrt(3)."""
+    diff = x[:, 0:3] - x[:, 3:6]
+    return (jnp.linalg.norm(diff, axis=-1) / jnp.sqrt(3.0))[:, None]
+
+
+def sobel(x):
+    """x[n,9] 3x3 window in [0,1] -> normalized gradient magnitude."""
+    w = x.reshape(-1, 3, 3)
+    gx = (
+        (w[:, 0, 2] + 2 * w[:, 1, 2] + w[:, 2, 2])
+        - (w[:, 0, 0] + 2 * w[:, 1, 0] + w[:, 2, 0])
+    )
+    gy = (
+        (w[:, 2, 0] + 2 * w[:, 2, 1] + w[:, 2, 2])
+        - (w[:, 0, 0] + 2 * w[:, 0, 1] + w[:, 0, 2])
+    )
+    mag = jnp.sqrt(gx * gx + gy * gy) / jnp.sqrt(32.0)
+    return jnp.clip(mag, 0.0, 1.0)[:, None]
+
+
+def _phi(x):
+    """Standard normal CDF via erf."""
+    return 0.5 * (1.0 + jax.lax.erf(x / jnp.sqrt(2.0)))
+
+
+def blackscholes(x):
+    """x[n,6] = (s, k, t, r, v, is_put) normalized -> option price * scale.
+
+    s: spot/strike ratio in [0.5, 1.5] from x0; k fixed at 1; t in
+    [0.05, 1.05] years; r in [0, 0.1]; v in [0.05, 0.65]; is_put in {0,1}.
+    Output scaled by BS_PRICE_SCALE into ~[0,1].
+    """
+    s = 0.5 + x[:, 0]
+    k = jnp.ones_like(s)
+    t = 0.05 + x[:, 2]
+    r = 0.1 * x[:, 3]
+    v = 0.05 + 0.6 * x[:, 4]
+    is_put = x[:, 5]
+    sq = v * jnp.sqrt(t)
+    d1 = (jnp.log(s / k) + (r + 0.5 * v * v) * t) / sq
+    d2 = d1 - sq
+    call = s * _phi(d1) - k * jnp.exp(-r * t) * _phi(d2)
+    put = k * jnp.exp(-r * t) * _phi(-d2) - s * _phi(-d1)
+    price = (1.0 - is_put) * call + is_put * put
+    return (price / BS_PRICE_SCALE)[:, None]
+
+
+TARGETS = {
+    "fft": fft,
+    "inversek2j": inversek2j,
+    "jmeint": jmeint,
+    "jpeg": jpeg,
+    "kmeans": kmeans,
+    "sobel": sobel,
+    "blackscholes": blackscholes,
+}

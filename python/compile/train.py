@@ -1,0 +1,157 @@
+"""Build-time training of the per-benchmark NPU approximators.
+
+Plain-JAX Adam on datasets sampled from ``targets.py``. Training uses the
+pure-jnp reference forward (ref.mlp_forward_ref) for speed — the Pallas
+kernel is proven equal to the reference by test_kernel.py, and the AOT
+artifact is lowered through the Pallas path with the trained weights.
+
+Deterministic: fixed seeds, fixed step counts, so ``make artifacts`` is
+reproducible bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import functools
+import zlib
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from compile import model, targets
+from compile.kernels import ref
+
+
+class TrainResult(NamedTuple):
+    params: list
+    final_loss: float
+    val_mse: float
+    val_mean_rel_err: float
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: list
+    v: list
+
+
+def adam_init(params) -> AdamState:
+    zeros = lambda: [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params]
+    return AdamState(jnp.zeros((), jnp.int32), zeros(), zeros())
+
+
+def adam_update(grads, state: AdamState, params, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+    new_m, new_v, new_p = [], [], []
+    for (gw, gb), (mw, mb), (vw, vb), (w, b) in zip(
+        grads, state.m, state.v, params
+    ):
+        mw = b1 * mw + (1 - b1) * gw
+        mb = b1 * mb + (1 - b1) * gb
+        vw = b2 * vw + (1 - b2) * gw * gw
+        vb = b2 * vb + (1 - b2) * gb * gb
+        w = w - lr * (mw / bc1) / (jnp.sqrt(vw / bc2) + eps)
+        b = b - lr * (mb / bc1) / (jnp.sqrt(vb / bc2) + eps)
+        new_m.append((mw, mb))
+        new_v.append((vw, vb))
+        new_p.append((w, b))
+    return new_p, AdamState(step, new_m, new_v)
+
+
+def _sample_sobel(key, n):
+    """Application-like 3x3 windows: flat patches, hard edges, texture —
+    mirrors rust bench_suite::sobel::Sobel::gen_input."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    kind = jax.random.randint(k1, (n, 1), 0, 3)
+    base = jax.random.uniform(k2, (n, 1))
+    flat = jnp.clip(base + (jax.random.uniform(k3, (n, 9)) - 0.5) * 0.1, 0, 1)
+    horiz = jax.random.bernoulli(k4, 0.5, (n, 1))
+    col = jnp.arange(9) % 3
+    row = jnp.arange(9) // 3
+    edge_idx = jnp.where(horiz, col[None, :], row[None, :])
+    edge = jnp.where(edge_idx >= 1, 0.9, 0.1)
+    tex = jax.random.uniform(k5, (n, 9))
+    return jnp.where(kind == 0, flat, jnp.where(kind == 1, edge, tex))
+
+
+def _sample_jpeg(key, n):
+    """Natural-image-like blocks (gradient + wave + noise) — mirrors rust
+    bench_suite::jpeg::Jpeg::gen_input."""
+    ks = jax.random.split(key, 6)
+    base = jax.random.uniform(ks[0], (n, 1))
+    gx = jax.random.uniform(ks[1], (n, 1), minval=-0.3, maxval=0.3)
+    gy = jax.random.uniform(ks[2], (n, 1), minval=-0.3, maxval=0.3)
+    fx = jax.random.uniform(ks[3], (n, 1), maxval=jnp.pi)
+    amp = jax.random.uniform(ks[4], (n, 1), maxval=0.2)
+    noise = (jax.random.uniform(ks[5], (n, 64)) - 0.5) * 0.05
+    i = (jnp.arange(64) // 8)[None, :] / 8.0
+    j = (jnp.arange(64) % 8)[None, :] / 8.0
+    return jnp.clip(base + gx * i + gy * j + amp * jnp.sin(fx * (i + j)) + noise, 0, 1)
+
+
+def sample_batch(key, topo: model.Topology, n: int):
+    """Sample training inputs from the *application's* input distribution
+    (mirrored from rust bench_suite gen_input), not plain uniform — the
+    NPU papers train on observed region inputs."""
+    target_fn = targets.TARGETS[topo.name]
+    kx = jax.random.fold_in(key, 0)
+    if topo.name == "sobel":
+        x = _sample_sobel(kx, n)
+    elif topo.name == "jpeg":
+        x = _sample_jpeg(kx, n)
+    else:
+        x = jax.random.uniform(kx, (n, topo.sizes[0]), jnp.float32)
+    if topo.name == "blackscholes":
+        # is_put is binary
+        key2 = jax.random.fold_in(key, 1)
+        flag = jax.random.bernoulli(key2, 0.5, (n,)).astype(jnp.float32)
+        x = x.at[:, 5].set(flag)
+    y = target_fn(x)
+    return x, y
+
+
+def train(
+    bench: str,
+    *,
+    seed: int = 0,
+    steps: int = 10000,
+    batch: int = 512,
+    lr: float = 5e-3,
+    val_n: int = 4096,
+) -> TrainResult:
+    """Train the NPU MLP for one benchmark; returns params + quality stats."""
+    topo = model.TOPOLOGIES[bench]
+    key = jax.random.PRNGKey(seed + zlib.crc32(bench.encode()) % 65536)
+    key, pk = jax.random.split(key)
+    params = model.init_params(pk, topo)
+    state = adam_init(params)
+
+    def loss_fn(p, x, y):
+        pred = ref.mlp_forward_ref(p, x, topo.activations)
+        return jnp.mean((pred - y) ** 2)
+
+    @jax.jit
+    def step_fn(p, s, k, step_lr):
+        x, y = sample_batch(k, topo, batch)
+        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+        p, s = adam_update(grads, s, p, lr=step_lr)
+        return p, s, loss
+
+    loss = jnp.inf
+    for i in range(steps):
+        key, sk = jax.random.split(key)
+        # cosine decay to 5% of the base lr
+        step_lr = lr * (0.05 + 0.95 * 0.5 * (1.0 + jnp.cos(jnp.pi * i / steps)))
+        params, state, loss = step_fn(params, state, sk, step_lr)
+
+    key, vk = jax.random.split(key)
+    xv, yv = sample_batch(vk, topo, val_n)
+    pred = ref.mlp_forward_ref(params, xv, topo.activations)
+    mse = float(jnp.mean((pred - yv) ** 2))
+    rel = float(
+        jnp.mean(jnp.abs(pred - yv) / (jnp.abs(yv) + 0.05))
+    )
+    return TrainResult(params, float(loss), mse, rel)

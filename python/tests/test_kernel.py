@@ -1,0 +1,129 @@
+"""L1 correctness: Pallas systolic kernel vs pure-jnp oracle.
+
+hypothesis sweeps shapes, dtypes, activations and block sizes; every case
+asserts allclose against ref.mlp_layer_ref. This is the CORE correctness
+signal for the compute hot-spot.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, systolic
+
+jax.config.update("jax_platform_name", "cpu")
+
+ACTS = ["linear", "sigmoid", "tanh", "relu"]
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_small_layer_matches_ref(act):
+    k = jax.random.PRNGKey(0)
+    x = _rand(k, (16, 9), jnp.float32)
+    w = _rand(jax.random.fold_in(k, 1), (9, 8), jnp.float32)
+    b = _rand(jax.random.fold_in(k, 2), (8,), jnp.float32)
+    got = systolic.mlp_layer(x, w, b, activation=act)
+    want = ref.mlp_layer_ref(x, w, b, activation=act)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_shape_sweep_matches_ref(m, k, n, act, seed):
+    key = jax.random.PRNGKey(seed)
+    x = _rand(key, (m, k), jnp.float32)
+    w = _rand(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    b = _rand(jax.random.fold_in(key, 2), (n,), jnp.float32)
+    got = systolic.mlp_layer(x, w, b, activation=act)
+    want = ref.mlp_layer_ref(x, w, b, activation=act)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    bm=st.sampled_from([4, 32, 128]),
+    bn=st.sampled_from([8, 128]),
+    bk=st.sampled_from([8, 128]),
+)
+def test_block_size_invariance(m, k, n, bm, bn, bk):
+    """Any tiling must give the same numbers (padding cancels exactly)."""
+    key = jax.random.PRNGKey(m * 7919 + k * 101 + n)
+    x = _rand(key, (m, k), jnp.float32)
+    w = _rand(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    b = _rand(jax.random.fold_in(key, 2), (n,), jnp.float32)
+    got = systolic.mlp_layer(
+        x, w, b, activation="sigmoid", block_m=bm, block_n=bn, block_k=bk
+    )
+    want = ref.mlp_layer_ref(x, w, b, activation="sigmoid")
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtype_support(dtype):
+    """bf16 inputs accumulate in f32 — tolerance scales with input width."""
+    k = jax.random.PRNGKey(3)
+    x = _rand(k, (8, 32), dtype)
+    w = _rand(jax.random.fold_in(k, 1), (32, 8), dtype)
+    b = _rand(jax.random.fold_in(k, 2), (8,), dtype)
+    got = systolic.mlp_layer(x, w, b, activation="linear")
+    want = ref.mlp_layer_ref(x, w, b, activation="linear")
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+    assert got.dtype == jnp.float32
+
+
+def test_batch_one():
+    """batch=1 is the latency-critical SNNAP single-invocation path."""
+    k = jax.random.PRNGKey(4)
+    x = _rand(k, (1, 18), jnp.float32)
+    w = _rand(jax.random.fold_in(k, 1), (18, 32), jnp.float32)
+    b = _rand(jax.random.fold_in(k, 2), (32,), jnp.float32)
+    np.testing.assert_allclose(
+        systolic.mlp_layer(x, w, b),
+        ref.mlp_layer_ref(x, w, b),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+def test_rejects_bad_shapes():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 7))
+    b = jnp.zeros((7,))
+    with pytest.raises(ValueError, match="shape mismatch"):
+        systolic.mlp_layer(x, w, b)
+    with pytest.raises(ValueError, match="bad ranks"):
+        systolic.mlp_layer(jnp.zeros((4,)), w, b)
+    with pytest.raises(ValueError, match="unknown activation"):
+        systolic.mlp_layer(jnp.zeros((4, 6)), w, b, activation="gelu")
+
+
+def test_vmem_footprint_under_budget():
+    """Default MXU-shaped tiling must fit the ~16 MiB/core VMEM budget."""
+    fp = systolic.vmem_footprint_bytes(
+        systolic.DEFAULT_BLOCK_M, systolic.DEFAULT_BLOCK_N, systolic.DEFAULT_BLOCK_K
+    )
+    assert fp < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_estimate_bounds():
+    u_full = systolic.mxu_utilization_estimate(128, 128, 128, 128, 128, 128)
+    assert u_full == pytest.approx(1.0)
+    u_small = systolic.mxu_utilization_estimate(2, 8, 2, 128, 128, 128)
+    assert 0.0 < u_small < 0.01

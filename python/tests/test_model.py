@@ -1,0 +1,53 @@
+"""L2 model tests: topology bookkeeping, forward shapes, param packing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("bench", sorted(model.TOPOLOGIES))
+def test_forward_shape(bench):
+    topo = model.TOPOLOGIES[bench]
+    params = model.init_params(jax.random.PRNGKey(0), topo)
+    x = jnp.zeros((5, topo.sizes[0]), jnp.float32)
+    y = model.mlp_forward(params, x, topo)
+    assert y.shape == (5, topo.sizes[-1])
+
+
+@pytest.mark.parametrize("bench", sorted(model.TOPOLOGIES))
+def test_pallas_forward_matches_ref(bench):
+    topo = model.TOPOLOGIES[bench]
+    params = model.init_params(jax.random.PRNGKey(1), topo)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (7, topo.sizes[0]))
+    got = model.mlp_forward(params, x, topo)
+    want = ref.mlp_forward_ref(params, x, topo.activations)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("bench", sorted(model.TOPOLOGIES))
+def test_param_count_and_packing_roundtrip(bench):
+    topo = model.TOPOLOGIES[bench]
+    params = model.init_params(jax.random.PRNGKey(3), topo)
+    flat = model.flatten_params(params)
+    assert flat.shape == (topo.n_params,)
+    back = model.unflatten_params(flat, topo)
+    for (w0, b0), (w1, b1) in zip(params, back):
+        np.testing.assert_array_equal(w0, w1)
+        np.testing.assert_array_equal(b0, b1)
+
+
+def test_unflatten_rejects_wrong_size():
+    topo = model.TOPOLOGIES["sobel"]
+    with pytest.raises(ValueError):
+        model.unflatten_params(jnp.zeros(topo.n_params + 1), topo)
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        model.Topology("bad", (3,), ())
+    with pytest.raises(ValueError):
+        model.Topology("bad", (3, 4), ("sigmoid", "linear"))

@@ -1,0 +1,113 @@
+"""Target-function tests: golden values pinned against the Rust twins
+(rust/src/bench_suite/) and range/shape invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model, targets
+
+
+@pytest.mark.parametrize("bench", sorted(targets.TARGETS))
+def test_output_shape_and_range(bench):
+    topo = model.TOPOLOGIES[bench]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.random((64, topo.sizes[0]), np.float32))
+    y = targets.TARGETS[bench](x)
+    assert y.shape == (64, topo.sizes[-1])
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # all targets are normalized into ~[0, 1] (blackscholes can slightly
+    # exceed for deep-ITM; allow headroom)
+    assert float(jnp.min(y)) >= -0.01
+    assert float(jnp.max(y)) <= 2.5
+
+
+# Golden values mirrored in rust/src/bench_suite tests — keep in sync.
+def test_fft_golden():
+    y = targets.fft(jnp.array([[0.0], [0.25], [0.5]]))
+    np.testing.assert_allclose(
+        y, [[1.0, 0.5], [0.5, 0.0], [0.0, 0.5]], atol=1e-6
+    )
+
+
+def test_sobel_golden():
+    # vertical edge: left column 0, right column 1 -> gx = 4, gy = 0
+    win = jnp.array([[0.0, 0.5, 1.0, 0.0, 0.5, 1.0, 0.0, 0.5, 1.0]])
+    y = targets.sobel(win)
+    np.testing.assert_allclose(y, [[4.0 / np.sqrt(32.0)]], atol=1e-6)
+
+
+def test_kmeans_golden():
+    x = jnp.array([[0.0, 0.0, 0.0, 1.0, 1.0, 1.0]])
+    np.testing.assert_allclose(targets.kmeans(x), [[1.0]], atol=1e-6)
+
+
+def test_inversek2j_forward_consistency():
+    """IK solution must satisfy the forward kinematics it inverts."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.random((128, 2), np.float32))
+    y = np.asarray(targets.inversek2j(x))
+    t1 = y[:, 0] * 2 * np.pi - np.pi
+    t2 = y[:, 1] * np.pi
+    px = targets.IK_L1 * np.cos(t1) + targets.IK_L2 * np.cos(t1 + t2)
+    py = targets.IK_L1 * np.sin(t1) + targets.IK_L2 * np.sin(t1 + t2)
+    r = (0.05 + 0.9 * np.asarray(x[:, 0])) * (targets.IK_L1 + targets.IK_L2)
+    phi = np.asarray(x[:, 1]) * np.pi / 2.0
+    ex = r * np.cos(phi)
+    ey = r * np.sin(phi)
+    np.testing.assert_allclose(px, ex, atol=1e-4)
+    np.testing.assert_allclose(py, ey, atol=1e-4)
+
+
+def test_jmeint_labels_are_one_hot():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.random((256, 18), np.float32))
+    y = np.asarray(targets.jmeint(x))
+    np.testing.assert_allclose(y.sum(axis=1), 1.0, atol=1e-6)
+    assert set(np.unique(y)) <= {0.0, 1.0}
+
+
+def test_jmeint_known_cases():
+    # identical triangles intersect
+    tri = [0.1, 0.1, 0.1, 0.9, 0.1, 0.1, 0.1, 0.9, 0.1]
+    both = jnp.array([tri + tri])
+    assert float(targets.jmeint(both)[0, 0]) == 1.0
+    # far-separated (z-offset) triangles do not
+    tri2 = [v + (0.8 if i % 3 == 2 else 0.0) for i, v in enumerate(tri)]
+    apart = jnp.array([tri + tri2])
+    assert float(targets.jmeint(apart)[0, 0]) == 0.0
+
+
+def test_jpeg_roundtrip_is_close_to_identity_on_smooth_blocks():
+    """Quantized DCT of a constant block reconstructs (DC survives)."""
+    x = jnp.full((1, 64), 0.5)
+    y = targets.jpeg(x)
+    np.testing.assert_allclose(y, x, atol=0.05)
+
+
+def test_blackscholes_put_call_parity():
+    rng = np.random.default_rng(3)
+    base = rng.random((64, 6)).astype(np.float32)
+    call_in = base.copy(); call_in[:, 5] = 0.0
+    put_in = base.copy(); put_in[:, 5] = 1.0
+    c = np.asarray(targets.blackscholes(jnp.asarray(call_in)))[:, 0]
+    p = np.asarray(targets.blackscholes(jnp.asarray(put_in)))[:, 0]
+    s = 0.5 + base[:, 0]
+    t = 0.05 + base[:, 2]
+    r = 0.1 * base[:, 3]
+    # C - P = S - K e^{-rT}   (scaled by BS_PRICE_SCALE)
+    lhs = (c - p) * targets.BS_PRICE_SCALE
+    rhs = s - np.exp(-r * t)
+    np.testing.assert_allclose(lhs, rhs, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sobel_rotation_symmetry(seed):
+    """|grad| is invariant to transposing the window (gx <-> gy)."""
+    rng = np.random.default_rng(seed)
+    w = rng.random((3, 3)).astype(np.float32)
+    a = float(targets.sobel(jnp.asarray(w.reshape(1, 9)))[0, 0])
+    b = float(targets.sobel(jnp.asarray(w.T.reshape(1, 9)))[0, 0])
+    assert abs(a - b) < 1e-5

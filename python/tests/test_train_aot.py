@@ -1,0 +1,76 @@
+"""Build-path smoke tests: training reduces loss; AOT emits loadable HLO
+text with weights baked in; manifest fields are complete."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, train
+
+
+@pytest.fixture(scope="module")
+def sobel_result():
+    return train.train("sobel", steps=250, batch=256)
+
+
+def test_training_reduces_loss(sobel_result):
+    # an untrained net has MSE ~ variance of the target (>~0.02); a few
+    # hundred steps must land well under that
+    assert sobel_result.val_mse < 0.02
+    assert np.isfinite(sobel_result.final_loss)
+
+
+def test_lowered_hlo_has_no_parameters_beyond_input(sobel_result):
+    text = aot.lower_bench("sobel", sobel_result.params, 4)
+    assert "ENTRY" in text
+    # weights are baked as constants: the ENTRY computation takes exactly
+    # one parameter (the input batch). Subcomputations (while bodies etc.)
+    # legitimately have their own parameter(1), so scope to ENTRY.
+    entry = text[text.index("ENTRY"):]
+    entry = entry[: entry.index("\n}")]
+    assert entry.count("parameter(0)") == 1
+    assert "parameter(1)" not in entry
+
+
+def test_lowered_hlo_has_full_constants(sobel_result):
+    """The default HLO printer elides big constants as '{...}', which
+    silently corrupts the baked weights — aot must print them in full."""
+    text = aot.lower_bench("sobel", sobel_result.params, 4)
+    assert "{...}" not in text
+
+
+def test_lowered_hlo_shapes(sobel_result):
+    text = aot.lower_bench("sobel", sobel_result.params, 16)
+    assert "f32[16,9]" in text  # input batch
+    assert "f32[16,1]" in text  # output batch
+
+
+def test_aot_main_writes_bundle(tmp_path, monkeypatch):
+    out = tmp_path / "artifacts"
+    monkeypatch.setattr(
+        "sys.argv",
+        ["aot", "--out", str(out), "--benchmarks", "kmeans", "--steps", "60"],
+    )
+    aot.main()
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["batch_buckets"] == list(aot.BATCH_BUCKETS)
+    entry = manifest["benchmarks"]["kmeans"]
+    topo = model.TOPOLOGIES["kmeans"]
+    assert entry["sizes"] == list(topo.sizes)
+    assert entry["n_params"] == topo.n_params
+    w = np.fromfile(out / entry["weights"], np.float32)
+    assert w.shape == (topo.n_params,)
+    for b in aot.BATCH_BUCKETS:
+        assert (out / entry["hlo"][str(b)]).exists()
+
+
+def test_sample_batch_blackscholes_flag_binary():
+    import jax
+
+    x, y = train.sample_batch(jax.random.PRNGKey(0), model.TOPOLOGIES["blackscholes"], 128)
+    flags = np.unique(np.asarray(x[:, 5]))
+    assert set(flags) <= {0.0, 1.0}
+    assert y.shape == (128, 1)

@@ -1,0 +1,37 @@
+//! E1 bench — compression ratio per workload stream per scheme, plus
+//! wall-clock compressor throughput (the L3 hot path E5 depends on).
+//! Mirrors BDI PACT'12 Fig. 6/7 on SNNAP traffic. See DESIGN.md §2.
+
+use snnap_c::compress::{Bdi, CompressionStats, Compressor, Fpc, Hybrid};
+use snnap_c::experiments::e1_compression as e1;
+use snnap_c::fixed::Q7_8;
+use snnap_c::trace::Synthetic;
+use snnap_c::util::bench::BenchRunner;
+use snnap_c::util::rng::Rng;
+
+fn main() {
+    println!("=== E1: compression ratio (paper rows) ===");
+    let rows = e1::run(Q7_8, 256).expect("e1");
+    e1::print_table(&rows);
+    println!("\ngeomean ratios over all workload streams:");
+    for (scheme, g) in e1::geomean_by_scheme(&rows) {
+        println!("  {scheme:<8} {g:.3}x");
+    }
+
+    println!("\n--- synthetic characterization ---");
+    for r in e1::measure_synthetics(64 * 512, 3) {
+        print!("{}", r.table());
+    }
+
+    println!("\n--- compressor throughput (1 MiB stream) ---");
+    let mut rng = Rng::new(1);
+    let data = Synthetic::FixedPoint { sigma_quanta: 64 }.generate(1 << 20, &mut rng);
+    let mut b = BenchRunner::default();
+    for c in [&Bdi as &dyn Compressor, &Fpc, &Hybrid::default()] {
+        let stats = b.bench(&format!("compress-1MiB/{}", c.name()), || {
+            CompressionStats::measure(c, &data)
+        });
+        let mb_s = 1.0 / b.results().last().unwrap().median.as_secs_f64();
+        println!("  -> {} MB/s, ratio {:.3}", mb_s.round(), stats.ratio);
+    }
+}

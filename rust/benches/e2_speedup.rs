@@ -1,0 +1,23 @@
+//! E2 bench — NPU offload speedup vs precise CPU baseline per benchmark
+//! (mirrors SNNAP HPCA'15 Fig. 6). Also times the cycle simulator itself.
+
+use snnap_c::experiments::e2_speedup as e2;
+use snnap_c::fixed::Q7_8;
+use snnap_c::util::bench::BenchRunner;
+
+fn main() {
+    println!("=== E2: speedup vs CPU (paper rows) ===");
+    let rows = e2::run(Q7_8, 1024, 128).expect("e2");
+    e2::print_table(&rows);
+
+    println!("\n--- simulator wall-clock (1024 invocations, batch 128) ---");
+    let mut b = BenchRunner::default();
+    for w in snnap_c::bench_suite::all_workloads() {
+        let p = snnap_c::experiments::program_from_workload(w.as_ref(), Q7_8, 1);
+        b.bench(&format!("sim/{}", w.name()), || {
+            e2::measure(w.as_ref(), p.clone(), snnap_c::npu::NpuConfig::default(), 1024, 128, 3)
+                .unwrap()
+                .region_speedup
+        });
+    }
+}

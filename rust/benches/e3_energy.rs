@@ -1,0 +1,23 @@
+//! E3 bench — energy savings of NPU offload (mirrors SNNAP HPCA'15
+//! Fig. 7), with the component breakdown per benchmark.
+
+use snnap_c::experiments::e3_energy as e3;
+use snnap_c::fixed::Q7_8;
+
+fn main() {
+    println!("=== E3: energy vs CPU (paper rows) ===");
+    let rows = e3::run(Q7_8, 1024, 128).expect("e3");
+    e3::print_table(&rows);
+    println!("\n--- component breakdown (with NPU) ---");
+    for r in &rows {
+        let e = &r.with_npu;
+        println!(
+            "  {:<14} cpu {:>8.1} npu {:>8.1} acp {:>8.1} static {:>8.1} (uJ)",
+            r.workload,
+            e.cpu_pj / 1e6,
+            e.npu_compute_pj / 1e6,
+            e.acp_pj / 1e6,
+            e.static_pj / 1e6,
+        );
+    }
+}

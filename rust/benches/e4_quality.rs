@@ -1,0 +1,20 @@
+//! E4 bench — application quality loss (mirrors NPU MICRO'12 Table 2):
+//! precise vs fixed-point NPU, per-benchmark metric.
+
+use snnap_c::experiments::e4_quality as e4;
+use snnap_c::fixed::{Q15_16, Q3_4, Q7_8};
+
+fn main() {
+    println!("=== E4: quality loss (paper rows, Q7.8) ===");
+    match e4::run(Q7_8, 2048) {
+        Err(e) => println!("needs artifacts: {e}"),
+        Ok(rows) => e4::print_table(&rows),
+    }
+    for (name, fmt) in [("Q3.4", Q3_4), ("Q15.16", Q15_16)] {
+        println!("\n--- same networks at {name} ---");
+        match e4::run(fmt, 1024) {
+            Err(e) => println!("needs artifacts: {e}"),
+            Ok(rows) => e4::print_table(&rows),
+        }
+    }
+}

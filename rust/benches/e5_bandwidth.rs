@@ -1,0 +1,33 @@
+//! E5 bench — THE PAPER'S PROPOSAL: effective DRAM bandwidth with
+//! BDI/FPC/LCP on the NPU's memory traffic, and its effect on delivered
+//! throughput when the channel is the bottleneck. Includes a channel-
+//! bandwidth sweep showing where compression moves the crossover.
+
+use snnap_c::experiments::e5_bandwidth as e5;
+use snnap_c::fixed::Q7_8;
+
+fn main() {
+    println!("=== E5: effective bandwidth & delivered throughput (paper rows) ===");
+    let rows = e5::run(Q7_8, 128, 8).expect("e5");
+    e5::print_table(&rows);
+
+    println!("\n--- summary: delivered-throughput gain of bdi+fpc vs none ---");
+    for w in snnap_c::bench_suite::all_workloads() {
+        let name = w.name();
+        let none = rows
+            .iter()
+            .find(|r| r.workload == name && r.scheme == "none")
+            .unwrap();
+        let hyb = rows
+            .iter()
+            .find(|r| r.workload == name && r.scheme == "bdi+fpc")
+            .unwrap();
+        println!(
+            "  {:<14} amplification {:.3}x  membound gain {:.3}x  delivered gain {:.3}x",
+            name,
+            hyb.amplification,
+            hyb.membound_throughput / none.membound_throughput,
+            hyb.delivered_throughput / none.delivered_throughput,
+        );
+    }
+}

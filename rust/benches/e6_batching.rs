@@ -1,0 +1,53 @@
+//! E6 bench — latency/throughput vs batch size (SNNAP's batching
+//! analysis, paper challenge #2), for a cheap and an expensive workload,
+//! plus the live coordinator's measured serving latency per batch policy.
+
+use std::time::Duration;
+
+use snnap_c::coordinator::{Backend, BatchPolicy, DeviceBackend, NpuServer, ServerConfig};
+use snnap_c::experiments::e6_batching as e6;
+use snnap_c::fixed::Q7_8;
+use snnap_c::npu::{NpuConfig, NpuDevice};
+use snnap_c::util::rng::Rng;
+
+fn main() {
+    println!("=== E6: batch sweep (modelled device, paper rows) ===");
+    for name in ["sobel", "jmeint", "jpeg"] {
+        println!("\n-- {name} --");
+        e6::print_table(&e6::sweep(name, Q7_8).expect("e6"));
+    }
+
+    println!("\n--- live coordinator: served latency vs max_batch ---");
+    for max_batch in [1usize, 8, 32, 128] {
+        let w = snnap_c::bench_suite::workload("sobel").unwrap();
+        let program = snnap_c::experiments::program_from_workload(w.as_ref(), Q7_8, 1);
+        let server = NpuServer::start(
+            Box::new(move || {
+                Ok(Box::new(DeviceBackend {
+                    device: NpuDevice::new(NpuConfig::default(), program)?,
+                }) as Box<dyn Backend>)
+            }),
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_micros(100),
+                    queue_cap: 8192,
+                },
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(5);
+        use snnap_c::bench_suite::Workload;
+        let inputs = w.gen_batch(&mut rng, 4096);
+        let t0 = std::time::Instant::now();
+        let _ = server.submit_all(&inputs).unwrap();
+        let dt = t0.elapsed();
+        println!(
+            "  max_batch={max_batch:<4} wall {:>10?}  {:>8.0} req/s  {}",
+            dt,
+            4096.0 / dt.as_secs_f64(),
+            server.metrics().report()
+        );
+        server.shutdown();
+    }
+}

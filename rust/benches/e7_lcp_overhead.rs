@@ -1,0 +1,30 @@
+//! E7 bench — LCP vs variable-size page layouts: ratios, O(1) vs O(n)
+//! address metadata, exceptions, overflow behaviour under dirty writes
+//! (mirrors the LCP paper's mechanism analysis), plus pack/lookup
+//! wall-clock.
+
+use snnap_c::compress::lcp::{LcpPage, VariableSizedPage, PAGE_BYTES};
+use snnap_c::compress::Hybrid;
+use snnap_c::experiments::e7_lcp as e7;
+use snnap_c::fixed::Q7_8;
+use snnap_c::trace::Synthetic;
+use snnap_c::util::bench::BenchRunner;
+use snnap_c::util::rng::Rng;
+
+fn main() {
+    println!("=== E7: LCP overheads (paper rows) ===");
+    let rows = e7::run(Q7_8).expect("e7");
+    e7::print_table(&rows);
+
+    println!("\n--- pack + lookup wall-clock ---");
+    let mut rng = Rng::new(9);
+    let page = Synthetic::FixedPoint { sigma_quanta: 48 }.generate(PAGE_BYTES, &mut rng);
+    let comp = Hybrid::default();
+    let mut b = BenchRunner::default();
+    b.bench("lcp/pack-4KiB", || LcpPage::pack(&page, &comp).physical_size());
+    b.bench("var/pack-4KiB", || VariableSizedPage::pack(&page, &comp).physical_size());
+    let lcp = LcpPage::pack(&page, &comp);
+    let var = VariableSizedPage::pack(&page, &comp);
+    b.bench("lcp/lookup-line63", || lcp.line_address(63).offset);
+    b.bench("var/lookup-line63", || var.line_address(63).offset);
+}

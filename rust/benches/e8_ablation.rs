@@ -1,0 +1,31 @@
+//! E8 bench — ablations: (a) fixed-point width vs compression ratio AND
+//! quality (the precision<->compressibility trade-off); (b) which stream
+//! to compress (weights / queues / both).
+
+use snnap_c::bench_suite::all_workloads;
+use snnap_c::experiments::e8_ablation as e8;
+use snnap_c::experiments::{load_manifest, program_from_artifact, program_from_workload};
+use snnap_c::fixed::Q7_8;
+
+fn main() {
+    println!("=== E8a: fixed-point width ablation (paper rows) ===");
+    match e8::run_width(512) {
+        Err(e) => println!("needs artifacts: {e}"),
+        Ok(rows) => e8::print_width_table(&rows),
+    }
+
+    println!("\n=== E8b: which stream to compress (bdi+fpc amplification) ===");
+    let manifest = load_manifest().ok();
+    println!(
+        "{:<14} {:>12} {:>12} {:>8}",
+        "workload", "weights-only", "queues-only", "both"
+    );
+    for w in all_workloads() {
+        let program = match &manifest {
+            Some(m) => program_from_artifact(m, w.name(), Q7_8).unwrap(),
+            None => program_from_workload(w.as_ref(), Q7_8, 42),
+        };
+        let (wo, qo, both) = e8::stream_ablation(w.as_ref(), program, 128, 4, 7).unwrap();
+        println!("{:<14} {wo:>11.3}x {qo:>11.3}x {both:>7.3}x", w.name());
+    }
+}

@@ -1,0 +1,138 @@
+//! blackscholes: European option pricing (the PARSEC kernel). Topology
+//! 6-8-8-1. Constants mirror python targets.blackscholes exactly.
+
+use super::constants::BS_PRICE_SCALE;
+use super::{QualityMetric, Workload};
+use crate::npu::program::Activation;
+use crate::util::rng::Rng;
+
+pub struct BlackScholes;
+
+/// Standard normal CDF via erf (Abramowitz-Stegun 7.1.26 rational
+/// approximation, |err| < 1.5e-7 — well under Q7.8 quantization).
+pub fn phi(x: f32) -> f32 {
+    let z = f64::from(x) / std::f64::consts::SQRT_2;
+    0.5 * (1.0 + erf(z)) as f32
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Price one option from the normalized 6-vector encoding
+/// (s, _, t, r, v, is_put) — see python targets.blackscholes.
+pub fn price(x: &[f32]) -> f32 {
+    let s = 0.5 + x[0];
+    let k = 1.0f32;
+    let t = 0.05 + x[2];
+    let r = 0.1 * x[3];
+    let v = 0.05 + 0.6 * x[4];
+    let is_put = x[5];
+    let sq = v * t.sqrt();
+    let d1 = ((s / k).ln() + (r + 0.5 * v * v) * t) / sq;
+    let d2 = d1 - sq;
+    let call = s * phi(d1) - k * (-r * t).exp() * phi(d2);
+    let put = k * (-r * t).exp() * phi(-d2) - s * phi(-d1);
+    ((1.0 - is_put) * call + is_put * put) / BS_PRICE_SCALE
+}
+
+impl Workload for BlackScholes {
+    fn name(&self) -> &'static str {
+        "blackscholes"
+    }
+
+    fn sizes(&self) -> Vec<usize> {
+        vec![6, 8, 8, 1]
+    }
+
+    fn activations(&self) -> Vec<Activation> {
+        vec![Activation::Sigmoid, Activation::Sigmoid, Activation::Linear]
+    }
+
+    fn target(&self, x: &[f32]) -> Vec<f32> {
+        vec![price(x)]
+    }
+
+    fn gen_input(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut x: Vec<f32> = (0..6).map(|_| rng.f32()).collect();
+        x[5] = if rng.bool(0.5) { 1.0 } else { 0.0 };
+        x
+    }
+
+    fn metric(&self) -> QualityMetric {
+        QualityMetric::MeanRelativeError
+    }
+
+    fn cpu_cycles_per_call(&self) -> u64 {
+        // ln, exp, sqrt, 2x erf on A9: ~550 cycles
+        550
+    }
+
+    fn offload_fraction(&self) -> f64 {
+        0.95
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_call_parity() {
+        // pinned against python test_blackscholes_put_call_parity
+        crate::util::prop::check(256, |rng| {
+            let mut x: Vec<f32> = (0..6).map(|_| rng.f32()).collect();
+            x[5] = 0.0;
+            let c = price(&x) * BS_PRICE_SCALE;
+            x[5] = 1.0;
+            let p = price(&x) * BS_PRICE_SCALE;
+            let s = 0.5 + x[0];
+            let t = 0.05 + x[2];
+            let r = 0.1 * x[3];
+            let parity = s - (-r * t).exp();
+            assert!((c - p - parity).abs() < 3e-5, "{} vs {}", c - p, parity);
+        });
+    }
+
+    #[test]
+    fn deep_itm_call_approaches_intrinsic() {
+        // s = 1.5, tiny vol, tiny t: call ~ s - k
+        let x = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let c = price(&x) * BS_PRICE_SCALE;
+        assert!((c - 0.5).abs() < 0.01, "{c}");
+    }
+
+    #[test]
+    fn otm_option_is_near_zero() {
+        // s = 0.5 (x0=0), put flag off, low vol: call worthless
+        let x = [0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let c = price(&x) * BS_PRICE_SCALE;
+        assert!(c < 0.01, "{c}");
+    }
+
+    #[test]
+    fn phi_matches_known_values() {
+        assert!((phi(0.0) - 0.5).abs() < 1e-6);
+        assert!((phi(1.0) - 0.8413447).abs() < 1e-5);
+        assert!((phi(-1.0) - 0.1586553).abs() < 1e-5);
+    }
+
+    #[test]
+    fn prices_nonnegative_and_bounded() {
+        let w = BlackScholes;
+        crate::util::prop::check(256, |rng| {
+            let x = w.gen_input(rng);
+            let p = price(&x) * BS_PRICE_SCALE;
+            assert!(p >= -1e-6, "{p}");
+            assert!(p <= 1.5, "{p}"); // <= spot for calls, <= k for puts
+        });
+    }
+}

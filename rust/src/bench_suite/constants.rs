@@ -1,0 +1,21 @@
+//! Shared constants — mirrored exactly by `python/compile/targets.py`.
+//! If you change one here, change the Python twin.
+
+/// inversek2j arm segment lengths.
+pub const IK_L1: f32 = 0.5;
+pub const IK_L2: f32 = 0.5;
+
+/// blackscholes output normalizer.
+pub const BS_PRICE_SCALE: f32 = 0.25;
+
+/// JPEG quality-50 luminance quantization table (row-major 8x8).
+pub const JPEG_QUANT: [f32; 64] = [
+    16.0, 11.0, 10.0, 16.0, 24.0, 40.0, 51.0, 61.0,
+    12.0, 12.0, 14.0, 19.0, 26.0, 58.0, 60.0, 55.0,
+    14.0, 13.0, 16.0, 24.0, 40.0, 57.0, 69.0, 56.0,
+    14.0, 17.0, 22.0, 29.0, 51.0, 87.0, 80.0, 62.0,
+    18.0, 22.0, 37.0, 56.0, 68.0, 109.0, 103.0, 77.0,
+    24.0, 35.0, 55.0, 64.0, 81.0, 104.0, 113.0, 92.0,
+    49.0, 64.0, 78.0, 87.0, 103.0, 121.0, 120.0, 101.0,
+    72.0, 92.0, 95.0, 98.0, 112.0, 100.0, 103.0, 99.0,
+];

@@ -1,0 +1,168 @@
+//! fft: radix-2 FFT whose twiddle-factor evaluation (sin/cos) is the
+//! NPU-offloaded hot function. Topology 1-4-4-2 (NPU MICRO'12).
+
+use super::{QualityMetric, Workload};
+use crate::npu::program::Activation;
+use crate::util::rng::Rng;
+
+pub struct Fft;
+
+impl Workload for Fft {
+    fn name(&self) -> &'static str {
+        "fft"
+    }
+
+    fn sizes(&self) -> Vec<usize> {
+        vec![1, 4, 4, 2]
+    }
+
+    fn activations(&self) -> Vec<Activation> {
+        vec![Activation::Sigmoid, Activation::Sigmoid, Activation::Linear]
+    }
+
+    /// phase in [0,1] -> twiddle (cos, sin) of -2*pi*phase, remapped to [0,1].
+    fn target(&self, x: &[f32]) -> Vec<f32> {
+        let theta = -2.0 * std::f32::consts::PI * x[0];
+        vec![(theta.cos() + 1.0) * 0.5, (theta.sin() + 1.0) * 0.5]
+    }
+
+    fn gen_input(&self, rng: &mut Rng) -> Vec<f32> {
+        vec![rng.f32()]
+    }
+
+    fn metric(&self) -> QualityMetric {
+        QualityMetric::MeanRelativeError
+    }
+
+    fn cpu_cycles_per_call(&self) -> u64 {
+        // sinf+cosf on A9 VFP: ~40-60 cycles each + scaling
+        110
+    }
+
+    fn offload_fraction(&self) -> f64 {
+        0.60
+    }
+}
+
+/// Full radix-2 DIT FFT using a twiddle oracle — the application driver
+/// for the end-to-end example. `twiddle(phase) -> (re, im)` lets the NPU
+/// path substitute its approximation.
+pub fn fft_radix2<F: FnMut(f32) -> (f32, f32)>(
+    re: &mut [f32],
+    im: &mut [f32],
+    mut twiddle: F,
+) {
+    let n = re.len();
+    assert!(n.is_power_of_two() && n == im.len());
+    // bit reversal
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let mut len = 2;
+    while len <= n {
+        for start in (0..n).step_by(len) {
+            for k in 0..len / 2 {
+                let phase = k as f32 / len as f32;
+                let (wr, wi) = twiddle(phase);
+                let (ur, ui) = (re[start + k], im[start + k]);
+                let (vr, vi) = (
+                    re[start + k + len / 2] * wr - im[start + k + len / 2] * wi,
+                    re[start + k + len / 2] * wi + im[start + k + len / 2] * wr,
+                );
+                re[start + k] = ur + vr;
+                im[start + k] = ui + vi;
+                re[start + k + len / 2] = ur - vr;
+                im[start + k + len / 2] = ui - vi;
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Exact twiddle for the precise application path.
+pub fn exact_twiddle(phase: f32) -> (f32, f32) {
+    let theta = -2.0 * std::f32::consts::PI * phase;
+    (theta.cos(), theta.sin())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_matches_python() {
+        // pinned against python/tests/test_targets.py::test_fft_golden
+        let f = Fft;
+        let close = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).all(|(x, y)| (x - y).abs() < 1e-6)
+        };
+        assert!(close(&f.target(&[0.0]), &[1.0, 0.5]));
+        assert!(close(&f.target(&[0.25]), &[0.5, 0.0]));
+        assert!(close(&f.target(&[0.5]), &[0.0, 0.5]));
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut re = vec![0.0f32; 16];
+        let mut im = vec![0.0f32; 16];
+        re[0] = 1.0;
+        fft_radix2(&mut re, &mut im, exact_twiddle);
+        for (r, i) in re.iter().zip(&im) {
+            assert!((r - 1.0).abs() < 1e-5 && i.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fft_parseval() {
+        let mut rng = Rng::new(3);
+        let n = 64;
+        let sig: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+        let mut re = sig.clone();
+        let mut im = vec![0.0f32; n];
+        fft_radix2(&mut re, &mut im, exact_twiddle);
+        let t: f64 = sig.iter().map(|&x| f64::from(x) * f64::from(x)).sum();
+        let f: f64 = re
+            .iter()
+            .zip(&im)
+            .map(|(&r, &i)| (f64::from(r) * f64::from(r) + f64::from(i) * f64::from(i)))
+            .sum::<f64>()
+            / n as f64;
+        assert!((t - f).abs() < 1e-4 * t.max(1.0), "{t} vs {f}");
+    }
+
+    #[test]
+    fn fft_with_lossy_twiddle_degrades_gracefully() {
+        // quantized twiddle (Q7.8-ish) still gives a near-correct spectrum
+        let n = 64;
+        let mut rng = Rng::new(4);
+        let sig: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+        let run = |tw: fn(f32) -> (f32, f32)| {
+            let mut re = sig.clone();
+            let mut im = vec![0.0f32; n];
+            fft_radix2(&mut re, &mut im, tw);
+            (re, im)
+        };
+        let (er, ei) = run(exact_twiddle);
+        let (qr, qi) = run(|p| {
+            let (c, s) = exact_twiddle(p);
+            ((c * 256.0).round() / 256.0, (s * 256.0).round() / 256.0)
+        });
+        let mut err = 0.0f64;
+        let mut norm = 0.0f64;
+        for i in 0..n {
+            err += f64::from((er[i] - qr[i]).powi(2) + (ei[i] - qi[i]).powi(2));
+            norm += f64::from(er[i].powi(2) + ei[i].powi(2));
+        }
+        assert!(err / norm < 1e-3, "{}", err / norm);
+    }
+}

@@ -1,0 +1,98 @@
+//! inversek2j: 2-joint arm inverse kinematics (elbow-down closed form).
+//! Topology 2-8-2 (NPU MICRO'12).
+
+use super::constants::{IK_L1, IK_L2};
+use super::{QualityMetric, Workload};
+use crate::npu::program::Activation;
+use crate::util::rng::Rng;
+
+pub struct InverseK2j;
+
+impl Workload for InverseK2j {
+    fn name(&self) -> &'static str {
+        "inversek2j"
+    }
+
+    fn sizes(&self) -> Vec<usize> {
+        vec![2, 8, 2]
+    }
+
+    fn activations(&self) -> Vec<Activation> {
+        vec![Activation::Sigmoid, Activation::Linear]
+    }
+
+    /// (x0, x1) in [0,1]^2 parameterize the reachable annulus in polar
+    /// form; returns (theta1, theta2) normalized into [0,1].
+    fn target(&self, x: &[f32]) -> Vec<f32> {
+        let r = (0.05 + 0.9 * x[0]) * (IK_L1 + IK_L2);
+        let phi = x[1] * std::f32::consts::FRAC_PI_2;
+        let px = r * phi.cos();
+        let py = r * phi.sin();
+        let r2 = px * px + py * py;
+        let c2 = ((r2 - IK_L1 * IK_L1 - IK_L2 * IK_L2) / (2.0 * IK_L1 * IK_L2)).clamp(-1.0, 1.0);
+        let t2 = c2.acos();
+        let t1 = py.atan2(px) - (IK_L2 * t2.sin()).atan2(IK_L1 + IK_L2 * t2.cos());
+        vec![
+            (t1 + std::f32::consts::PI) / (2.0 * std::f32::consts::PI),
+            t2 / std::f32::consts::PI,
+        ]
+    }
+
+    fn gen_input(&self, rng: &mut Rng) -> Vec<f32> {
+        vec![rng.f32(), rng.f32()]
+    }
+
+    fn metric(&self) -> QualityMetric {
+        QualityMetric::MeanRelativeError
+    }
+
+    fn cpu_cycles_per_call(&self) -> u64 {
+        // acos + atan2 + sin/cos + sqrt on A9 soft-ish fp: ~300 cycles
+        300
+    }
+
+    fn offload_fraction(&self) -> f64 {
+        0.90
+    }
+}
+
+/// Forward kinematics (used by tests and the quality validator).
+pub fn forward(t1: f32, t2: f32) -> (f32, f32) {
+    (
+        IK_L1 * t1.cos() + IK_L2 * (t1 + t2).cos(),
+        IK_L1 * t1.sin() + IK_L2 * (t1 + t2).sin(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ik_satisfies_forward_kinematics() {
+        // pinned against python test_inversek2j_forward_consistency
+        let w = InverseK2j;
+        crate::util::prop::check(256, |rng| {
+            let x = w.gen_input(rng);
+            let y = w.target(&x);
+            let t1 = y[0] * 2.0 * std::f32::consts::PI - std::f32::consts::PI;
+            let t2 = y[1] * std::f32::consts::PI;
+            let (px, py) = forward(t1, t2);
+            let r = (0.05 + 0.9 * x[0]) * (IK_L1 + IK_L2);
+            let phi = x[1] * std::f32::consts::FRAC_PI_2;
+            assert!((px - r * phi.cos()).abs() < 1e-4, "{px} vs {}", r * phi.cos());
+            assert!((py - r * phi.sin()).abs() < 1e-4);
+        });
+    }
+
+    #[test]
+    fn outputs_in_unit_range() {
+        let w = InverseK2j;
+        let mut rng = Rng::new(0);
+        for _ in 0..200 {
+            let y = w.target(&w.gen_input(&mut rng));
+            assert!((0.0..=1.0).contains(&y[0]), "{}", y[0]);
+            assert!((0.0..=1.0).contains(&y[1]), "{}", y[1]);
+        }
+    }
+}

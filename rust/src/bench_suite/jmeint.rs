@@ -1,0 +1,123 @@
+//! jmeint: triangle-triangle intersection (the jME game-engine kernel).
+//! Topology 18-32-8-2; binary classification. The plane-separation test
+//! mirrors python targets._tri_degenerate_separating_axis exactly.
+
+use super::{QualityMetric, Workload};
+use crate::npu::program::Activation;
+use crate::util::rng::Rng;
+
+pub struct Jmeint;
+
+fn cross(a: [f32; 3], b: [f32; 3]) -> [f32; 3] {
+    [
+        a[1] * b[2] - a[2] * b[1],
+        a[2] * b[0] - a[0] * b[2],
+        a[0] * b[1] - a[1] * b[0],
+    ]
+}
+
+fn dot(a: [f32; 3], b: [f32; 3]) -> f32 {
+    a[0] * b[0] + a[1] * b[1] + a[2] * b[2]
+}
+
+fn v(t: &[f32], i: usize) -> [f32; 3] {
+    [t[i * 3], t[i * 3 + 1], t[i * 3 + 2]]
+}
+
+/// Is `tri_a`'s plane a separating plane for `tri_b`'s vertices?
+fn plane_separates(tri_a: &[f32], tri_b: &[f32]) -> bool {
+    let p0 = v(tri_a, 0);
+    let e1 = [v(tri_a, 1)[0] - p0[0], v(tri_a, 1)[1] - p0[1], v(tri_a, 1)[2] - p0[2]];
+    let e2 = [v(tri_a, 2)[0] - p0[0], v(tri_a, 2)[1] - p0[1], v(tri_a, 2)[2] - p0[2]];
+    let n = cross(e1, e2);
+    let d = -dot(n, p0);
+    let dist = |p: [f32; 3]| dot(n, p) + d;
+    let ds = [dist(v(tri_b, 0)), dist(v(tri_b, 1)), dist(v(tri_b, 2))];
+    ds.iter().all(|&x| x > 1e-7) || ds.iter().all(|&x| x < -1e-7)
+}
+
+impl Workload for Jmeint {
+    fn name(&self) -> &'static str {
+        "jmeint"
+    }
+
+    fn sizes(&self) -> Vec<usize> {
+        vec![18, 32, 8, 2]
+    }
+
+    fn activations(&self) -> Vec<Activation> {
+        vec![Activation::Sigmoid, Activation::Sigmoid, Activation::Sigmoid]
+    }
+
+    /// 18 floats (two triangles) -> one-hot (intersects, disjoint).
+    fn target(&self, x: &[f32]) -> Vec<f32> {
+        let separated = plane_separates(&x[..9], &x[9..]) || plane_separates(&x[9..], &x[..9]);
+        if separated {
+            vec![0.0, 1.0]
+        } else {
+            vec![1.0, 0.0]
+        }
+    }
+
+    fn gen_input(&self, rng: &mut Rng) -> Vec<f32> {
+        (0..18).map(|_| rng.f32()).collect()
+    }
+
+    fn metric(&self) -> QualityMetric {
+        QualityMetric::MissRate
+    }
+
+    fn cpu_cycles_per_call(&self) -> u64 {
+        // two plane tests: crosses, dots, compares: ~1100 cycles on A9
+        1100
+    }
+
+    fn offload_fraction(&self) -> f64 {
+        0.95
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_matches_python() {
+        // pinned against python test_jmeint_known_cases
+        let w = Jmeint;
+        let tri = [0.1, 0.1, 0.1, 0.9, 0.1, 0.1, 0.1, 0.9, 0.1];
+        let mut both = tri.to_vec();
+        both.extend_from_slice(&tri);
+        assert_eq!(w.target(&both), vec![1.0, 0.0], "identical triangles intersect");
+
+        let tri2: Vec<f32> = tri
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| if i % 3 == 2 { x + 0.8 } else { x })
+            .collect();
+        let mut apart = tri.to_vec();
+        apart.extend_from_slice(&tri2);
+        assert_eq!(w.target(&apart), vec![0.0, 1.0], "z-offset triangles disjoint");
+    }
+
+    #[test]
+    fn output_is_one_hot() {
+        let w = Jmeint;
+        crate::util::prop::check(256, |rng| {
+            let y = w.target(&w.gen_input(rng));
+            assert!((y[0] + y[1] - 1.0).abs() < 1e-9);
+            assert!(y[0] == 0.0 || y[0] == 1.0);
+        });
+    }
+
+    #[test]
+    fn class_balance_is_reasonable() {
+        // random unit-cube triangle pairs intersect sometimes but not always
+        let w = Jmeint;
+        let mut rng = Rng::new(7);
+        let hits: usize = (0..2000)
+            .filter(|_| w.target(&w.gen_input(&mut rng))[0] == 1.0)
+            .count();
+        assert!(hits > 100 && hits < 1900, "hits {hits}");
+    }
+}

@@ -1,0 +1,181 @@
+//! jpeg: 8x8 block DCT + quality-50 quantization + inverse DCT — the
+//! encode/decode round trip the NPU approximates. Topology 64-16-64.
+
+use super::constants::JPEG_QUANT;
+use super::{QualityMetric, Workload};
+use crate::npu::program::Activation;
+use crate::util::rng::Rng;
+
+pub struct Jpeg;
+
+/// Orthonormal 8-point DCT-II matrix (row k, col n).
+fn dct8() -> [[f32; 8]; 8] {
+    let mut m = [[0.0f32; 8]; 8];
+    for (k, row) in m.iter_mut().enumerate() {
+        let c = if k == 0 { (1.0f32 / 8.0).sqrt() } else { (2.0f32 / 8.0).sqrt() };
+        for (n, cell) in row.iter_mut().enumerate() {
+            *cell = c * ((2.0 * n as f32 + 1.0) * k as f32 * std::f32::consts::PI / 16.0).cos();
+        }
+    }
+    m
+}
+
+/// blk = D * blk * D^T  (or transposed variant for the inverse).
+fn mat8(d: &[[f32; 8]; 8], blk: &[[f32; 8]; 8], transpose_d: bool) -> [[f32; 8]; 8] {
+    let mut tmp = [[0.0f32; 8]; 8];
+    // tmp = D(^T) * blk
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut s = 0.0;
+            for k in 0..8 {
+                let dv = if transpose_d { d[k][i] } else { d[i][k] };
+                s += dv * blk[k][j];
+            }
+            tmp[i][j] = s;
+        }
+    }
+    // out = tmp * D^(T or not, opposite side)
+    let mut out = [[0.0f32; 8]; 8];
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut s = 0.0;
+            for k in 0..8 {
+                let dv = if transpose_d { d[k][j] } else { d[j][k] };
+                s += tmp[i][k] * dv;
+            }
+            out[i][j] = s;
+        }
+    }
+    out
+}
+
+/// The precise block round trip on [0,1] pixels.
+pub fn block_roundtrip(pixels: &[f32]) -> Vec<f32> {
+    assert_eq!(pixels.len(), 64);
+    let d = dct8();
+    let mut blk = [[0.0f32; 8]; 8];
+    for i in 0..8 {
+        for j in 0..8 {
+            blk[i][j] = pixels[i * 8 + j] * 255.0 - 128.0;
+        }
+    }
+    let mut coef = mat8(&d, &blk, false);
+    for i in 0..8 {
+        for j in 0..8 {
+            let q = JPEG_QUANT[i * 8 + j];
+            coef[i][j] = (coef[i][j] / q).round() * q;
+        }
+    }
+    let rec = mat8(&d, &coef, true);
+    (0..64)
+        .map(|k| ((rec[k / 8][k % 8] + 128.0) / 255.0).clamp(0.0, 1.0))
+        .collect()
+}
+
+impl Workload for Jpeg {
+    fn name(&self) -> &'static str {
+        "jpeg"
+    }
+
+    fn sizes(&self) -> Vec<usize> {
+        vec![64, 16, 64]
+    }
+
+    fn activations(&self) -> Vec<Activation> {
+        vec![Activation::Sigmoid, Activation::Linear]
+    }
+
+    fn target(&self, x: &[f32]) -> Vec<f32> {
+        block_roundtrip(x)
+    }
+
+    /// Natural-image-like blocks: smooth gradient + low-frequency wave +
+    /// mild noise (pure uniform noise is not what JPEG sees).
+    fn gen_input(&self, rng: &mut Rng) -> Vec<f32> {
+        let base = rng.f32();
+        let gx = rng.f32_range(-0.3, 0.3);
+        let gy = rng.f32_range(-0.3, 0.3);
+        let fx = rng.f32_range(0.0, std::f32::consts::PI);
+        let amp = rng.f32_range(0.0, 0.2);
+        (0..64)
+            .map(|k| {
+                let (i, j) = ((k / 8) as f32 / 8.0, (k % 8) as f32 / 8.0);
+                let noise = (rng.f32() - 0.5) * 0.05;
+                (base + gx * i + gy * j + amp * (fx * (i + j)).sin() + noise).clamp(0.0, 1.0)
+            })
+            .collect()
+    }
+
+    fn metric(&self) -> QualityMetric {
+        QualityMetric::Rmse
+    }
+
+    fn cpu_cycles_per_call(&self) -> u64 {
+        // 2x 8x8x8 MACs x 2 passes + quant: ~2300 cycles
+        2300
+    }
+
+    fn offload_fraction(&self) -> f64 {
+        0.55
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_block_survives() {
+        // pinned against python test_jpeg_roundtrip_...
+        let x = vec![0.5f32; 64];
+        let y = block_roundtrip(&x);
+        for v in y {
+            assert!((v - 0.5).abs() < 0.05, "{v}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_is_small_on_smooth_blocks() {
+        let w = Jpeg;
+        let mut rng = Rng::new(5);
+        let mut rmse = 0.0f64;
+        let n = 100;
+        for _ in 0..n {
+            let x = w.gen_input(&mut rng);
+            let y = w.target(&x);
+            let s: f64 = x
+                .iter()
+                .zip(&y)
+                .map(|(a, b)| f64::from(a - b) * f64::from(a - b))
+                .sum::<f64>()
+                / 64.0;
+            rmse += s.sqrt();
+        }
+        rmse /= n as f64;
+        // quality-50 quantization on smooth blocks: a few percent RMSE
+        assert!(rmse < 0.08, "rmse {rmse}");
+    }
+
+    #[test]
+    fn dct_is_orthonormal() {
+        let d = dct8();
+        for i in 0..8 {
+            for j in 0..8 {
+                let dot: f32 = (0..8).map(|k| d[i][k] * d[j][k]).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-5, "({i},{j}) {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_clamped() {
+        let w = Jpeg;
+        crate::util::prop::check(64, |rng| {
+            let y = w.target(&w.gen_input(rng));
+            for v in y {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        });
+    }
+}

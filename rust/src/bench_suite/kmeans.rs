@@ -1,0 +1,143 @@
+//! kmeans: RGB point-to-centroid distance — the inner-loop hot function
+//! of the clustering kernel. Topology 6-8-4-1.
+
+use super::{QualityMetric, Workload};
+use crate::npu::program::Activation;
+use crate::util::rng::Rng;
+
+pub struct Kmeans;
+
+impl Workload for Kmeans {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn sizes(&self) -> Vec<usize> {
+        vec![6, 8, 4, 1]
+    }
+
+    fn activations(&self) -> Vec<Activation> {
+        vec![Activation::Sigmoid, Activation::Sigmoid, Activation::Linear]
+    }
+
+    /// (r,g,b, cr,cg,cb) -> euclidean distance / sqrt(3).
+    fn target(&self, x: &[f32]) -> Vec<f32> {
+        let d2: f32 = (0..3).map(|i| (x[i] - x[i + 3]) * (x[i] - x[i + 3])).sum();
+        vec![d2.sqrt() / 3.0f32.sqrt()]
+    }
+
+    fn gen_input(&self, rng: &mut Rng) -> Vec<f32> {
+        (0..6).map(|_| rng.f32()).collect()
+    }
+
+    fn metric(&self) -> QualityMetric {
+        QualityMetric::MeanRelativeError
+    }
+
+    fn cpu_cycles_per_call(&self) -> u64 {
+        // 3 sub+mul+add, sqrt: ~70 cycles
+        70
+    }
+
+    fn offload_fraction(&self) -> f64 {
+        0.45
+    }
+}
+
+/// Lloyd's algorithm over RGB points with a pluggable distance oracle —
+/// the application driver (NPU path substitutes its approximation).
+pub fn lloyd<F: FnMut(&[f32; 3], &[f32; 3]) -> f32>(
+    points: &[[f32; 3]],
+    k: usize,
+    iters: usize,
+    mut dist: F,
+) -> (Vec<[f32; 3]>, Vec<usize>) {
+    assert!(k > 0 && !points.is_empty());
+    // deterministic init: evenly strided points
+    let mut centroids: Vec<[f32; 3]> =
+        (0..k).map(|i| points[i * points.len() / k]).collect();
+    let mut assign = vec![0usize; points.len()];
+    for _ in 0..iters {
+        for (p, a) in points.iter().zip(assign.iter_mut()) {
+            let mut best = (f32::INFINITY, 0usize);
+            for (ci, c) in centroids.iter().enumerate() {
+                let d = dist(p, c);
+                if d < best.0 {
+                    best = (d, ci);
+                }
+            }
+            *a = best.1;
+        }
+        let mut sums = vec![[0.0f32; 3]; k];
+        let mut counts = vec![0usize; k];
+        for (p, &a) in points.iter().zip(&assign) {
+            for i in 0..3 {
+                sums[a][i] += p[i];
+            }
+            counts[a] += 1;
+        }
+        for (c, (s, n)) in centroids.iter_mut().zip(sums.iter().zip(&counts)) {
+            if *n > 0 {
+                for i in 0..3 {
+                    c[i] = s[i] / *n as f32;
+                }
+            }
+        }
+    }
+    (centroids, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_matches_python() {
+        let w = Kmeans;
+        let y = w.target(&[0.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        assert!((y[0] - 1.0).abs() < 1e-6);
+        let y = w.target(&[0.5, 0.5, 0.5, 0.5, 0.5, 0.5]);
+        assert!(y[0].abs() < 1e-6);
+    }
+
+    #[test]
+    fn lloyd_separates_two_clear_clusters() {
+        let mut rng = Rng::new(9);
+        let mut pts = Vec::new();
+        for _ in 0..100 {
+            pts.push([rng.f32() * 0.2, rng.f32() * 0.2, rng.f32() * 0.2]);
+        }
+        for _ in 0..100 {
+            pts.push([
+                0.8 + rng.f32() * 0.2,
+                0.8 + rng.f32() * 0.2,
+                0.8 + rng.f32() * 0.2,
+            ]);
+        }
+        let exact = |p: &[f32; 3], c: &[f32; 3]| -> f32 {
+            (0..3).map(|i| (p[i] - c[i]) * (p[i] - c[i])).sum::<f32>().sqrt()
+        };
+        let (cents, assign) = lloyd(&pts, 2, 10, exact);
+        // the two clusters' assignments must be internally uniform
+        assert!(assign[..100].iter().all(|&a| a == assign[0]));
+        assert!(assign[100..].iter().all(|&a| a == assign[100]));
+        assert_ne!(assign[0], assign[100]);
+        let lo = cents[assign[0]];
+        assert!(lo.iter().all(|&v| v < 0.3), "{lo:?}");
+    }
+
+    #[test]
+    fn triangle_inequality_spot() {
+        let w = Kmeans;
+        crate::util::prop::check(128, |rng| {
+            let a: Vec<f32> = (0..3).map(|_| rng.f32()).collect();
+            let b: Vec<f32> = (0..3).map(|_| rng.f32()).collect();
+            let c: Vec<f32> = (0..3).map(|_| rng.f32()).collect();
+            let d = |p: &[f32], q: &[f32]| {
+                let x = [p[0], p[1], p[2], q[0], q[1], q[2]];
+                w.target(&x)[0]
+            };
+            assert!(d(&a, &c) <= d(&a, &b) + d(&b, &c) + 1e-6);
+        });
+    }
+}

@@ -1,0 +1,213 @@
+//! The approximable workload suite (AxBench-style) that SNNAP/NPU papers
+//! evaluate on: seven applications, each with a *precise* implementation
+//! of its hot function, the offload-region boundary the NPU replaces, an
+//! input generator, and a quality metric.
+//!
+//! Every target function here is mirrored **constant-for-constant** by
+//! `python/compile/targets.py` (which generates the NPU training data);
+//! golden-value tests on both sides pin the contract.
+
+pub mod blackscholes;
+pub mod constants;
+pub mod fft;
+pub mod inversek2j;
+pub mod jmeint;
+pub mod jpeg;
+pub mod kmeans;
+pub mod sobel;
+
+use crate::npu::program::Activation;
+use crate::util::rng::Rng;
+
+/// How a workload scores approximation error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QualityMetric {
+    /// mean(|got - want| / (|want| + 0.05))
+    MeanRelativeError,
+    /// fraction of misclassified items (argmax mismatch)
+    MissRate,
+    /// root-mean-square error over [0,1] outputs
+    Rmse,
+}
+
+impl QualityMetric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QualityMetric::MeanRelativeError => "mean-rel-err",
+            QualityMetric::MissRate => "miss-rate",
+            QualityMetric::Rmse => "rmse",
+        }
+    }
+
+    /// Score a batch of outputs against references.
+    pub fn score(&self, got: &[Vec<f32>], want: &[Vec<f32>]) -> f64 {
+        assert_eq!(got.len(), want.len());
+        if got.is_empty() {
+            return 0.0;
+        }
+        match self {
+            QualityMetric::MeanRelativeError => {
+                let mut acc = 0.0f64;
+                let mut n = 0usize;
+                for (g, w) in got.iter().zip(want) {
+                    for (a, b) in g.iter().zip(w) {
+                        acc += (f64::from(a - b)).abs() / (f64::from(b.abs()) + 0.05);
+                        n += 1;
+                    }
+                }
+                acc / n as f64
+            }
+            QualityMetric::MissRate => {
+                let argmax = |v: &[f32]| {
+                    v.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap()
+                };
+                let miss = got
+                    .iter()
+                    .zip(want)
+                    .filter(|(g, w)| argmax(g) != argmax(w))
+                    .count();
+                miss as f64 / got.len() as f64
+            }
+            QualityMetric::Rmse => {
+                let mut acc = 0.0f64;
+                let mut n = 0usize;
+                for (g, w) in got.iter().zip(want) {
+                    for (a, b) in g.iter().zip(w) {
+                        acc += f64::from(a - b) * f64::from(a - b);
+                        n += 1;
+                    }
+                }
+                (acc / n as f64).sqrt()
+            }
+        }
+    }
+}
+
+/// One approximable application.
+pub trait Workload: Send + Sync {
+    /// Benchmark id (matches the artifact manifest key).
+    fn name(&self) -> &'static str;
+
+    /// NPU topology (layer sizes), per the NPU/SNNAP evaluations.
+    fn sizes(&self) -> Vec<usize>;
+
+    /// Per-layer activations.
+    fn activations(&self) -> Vec<Activation>;
+
+    /// The precise hot function the NPU replaces. `x` has arity
+    /// `sizes()[0]`, the result has arity `sizes().last()`.
+    fn target(&self, x: &[f32]) -> Vec<f32>;
+
+    /// Sample one input vector from the application's distribution.
+    fn gen_input(&self, rng: &mut Rng) -> Vec<f32>;
+
+    /// The error metric the application reports.
+    fn metric(&self) -> QualityMetric;
+
+    /// Estimated ARM A9 cycles for one precise call (fp math latencies;
+    /// used by E2/E3 to place the CPU baseline).
+    fn cpu_cycles_per_call(&self) -> u64;
+
+    /// Fraction of whole-application time spent in the hot function
+    /// (Amdahl envelope for whole-app speedup, per the NPU paper's
+    /// region profiling).
+    fn offload_fraction(&self) -> f64;
+
+    /// Generate a batch of inputs.
+    fn gen_batch(&self, rng: &mut Rng, n: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|_| self.gen_input(rng)).collect()
+    }
+
+    /// Run the precise function over a batch.
+    fn run_precise(&self, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        inputs.iter().map(|x| self.target(x)).collect()
+    }
+}
+
+/// All seven workloads, in canonical order.
+pub fn all_workloads() -> Vec<Box<dyn Workload>> {
+    vec![
+        Box::new(fft::Fft),
+        Box::new(inversek2j::InverseK2j),
+        Box::new(jmeint::Jmeint),
+        Box::new(jpeg::Jpeg),
+        Box::new(kmeans::Kmeans),
+        Box::new(sobel::Sobel),
+        Box::new(blackscholes::BlackScholes),
+    ]
+}
+
+/// Look one up by name.
+pub fn workload(name: &str) -> Option<Box<dyn Workload>> {
+    all_workloads().into_iter().find(|w| w.name() == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_complete_and_consistent() {
+        let ws = all_workloads();
+        assert_eq!(ws.len(), 7);
+        for w in &ws {
+            let sizes = w.sizes();
+            assert!(sizes.len() >= 2, "{}", w.name());
+            assert_eq!(sizes.len() - 1, w.activations().len(), "{}", w.name());
+            assert!(w.offload_fraction() > 0.0 && w.offload_fraction() <= 1.0);
+            assert!(w.cpu_cycles_per_call() > 0);
+        }
+    }
+
+    #[test]
+    fn targets_have_declared_arity_and_are_finite() {
+        let mut rng = Rng::new(0);
+        for w in all_workloads() {
+            for _ in 0..32 {
+                let x = w.gen_input(&mut rng);
+                assert_eq!(x.len(), w.sizes()[0], "{} input", w.name());
+                let y = w.target(&x);
+                assert_eq!(y.len(), *w.sizes().last().unwrap(), "{} output", w.name());
+                for v in &y {
+                    assert!(v.is_finite(), "{}: {v}", w.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_are_normalized() {
+        // targets are scaled into ~[0,1] so sigmoid nets and Q7.8 both fit
+        let mut rng = Rng::new(1);
+        for w in all_workloads() {
+            let batch = w.gen_batch(&mut rng, 256);
+            for y in w.run_precise(&batch) {
+                for v in y {
+                    assert!((-0.01..=2.5).contains(&v), "{}: {v}", w.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn metric_scores() {
+        let m = QualityMetric::MeanRelativeError;
+        assert_eq!(m.score(&[vec![1.0]], &[vec![1.0]]), 0.0);
+        let m = QualityMetric::MissRate;
+        assert_eq!(m.score(&[vec![0.9, 0.1]], &[vec![1.0, 0.0]]), 0.0);
+        assert_eq!(m.score(&[vec![0.1, 0.9]], &[vec![1.0, 0.0]]), 1.0);
+        let m = QualityMetric::Rmse;
+        let s = m.score(&[vec![0.5, 0.5]], &[vec![0.0, 0.0]]);
+        assert!((s - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workload_lookup() {
+        assert!(workload("sobel").is_some());
+        assert!(workload("nope").is_none());
+    }
+}

@@ -1,0 +1,195 @@
+//! sobel: 3x3 gradient-magnitude edge detection. Topology 9-8-1.
+
+use super::{QualityMetric, Workload};
+use crate::npu::program::Activation;
+use crate::util::rng::Rng;
+
+pub struct Sobel;
+
+/// The precise window function: normalized gradient magnitude.
+pub fn window_magnitude(w: &[f32]) -> f32 {
+    assert_eq!(w.len(), 9);
+    let gx = (w[2] + 2.0 * w[5] + w[8]) - (w[0] + 2.0 * w[3] + w[6]);
+    let gy = (w[6] + 2.0 * w[7] + w[8]) - (w[0] + 2.0 * w[1] + w[2]);
+    ((gx * gx + gy * gy).sqrt() / 32.0f32.sqrt()).clamp(0.0, 1.0)
+}
+
+impl Workload for Sobel {
+    fn name(&self) -> &'static str {
+        "sobel"
+    }
+
+    fn sizes(&self) -> Vec<usize> {
+        vec![9, 8, 1]
+    }
+
+    fn activations(&self) -> Vec<Activation> {
+        vec![Activation::Sigmoid, Activation::Linear]
+    }
+
+    fn target(&self, x: &[f32]) -> Vec<f32> {
+        vec![window_magnitude(x)]
+    }
+
+    /// Image-like windows: smooth patches, edges, corners.
+    fn gen_input(&self, rng: &mut Rng) -> Vec<f32> {
+        let kind = rng.below(3);
+        let base = rng.f32();
+        (0..9)
+            .map(|k| {
+                let (i, j) = (k / 3, k % 3);
+                match kind {
+                    0 => (base + (rng.f32() - 0.5) * 0.1).clamp(0.0, 1.0), // flat
+                    1 => {
+                        // vertical or horizontal edge
+                        let edge = if base > 0.5 { j } else { i };
+                        if edge >= 1 { 0.9 } else { 0.1 }
+                    }
+                    _ => rng.f32(), // texture
+                }
+            })
+            .collect()
+    }
+
+    fn metric(&self) -> QualityMetric {
+        QualityMetric::Rmse
+    }
+
+    fn cpu_cycles_per_call(&self) -> u64 {
+        // 12 adds, 2 muls, sqrt: ~60 cycles
+        60
+    }
+
+    fn offload_fraction(&self) -> f64 {
+        0.50
+    }
+}
+
+/// A grayscale image with convolution drivers — the end-to-end example's
+/// application layer.
+#[derive(Debug, Clone)]
+pub struct GrayImage {
+    pub w: usize,
+    pub h: usize,
+    pub pixels: Vec<f32>,
+}
+
+impl GrayImage {
+    /// Deterministic synthetic test card: gradients, circles, bars —
+    /// enough structure that edges are meaningful.
+    pub fn test_card(w: usize, h: usize) -> GrayImage {
+        let mut pixels = vec![0.0f32; w * h];
+        for y in 0..h {
+            for x in 0..w {
+                let fx = x as f32 / w as f32;
+                let fy = y as f32 / h as f32;
+                let mut v = 0.35 + 0.3 * fx; // base gradient
+                // circle
+                let (cx, cy, r) = (0.35f32, 0.4f32, 0.18f32);
+                if ((fx - cx).powi(2) + (fy - cy).powi(2)).sqrt() < r {
+                    v = 0.85;
+                }
+                // bars
+                if fx > 0.6 && (y / 8) % 2 == 0 {
+                    v = 0.15;
+                }
+                pixels[y * w + x] = v;
+            }
+        }
+        GrayImage { w, h, pixels }
+    }
+
+    pub fn get(&self, x: usize, y: usize) -> f32 {
+        self.pixels[y * self.w + x]
+    }
+
+    /// Extract the 3x3 window centred at (x, y), clamped at borders.
+    pub fn window(&self, x: usize, y: usize) -> [f32; 9] {
+        let mut out = [0.0f32; 9];
+        for dy in 0..3usize {
+            for dx in 0..3usize {
+                let sx = (x + dx).saturating_sub(1).min(self.w - 1);
+                let sy = (y + dy).saturating_sub(1).min(self.h - 1);
+                out[dy * 3 + dx] = self.get(sx, sy);
+            }
+        }
+        out
+    }
+
+    /// All windows in row-major order (the batch the NPU consumes).
+    pub fn all_windows(&self) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.w * self.h);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                out.push(self.window(x, y).to_vec());
+            }
+        }
+        out
+    }
+
+    /// Precise sobel over the whole image.
+    pub fn sobel(&self) -> GrayImage {
+        let pixels = self.all_windows().iter().map(|w| window_magnitude(w)).collect();
+        GrayImage { w: self.w, h: self.h, pixels }
+    }
+
+    /// RMSE vs another image.
+    pub fn rmse(&self, other: &GrayImage) -> f64 {
+        assert_eq!(self.pixels.len(), other.pixels.len());
+        let s: f64 = self
+            .pixels
+            .iter()
+            .zip(&other.pixels)
+            .map(|(a, b)| f64::from(a - b) * f64::from(a - b))
+            .sum();
+        (s / self.pixels.len() as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_matches_python() {
+        // pinned against python test_sobel_golden
+        let win = [0.0, 0.5, 1.0, 0.0, 0.5, 1.0, 0.0, 0.5, 1.0];
+        let y = window_magnitude(&win);
+        assert!((y - 4.0 / 32.0f32.sqrt()).abs() < 1e-6, "{y}");
+    }
+
+    #[test]
+    fn flat_window_has_zero_gradient() {
+        assert_eq!(window_magnitude(&[0.7; 9]), 0.0);
+    }
+
+    #[test]
+    fn transpose_symmetry() {
+        crate::util::prop::check(128, |rng| {
+            let w: Vec<f32> = (0..9).map(|_| rng.f32()).collect();
+            let t = [w[0], w[3], w[6], w[1], w[4], w[7], w[2], w[5], w[8]];
+            assert!((window_magnitude(&w) - window_magnitude(&t)).abs() < 1e-5);
+        });
+    }
+
+    #[test]
+    fn test_card_edges_found() {
+        let img = GrayImage::test_card(64, 64);
+        let edges = img.sobel();
+        // circle boundary + bars produce strong edges; flat areas none
+        let max = edges.pixels.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max > 0.3, "max edge {max}");
+        let mean: f32 = edges.pixels.iter().sum::<f32>() / edges.pixels.len() as f32;
+        assert!(mean < 0.2, "most of the card is flat, mean {mean}");
+    }
+
+    #[test]
+    fn window_extraction_center_and_border() {
+        let img = GrayImage::test_card(16, 16);
+        let w = img.window(8, 8);
+        assert_eq!(w[4], img.get(8, 8));
+        let _ = img.window(0, 0);
+        let _ = img.window(15, 15);
+        assert_eq!(img.all_windows().len(), 256);
+    }
+}

@@ -1,0 +1,140 @@
+//! Hand-rolled CLI argument parser (the vendored dependency set has no
+//! clap). Supports subcommands, `--flag`, `--key value`, repeated
+//! `--set k=v` overrides, and generated help text.
+
+use anyhow::{bail, Result};
+
+/// A parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: Vec<String>,
+    options: Vec<(String, String)>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]). Flags in
+    /// `flag_names` take no value; everything else starting with `--`
+    /// takes the following token as its value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.command = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if let Some((k, v)) = name.split_once('=') {
+                    out.options.push((k.to_string(), v.to_string()));
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--{name} expects a value"))?;
+                    out.options.push((name.to_string(), v));
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                bail!("unknown short option {a:?} (use --long options)");
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// All values of a repeatable option (e.g. `--set`).
+    pub fn opt_all(&self, name: &str) -> Vec<String> {
+        self.options
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.clone())
+            .collect()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["verbose", "json"]).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --benchmark sobel --set npu.pu_count=4 --set batch.max=64 --verbose");
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.opt("benchmark"), Some("sobel"));
+        assert_eq!(a.opt_all("set"), vec!["npu.pu_count=4", "batch.max=64"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("json"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --benchmark=fft");
+        assert_eq!(a.opt("benchmark"), Some("fft"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("compress-file input.bin --json");
+        assert_eq!(a.command, "compress-file");
+        assert_eq!(a.positional, vec!["input.bin"]);
+    }
+
+    #[test]
+    fn last_option_wins() {
+        let a = parse("x --n 1 --n 2");
+        assert_eq!(a.opt("n"), Some("2"));
+    }
+
+    #[test]
+    fn opt_parse_types() {
+        let a = parse("x --n 42");
+        assert_eq!(a.opt_parse("n", 0usize).unwrap(), 42);
+        assert_eq!(a.opt_parse("missing", 7usize).unwrap(), 7);
+        let a = parse("x --n banana");
+        assert!(a.opt_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(["x".to_string(), "--k".to_string()], &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_short_options() {
+        let r = Args::parse(["x".to_string(), "-v".to_string()], &[]);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,385 @@
+//! Frequent Pattern Compression (Alameldeen & Wood, UW-Madison TR-1500).
+//!
+//! FPC scans a line as 32-bit words and gives each word a 3-bit prefix
+//! naming one of eight frequent patterns; the payload carries only the
+//! bits the pattern cannot reconstruct. Zero runs extend across words
+//! (up to 8) so all-zero regions cost 6 bits per run.
+//!
+//! | prefix | pattern                              | payload bits |
+//! |--------|--------------------------------------|--------------|
+//! | 000    | zero run (1..=8 words)               | 3 (run len)  |
+//! | 001    | 4-bit sign-extended                  | 4            |
+//! | 010    | 8-bit sign-extended                  | 8            |
+//! | 011    | 16-bit sign-extended                 | 16           |
+//! | 100    | 16-bit padded (low half zero)        | 16           |
+//! | 101    | two sign-extended bytes per halfword | 16           |
+//! | 110    | repeated byte                        | 8            |
+//! | 111    | uncompressed word                    | 32           |
+//!
+//! Our payload is a packed little-endian bit stream; `size_bits` counts
+//! prefixes + payloads exactly, so ratios are bit-accurate.
+
+use super::{Compressed, Compressor, Encoding, LINE_BYTES};
+
+const WORDS: usize = LINE_BYTES / 4;
+
+/// Frequent Pattern Compression over 64-byte lines.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Fpc;
+
+/// A simple LSB-first bit writer/reader pair used for the payload stream.
+#[derive(Default)]
+struct BitWriter {
+    bytes: Vec<u8>,
+    bitpos: usize,
+}
+
+impl BitWriter {
+    /// Append the low `nbits` of `value` (LSB-first). Word-at-a-time:
+    /// splits the value across the current partial byte and whole bytes
+    /// instead of looping per bit (PERF: 8-10x over the naive loop; see
+    /// EXPERIMENTS.md SSPerf).
+    fn push(&mut self, value: u64, nbits: usize) {
+        debug_assert!(nbits <= 57, "push is called with <= 32 bits in practice");
+        debug_assert!(nbits == 64 || value >> nbits == 0 || true);
+        let value = if nbits == 64 { value } else { value & ((1u64 << nbits) - 1) };
+        let off = self.bitpos % 8;
+        if off == 0 {
+            // fast path: byte-aligned; dump whole little-endian bytes
+            let needed = nbits.div_ceil(8);
+            let le = value.to_le_bytes();
+            self.bytes.extend_from_slice(&le[..needed]);
+        } else {
+            // merge into the partial last byte, then dump the rest
+            let idx = self.bytes.len() - 1;
+            let room = 8 - off;
+            self.bytes[idx] |= (value << off) as u8;
+            if nbits > room {
+                let rest = value >> room;
+                let needed = (nbits - room).div_ceil(8);
+                let le = rest.to_le_bytes();
+                self.bytes.extend_from_slice(&le[..needed]);
+            }
+        }
+        self.bitpos += nbits;
+        // trim: extend_from_slice may have over-appended zero bits, which
+        // is fine (they are zero), but keep len consistent with bitpos
+        let want = self.bitpos.div_ceil(8);
+        self.bytes.truncate(want);
+        debug_assert_eq!(self.bytes.len(), want);
+    }
+}
+
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    bitpos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, bitpos: 0 }
+    }
+
+    /// Read `nbits` (LSB-first). Loads up to 8 bytes at once instead of
+    /// looping per bit (PERF twin of BitWriter::push).
+    fn pull(&mut self, nbits: usize) -> u64 {
+        debug_assert!(nbits <= 56);
+        if nbits == 0 {
+            return 0;
+        }
+        let start = self.bitpos / 8;
+        let off = self.bitpos % 8;
+        let mut buf = [0u8; 8];
+        let end = (self.bitpos + nbits).div_ceil(8).min(self.bytes.len());
+        buf[..end - start].copy_from_slice(&self.bytes[start..end]);
+        let word = u64::from_le_bytes(buf) >> off;
+        self.bitpos += nbits;
+        if nbits == 64 { word } else { word & ((1u64 << nbits) - 1) }
+    }
+}
+
+fn fits_signed(v: i32, bits: u32) -> bool {
+    let max = (1i64 << (bits - 1)) - 1;
+    let min = -(1i64 << (bits - 1));
+    (min..=max).contains(&i64::from(v))
+}
+
+/// Classify one word; returns (prefix, payload value, payload bits).
+fn classify(w: u32) -> (u8, u64, usize) {
+    let s = w as i32;
+    if fits_signed(s, 4) {
+        (0b001, u64::from(w & 0xf), 4)
+    } else if fits_signed(s, 8) {
+        (0b010, u64::from(w & 0xff), 8)
+    } else if fits_signed(s, 16) {
+        (0b011, u64::from(w & 0xffff), 16)
+    } else if w & 0xffff == 0 {
+        // halfword padded with zeros: keep the high half
+        (0b100, u64::from(w >> 16), 16)
+    } else {
+        let lo = (w & 0xffff) as u16;
+        let hi = (w >> 16) as u16;
+        if fits_signed(i32::from(lo as i16), 8) && fits_signed(i32::from(hi as i16), 8) {
+            (0b101, u64::from(lo & 0xff) | (u64::from(hi & 0xff) << 8), 16)
+        } else {
+            let b = w & 0xff;
+            if w == b * 0x0101_0101 {
+                (0b110, u64::from(b), 8)
+            } else {
+                (0b111, u64::from(w), 32)
+            }
+        }
+    }
+}
+
+fn sext(v: u64, bits: u32) -> u32 {
+    let shift = 64 - bits;
+    (((v << shift) as i64) >> shift) as u32
+}
+
+impl Fpc {
+    /// Compressed size in bits without materializing the payload — used
+    /// by the Hybrid selector to pick a winner before encoding (PERF).
+    pub fn size_bits_only(line: &[u8]) -> usize {
+        assert_eq!(line.len(), LINE_BYTES);
+        let mut bits = 0usize;
+        let mut i = 0;
+        let word_at =
+            |i: usize| u32::from_le_bytes(line[i * 4..i * 4 + 4].try_into().unwrap());
+        while i < WORDS {
+            if word_at(i) == 0 {
+                let mut run = 1;
+                while i + run < WORDS && word_at(i + run) == 0 && run < 8 {
+                    run += 1;
+                }
+                bits += 6;
+                i += run;
+            } else {
+                bits += 3 + classify(word_at(i)).2;
+                i += 1;
+            }
+        }
+        bits
+    }
+}
+
+impl Compressor for Fpc {
+    fn name(&self) -> &'static str {
+        "fpc"
+    }
+
+    fn compress(&self, line: &[u8]) -> Compressed {
+        assert_eq!(line.len(), LINE_BYTES);
+        let words: Vec<u32> = line
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+
+        let mut bw = BitWriter::default();
+        let mut bits = 0usize;
+        let mut i = 0;
+        while i < WORDS {
+            if words[i] == 0 {
+                let mut run = 1;
+                while i + run < WORDS && words[i + run] == 0 && run < 8 {
+                    run += 1;
+                }
+                bw.push(0b000, 3);
+                bw.push(run as u64 - 1, 3);
+                bits += 6;
+                i += run;
+            } else {
+                let (prefix, payload, nbits) = classify(words[i]);
+                bw.push(u64::from(prefix), 3);
+                bw.push(payload, nbits);
+                bits += 3 + nbits;
+                i += 1;
+            }
+        }
+
+        if bits >= LINE_BYTES * 8 {
+            return Compressed {
+                encoding: Encoding::Uncompressed,
+                size_bits: bits, // honest accounting: FPC made it bigger
+                payload: line.to_vec(),
+            };
+        }
+        Compressed { encoding: Encoding::Fpc, size_bits: bits, payload: bw.bytes }
+    }
+
+    fn decompress(&self, c: &Compressed) -> Vec<u8> {
+        match &c.encoding {
+            Encoding::Uncompressed => c.payload.clone(),
+            Encoding::Fpc => {
+                let mut br = BitReader::new(&c.payload);
+                let mut words = Vec::with_capacity(WORDS);
+                while words.len() < WORDS {
+                    let prefix = br.pull(3) as u8;
+                    match prefix {
+                        0b000 => {
+                            let run = br.pull(3) as usize + 1;
+                            words.extend(std::iter::repeat_n(0u32, run));
+                        }
+                        0b001 => words.push(sext(br.pull(4), 4)),
+                        0b010 => words.push(sext(br.pull(8), 8)),
+                        0b011 => words.push(sext(br.pull(16), 16)),
+                        0b100 => words.push((br.pull(16) as u32) << 16),
+                        0b101 => {
+                            let v = br.pull(16);
+                            let lo = sext(v & 0xff, 8) & 0xffff;
+                            let hi = sext(v >> 8, 8) & 0xffff;
+                            words.push(lo | (hi << 16));
+                        }
+                        0b110 => {
+                            let b = br.pull(8) as u32;
+                            words.push(b * 0x0101_0101);
+                        }
+                        0b111 => words.push(br.pull(32) as u32),
+                        _ => unreachable!(),
+                    }
+                }
+                assert_eq!(words.len(), WORDS, "FPC stream decoded to wrong word count");
+                let mut out = Vec::with_capacity(LINE_BYTES);
+                for w in words {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+                out
+            }
+            other => panic!("not an FPC encoding: {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(line: &[u8]) -> Compressed {
+        let c = Fpc;
+        let z = c.compress(line);
+        assert_eq!(c.decompress(&z), line);
+        z
+    }
+
+    #[test]
+    fn zero_line_costs_two_runs() {
+        // 16 zero words = 2 runs of 8 = 12 bits
+        let z = roundtrip(&[0u8; 64]);
+        assert_eq!(z.size_bits, 12);
+        assert!(z.ratio() > 40.0);
+    }
+
+    #[test]
+    fn small_ints_compress_well() {
+        // words 0..16 are all 4-bit sign-extendable (0..=7) or 8-bit
+        let mut line = [0u8; 64];
+        for (i, c) in line.chunks_exact_mut(4).enumerate() {
+            c.copy_from_slice(&(i as u32 % 8).to_le_bytes());
+        }
+        let z = roundtrip(&line);
+        // mixture of zero-runs and 4-bit patterns, far below 512
+        assert!(z.size_bits < 160, "{}", z.size_bits);
+    }
+
+    #[test]
+    fn negative_small_ints() {
+        let mut line = [0u8; 64];
+        for (i, c) in line.chunks_exact_mut(4).enumerate() {
+            c.copy_from_slice(&(-(i as i32) - 1).to_le_bytes());
+        }
+        let z = roundtrip(&line);
+        assert!(z.size_bits < 512);
+    }
+
+    #[test]
+    fn halfword_padded() {
+        let mut line = [0u8; 64];
+        for c in line.chunks_exact_mut(4) {
+            c.copy_from_slice(&0xabcd_0000u32.to_le_bytes());
+        }
+        let z = roundtrip(&line);
+        // 16 words x (3 + 16) = 304 bits
+        assert_eq!(z.size_bits, 304);
+    }
+
+    #[test]
+    fn repeated_byte_words() {
+        let line = [0x5au8; 64];
+        let z = roundtrip(&line);
+        // 16 x (3 + 8) = 176
+        assert_eq!(z.size_bits, 176);
+    }
+
+    #[test]
+    fn incompressible_marks_expansion_honestly() {
+        let mut s = 0xdeadbeefdeadbeefu64;
+        let mut line = [0u8; 64];
+        for b in &mut line {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            *b = (s >> 32) as u8;
+        }
+        let z = roundtrip(&line);
+        // prefixes cost 3 bits/word on top of 32 -> ratio < 1
+        assert!(z.size_bits >= 512);
+        assert_eq!(z.encoding, Encoding::Uncompressed);
+    }
+
+    #[test]
+    fn q78_weight_lines_compress() {
+        // 16-bit fixed-point weights packed pairwise into words: each i16 in
+        // [-256, 256]; word halves are sign-extended-byte OR 16-bit patterns
+        let vals: Vec<i16> = (0..32).map(|i| ((i * 29 % 512) - 256) as i16).collect();
+        let mut line = [0u8; 64];
+        for (i, v) in vals.iter().enumerate() {
+            line[i * 2..i * 2 + 2].copy_from_slice(&v.to_le_bytes());
+        }
+        let z = roundtrip(&line);
+        assert!(z.size_bits < 512, "{}", z.size_bits);
+    }
+
+    #[test]
+    fn prop_roundtrip_any_line() {
+        crate::util::prop::check(400, |rng| {
+            let line = rng.bytes(64);
+            roundtrip(&line);
+        });
+    }
+
+    #[test]
+    fn prop_roundtrip_word_patterns() {
+        crate::util::prop::check(300, |rng| {
+            let mut line = [0u8; 64];
+            for i in 0..16 {
+                let w: u32 = match rng.below(6) {
+                    0 => 0,
+                    1 => (rng.range(0, 16) as i32 - 8) as u32,
+                    2 => (rng.range(0, 256) as i32 - 128) as u32,
+                    3 => (rng.next_u32() & 0xffff) << 16,
+                    4 => (rng.next_u32() & 0xff) * 0x0101_0101,
+                    _ => rng.next_u32(),
+                };
+                line[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+            }
+            let z = roundtrip(&line);
+            assert!(z.size_bits >= 6);
+        });
+    }
+
+    #[test]
+    fn prop_zero_heavy_lines_beat_half_size() {
+        crate::util::prop::check(40, |rng| {
+            // lines with <=3 nonzero words must compress by > 2x
+            let nz = rng.range(0, 4);
+            let mut line = [0u8; 64];
+            for j in 0..nz {
+                let w = 0x1234_5678u32;
+                line[j * 16..j * 16 + 4].copy_from_slice(&w.to_le_bytes());
+            }
+            let z = roundtrip(&line);
+            assert!(z.size_bits <= 256, "{} nonzero -> {}", nz, z.size_bits);
+        });
+    }
+
+}

@@ -1,0 +1,458 @@
+//! Linearly Compressed Pages (Pekhimenko et al. [4]).
+//!
+//! LCP's key idea: store every compressed cache line of a page in a
+//! **fixed-size slot**, so the physical address of line `i` is
+//! `page_base + metadata + i * slot` — one shift+add, no per-line size
+//! walk. Lines that do not fit the slot are *exceptions*, stored verbatim
+//! in an exception region at the end of the page; a per-line metadata entry
+//! (exception bit + exception index) redirects them.
+//!
+//! The packer tries every candidate slot size and keeps the one minimizing
+//! the physical footprint. Writes that grow a line beyond its slot raise
+//! *type-1 overflows* (line becomes an exception); exhausting the exception
+//! region raises a *type-2 overflow* (page must be repacked/expanded —
+//! the expensive OS-visible event the paper's design minimizes).
+//!
+//! [`VariableSizedPage`] is the prior-work baseline (E7): lines packed
+//! back-to-back, address lookup = O(n) prefix-sum walk over line sizes.
+
+use super::{Compressed, Compressor, LINE_BYTES};
+
+/// Page size (bytes) — 4 KiB, 64 lines.
+pub const PAGE_BYTES: usize = 4096;
+/// Lines per page.
+pub const PAGE_LINES: usize = PAGE_BYTES / LINE_BYTES;
+
+/// Candidate compressed-slot sizes (bytes). 64 = uncompressed fallback.
+/// 40 matters in practice: a 64-byte line of Q7.8 values under BDI b2d1
+/// is 39 bytes, so without a 40-slot every fixed-point line becomes an
+/// exception and compression evaporates.
+pub const SLOT_CANDIDATES: [usize; 8] = [4, 8, 16, 24, 32, 40, 48, 64];
+
+/// Per-page metadata: for each line an exception bit + 6-bit exception
+/// index, plus a small header (slot-size code, exception count).
+pub const METADATA_BYTES: usize = PAGE_LINES * 7 / 8 + 8; // 56 + 8
+
+/// Maximum exceptions before the page stops being worth compressing
+/// (beyond this the packer falls back to slot=64, i.e. uncompressed).
+pub const MAX_EXCEPTIONS: usize = 32;
+
+/// One line's placement inside an [`LcpPage`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Slot {
+    /// Compressed into the fixed slot.
+    Inline(Compressed),
+    /// Exception: stored verbatim at this exception-region index.
+    Exception(u8),
+}
+
+/// A packed LCP page.
+pub struct LcpPage {
+    /// Chosen fixed slot size in bytes.
+    pub slot_size: usize,
+    slots: Vec<Slot>,
+    /// Verbatim 64-byte lines in the exception region.
+    exceptions: Vec<[u8; LINE_BYTES]>,
+    /// Cumulative type-1 overflow events since packing.
+    pub type1_overflows: u64,
+    /// Cumulative type-2 overflow events since packing.
+    pub type2_overflows: u64,
+}
+
+/// Result of an address calculation, with its modelled cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AddressCalc {
+    /// Byte offset of the line's storage within the page.
+    pub offset: usize,
+    /// Metadata words touched to resolve it (1 for LCP; O(i) for the
+    /// variable-size baseline).
+    pub metadata_accesses: usize,
+}
+
+impl LcpPage {
+    /// Pack a 4 KiB page, choosing the best slot size under `comp`.
+    pub fn pack(data: &[u8], comp: &dyn Compressor) -> Self {
+        assert_eq!(data.len(), PAGE_BYTES, "LCP packs whole 4 KiB pages");
+        let compressed: Vec<Compressed> =
+            data.chunks_exact(LINE_BYTES).map(|l| comp.compress(l)).collect();
+
+        let mut best: Option<(usize, usize)> = None; // (physical, slot)
+        for &slot in &SLOT_CANDIDATES {
+            let exc = compressed.iter().filter(|c| c.size_bytes() > slot).count();
+            if exc > MAX_EXCEPTIONS && slot != LINE_BYTES {
+                continue;
+            }
+            let physical = Self::physical_size_for(slot, exc);
+            if best.is_none_or(|(p, _)| physical < p) {
+                best = Some((physical, slot));
+            }
+        }
+        let (_, slot_size) = best.expect("slot=64 always packs");
+
+        let mut slots = Vec::with_capacity(PAGE_LINES);
+        let mut exceptions = Vec::new();
+        for (i, c) in compressed.into_iter().enumerate() {
+            if c.size_bytes() > slot_size {
+                let mut raw = [0u8; LINE_BYTES];
+                raw.copy_from_slice(&data[i * LINE_BYTES..(i + 1) * LINE_BYTES]);
+                slots.push(Slot::Exception(exceptions.len() as u8));
+                exceptions.push(raw);
+            } else {
+                slots.push(Slot::Inline(c));
+            }
+        }
+        LcpPage { slot_size, slots, exceptions, type1_overflows: 0, type2_overflows: 0 }
+    }
+
+    fn physical_size_for(slot: usize, exceptions: usize) -> usize {
+        if slot == LINE_BYTES {
+            // uncompressed page: no metadata, no exceptions
+            PAGE_BYTES
+        } else {
+            METADATA_BYTES + PAGE_LINES * slot + exceptions * LINE_BYTES
+        }
+    }
+
+    /// Physical footprint of the packed page in bytes.
+    pub fn physical_size(&self) -> usize {
+        Self::physical_size_for(self.slot_size, self.exceptions.len())
+    }
+
+    /// Page-level compression ratio.
+    pub fn ratio(&self) -> f64 {
+        PAGE_BYTES as f64 / self.physical_size() as f64
+    }
+
+    /// Number of exception lines.
+    pub fn exception_count(&self) -> usize {
+        self.exceptions.len()
+    }
+
+    /// O(1) LCP address calculation for line `i`.
+    pub fn line_address(&self, i: usize) -> AddressCalc {
+        assert!(i < PAGE_LINES);
+        match &self.slots[i] {
+            Slot::Inline(_) => AddressCalc {
+                offset: METADATA_BYTES + i * self.slot_size,
+                metadata_accesses: 1,
+            },
+            Slot::Exception(e) => AddressCalc {
+                offset: METADATA_BYTES
+                    + PAGE_LINES * self.slot_size
+                    + usize::from(*e) * LINE_BYTES,
+                metadata_accesses: 1,
+            },
+        }
+    }
+
+    /// Bytes that must cross the memory channel to fetch line `i`
+    /// (compressed slot or verbatim exception).
+    pub fn line_transfer_bytes(&self, i: usize) -> usize {
+        match &self.slots[i] {
+            Slot::Inline(c) => c.size_bytes(),
+            Slot::Exception(_) => LINE_BYTES,
+        }
+    }
+
+    /// Read line `i` back (decompressing if inline).
+    pub fn read_line(&self, i: usize, comp: &dyn Compressor) -> Vec<u8> {
+        match &self.slots[i] {
+            Slot::Inline(c) => comp.decompress(c),
+            Slot::Exception(e) => self.exceptions[usize::from(*e)].to_vec(),
+        }
+    }
+
+    /// Write line `i`. Returns `true` if the write stayed in place, `false`
+    /// if it triggered an overflow (type-1 if it became an exception,
+    /// type-2 if the exception region itself was full — the page is then
+    /// repacked around the new data, which the caller should bill as an
+    /// expensive event).
+    pub fn write_line(&mut self, i: usize, new_line: &[u8], comp: &dyn Compressor) -> bool {
+        assert_eq!(new_line.len(), LINE_BYTES);
+        let c = comp.compress(new_line);
+        match (&self.slots[i].clone(), c.size_bytes() <= self.slot_size) {
+            (Slot::Inline(_), true) => {
+                self.slots[i] = Slot::Inline(c);
+                true
+            }
+            (Slot::Exception(e), _) => {
+                // exceptions always hold verbatim data; stay an exception
+                // (a real implementation could promote back; we keep the
+                // paper's simple policy)
+                let mut raw = [0u8; LINE_BYTES];
+                raw.copy_from_slice(new_line);
+                self.exceptions[usize::from(*e)] = raw;
+                true
+            }
+            (Slot::Inline(_), false) => {
+                if self.exceptions.len() < MAX_EXCEPTIONS {
+                    self.type1_overflows += 1;
+                    let mut raw = [0u8; LINE_BYTES];
+                    raw.copy_from_slice(new_line);
+                    self.slots[i] = Slot::Exception(self.exceptions.len() as u8);
+                    self.exceptions.push(raw);
+                    false
+                } else {
+                    // type-2: repack the whole page with the new contents
+                    self.type2_overflows += 1;
+                    let t1 = self.type1_overflows;
+                    let t2 = self.type2_overflows;
+                    let mut data = Vec::with_capacity(PAGE_BYTES);
+                    for j in 0..PAGE_LINES {
+                        if j == i {
+                            data.extend_from_slice(new_line);
+                        } else {
+                            data.extend(self.read_line(j, comp));
+                        }
+                    }
+                    *self = LcpPage::pack(&data, comp);
+                    self.type1_overflows = t1;
+                    self.type2_overflows = t2;
+                    false
+                }
+            }
+        }
+    }
+}
+
+/// Prior-work baseline: variable-size compressed lines packed back-to-back.
+/// Address calculation must walk the per-line size table — O(i) metadata
+/// accesses — which is exactly the latency/complexity problem LCP removes.
+pub struct VariableSizedPage {
+    lines: Vec<Compressed>,
+}
+
+impl VariableSizedPage {
+    pub fn pack(data: &[u8], comp: &dyn Compressor) -> Self {
+        assert_eq!(data.len(), PAGE_BYTES);
+        VariableSizedPage {
+            lines: data.chunks_exact(LINE_BYTES).map(|l| comp.compress(l)).collect(),
+        }
+    }
+
+    /// Physical footprint: sum of compressed sizes + a 6-bit size field per
+    /// line (rounded up per line to byte granularity for addressing).
+    pub fn physical_size(&self) -> usize {
+        let sizes: usize = self.lines.iter().map(Compressed::size_bytes).sum();
+        sizes + PAGE_LINES // 1 size byte per line
+    }
+
+    pub fn ratio(&self) -> f64 {
+        PAGE_BYTES as f64 / self.physical_size() as f64
+    }
+
+    /// O(i) address calculation: prefix-sum of all earlier line sizes.
+    pub fn line_address(&self, i: usize) -> AddressCalc {
+        assert!(i < PAGE_LINES);
+        let offset: usize = self.lines[..i].iter().map(Compressed::size_bytes).sum();
+        AddressCalc { offset: PAGE_LINES + offset, metadata_accesses: i + 1 }
+    }
+
+    pub fn read_line(&self, i: usize, comp: &dyn Compressor) -> Vec<u8> {
+        comp.decompress(&self.lines[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Hybrid, NoCompression};
+
+    fn mixed_page() -> Vec<u8> {
+        // 1/3 zero lines, 1/3 low-range u32 lines, 1/3 xorshift noise
+        let mut page = vec![0u8; PAGE_BYTES];
+        let mut s = 0x1234_5678_9abc_def0u64;
+        for (i, line) in page.chunks_exact_mut(LINE_BYTES).enumerate() {
+            match i % 3 {
+                0 => {}
+                1 => {
+                    for (j, c) in line.chunks_exact_mut(4).enumerate() {
+                        c.copy_from_slice(&(1000 + j as u32).to_le_bytes());
+                    }
+                }
+                _ => {
+                    for b in line.iter_mut() {
+                        s ^= s << 13;
+                        s ^= s >> 7;
+                        s ^= s << 17;
+                        *b = (s >> 24) as u8;
+                    }
+                }
+            }
+        }
+        page
+    }
+
+    #[test]
+    fn pack_roundtrips_every_line() {
+        let comp = Hybrid::default();
+        let page = mixed_page();
+        let p = LcpPage::pack(&page, &comp);
+        for i in 0..PAGE_LINES {
+            assert_eq!(p.read_line(i, &comp), &page[i * 64..(i + 1) * 64]);
+        }
+    }
+
+    #[test]
+    fn mixed_page_compresses_with_exceptions() {
+        let comp = Hybrid::default();
+        let p = LcpPage::pack(&mixed_page(), &comp);
+        assert!(p.slot_size < 64, "slot {}", p.slot_size);
+        assert!(p.exception_count() > 0, "noise lines must be exceptions");
+        assert!(p.ratio() > 1.2, "ratio {}", p.ratio());
+    }
+
+    #[test]
+    fn zero_page_hits_max_ratio() {
+        let comp = Hybrid::default();
+        let p = LcpPage::pack(&vec![0u8; PAGE_BYTES], &comp);
+        assert_eq!(p.slot_size, SLOT_CANDIDATES[0]);
+        assert_eq!(p.exception_count(), 0);
+        assert!(p.ratio() > 10.0);
+    }
+
+    #[test]
+    fn incompressible_page_falls_back_to_uncompressed() {
+        let mut page = vec![0u8; PAGE_BYTES];
+        let mut s = 0xfeed_face_cafe_beefu64;
+        for b in page.iter_mut() {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            *b = (s >> 16) as u8;
+        }
+        let comp = Hybrid::default();
+        let p = LcpPage::pack(&page, &comp);
+        assert_eq!(p.slot_size, 64);
+        assert_eq!(p.physical_size(), PAGE_BYTES);
+        assert!((p.ratio() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lcp_address_is_o1_and_correct() {
+        let comp = Hybrid::default();
+        let p = LcpPage::pack(&mixed_page(), &comp);
+        for i in 0..PAGE_LINES {
+            let a = p.line_address(i);
+            assert_eq!(a.metadata_accesses, 1);
+            if let Slot::Inline(_) = p.slots[i] {
+                assert_eq!(a.offset, METADATA_BYTES + i * p.slot_size);
+            } else {
+                assert!(a.offset >= METADATA_BYTES + PAGE_LINES * p.slot_size);
+            }
+        }
+    }
+
+    #[test]
+    fn variable_page_address_is_oi() {
+        let comp = Hybrid::default();
+        let page = mixed_page();
+        let v = VariableSizedPage::pack(&page, &comp);
+        assert_eq!(v.line_address(0).metadata_accesses, 1);
+        assert_eq!(v.line_address(63).metadata_accesses, 64);
+        for i in 0..PAGE_LINES {
+            assert_eq!(v.read_line(i, &comp), &page[i * 64..(i + 1) * 64]);
+        }
+        // offsets strictly increase
+        let mut prev = 0;
+        for i in 0..PAGE_LINES {
+            let o = v.line_address(i).offset;
+            assert!(i == 0 || o >= prev);
+            prev = o;
+        }
+    }
+
+    #[test]
+    fn write_within_slot_stays_inline() {
+        let comp = Hybrid::default();
+        let mut p = LcpPage::pack(&vec![0u8; PAGE_BYTES], &comp);
+        let mut line = [0u8; 64];
+        line[0] = 1; // still tiny under hybrid
+        assert!(p.write_line(3, &line, &comp));
+        assert_eq!(p.read_line(3, &comp), line);
+        assert_eq!(p.type1_overflows, 0);
+    }
+
+    #[test]
+    fn overflowing_write_raises_type1_then_type2() {
+        let comp = Hybrid::default();
+        let mut p = LcpPage::pack(&vec![0u8; PAGE_BYTES], &comp);
+        let noise = |seed: u64| {
+            let mut s = seed | 1;
+            let mut l = [0u8; 64];
+            for b in &mut l {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                *b = (s >> 8) as u8;
+            }
+            l
+        };
+        let mut t2_seen = false;
+        for i in 0..PAGE_LINES {
+            let l = noise(0x9e37 + i as u64 * 65537);
+            let in_place = p.write_line(i, &l, &comp);
+            assert_eq!(p.read_line(i, &comp), l, "line {i}");
+            if !in_place && p.type2_overflows > 0 {
+                t2_seen = true;
+            }
+        }
+        assert!(p.type1_overflows > 0);
+        assert!(t2_seen, "filling a zero page with noise must exhaust exceptions");
+    }
+
+    #[test]
+    fn lcp_beats_uncompressed_never_exceeds_page() {
+        let comp = Hybrid::default();
+        for page in [vec![0u8; PAGE_BYTES], mixed_page()] {
+            let p = LcpPage::pack(&page, &comp);
+            assert!(p.physical_size() <= PAGE_BYTES);
+        }
+    }
+
+    #[test]
+    fn nocompression_forces_uncompressed_slot() {
+        let p = LcpPage::pack(&mixed_page(), &NoCompression);
+        assert_eq!(p.slot_size, 64);
+    }
+
+    #[test]
+    fn prop_pack_roundtrip_random_pages() {
+        crate::util::prop::check(12, |rng| {
+            let comp = Hybrid::default();
+            let zero_frac = rng.below(4);
+            let mut page = vec![0u8; PAGE_BYTES];
+            for line in page.chunks_exact_mut(LINE_BYTES) {
+                if rng.below(4) < zero_frac {
+                    continue; // leave zero
+                }
+                rng.fill_bytes(line);
+            }
+            let p = LcpPage::pack(&page, &comp);
+            assert!(p.physical_size() <= PAGE_BYTES);
+            for i in 0..PAGE_LINES {
+                assert_eq!(p.read_line(i, &comp), &page[i * 64..(i + 1) * 64]);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_writes_preserve_all_other_lines() {
+        crate::util::prop::check(12, |rng| {
+            let comp = Hybrid::default();
+            let page = mixed_page();
+            let mut p = LcpPage::pack(&page, &comp);
+            let idx = rng.range(0, 64);
+            let mut l = [0u8; 64];
+            rng.fill_bytes(&mut l);
+            p.write_line(idx, &l, &comp);
+            assert_eq!(p.read_line(idx, &comp), l.to_vec());
+            for j in 0..PAGE_LINES {
+                if j != idx {
+                    assert_eq!(p.read_line(j, &comp), &page[j * 64..(j + 1) * 64]);
+                }
+            }
+        });
+    }
+
+}

@@ -1,0 +1,169 @@
+//! Cache-line data compression algorithms — the paper's central proposal.
+//!
+//! Implements, bit-accurately and with exact decompression, the three
+//! schemes the paper proposes to apply to SNNAP's memory traffic:
+//!
+//! * [`bdi`] — Base-Delta-Immediate (Pekhimenko et al., PACT'12 [5])
+//! * [`fpc`] — Frequent Pattern Compression (Alameldeen & Wood, TR-1500 [6])
+//! * [`lcp`] — Linearly Compressed Pages (Pekhimenko et al. [4]), the page
+//!   layout that turns per-line compression into main-memory bandwidth
+//!   gains with O(1) address calculation
+//! * [`hybrid`] — the per-line best-of BDI∪FPC selector LCP uses
+//!
+//! All compressors implement [`Compressor`]: `compress` returns a
+//! [`Compressed`] whose `size_bits` is the exact on-the-wire cost
+//! (including metadata/prefix bits) and `decompress` must round-trip
+//! bit-exactly (enforced by proptest in every submodule).
+
+pub mod bdi;
+pub mod fpc;
+pub mod hybrid;
+pub mod lcp;
+pub mod stats;
+
+pub use bdi::Bdi;
+pub use fpc::Fpc;
+pub use hybrid::Hybrid;
+pub use stats::{CompressionStats, SchemeReport};
+
+/// Cache line size used throughout (SNNAP's ACP/AXI transfers and the
+/// DRAM model both move 64-byte lines).
+pub const LINE_BYTES: usize = 64;
+
+/// The result of compressing one cache line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Compressed {
+    /// Scheme-specific encoding tag (e.g. which BDI base/delta pair or the
+    /// FPC prefix stream) — carried so `decompress` is self-contained.
+    pub encoding: Encoding,
+    /// Exact compressed size in bits, including per-line metadata.
+    pub size_bits: usize,
+    /// Opaque payload bytes (scheme-specific layout).
+    pub payload: Vec<u8>,
+}
+
+impl Compressed {
+    /// Size in bytes, rounded up — what a byte-addressed channel moves.
+    pub fn size_bytes(&self) -> usize {
+        self.size_bits.div_ceil(8)
+    }
+
+    /// Compression ratio vs an uncompressed 64-byte line.
+    pub fn ratio(&self) -> f64 {
+        (LINE_BYTES * 8) as f64 / self.size_bits as f64
+    }
+}
+
+/// Encoding tags across all schemes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Encoding {
+    /// Line stored verbatim (incompressible under the scheme).
+    Uncompressed,
+    /// BDI encoding choice.
+    Bdi(bdi::BdiEncoding),
+    /// FPC: the per-word prefix stream is inside the payload.
+    Fpc,
+    /// Hybrid selected BDI (...) or FPC.
+    HybridBdi(bdi::BdiEncoding),
+    HybridFpc,
+}
+
+/// A cache-line compressor. Implementations must be deterministic and
+/// `decompress(compress(line)) == line` for every 64-byte line.
+pub trait Compressor: Send + Sync {
+    /// Human-readable scheme name (used in reports/benches).
+    fn name(&self) -> &'static str;
+
+    /// Compress one 64-byte line. Panics if `line.len() != LINE_BYTES`.
+    fn compress(&self, line: &[u8]) -> Compressed;
+
+    /// Exact inverse of [`Compressor::compress`].
+    fn decompress(&self, c: &Compressed) -> Vec<u8>;
+}
+
+/// The identity scheme — the uncompressed baseline every experiment
+/// compares against.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoCompression;
+
+impl Compressor for NoCompression {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn compress(&self, line: &[u8]) -> Compressed {
+        assert_eq!(line.len(), LINE_BYTES);
+        Compressed {
+            encoding: Encoding::Uncompressed,
+            size_bits: LINE_BYTES * 8,
+            payload: line.to_vec(),
+        }
+    }
+
+    fn decompress(&self, c: &Compressed) -> Vec<u8> {
+        assert_eq!(c.encoding, Encoding::Uncompressed);
+        c.payload.clone()
+    }
+}
+
+/// Every scheme the experiments sweep, in report order.
+pub fn all_schemes() -> Vec<Box<dyn Compressor>> {
+    vec![
+        Box::new(NoCompression),
+        Box::new(Bdi::default()),
+        Box::new(Fpc::default()),
+        Box::new(Hybrid::default()),
+    ]
+}
+
+/// Compress a whole byte stream line by line (zero-padding the tail) and
+/// return per-line results. The workhorse of E1/E5/E8.
+pub fn compress_stream(c: &dyn Compressor, bytes: &[u8]) -> Vec<Compressed> {
+    bytes
+        .chunks(LINE_BYTES)
+        .map(|chunk| {
+            if chunk.len() == LINE_BYTES {
+                c.compress(chunk)
+            } else {
+                let mut line = [0u8; LINE_BYTES];
+                line[..chunk.len()].copy_from_slice(chunk);
+                c.compress(&line)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_compression_roundtrip() {
+        let line: Vec<u8> = (0..64).collect();
+        let c = NoCompression;
+        let z = c.compress(&line);
+        assert_eq!(z.size_bits, 512);
+        assert_eq!(z.size_bytes(), 64);
+        assert!((z.ratio() - 1.0).abs() < 1e-12);
+        assert_eq!(c.decompress(&z), line);
+    }
+
+    #[test]
+    fn stream_pads_tail() {
+        let c = NoCompression;
+        let out = compress_stream(&c, &[1u8; 100]);
+        assert_eq!(out.len(), 2);
+        let tail = c.decompress(&out[1]);
+        assert_eq!(&tail[..36], &[1u8; 36][..]);
+        assert_eq!(&tail[36..], &[0u8; 28][..]);
+    }
+
+    #[test]
+    fn all_schemes_have_unique_names() {
+        let names: Vec<_> = all_schemes().iter().map(|s| s.name()).collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names.len(), 4);
+        assert_eq!(names, dedup);
+    }
+}

@@ -1,0 +1,135 @@
+//! Aggregated compression statistics — the report type behind E1/E5/E8.
+
+use std::collections::BTreeMap;
+
+use super::{Compressed, Compressor, Encoding, LINE_BYTES};
+
+/// Statistics for one scheme over one byte stream.
+#[derive(Debug, Clone)]
+pub struct CompressionStats {
+    pub scheme: String,
+    pub lines: usize,
+    pub raw_bytes: usize,
+    pub compressed_bytes: usize,
+    /// raw / compressed (bit-exact numerator/denominator).
+    pub ratio: f64,
+    /// Fraction of lines left uncompressed by the scheme.
+    pub uncompressed_frac: f64,
+    /// Encoding histogram (tag name -> line count).
+    pub encodings: BTreeMap<String, usize>,
+}
+
+fn tag_name(e: &Encoding) -> String {
+    match e {
+        Encoding::Uncompressed => "uncompressed".into(),
+        Encoding::Bdi(b) | Encoding::HybridBdi(b) => match b {
+            super::bdi::BdiEncoding::Zeros => "zeros".into(),
+            super::bdi::BdiEncoding::Repeat => "repeat".into(),
+            super::bdi::BdiEncoding::BaseDelta { base_size, delta_size } => {
+                format!("b{base_size}d{delta_size}")
+            }
+        },
+        Encoding::Fpc | Encoding::HybridFpc => "fpc".into(),
+    }
+}
+
+impl CompressionStats {
+    /// Build stats from per-line results.
+    pub fn from_lines(scheme: &str, lines: &[Compressed]) -> Self {
+        let raw = lines.len() * LINE_BYTES;
+        let compressed: usize = lines.iter().map(Compressed::size_bytes).sum();
+        let unc = lines
+            .iter()
+            .filter(|c| matches!(c.encoding, Encoding::Uncompressed))
+            .count();
+        let mut encodings = BTreeMap::new();
+        for l in lines {
+            *encodings.entry(tag_name(&l.encoding)).or_insert(0) += 1;
+        }
+        CompressionStats {
+            scheme: scheme.to_string(),
+            lines: lines.len(),
+            raw_bytes: raw,
+            compressed_bytes: compressed,
+            ratio: if compressed == 0 { f64::INFINITY } else { raw as f64 / compressed as f64 },
+            uncompressed_frac: if lines.is_empty() { 0.0 } else { unc as f64 / lines.len() as f64 },
+            encodings,
+        }
+    }
+
+    /// Compress `bytes` under `comp` and aggregate.
+    pub fn measure(comp: &dyn Compressor, bytes: &[u8]) -> Self {
+        let lines = super::compress_stream(comp, bytes);
+        Self::from_lines(comp.name(), &lines)
+    }
+}
+
+/// A per-scheme comparison over one named workload stream (one E1 row).
+#[derive(Debug, Clone)]
+pub struct SchemeReport {
+    pub workload: String,
+    pub stats: Vec<CompressionStats>,
+}
+
+impl SchemeReport {
+    pub fn measure(workload: &str, bytes: &[u8]) -> Self {
+        let stats = super::all_schemes()
+            .iter()
+            .map(|s| CompressionStats::measure(s.as_ref(), bytes))
+            .collect();
+        SchemeReport { workload: workload.to_string(), stats }
+    }
+
+    /// Fixed-width table rows, one per scheme (used by benches + CLI).
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        for s in &self.stats {
+            out.push_str(&format!(
+                "{:<14} {:<8} ratio={:<6.3} unc={:>5.1}% bytes {:>9} -> {:>9}\n",
+                self.workload,
+                s.scheme,
+                s.ratio,
+                s.uncompressed_frac * 100.0,
+                s.raw_bytes,
+                s.compressed_bytes,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Bdi, NoCompression};
+
+    #[test]
+    fn stats_on_zero_stream() {
+        let s = CompressionStats::measure(&Bdi, &vec![0u8; 64 * 100]);
+        assert_eq!(s.lines, 100);
+        assert!(s.ratio > 50.0);
+        assert_eq!(s.encodings.get("zeros"), Some(&100));
+        assert_eq!(s.uncompressed_frac, 0.0);
+    }
+
+    #[test]
+    fn stats_none_is_identity() {
+        let s = CompressionStats::measure(&NoCompression, &vec![7u8; 640]);
+        assert!((s.ratio - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_covers_all_schemes() {
+        let r = SchemeReport::measure("test", &vec![0u8; 256]);
+        let names: Vec<_> = r.stats.iter().map(|s| s.scheme.as_str()).collect();
+        assert_eq!(names, ["none", "bdi", "fpc", "bdi+fpc"]);
+        assert!(r.table().lines().count() == 4);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let s = CompressionStats::measure(&Bdi, &[]);
+        assert_eq!(s.lines, 0);
+        assert_eq!(s.uncompressed_frac, 0.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Configuration system: a layered key=value config (defaults <- file <-
+//! CLI overrides) describing the accelerator, memory system and batcher.
+//!
+//! File format is simple `key = value` lines with `#` comments (the
+//! vendored dependency set has no TOML parser; this subset is all the
+//! launcher needs and round-trips through `to_string`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::BatchPolicy;
+use crate::fixed::{QFormat, Q15_16, Q3_4, Q7_8};
+use crate::mem::ChannelConfig;
+use crate::npu::NpuConfig;
+
+/// The full system configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    /// Benchmark to serve (manifest key).
+    pub benchmark: String,
+    /// Artifact directory.
+    pub artifacts: String,
+    /// NPU shape + clocks.
+    pub npu: NpuConfig,
+    /// Datapath fixed-point format.
+    pub qformat: QFormat,
+    /// Batching policy.
+    pub policy: BatchPolicy,
+    /// Compression scheme on the NPU<->DRAM path:
+    /// none | bdi | fpc | bdi+fpc.
+    pub compression: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            benchmark: "sobel".into(),
+            artifacts: "artifacts".into(),
+            npu: NpuConfig::default(),
+            qformat: Q7_8,
+            policy: BatchPolicy::default(),
+            compression: "bdi+fpc".into(),
+        }
+    }
+}
+
+fn parse_qformat(s: &str) -> Result<QFormat> {
+    Ok(match s {
+        "q3.4" => Q3_4,
+        "q7.8" => Q7_8,
+        "q15.16" => Q15_16,
+        other => bail!("unknown qformat {other:?} (q3.4|q7.8|q15.16)"),
+    })
+}
+
+impl Config {
+    /// Apply one `key = value` assignment.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim();
+        match key.trim() {
+            "benchmark" => self.benchmark = v.into(),
+            "artifacts" => self.artifacts = v.into(),
+            "compression" => {
+                if !["none", "bdi", "fpc", "bdi+fpc"].contains(&v) {
+                    bail!("unknown compression {v:?}");
+                }
+                self.compression = v.into();
+            }
+            "qformat" => self.qformat = parse_qformat(v)?,
+            "npu.pu_count" => self.npu.pu_count = v.parse().context("npu.pu_count")?,
+            "npu.array_width" => self.npu.array_width = v.parse().context("npu.array_width")?,
+            "npu.clock_mhz" => self.npu.clock_mhz = v.parse().context("npu.clock_mhz")?,
+            "npu.sync_cycles" => self.npu.sync_cycles = v.parse().context("npu.sync_cycles")?,
+            "npu.overlap" => self.npu.overlap = v.parse().context("npu.overlap")?,
+            "acp.bytes_per_cycle" => {
+                self.npu.acp.bytes_per_cycle = v.parse().context("acp.bytes_per_cycle")?
+            }
+            "acp.latency_cycles" => {
+                self.npu.acp.latency_cycles = v.parse().context("acp.latency_cycles")?
+            }
+            "acp.clock_mhz" => self.npu.acp.clock_mhz = v.parse().context("acp.clock_mhz")?,
+            "batch.max" => self.policy.max_batch = v.parse().context("batch.max")?,
+            "batch.wait_us" => {
+                self.policy.max_wait = Duration::from_micros(v.parse().context("batch.wait_us")?)
+            }
+            "batch.queue_cap" => self.policy.queue_cap = v.parse().context("batch.queue_cap")?,
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file (`key = value`, `#` comments, blank lines).
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("{}:{}: expected key = value", path.display(), lineno + 1))?;
+            self.set(k, v)
+                .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Apply `--set key=value` CLI overrides.
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<()> {
+        for o in overrides {
+            let (k, v) = o
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--set {o:?}: expected key=value"))?;
+            self.set(k, v)?;
+        }
+        Ok(())
+    }
+
+    /// Dump as a reloadable config file.
+    pub fn to_string_pretty(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("benchmark", self.benchmark.clone());
+        m.insert("artifacts", self.artifacts.clone());
+        m.insert("compression", self.compression.clone());
+        let q = self.qformat;
+        m.insert(
+            "qformat",
+            format!("q{}.{}", q.int_bits, q.frac_bits),
+        );
+        let mut out = String::from("# snnap-c configuration\n");
+        for (k, v) in m {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        out.push_str(&format!("npu.pu_count = {}\n", self.npu.pu_count));
+        out.push_str(&format!("npu.array_width = {}\n", self.npu.array_width));
+        out.push_str(&format!("npu.clock_mhz = {}\n", self.npu.clock_mhz));
+        out.push_str(&format!("npu.sync_cycles = {}\n", self.npu.sync_cycles));
+        out.push_str(&format!("npu.overlap = {}\n", self.npu.overlap));
+        out.push_str(&format!("acp.bytes_per_cycle = {}\n", self.npu.acp.bytes_per_cycle));
+        out.push_str(&format!("acp.latency_cycles = {}\n", self.npu.acp.latency_cycles));
+        out.push_str(&format!("acp.clock_mhz = {}\n", self.npu.acp.clock_mhz));
+        out.push_str(&format!("batch.max = {}\n", self.policy.max_batch));
+        out.push_str(&format!("batch.wait_us = {}\n", self.policy.max_wait.as_micros()));
+        out.push_str(&format!("batch.queue_cap = {}\n", self.policy.queue_cap));
+        out
+    }
+
+    /// The DRAM channel used by the compression experiments.
+    pub fn dram_channel(&self) -> ChannelConfig {
+        ChannelConfig::zc702_ddr3()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip_through_file() {
+        let cfg = Config::default();
+        let text = cfg.to_string_pretty();
+        let dir = std::env::temp_dir().join("snnapc_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.conf");
+        std::fs::write(&p, &text).unwrap();
+        let mut cfg2 = Config::default();
+        cfg2.load_file(&p).unwrap();
+        assert_eq!(cfg, cfg2);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = Config::default();
+        cfg.apply_overrides(&[
+            "npu.pu_count=4".into(),
+            "batch.max=64".into(),
+            "qformat=q15.16".into(),
+            "compression=bdi".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.npu.pu_count, 4);
+        assert_eq!(cfg.policy.max_batch, 64);
+        assert_eq!(cfg.qformat, Q15_16);
+        assert_eq!(cfg.compression, "bdi");
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_values() {
+        let mut cfg = Config::default();
+        assert!(cfg.set("nope", "1").is_err());
+        assert!(cfg.set("compression", "zstd").is_err());
+        assert!(cfg.set("qformat", "q1.2").is_err());
+        assert!(cfg.set("npu.pu_count", "banana").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let dir = std::env::temp_dir().join("snnapc_cfg_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.conf");
+        std::fs::write(&p, "# hello\n\nbenchmark = fft # trailing\n").unwrap();
+        let mut cfg = Config::default();
+        cfg.load_file(&p).unwrap();
+        assert_eq!(cfg.benchmark, "fft");
+    }
+
+    #[test]
+    fn bad_line_reports_location() {
+        let dir = std::env::temp_dir().join("snnapc_cfg_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.conf");
+        std::fs::write(&p, "benchmark fft\n").unwrap();
+        let err = Config::default().load_file(&p).unwrap_err().to_string();
+        assert!(err.contains(":1"), "{err}");
+    }
+}

@@ -1,0 +1,150 @@
+//! Execution backends behind the coordinator.
+
+use anyhow::Result;
+
+use crate::npu::{NpuDevice, PuSim};
+use crate::runtime::NpuExecutor;
+
+/// Anything that can run an NPU batch.
+///
+/// Not `Send`: the PJRT client holds thread-local state (`Rc` internally),
+/// so the coordinator constructs its backend *inside* the driver thread
+/// via a [`super::server::BackendFactory`].
+pub trait Backend {
+    /// Benchmark this backend serves.
+    fn name(&self) -> &str;
+
+    /// Input arity.
+    fn input_dim(&self) -> usize;
+
+    /// Output arity.
+    fn output_dim(&self) -> usize;
+
+    /// Execute a batch; one output per input.
+    fn run_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+}
+
+/// The cycle-accurate fixed-point simulator as a backend.
+pub struct DeviceBackend {
+    pub device: NpuDevice,
+}
+
+impl Backend for DeviceBackend {
+    fn name(&self) -> &str {
+        &self.device.program().name
+    }
+
+    fn input_dim(&self) -> usize {
+        self.device.program().input_dim()
+    }
+
+    fn output_dim(&self) -> usize {
+        self.device.program().output_dim()
+    }
+
+    fn run_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(self.device.execute_batch(inputs)?.outputs)
+    }
+}
+
+/// The PJRT-compiled AOT model as a backend (f32 functional path).
+pub struct PjrtBackend {
+    pub executor: NpuExecutor,
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &str {
+        &self.executor.artifact.name
+    }
+
+    fn input_dim(&self) -> usize {
+        *self.executor.artifact.sizes.first().unwrap()
+    }
+
+    fn output_dim(&self) -> usize {
+        *self.executor.artifact.sizes.last().unwrap()
+    }
+
+    fn run_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.executor.run_batch(inputs)
+    }
+}
+
+/// Functional results from PJRT, timing/quantization cross-check from the
+/// simulator: asserts the two paths agree within the fixed-point bound,
+/// then returns the PJRT outputs. Used by the e2e driver in validate mode.
+pub struct PairedBackend {
+    pub pjrt: PjrtBackend,
+    pub sim: PuSim,
+    /// Max |f32 - fixed| tolerated per output (quantization + LUT bound).
+    pub tolerance: f32,
+    /// Worst disagreement seen so far.
+    pub max_disagreement: f32,
+}
+
+impl Backend for PairedBackend {
+    fn name(&self) -> &str {
+        self.pjrt.name()
+    }
+
+    fn input_dim(&self) -> usize {
+        self.pjrt.input_dim()
+    }
+
+    fn output_dim(&self) -> usize {
+        self.pjrt.output_dim()
+    }
+
+    fn run_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let f32_out = self.pjrt.run_batch(inputs)?;
+        for (x, y) in inputs.iter().zip(&f32_out) {
+            let fixed = self.sim.forward_f32(x);
+            for (a, b) in fixed.iter().zip(y) {
+                let d = (a - b).abs();
+                if d > self.max_disagreement {
+                    self.max_disagreement = d;
+                }
+                anyhow::ensure!(
+                    d <= self.tolerance,
+                    "fixed-point sim and PJRT disagree by {d} (tol {})",
+                    self.tolerance
+                );
+            }
+        }
+        Ok(f32_out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q7_8;
+    use crate::npu::program::{Activation, NpuProgram};
+    use crate::npu::NpuConfig;
+
+    fn program() -> NpuProgram {
+        let sizes = [2usize, 4, 1];
+        let n: usize = sizes.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+        let flat: Vec<f32> = (0..n).map(|i| (i as f32 % 3.0 - 1.0) * 0.2).collect();
+        NpuProgram::from_f32(
+            "t",
+            &sizes,
+            &[Activation::Sigmoid, Activation::Linear],
+            &flat,
+            Q7_8,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn device_backend_runs() {
+        let mut b = DeviceBackend {
+            device: NpuDevice::new(NpuConfig::default(), program()).unwrap(),
+        };
+        assert_eq!(b.input_dim(), 2);
+        assert_eq!(b.output_dim(), 1);
+        let out = b.run_batch(&[vec![0.1, 0.2], vec![0.3, 0.4]]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(b.name(), "t");
+    }
+}

@@ -1,0 +1,213 @@
+//! Batch formation policy + queue.
+//!
+//! SNNAP's driver collects invocations into a batch and flushes when the
+//! batch is full or a deadline expires — the classic size-or-timeout
+//! policy (the same one vLLM-style servers use). `Batcher` is the pure
+//! data structure (testable without threads); `server.rs` wraps it in the
+//! driver thread.
+
+use std::time::{Duration, Instant};
+
+/// When to flush a forming batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Flush at this many invocations.
+    pub max_batch: usize,
+    /// Flush this long after the first invocation arrived.
+    pub max_wait: Duration,
+    /// Reject new work when this many invocations are queued (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 128,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 4096,
+        }
+    }
+}
+
+/// A forming batch of items with arrival bookkeeping.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    items: Vec<T>,
+    first_arrival: Option<Instant>,
+    /// Cumulative count of items that were rejected by backpressure.
+    pub rejected: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch > 0);
+        assert!(policy.queue_cap >= policy.max_batch);
+        Batcher { policy, items: Vec::new(), first_arrival: None, rejected: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Try to enqueue; `Err(item)` = backpressure rejection.
+    pub fn push(&mut self, item: T, now: Instant) -> Result<(), T> {
+        if self.items.len() >= self.policy.queue_cap {
+            self.rejected += 1;
+            return Err(item);
+        }
+        if self.items.is_empty() {
+            self.first_arrival = Some(now);
+        }
+        self.items.push(item);
+        Ok(())
+    }
+
+    /// Should the current batch flush at `now`?
+    pub fn should_flush(&self, now: Instant) -> bool {
+        if self.items.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.first_arrival {
+            Some(t0) if !self.items.is_empty() => now.duration_since(t0) >= self.policy.max_wait,
+            _ => false,
+        }
+    }
+
+    /// Time until the deadline would force a flush (for the driver's
+    /// select timeout). `None` when the queue is empty.
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        let t0 = self.first_arrival?;
+        if self.items.is_empty() {
+            return None;
+        }
+        Some(
+            self.policy
+                .max_wait
+                .saturating_sub(now.duration_since(t0)),
+        )
+    }
+
+    /// Take up to `max_batch` items (FIFO), leaving the remainder queued.
+    pub fn take_batch(&mut self, now: Instant) -> Vec<T> {
+        let n = self.items.len().min(self.policy.max_batch);
+        let rest = self.items.split_off(n);
+        let batch = std::mem::replace(&mut self.items, rest);
+        self.first_arrival = if self.items.is_empty() { None } else { Some(now) };
+        batch
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, wait_us: u64, cap: usize) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(wait_us),
+            queue_cap: cap,
+        }
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let mut b = Batcher::new(policy(4, 1_000_000, 16));
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(i, t0).unwrap();
+        }
+        assert!(!b.should_flush(t0));
+        b.push(3, t0).unwrap();
+        assert!(b.should_flush(t0));
+        assert_eq!(b.take_batch(t0), vec![0, 1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_at_deadline() {
+        let mut b = Batcher::new(policy(100, 200, 1000));
+        let t0 = Instant::now();
+        b.push(1, t0).unwrap();
+        assert!(!b.should_flush(t0));
+        assert!(b.should_flush(t0 + Duration::from_micros(200)));
+    }
+
+    #[test]
+    fn backpressure_rejects_and_counts() {
+        let mut b = Batcher::new(policy(2, 100, 2));
+        let t0 = Instant::now();
+        b.push(1, t0).unwrap();
+        b.push(2, t0).unwrap();
+        assert_eq!(b.push(3, t0), Err(3));
+        assert_eq!(b.rejected, 1);
+    }
+
+    #[test]
+    fn take_batch_is_fifo_and_leaves_remainder() {
+        let mut b = Batcher::new(policy(3, 100, 100));
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(i, t0).unwrap();
+        }
+        assert_eq!(b.take_batch(t0), vec![0, 1, 2]);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.take_batch(t0), vec![3, 4]);
+    }
+
+    #[test]
+    fn deadline_tracks_first_arrival_of_remainder() {
+        let mut b = Batcher::new(policy(2, 500, 100));
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(i, t0).unwrap();
+        }
+        let t1 = t0 + Duration::from_micros(100);
+        let _ = b.take_batch(t1);
+        // remainder re-anchors its deadline at take time
+        assert_eq!(b.time_to_deadline(t1), Some(Duration::from_micros(500)));
+    }
+
+    #[test]
+    fn empty_has_no_deadline() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy::default());
+        assert_eq!(b.time_to_deadline(Instant::now()), None);
+        assert!(!b.should_flush(Instant::now()));
+    }
+
+    #[test]
+    fn prop_never_exceeds_bounds() {
+        crate::util::prop::check(64, |rng| {
+            let max_batch = rng.range(1, 20);
+            let cap = max_batch + rng.range(0, 50);
+            let mut b = Batcher::new(policy(max_batch, 100, cap));
+            let t0 = Instant::now();
+            let mut accepted = 0usize;
+            let mut taken = 0usize;
+            for i in 0..rng.range(1, 200) {
+                if b.push(i, t0).is_ok() {
+                    accepted += 1;
+                }
+                assert!(b.len() <= cap);
+                if rng.bool(0.2) {
+                    let batch = b.take_batch(t0);
+                    assert!(batch.len() <= max_batch);
+                    taken += batch.len();
+                }
+            }
+            taken += b.take_batch(t0).len();
+            while !b.is_empty() {
+                taken += b.take_batch(t0).len();
+            }
+            assert_eq!(taken, accepted, "no item lost or duplicated");
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator: the SNNAP invocation interface.
+//!
+//! Application threads submit approximate-region invocations; the batcher
+//! packs them into NPU batches (amortizing the CPU<->NPU sync cost — the
+//! paper's challenge #2); a server thread drains batches into a backend
+//! (the PJRT-compiled model, the cycle-accurate fixed-point simulator, or
+//! both) and routes results back to callers.
+//!
+//! Built on std threads + mpsc channels (the vendored dependency set has
+//! no async runtime; a blocking batcher thread is also exactly SNNAP's
+//! software architecture — one driver thread owning the accelerator).
+
+pub mod backend;
+pub mod batcher;
+pub mod router;
+pub mod server;
+
+pub use backend::{Backend, DeviceBackend, PairedBackend, PjrtBackend};
+pub use batcher::{BatchPolicy, Batcher};
+pub use router::NpuRouter;
+pub use server::{NpuServer, ServerConfig};

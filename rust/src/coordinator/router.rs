@@ -1,0 +1,221 @@
+//! Multi-NPU router — the paper's §5 future-work direction made concrete:
+//! different applications get *customized* NPUs (per-benchmark topologies,
+//! as BenchNN argues), and a front-end router dispatches invocations by
+//! benchmark to the right accelerator instance, each with its own batcher
+//! and driver thread.
+//!
+//! This is the vLLM-router shape scaled down to SNNAP: route → batch →
+//! execute → reply, with per-route metrics and aggregate reporting.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::server::{BackendFactory, NpuServer, Pending, ServerConfig};
+
+/// A named route to one NPU server.
+struct Route {
+    server: NpuServer,
+}
+
+/// Routes invocations to per-benchmark NPU servers.
+pub struct NpuRouter {
+    routes: BTreeMap<String, Route>,
+}
+
+impl NpuRouter {
+    /// Build a router from (name, backend factory) pairs; each route gets
+    /// its own driver thread and batching policy.
+    pub fn new(
+        routes: Vec<(String, BackendFactory, ServerConfig)>,
+    ) -> Result<NpuRouter> {
+        let mut map = BTreeMap::new();
+        for (name, factory, cfg) in routes {
+            let server = NpuServer::start(factory, cfg)?;
+            map.insert(name, Route { server });
+        }
+        if map.is_empty() {
+            return Err(anyhow!("router needs at least one route"));
+        }
+        Ok(NpuRouter { routes: map })
+    }
+
+    /// Route names, sorted.
+    pub fn benchmarks(&self) -> Vec<&str> {
+        self.routes.keys().map(String::as_str).collect()
+    }
+
+    /// Submit an invocation for `benchmark`.
+    pub fn submit(&self, benchmark: &str, input: Vec<f32>) -> Result<Pending> {
+        let r = self
+            .routes
+            .get(benchmark)
+            .ok_or_else(|| anyhow!("no route for benchmark {benchmark:?}"))?;
+        r.server.submit(input)
+    }
+
+    /// Submit a mixed stream of (benchmark, input) pairs and wait for all
+    /// results in order.
+    pub fn submit_mixed(&self, work: &[(String, Vec<f32>)]) -> Result<Vec<Vec<f32>>> {
+        let pending: Vec<Pending> = work
+            .iter()
+            .map(|(b, x)| self.submit(b, x.clone()))
+            .collect::<Result<_>>()?;
+        pending.into_iter().map(Pending::wait).collect()
+    }
+
+    /// Aggregate metrics report across routes.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, r) in &self.routes {
+            out.push_str(&format!("{name:<14} {}\n", r.server.metrics().report()));
+        }
+        out
+    }
+
+    /// Total requests served across all routes.
+    pub fn total_requests(&self) -> u64 {
+        self.routes.values().map(|r| r.server.metrics().requests.get()).sum()
+    }
+
+    /// Graceful shutdown of every route.
+    pub fn shutdown(self) {
+        for (_, r) in self.routes {
+            r.server.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::{workload, Workload};
+    use crate::coordinator::backend::{Backend, DeviceBackend};
+    use crate::coordinator::BatchPolicy;
+    use crate::experiments::program_from_workload;
+    use crate::fixed::Q7_8;
+    use crate::npu::{NpuConfig, NpuDevice, PuSim};
+    use crate::util::rng::Rng;
+
+    fn router_for(names: &[&str]) -> NpuRouter {
+        let routes = names
+            .iter()
+            .map(|&name| {
+                let w = workload(name).unwrap();
+                let program = program_from_workload(w.as_ref(), Q7_8, 7);
+                let factory: BackendFactory = Box::new(move || {
+                    Ok(Box::new(DeviceBackend {
+                        device: NpuDevice::new(NpuConfig::default(), program)?,
+                    }) as Box<dyn Backend>)
+                });
+                (name.to_string(), factory, ServerConfig::default())
+            })
+            .collect();
+        NpuRouter::new(routes).unwrap()
+    }
+
+    #[test]
+    fn routes_by_benchmark_with_correct_numerics() {
+        let router = router_for(&["sobel", "fft", "kmeans"]);
+        assert_eq!(router.benchmarks(), ["fft", "kmeans", "sobel"]);
+        let mut rng = Rng::new(3);
+        // interleaved mixed stream
+        let mut work = Vec::new();
+        for i in 0..60 {
+            let name = ["sobel", "fft", "kmeans"][i % 3];
+            let w = workload(name).unwrap();
+            work.push((name.to_string(), w.gen_input(&mut rng)));
+        }
+        let results = router.submit_mixed(&work).unwrap();
+        // verify each result against a fresh simulator of its own program
+        for (name, x) in work.iter() {
+            let w = workload(name).unwrap();
+            let program = program_from_workload(w.as_ref(), Q7_8, 7);
+            let pu = PuSim::new(program, 8);
+            let idx = work.iter().position(|(n, xi)| n == name && xi == x).unwrap();
+            assert_eq!(results[idx], pu.forward_f32(x), "{name}");
+        }
+        assert_eq!(router.total_requests(), 60);
+        assert!(router.report().contains("sobel"));
+        router.shutdown();
+    }
+
+    #[test]
+    fn unknown_route_is_an_error() {
+        let router = router_for(&["sobel"]);
+        assert!(router.submit("jpeg", vec![0.0; 64]).is_err());
+    }
+
+    #[test]
+    fn wrong_arity_for_route_is_an_error() {
+        let router = router_for(&["sobel"]);
+        assert!(router.submit("sobel", vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn empty_router_rejected() {
+        assert!(NpuRouter::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn per_route_policies_are_independent() {
+        let mk = |name: &str, max_batch: usize| {
+            let w = workload(name).unwrap();
+            let program = program_from_workload(w.as_ref(), Q7_8, 7);
+            let factory: BackendFactory = Box::new(move || {
+                Ok(Box::new(DeviceBackend {
+                    device: NpuDevice::new(NpuConfig::default(), program)?,
+                }) as Box<dyn Backend>)
+            });
+            (
+                name.to_string(),
+                factory,
+                ServerConfig {
+                    policy: BatchPolicy {
+                        max_batch,
+                        max_wait: std::time::Duration::from_micros(100),
+                        queue_cap: 1024,
+                    },
+                },
+            )
+        };
+        let router = NpuRouter::new(vec![mk("fft", 1), mk("sobel", 64)]).unwrap();
+        let mut rng = Rng::new(5);
+        let mut work = Vec::new();
+        for _ in 0..64 {
+            let wf = workload("fft").unwrap();
+            let ws = workload("sobel").unwrap();
+            work.push(("fft".to_string(), wf.gen_input(&mut rng)));
+            work.push(("sobel".to_string(), ws.gen_input(&mut rng)));
+        }
+        let _ = router.submit_mixed(&work).unwrap();
+        assert_eq!(router.total_requests(), 128);
+        router.shutdown();
+    }
+
+    #[test]
+    fn concurrent_mixed_clients() {
+        let router = std::sync::Arc::new(router_for(&["sobel", "fft"]));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let r = router.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                for i in 0..50 {
+                    let name = if i % 2 == 0 { "sobel" } else { "fft" };
+                    let w = workload(name).unwrap();
+                    let out = r
+                        .submit(name, w.gen_input(&mut rng))
+                        .unwrap()
+                        .wait()
+                        .unwrap();
+                    assert_eq!(out.len(), *w.sizes().last().unwrap());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(router.total_requests(), 200);
+    }
+}

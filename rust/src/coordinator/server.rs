@@ -1,0 +1,304 @@
+//! The driver thread: owns the backend, drains the invocation queue into
+//! batches, routes results back to callers.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::ServerMetrics;
+
+use super::backend::Backend;
+use super::batcher::{BatchPolicy, Batcher};
+
+/// Server configuration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+}
+
+/// Constructs the backend on the driver thread (PJRT clients are not
+/// `Send`, so they must be born where they live).
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+
+struct Invocation {
+    input: Vec<f32>,
+    submitted: Instant,
+    reply: Sender<Result<Vec<f32>>>,
+}
+
+enum Msg {
+    Invoke(Invocation),
+    Shutdown,
+}
+
+/// Handle to a running NPU server. Clone-free: share via `Arc` if needed;
+/// `submit` takes `&self`.
+pub struct NpuServer {
+    tx: SyncSender<Msg>,
+    metrics: Arc<ServerMetrics>,
+    driver: Option<JoinHandle<()>>,
+    input_dim: usize,
+}
+
+/// A pending reply.
+pub struct Pending {
+    rx: Receiver<Result<Vec<f32>>>,
+}
+
+impl Pending {
+    /// Block for the result.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.rx.recv().map_err(|_| anyhow!("server dropped the invocation"))?
+    }
+}
+
+impl NpuServer {
+    /// Start the driver thread; `factory` runs on that thread to build
+    /// the backend. Fails if construction fails.
+    pub fn start(factory: BackendFactory, cfg: ServerConfig) -> Result<NpuServer> {
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.policy.queue_cap);
+        let metrics = Arc::new(ServerMetrics::default());
+        let m = metrics.clone();
+        let (dim_tx, dim_rx) = mpsc::channel::<Result<usize>>();
+        let driver = std::thread::Builder::new()
+            .name("snnapc-driver".into())
+            .spawn(move || {
+                let mut backend = match factory() {
+                    Ok(b) => {
+                        let _ = dim_tx.send(Ok(b.input_dim()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = dim_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut batcher: Batcher<Invocation> = Batcher::new(cfg.policy);
+                let mut open = true;
+                while open || !batcher.is_empty() {
+                    // wait for work, bounded by the batch deadline
+                    let now = Instant::now();
+                    let msg = if open {
+                        match batcher.time_to_deadline(now) {
+                            None => rx.recv().map_err(|_| ()).map(Some).unwrap_or(None).map_or(
+                                Err(RecvTimeoutError::Disconnected),
+                                Ok,
+                            ),
+                            Some(d) => rx.recv_timeout(d),
+                        }
+                    } else {
+                        Err(RecvTimeoutError::Timeout)
+                    };
+                    match msg {
+                        Ok(Msg::Invoke(inv)) => {
+                            let now = Instant::now();
+                            if let Err(inv) = batcher.push(inv, now) {
+                                m.rejected.inc();
+                                m.queue_full_events.inc();
+                                let _ = inv.reply.send(Err(anyhow!("queue full")));
+                            }
+                        }
+                        Ok(Msg::Shutdown) => open = false,
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => open = false,
+                    }
+                    let now = Instant::now();
+                    if batcher.should_flush(now) || (!open && !batcher.is_empty()) {
+                        let batch = batcher.take_batch(now);
+                        let inputs: Vec<Vec<f32>> =
+                            batch.iter().map(|i| i.input.clone()).collect();
+                        m.batches.inc();
+                        m.requests.add(batch.len() as u64);
+                        match backend.run_batch(&inputs) {
+                            Ok(outputs) => {
+                                for (inv, out) in batch.into_iter().zip(outputs) {
+                                    m.latency.record(inv.submitted.elapsed());
+                                    let _ = inv.reply.send(Ok(out));
+                                }
+                            }
+                            Err(e) => {
+                                let msg = format!("batch failed: {e:#}");
+                                for inv in batch {
+                                    let _ = inv.reply.send(Err(anyhow!(msg.clone())));
+                                }
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn driver");
+        let input_dim = dim_rx
+            .recv()
+            .map_err(|_| anyhow!("driver thread died during backend construction"))??;
+        Ok(NpuServer { tx, metrics, driver: Some(driver), input_dim })
+    }
+
+    /// Submit one invocation; returns a [`Pending`] reply handle.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Pending> {
+        anyhow::ensure!(
+            input.len() == self.input_dim,
+            "input arity {} != {}",
+            input.len(),
+            self.input_dim
+        );
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Invoke(Invocation { input, submitted: Instant::now(), reply }))
+            .map_err(|_| anyhow!("server is shut down"))?;
+        Ok(Pending { rx })
+    }
+
+    /// Submit a whole slice and wait for all results (convenience).
+    pub fn submit_all(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let pending: Vec<Pending> =
+            inputs.iter().map(|x| self.submit(x.clone())).collect::<Result<_>>()?;
+        pending.into_iter().map(Pending::wait).collect()
+    }
+
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.metrics
+    }
+
+    /// Graceful shutdown: drain the queue, then join the driver.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.driver.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NpuServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.driver.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::DeviceBackend;
+    use crate::fixed::Q7_8;
+    use crate::npu::program::{Activation, NpuProgram};
+    use crate::npu::{NpuConfig, NpuDevice, PuSim};
+    use std::time::Duration;
+
+    fn program() -> NpuProgram {
+        let sizes = [2usize, 4, 1];
+        let n: usize = sizes.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+        let flat: Vec<f32> = (0..n).map(|i| (i as f32 % 5.0 - 2.0) * 0.15).collect();
+        NpuProgram::from_f32(
+            "t",
+            &sizes,
+            &[Activation::Sigmoid, Activation::Linear],
+            &flat,
+            Q7_8,
+        )
+        .unwrap()
+    }
+
+    fn server(policy: BatchPolicy) -> NpuServer {
+        NpuServer::start(
+            Box::new(|| {
+                Ok(Box::new(DeviceBackend {
+                    device: NpuDevice::new(NpuConfig::default(), program())?,
+                }) as Box<dyn Backend>)
+            }),
+            ServerConfig { policy },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_and_matches_direct_execution() {
+        let s = server(BatchPolicy::default());
+        let pu = PuSim::new(program(), 8);
+        let inputs: Vec<Vec<f32>> =
+            (0..50).map(|i| vec![(i as f32) / 50.0, 1.0 - (i as f32) / 50.0]).collect();
+        let got = s.submit_all(&inputs).unwrap();
+        for (x, y) in inputs.iter().zip(&got) {
+            assert_eq!(y, &pu.forward_f32(x));
+        }
+        assert_eq!(s.metrics().requests.get(), 50);
+        assert!(s.metrics().batches.get() >= 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn rejects_wrong_arity_at_submit() {
+        let s = server(BatchPolicy::default());
+        assert!(s.submit(vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let policy = BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 1024,
+        };
+        let s = server(policy);
+        let inputs: Vec<Vec<f32>> = (0..64).map(|i| vec![0.01 * i as f32, 0.5]).collect();
+        let _ = s.submit_all(&inputs).unwrap();
+        let batches = s.metrics().batches.get();
+        assert!(batches <= 64, "batching must merge requests: {batches}");
+        s.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_get_answers() {
+        let s = std::sync::Arc::new(server(BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_micros(500),
+            queue_cap: 4096,
+        }));
+        let pu = PuSim::new(program(), 8);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut results = Vec::new();
+                for i in 0..100 {
+                    let x = vec![(t as f32) * 0.2, (i as f32) / 100.0];
+                    results.push((x.clone(), s.submit(x).unwrap().wait().unwrap()));
+                }
+                results
+            }));
+        }
+        for h in handles {
+            for (x, y) in h.join().unwrap() {
+                assert_eq!(y, pu.forward_f32(&x));
+            }
+        }
+        assert_eq!(s.metrics().requests.get(), 400);
+    }
+
+    #[test]
+    fn shutdown_drains_pending_work() {
+        let policy = BatchPolicy {
+            max_batch: 1024,
+            max_wait: Duration::from_secs(10), // deadline never fires
+            queue_cap: 4096,
+        };
+        let s = server(policy);
+        let pending: Vec<_> = (0..10).map(|i| s.submit(vec![0.1 * i as f32, 0.2]).unwrap()).collect();
+        s.shutdown(); // must flush the partial batch
+        for p in pending {
+            assert!(p.wait().is_ok());
+        }
+    }
+
+    #[test]
+    fn latency_histogram_populates() {
+        let s = server(BatchPolicy::default());
+        let _ = s.submit_all(&[vec![0.1, 0.2]]).unwrap();
+        assert_eq!(s.metrics().latency.count(), 1);
+        assert!(s.metrics().report().contains("requests=1"));
+    }
+}

@@ -1,0 +1,179 @@
+//! E1 — compression ratio per workload stream per scheme (mirrors BDI
+//! PACT'12 Fig. 6/7, on the NPU's own traffic as the paper proposes).
+
+use anyhow::Result;
+
+use crate::bench_suite::{all_workloads, Workload};
+use crate::compress::SchemeReport;
+use crate::fixed::QFormat;
+use crate::npu::PuSim;
+use crate::trace::{Synthetic, Trace};
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+
+/// One (workload, stream) measurement across all schemes.
+pub struct E1Row {
+    pub workload: String,
+    pub stream: &'static str,
+    pub report: SchemeReport,
+}
+
+/// Capture the three real streams for one workload and compress them
+/// under every scheme. `invocations` controls stream length.
+pub fn measure_workload(
+    w: &dyn Workload,
+    program: crate::npu::NpuProgram,
+    fmt: QFormat,
+    invocations: usize,
+    seed: u64,
+) -> Vec<E1Row> {
+    let mut rng = Rng::new(seed);
+    let inputs = w.gen_batch(&mut rng, invocations);
+    let pu = PuSim::new(program.clone(), 8);
+    let outputs: Vec<Vec<f32>> = inputs.iter().map(|x| pu.forward_f32(x)).collect();
+
+    let streams = [
+        ("weights", Trace::weights(&program).bytes),
+        ("inputs", Trace::inputs(w.name(), fmt, &inputs).bytes),
+        ("outputs", Trace::outputs(w.name(), fmt, &outputs).bytes),
+    ];
+    streams
+        .into_iter()
+        .map(|(stream, bytes)| E1Row {
+            workload: w.name().to_string(),
+            stream,
+            report: SchemeReport::measure(&format!("{}/{stream}", w.name()), &bytes),
+        })
+        .collect()
+}
+
+/// The synthetic characterization sweep (distribution -> scheme -> ratio).
+pub fn measure_synthetics(bytes_per_stream: usize, seed: u64) -> Vec<SchemeReport> {
+    let mut rng = Rng::new(seed);
+    Synthetic::all()
+        .into_iter()
+        .map(|s| {
+            let data = s.generate(bytes_per_stream, &mut rng);
+            SchemeReport::measure(&s.name(), &data)
+        })
+        .collect()
+}
+
+/// Full E1: all workloads x streams x schemes, from artifact weights when
+/// available, synthetic weights otherwise.
+pub fn run(fmt: QFormat, invocations: usize) -> Result<Vec<E1Row>> {
+    let manifest = super::load_manifest().ok();
+    let mut rows = Vec::new();
+    for w in all_workloads() {
+        let program = match &manifest {
+            Some(m) => super::program_from_artifact(m, w.name(), fmt)?,
+            None => super::program_from_workload(w.as_ref(), fmt, 42),
+        };
+        rows.extend(measure_workload(w.as_ref(), program, fmt, invocations, 7));
+    }
+    Ok(rows)
+}
+
+/// Print the paper-shaped table.
+pub fn print_table(rows: &[E1Row]) {
+    let mut t = Table::new(&["workload", "stream", "scheme", "ratio", "uncompressed%"]);
+    for r in rows {
+        for s in &r.report.stats {
+            t.row(&[
+                r.workload.clone(),
+                r.stream.to_string(),
+                s.scheme.clone(),
+                format!("{:.3}", s.ratio),
+                format!("{:.1}", s.uncompressed_frac * 100.0),
+            ]);
+        }
+    }
+    t.print();
+}
+
+/// Geometric-mean ratio per scheme over all rows (the headline numbers).
+pub fn geomean_by_scheme(rows: &[E1Row]) -> Vec<(String, f64)> {
+    let mut acc: std::collections::BTreeMap<String, (f64, usize)> = Default::default();
+    for r in rows {
+        for s in &r.report.stats {
+            let e = acc.entry(s.scheme.clone()).or_insert((0.0, 0));
+            e.0 += s.ratio.ln();
+            e.1 += 1;
+        }
+    }
+    acc.into_iter().map(|(k, (s, n))| (k, (s / n as f64).exp())).collect()
+}
+
+/// Quick single-stream helper for the CLI's `compress-file`.
+pub fn file_report(bytes: &[u8]) -> SchemeReport {
+    SchemeReport::measure("file", bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::workload;
+    use crate::fixed::Q7_8;
+
+    #[test]
+    fn workload_rows_cover_streams_and_schemes() {
+        let w = workload("sobel").unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+        let rows = measure_workload(w.as_ref(), p, Q7_8, 64, 3);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert_eq!(r.report.stats.len(), 4);
+            for s in &r.report.stats {
+                assert!(s.ratio > 0.2 && s.ratio.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_never_loses_to_both() {
+        let w = workload("kmeans").unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 2);
+        for r in measure_workload(w.as_ref(), p, Q7_8, 128, 5) {
+            let get = |name: &str| {
+                r.report.stats.iter().find(|s| s.scheme == name).unwrap().compressed_bytes
+            };
+            // the +1 tag bit per line can round each line up a byte
+            let slack = r.report.stats[0].lines;
+            assert!(
+                get("bdi+fpc") <= get("bdi").min(get("fpc")) + slack,
+                "{}/{}", r.workload, r.stream
+            );
+        }
+    }
+
+    #[test]
+    fn synthetics_rank_as_expected() {
+        let reports = measure_synthetics(64 * 128, 11);
+        let ratio = |name: &str, scheme: &str| {
+            reports
+                .iter()
+                .find(|r| r.workload == name)
+                .unwrap()
+                .stats
+                .iter()
+                .find(|s| s.scheme == scheme)
+                .unwrap()
+                .ratio
+        };
+        assert!(ratio("zeros", "bdi+fpc") > 10.0);
+        assert!(ratio("noise", "bdi+fpc") < 1.05);
+        assert!(ratio("pointers", "bdi") > 1.5);
+        assert!(ratio("small-ints", "fpc") > 1.5);
+    }
+
+    #[test]
+    fn geomean_is_sane() {
+        let w = workload("fft").unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 3);
+        let rows = measure_workload(w.as_ref(), p, Q7_8, 32, 9);
+        let g = geomean_by_scheme(&rows);
+        assert_eq!(g.len(), 4);
+        let none = g.iter().find(|(k, _)| k == "none").unwrap().1;
+        assert!((none - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,153 @@
+//! E2 — whole-application and region speedup of NPU offload vs the
+//! precise CPU baseline (mirrors SNNAP HPCA'15 Fig. 6).
+
+use anyhow::Result;
+
+use crate::bench_suite::{all_workloads, Workload};
+use crate::fixed::QFormat;
+use crate::npu::{NpuConfig, NpuDevice};
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+
+/// ARM Cortex-A9 clock on the Zynq PS side.
+pub const CPU_CLOCK_MHZ: f64 = 667.0;
+
+#[derive(Debug, Clone)]
+pub struct E2Row {
+    pub workload: String,
+    pub invocations: usize,
+    pub cpu_region_us: f64,
+    pub npu_region_us: f64,
+    pub region_speedup: f64,
+    /// Amdahl whole-application speedup at the workload's offload fraction.
+    pub app_speedup: f64,
+    pub mac_utilization: f64,
+}
+
+/// Measure one workload under a given NPU configuration.
+pub fn measure(
+    w: &dyn Workload,
+    program: crate::npu::NpuProgram,
+    cfg: NpuConfig,
+    invocations: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<E2Row> {
+    let mut rng = Rng::new(seed);
+    let mut device = NpuDevice::new(cfg, program)?;
+
+    // CPU region: measured in modelled A9 cycles
+    let cpu_cycles = invocations as u64 * w.cpu_cycles_per_call();
+    let cpu_region_us = cpu_cycles as f64 / CPU_CLOCK_MHZ;
+
+    // NPU region: batched execution through the timing model
+    let mut npu_cycles = 0u64;
+    let mut left = invocations;
+    while left > 0 {
+        let n = left.min(batch);
+        let inputs = w.gen_batch(&mut rng, n);
+        npu_cycles += device.execute_batch(&inputs)?.total_cycles;
+        left -= n;
+    }
+    let npu_region_us = npu_cycles as f64 / cfg.clock_mhz;
+
+    let region_speedup = cpu_region_us / npu_region_us;
+    let f = w.offload_fraction();
+    let app_speedup = 1.0 / ((1.0 - f) + f / region_speedup);
+    let mac_utilization =
+        crate::npu::PuSim::new(device.program().clone(), cfg.array_width).mac_utilization();
+    Ok(E2Row {
+        workload: w.name().to_string(),
+        invocations,
+        cpu_region_us,
+        npu_region_us,
+        region_speedup,
+        app_speedup,
+        mac_utilization,
+    })
+}
+
+/// Full E2 sweep over all workloads.
+pub fn run(fmt: QFormat, invocations: usize, batch: usize) -> Result<Vec<E2Row>> {
+    let manifest = super::load_manifest().ok();
+    let mut rows = Vec::new();
+    for w in all_workloads() {
+        let program = match &manifest {
+            Some(m) => super::program_from_artifact(m, w.name(), fmt)?,
+            None => super::program_from_workload(w.as_ref(), fmt, 42),
+        };
+        rows.push(measure(w.as_ref(), program, NpuConfig::default(), invocations, batch, 13)?);
+    }
+    Ok(rows)
+}
+
+pub fn print_table(rows: &[E2Row]) {
+    let mut t = Table::new(&[
+        "workload",
+        "cpu-region(us)",
+        "npu-region(us)",
+        "region-speedup",
+        "app-speedup",
+        "mac-util",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.workload.clone(),
+            format!("{:.1}", r.cpu_region_us),
+            format!("{:.1}", r.npu_region_us),
+            format!("{:.2}x", r.region_speedup),
+            format!("{:.2}x", r.app_speedup),
+            format!("{:.1}%", r.mac_utilization * 100.0),
+        ]);
+    }
+    t.print();
+    let gm: f64 = rows.iter().map(|r| r.app_speedup.ln()).sum::<f64>() / rows.len() as f64;
+    println!("geomean app speedup: {:.2}x", gm.exp());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::workload;
+    use crate::fixed::Q7_8;
+
+    fn row(name: &str, batch: usize) -> E2Row {
+        let w = workload(name).unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+        measure(w.as_ref(), p, NpuConfig::default(), 512, batch, 3).unwrap()
+    }
+
+    #[test]
+    fn expensive_regions_speed_up() {
+        // inversek2j: 300 CPU cycles vs a 2-8-2 net — the NPU's best case
+        let r = row("inversek2j", 128);
+        assert!(r.region_speedup > 2.0, "region {:.2}", r.region_speedup);
+        assert!(r.app_speedup > 1.5, "app {:.2}", r.app_speedup);
+    }
+
+    #[test]
+    fn app_speedup_bounded_by_amdahl() {
+        for name in ["fft", "kmeans", "sobel"] {
+            let r = row(name, 128);
+            let w = workload(name).unwrap();
+            let limit = 1.0 / (1.0 - w.offload_fraction());
+            assert!(r.app_speedup <= limit + 1e-9, "{name}: {} > {limit}", r.app_speedup);
+            assert!(r.app_speedup > 0.0);
+        }
+    }
+
+    #[test]
+    fn batching_improves_npu_side() {
+        let single = row("kmeans", 1);
+        let batched = row("kmeans", 128);
+        assert!(batched.npu_region_us < single.npu_region_us);
+    }
+
+    #[test]
+    fn jpeg_region_speedup_exceeds_cheap_kernels() {
+        // 2300-cycle DCT beats 60-cycle sobel window in region speedup
+        let jpeg = row("jpeg", 128);
+        let sobel = row("sobel", 128);
+        assert!(jpeg.region_speedup > sobel.region_speedup);
+    }
+}

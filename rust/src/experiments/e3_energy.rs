@@ -1,0 +1,134 @@
+//! E3 — energy of the NPU-offloaded application vs the CPU-only baseline
+//! (mirrors SNNAP HPCA'15 Fig. 7).
+
+use anyhow::Result;
+
+use crate::bench_suite::{all_workloads, Workload};
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::fixed::QFormat;
+use crate::npu::{NpuConfig, NpuDevice};
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+
+use super::e2_speedup::CPU_CLOCK_MHZ;
+
+#[derive(Debug, Clone)]
+pub struct E3Row {
+    pub workload: String,
+    pub cpu_only: EnergyBreakdown,
+    pub with_npu: EnergyBreakdown,
+    pub savings: f64,
+}
+
+pub fn measure(
+    w: &dyn Workload,
+    program: crate::npu::NpuProgram,
+    cfg: NpuConfig,
+    invocations: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<E3Row> {
+    let model = EnergyModel::default();
+    let mut rng = Rng::new(seed);
+    let mut device = NpuDevice::new(cfg, program)?;
+
+    // Whole application = region + non-offloadable remainder. The
+    // remainder's CPU cycles follow from the offload fraction.
+    let region_cycles = invocations as u64 * w.cpu_cycles_per_call();
+    let f = w.offload_fraction();
+    let rest_cycles = (region_cycles as f64 * (1.0 - f) / f) as u64;
+
+    let cpu_only = EnergyModel::sum(&[
+        model.cpu_region(region_cycles),
+        model.cpu_region(rest_cycles),
+    ]);
+
+    let mut parts = vec![model.cpu_region(rest_cycles)];
+    let mut left = invocations;
+    while left > 0 {
+        let n = left.min(batch);
+        let inputs = w.gen_batch(&mut rng, n);
+        let r = device.execute_batch(&inputs)?;
+        parts.push(model.npu_batch(&device, &r));
+        left -= n;
+    }
+    let with_npu = EnergyModel::sum(&parts);
+
+    Ok(E3Row {
+        workload: w.name().to_string(),
+        cpu_only,
+        with_npu,
+        savings: cpu_only.total_pj() / with_npu.total_pj(),
+    })
+}
+
+pub fn run(fmt: QFormat, invocations: usize, batch: usize) -> Result<Vec<E3Row>> {
+    let manifest = super::load_manifest().ok();
+    let mut rows = Vec::new();
+    for w in all_workloads() {
+        let program = match &manifest {
+            Some(m) => super::program_from_artifact(m, w.name(), fmt)?,
+            None => super::program_from_workload(w.as_ref(), fmt, 42),
+        };
+        rows.push(measure(w.as_ref(), program, NpuConfig::default(), invocations, batch, 17)?);
+    }
+    Ok(rows)
+}
+
+pub fn print_table(rows: &[E3Row]) {
+    let mut t = Table::new(&["workload", "cpu-only(mJ)", "with-npu(mJ)", "savings"]);
+    for r in rows {
+        t.row(&[
+            r.workload.clone(),
+            format!("{:.4}", r.cpu_only.total_mj()),
+            format!("{:.4}", r.with_npu.total_mj()),
+            format!("{:.2}x", r.savings),
+        ]);
+    }
+    t.print();
+    let gm: f64 = rows.iter().map(|r| r.savings.ln()).sum::<f64>() / rows.len() as f64;
+    println!("geomean energy savings: {:.2}x", gm.exp());
+}
+
+/// Sanity link to E2: energy savings should correlate with speedup (both
+/// come from replacing CPU cycles with cheaper MAC work).
+pub fn cpu_time_seconds(w: &dyn Workload, invocations: usize) -> f64 {
+    invocations as f64 * w.cpu_cycles_per_call() as f64 / (CPU_CLOCK_MHZ * 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::workload;
+    use crate::fixed::Q7_8;
+
+    fn row(name: &str) -> E3Row {
+        let w = workload(name).unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+        measure(w.as_ref(), p, NpuConfig::default(), 512, 128, 3).unwrap()
+    }
+
+    #[test]
+    fn heavy_kernels_save_energy() {
+        for name in ["inversek2j", "jmeint", "blackscholes", "jpeg"] {
+            let r = row(name);
+            assert!(r.savings > 1.2, "{name}: {:.2}", r.savings);
+        }
+    }
+
+    #[test]
+    fn breakdown_components_populated() {
+        let r = row("fft");
+        assert!(r.with_npu.npu_compute_pj > 0.0);
+        assert!(r.with_npu.acp_pj > 0.0);
+        assert!(r.cpu_only.npu_compute_pj == 0.0);
+    }
+
+    #[test]
+    fn savings_is_ratio() {
+        let r = row("kmeans");
+        assert!(
+            (r.savings - r.cpu_only.total_pj() / r.with_npu.total_pj()).abs() < 1e-12
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! E4 — application quality loss under NPU approximation (mirrors NPU
+//! MICRO'12 Table 2). Scores both execution paths: the PJRT f32 model
+//! (what the AOT artifact computes) and the Q-format fixed-point
+//! simulator (what the FPGA would compute).
+
+use anyhow::Result;
+
+use crate::bench_suite::{all_workloads, Workload};
+use crate::fixed::QFormat;
+use crate::npu::PuSim;
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct E4Row {
+    pub workload: String,
+    pub metric: &'static str,
+    /// Error of the fixed-point simulated NPU vs precise.
+    pub fixed_error: f64,
+    /// Error of the f32 PJRT path vs precise (None when artifacts absent
+    /// or PJRT skipped).
+    pub f32_error: Option<f64>,
+    /// Max |fixed - f32| disagreement between the two NPU paths.
+    pub path_disagreement: Option<f64>,
+}
+
+/// Score one workload. `pjrt_outputs` (from the runtime) are optional.
+pub fn measure(
+    w: &dyn Workload,
+    program: crate::npu::NpuProgram,
+    samples: usize,
+    seed: u64,
+    pjrt_outputs: Option<&[Vec<f32>]>,
+    inputs_override: Option<&[Vec<f32>]>,
+) -> E4Row {
+    let mut rng = Rng::new(seed);
+    let owned;
+    let inputs: &[Vec<f32>] = match inputs_override {
+        Some(i) => i,
+        None => {
+            owned = w.gen_batch(&mut rng, samples);
+            &owned
+        }
+    };
+    let precise = w.run_precise(inputs);
+    let pu = PuSim::new(program, 8);
+    let fixed: Vec<Vec<f32>> = inputs.iter().map(|x| pu.forward_f32(x)).collect();
+    let metric = w.metric();
+    let fixed_error = metric.score(&fixed, &precise);
+    let (f32_error, path_disagreement) = match pjrt_outputs {
+        None => (None, None),
+        Some(f32_out) => {
+            let e = metric.score(f32_out, &precise);
+            let d = f32_out
+                .iter()
+                .zip(&fixed)
+                .flat_map(|(a, b)| a.iter().zip(b).map(|(x, y)| f64::from((x - y).abs())))
+                .fold(0.0f64, f64::max);
+            (Some(e), Some(d))
+        }
+    };
+    E4Row {
+        workload: w.name().to_string(),
+        metric: metric.name(),
+        fixed_error,
+        f32_error,
+        path_disagreement,
+    }
+}
+
+/// Full E4 from artifacts (fixed-point path only; the e2e example adds
+/// the PJRT column).
+pub fn run(fmt: QFormat, samples: usize) -> Result<Vec<E4Row>> {
+    let manifest = super::load_manifest()?;
+    let mut rows = Vec::new();
+    for w in all_workloads() {
+        let program = super::program_from_artifact(&manifest, w.name(), fmt)?;
+        rows.push(measure(w.as_ref(), program, samples, 23, None, None));
+    }
+    Ok(rows)
+}
+
+pub fn print_table(rows: &[E4Row]) {
+    let mut t = Table::new(&["workload", "metric", "fixed-err", "f32-err", "path-diff"]);
+    for r in rows {
+        t.row(&[
+            r.workload.clone(),
+            r.metric.to_string(),
+            format!("{:.4}", r.fixed_error),
+            r.f32_error.map_or("-".into(), |e| format!("{e:.4}")),
+            r.path_disagreement.map_or("-".into(), |d| format!("{d:.4}")),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::workload;
+    use crate::fixed::Q7_8;
+
+    #[test]
+    fn quality_rows_from_artifacts() {
+        let Ok(manifest) = super::super::load_manifest() else {
+            eprintln!("SKIP (run `make artifacts`)");
+            return;
+        };
+        for (name, bound) in [
+            ("inversek2j", 0.10),
+            ("fft", 0.20),
+            ("kmeans", 0.20),
+            ("sobel", 0.12),
+            ("jpeg", 0.10),
+        ] {
+            let w = workload(name).unwrap();
+            let p = super::super::program_from_artifact(&manifest, name, Q7_8).unwrap();
+            let r = measure(w.as_ref(), p, 512, 5, None, None);
+            assert!(
+                r.fixed_error < bound,
+                "{name}: fixed error {:.4} exceeds {bound}",
+                r.fixed_error
+            );
+        }
+    }
+
+    #[test]
+    fn jmeint_beats_coin_flip() {
+        let Ok(manifest) = super::super::load_manifest() else { return };
+        let w = workload("jmeint").unwrap();
+        let p = super::super::program_from_artifact(&manifest, "jmeint", Q7_8).unwrap();
+        let r = measure(w.as_ref(), p, 1024, 7, None, None);
+        assert!(r.fixed_error < 0.45, "miss rate {:.3}", r.fixed_error);
+    }
+
+    #[test]
+    fn untrained_program_scores_poorly_but_finitely() {
+        let w = workload("sobel").unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 99);
+        let r = measure(w.as_ref(), p, 128, 3, None, None);
+        assert!(r.fixed_error.is_finite());
+        assert!(r.f32_error.is_none());
+    }
+}

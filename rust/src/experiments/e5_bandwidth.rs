@@ -1,0 +1,231 @@
+//! E5 — **the paper's proposal**: compression on the NPU<->DRAM channel.
+//!
+//! Scenario: NN configurations (weights) and invocation queues live in
+//! main memory — the multi-tenant case where PU weight BRAMs are
+//! reloaded per batch (many NN configurations multiplexed, exactly the
+//! customization direction the paper's §5 sketches). Every batch then
+//! moves: weights (per reconfiguration) + input queue + output queue
+//! across the DRAM channel.
+//!
+//! We replay the identical access stream against an uncompressed DRAM
+//! and an LCP(scheme) DRAM and report effective-bandwidth amplification
+//! and the NPU throughput when the channel is the bottleneck.
+
+use anyhow::Result;
+
+use crate::bench_suite::{all_workloads, Workload};
+use crate::compress::{Bdi, Compressor, Fpc, Hybrid};
+use crate::fixed::QFormat;
+use crate::mem::{ChannelConfig, CompressedDram, DramMode};
+use crate::npu::{NpuConfig, PuSim};
+use crate::trace::Trace;
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct E5Row {
+    pub workload: String,
+    pub scheme: String,
+    pub logical_mb: f64,
+    pub physical_mb: f64,
+    pub amplification: f64,
+    pub channel_cycles: u64,
+    /// Invocations/s when the DRAM channel limits the NPU.
+    pub membound_throughput: f64,
+    /// Invocations/s of the compute-only model (channel infinitely fast).
+    pub compute_throughput: f64,
+    /// min(compute, membound): the delivered rate.
+    pub delivered_throughput: f64,
+}
+
+fn scheme_by_name(name: &str) -> Option<Box<dyn Compressor>> {
+    match name {
+        "none" => None,
+        "bdi" => Some(Box::new(Bdi)),
+        "fpc" => Some(Box::new(Fpc)),
+        "bdi+fpc" => Some(Box::new(Hybrid::default())),
+        other => panic!("unknown scheme {other}"),
+    }
+}
+
+/// Replay `batches` batches of size `batch` for one workload under one
+/// scheme.
+pub fn measure(
+    w: &dyn Workload,
+    program: crate::npu::NpuProgram,
+    scheme: &str,
+    batch: usize,
+    batches: usize,
+    seed: u64,
+) -> Result<E5Row> {
+    let fmt = program.fmt;
+    let cfg = NpuConfig::default();
+    let mut rng = Rng::new(seed);
+
+    let mut dram = match scheme_by_name(scheme) {
+        None => CompressedDram::new(DramMode::Raw, ChannelConfig::zc702_ddr3()),
+        Some(c) => CompressedDram::new(DramMode::Lcp(c), ChannelConfig::zc702_ddr3()),
+    };
+
+    let pu = PuSim::new(program.clone(), cfg.array_width);
+    // The weight region holds many NN configurations back to back (the
+    // multi-tenant case motivating per-batch reconfiguration): tile this
+    // program's weights to fill whole pages so page layout reflects
+    // weight data, not zero padding.
+    let one = Trace::weights(&program).bytes;
+    let pages = (one.len() * 4).div_ceil(4096).max(1);
+    let mut weight_region = Vec::with_capacity(pages * 4096);
+    while weight_region.len() < pages * 4096 {
+        weight_region.extend_from_slice(&one);
+    }
+    weight_region.truncate(pages * 4096);
+    dram.load(0, &weight_region);
+    let queue_base = 1 << 20;
+
+    let mut channel_cycles = 0u64;
+    let mut compute_cycles = 0u64;
+    for _ in 0..batches {
+        // (1) weight reload for this configuration
+        let lines = one.len().div_ceil(64);
+        for i in 0..lines {
+            channel_cycles += dram.read_line((i * 64) as u64).1;
+        }
+        // (2) input queue: CPU DMA-writes, NPU reads
+        let inputs = w.gen_batch(&mut rng, batch);
+        let in_trace = Trace::inputs(w.name(), fmt, &inputs).bytes;
+        let mut addr = queue_base;
+        channel_cycles += dram.store(addr, &in_trace);
+        for _ in 0..in_trace.len().div_ceil(64) {
+            channel_cycles += dram.read_line(addr).1;
+            addr += 64;
+        }
+        // (3) output queue: NPU writes, CPU reads
+        let outputs: Vec<Vec<f32>> = inputs.iter().map(|x| pu.forward_f32(x)).collect();
+        let out_trace = Trace::outputs(w.name(), fmt, &outputs).bytes;
+        channel_cycles += dram.store(addr, &out_trace);
+        for _ in 0..out_trace.len().div_ceil(64) {
+            channel_cycles += dram.read_line(addr).1;
+            addr += 64;
+        }
+        compute_cycles += pu.batch_cycles(batch as u64) / cfg.pu_count as u64;
+    }
+
+    let n = (batch * batches) as f64;
+    let chan = ChannelConfig::zc702_ddr3();
+    let channel_secs = channel_cycles as f64 / (chan.clock_mhz * 1e6);
+    let compute_secs = compute_cycles as f64 / (cfg.clock_mhz * 1e6);
+    let membound = n / channel_secs;
+    let compute = n / compute_secs;
+    Ok(E5Row {
+        workload: w.name().to_string(),
+        scheme: scheme.to_string(),
+        logical_mb: dram.logical_bytes as f64 / 1e6,
+        physical_mb: dram.physical_bytes as f64 / 1e6,
+        amplification: dram.amplification(),
+        channel_cycles,
+        membound_throughput: membound,
+        compute_throughput: compute,
+        delivered_throughput: membound.min(compute),
+    })
+}
+
+pub const SCHEMES: [&str; 4] = ["none", "bdi", "fpc", "bdi+fpc"];
+
+/// Full E5: every workload x scheme.
+pub fn run(fmt: QFormat, batch: usize, batches: usize) -> Result<Vec<E5Row>> {
+    let manifest = super::load_manifest().ok();
+    let mut rows = Vec::new();
+    for w in all_workloads() {
+        let program = match &manifest {
+            Some(m) => super::program_from_artifact(m, w.name(), fmt)?,
+            None => super::program_from_workload(w.as_ref(), fmt, 42),
+        };
+        for scheme in SCHEMES {
+            rows.push(measure(w.as_ref(), program.clone(), scheme, batch, batches, 29)?);
+        }
+    }
+    Ok(rows)
+}
+
+pub fn print_table(rows: &[E5Row]) {
+    let mut t = Table::new(&[
+        "workload",
+        "scheme",
+        "logical(MB)",
+        "physical(MB)",
+        "amplif",
+        "membound(inv/s)",
+        "delivered(inv/s)",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.workload.clone(),
+            r.scheme.clone(),
+            format!("{:.3}", r.logical_mb),
+            format!("{:.3}", r.physical_mb),
+            format!("{:.3}x", r.amplification),
+            format!("{:.0}", r.membound_throughput),
+            format!("{:.0}", r.delivered_throughput),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::workload;
+    use crate::fixed::Q7_8;
+
+    fn rows_for(name: &str) -> Vec<E5Row> {
+        let w = workload(name).unwrap();
+        SCHEMES
+            .iter()
+            .map(|s| {
+                let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+                measure(w.as_ref(), p, s, 32, 4, 3).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn compression_amplifies_bandwidth() {
+        let rows = rows_for("jmeint");
+        let none = &rows[0];
+        let hybrid = &rows[3];
+        assert!((none.amplification - 1.0).abs() < 1e-9);
+        assert!(
+            hybrid.amplification > 1.1,
+            "hybrid amplification {:.3}",
+            hybrid.amplification
+        );
+        assert!(hybrid.membound_throughput > none.membound_throughput);
+    }
+
+    #[test]
+    fn logical_traffic_identical_across_schemes() {
+        let rows = rows_for("fft");
+        for r in &rows[1..] {
+            assert_eq!(r.logical_mb, rows[0].logical_mb, "{}", r.scheme);
+        }
+    }
+
+    #[test]
+    fn physical_never_exceeds_logical_by_much() {
+        for r in rows_for("sobel") {
+            assert!(r.physical_mb <= r.logical_mb * 1.05, "{}: {}", r.scheme, r.physical_mb);
+        }
+    }
+
+    #[test]
+    fn delivered_is_min() {
+        for r in rows_for("kmeans") {
+            assert!(
+                (r.delivered_throughput
+                    - r.membound_throughput.min(r.compute_throughput))
+                .abs()
+                    < 1e-6
+            );
+        }
+    }
+}

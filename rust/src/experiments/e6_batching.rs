@@ -1,0 +1,121 @@
+//! E6 — batching: latency and throughput vs batch size (mirrors SNNAP
+//! HPCA'15's throughput-vs-invocations analysis; paper challenge #2).
+
+use anyhow::Result;
+
+use crate::bench_suite::{workload, Workload};
+use crate::fixed::QFormat;
+use crate::npu::{NpuConfig, NpuDevice};
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct E6Row {
+    pub workload: String,
+    pub batch: usize,
+    pub total_cycles: u64,
+    pub latency_us_per_invocation: f64,
+    pub throughput_inv_s: f64,
+    /// Fraction of the batch time spent on sync overhead.
+    pub sync_fraction: f64,
+}
+
+pub const BATCH_SWEEP: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+pub fn measure(
+    w: &dyn Workload,
+    program: crate::npu::NpuProgram,
+    cfg: NpuConfig,
+    batch: usize,
+    seed: u64,
+) -> Result<E6Row> {
+    let mut rng = Rng::new(seed);
+    let mut device = NpuDevice::new(cfg, program)?;
+    let inputs = w.gen_batch(&mut rng, batch);
+    let r = device.execute_batch(&inputs)?;
+    let secs = r.seconds(cfg.clock_mhz);
+    Ok(E6Row {
+        workload: w.name().to_string(),
+        batch,
+        total_cycles: r.total_cycles,
+        latency_us_per_invocation: secs * 1e6 / batch as f64,
+        throughput_inv_s: batch as f64 / secs,
+        sync_fraction: cfg.sync_cycles as f64 / r.total_cycles as f64,
+    })
+}
+
+/// Sweep one workload across batch sizes.
+pub fn sweep(name: &str, fmt: QFormat) -> Result<Vec<E6Row>> {
+    let w = workload(name).ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?;
+    let manifest = super::load_manifest().ok();
+    let program = match &manifest {
+        Some(m) => super::program_from_artifact(m, name, fmt)?,
+        None => super::program_from_workload(w.as_ref(), fmt, 42),
+    };
+    BATCH_SWEEP
+        .iter()
+        .map(|&b| measure(w.as_ref(), program.clone(), NpuConfig::default(), b, 31))
+        .collect()
+}
+
+pub fn print_table(rows: &[E6Row]) {
+    let mut t = Table::new(&[
+        "workload",
+        "batch",
+        "cycles",
+        "lat/inv(us)",
+        "throughput(inv/s)",
+        "sync%",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.workload.clone(),
+            r.batch.to_string(),
+            r.total_cycles.to_string(),
+            format!("{:.3}", r.latency_us_per_invocation),
+            format!("{:.0}", r.throughput_inv_s),
+            format!("{:.1}", r.sync_fraction * 100.0),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q7_8;
+
+    fn sweep_synthetic(name: &str) -> Vec<E6Row> {
+        let w = workload(name).unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+        BATCH_SWEEP
+            .iter()
+            .map(|&b| measure(w.as_ref(), p.clone(), NpuConfig::default(), b, 3).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn throughput_rises_then_saturates() {
+        let rows = sweep_synthetic("sobel");
+        assert!(rows[4].throughput_inv_s > 2.0 * rows[0].throughput_inv_s);
+        // saturation: doubling 128 -> 256 gains < 40%
+        let r128 = rows.iter().find(|r| r.batch == 128).unwrap();
+        let r256 = rows.iter().find(|r| r.batch == 256).unwrap();
+        assert!(r256.throughput_inv_s < 1.4 * r128.throughput_inv_s);
+    }
+
+    #[test]
+    fn sync_fraction_shrinks_with_batch() {
+        let rows = sweep_synthetic("fft");
+        assert!(rows.last().unwrap().sync_fraction < rows[0].sync_fraction / 4.0);
+    }
+
+    #[test]
+    fn per_invocation_latency_improves_with_batch() {
+        let rows = sweep_synthetic("kmeans");
+        assert!(
+            rows.last().unwrap().latency_us_per_invocation
+                < rows[0].latency_us_per_invocation
+        );
+    }
+}

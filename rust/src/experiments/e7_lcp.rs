@@ -1,0 +1,157 @@
+//! E7 — LCP's mechanism costs vs the variable-size baseline (mirrors the
+//! LCP paper's metadata/address-calculation analysis): address-calc
+//! metadata touches, page-layout ratios, exception and overflow rates.
+
+use anyhow::Result;
+
+use crate::compress::lcp::{LcpPage, VariableSizedPage, PAGE_BYTES, PAGE_LINES};
+use crate::compress::Hybrid;
+use crate::fixed::QFormat;
+use crate::trace::{Synthetic, Trace};
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct E7Row {
+    pub source: String,
+    pub lcp_ratio: f64,
+    pub var_ratio: f64,
+    pub slot_size: usize,
+    pub exceptions: usize,
+    /// Mean metadata accesses per line lookup.
+    pub lcp_meta_per_lookup: f64,
+    pub var_meta_per_lookup: f64,
+    /// Overflows from a write-noise pass over 25% of lines.
+    pub type1_overflows: u64,
+    pub type2_overflows: u64,
+}
+
+/// Analyze one 4 KiB page image.
+pub fn measure_page(source: &str, page: &[u8], seed: u64) -> E7Row {
+    assert_eq!(page.len(), PAGE_BYTES);
+    let comp = Hybrid::default();
+    let mut lcp = LcpPage::pack(page, &comp);
+    let var = VariableSizedPage::pack(page, &comp);
+
+    let meta = |f: &dyn Fn(usize) -> usize| -> f64 {
+        (0..PAGE_LINES).map(f).sum::<usize>() as f64 / PAGE_LINES as f64
+    };
+    let lcp_meta = meta(&|i| lcp.line_address(i).metadata_accesses);
+    let var_meta = meta(&|i| var.line_address(i).metadata_accesses);
+
+    let row_static = E7Row {
+        source: source.to_string(),
+        lcp_ratio: lcp.ratio(),
+        var_ratio: var.ratio(),
+        slot_size: lcp.slot_size,
+        exceptions: lcp.exception_count(),
+        lcp_meta_per_lookup: lcp_meta,
+        var_meta_per_lookup: var_meta,
+        type1_overflows: 0,
+        type2_overflows: 0,
+    };
+
+    // dirty-write pass: 25% of lines overwritten with noise
+    let mut rng = Rng::new(seed);
+    for i in 0..PAGE_LINES {
+        if rng.bool(0.25) {
+            let mut line = [0u8; 64];
+            rng.fill_bytes(&mut line);
+            lcp.write_line(i, &line, &comp);
+        }
+    }
+    E7Row {
+        type1_overflows: lcp.type1_overflows,
+        type2_overflows: lcp.type2_overflows,
+        ..row_static
+    }
+}
+
+/// E7 over NPU weight pages (from artifacts when available) + synthetic
+/// distributions.
+pub fn run(fmt: QFormat) -> Result<Vec<E7Row>> {
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(41);
+    // synthetic pages
+    for s in Synthetic::all() {
+        let page = s.generate(PAGE_BYTES, &mut rng);
+        rows.push(measure_page(&s.name(), &page, 43));
+    }
+    // real weight pages
+    if let Ok(manifest) = super::load_manifest() {
+        for name in manifest.benchmarks.keys() {
+            let program = super::program_from_artifact(&manifest, name, fmt)?;
+            let mut bytes = Trace::weights(&program).bytes;
+            bytes.resize(PAGE_BYTES, 0); // NPU weights are < 1 page
+            rows.push(measure_page(&format!("{name}-weights"), &bytes, 47));
+        }
+    }
+    Ok(rows)
+}
+
+pub fn print_table(rows: &[E7Row]) {
+    let mut t = Table::new(&[
+        "page-source",
+        "lcp-ratio",
+        "var-ratio",
+        "slot",
+        "exc",
+        "meta/lookup(lcp)",
+        "meta/lookup(var)",
+        "t1-ovf",
+        "t2-ovf",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.source.clone(),
+            format!("{:.3}", r.lcp_ratio),
+            format!("{:.3}", r.var_ratio),
+            r.slot_size.to_string(),
+            r.exceptions.to_string(),
+            format!("{:.1}", r.lcp_meta_per_lookup),
+            format!("{:.1}", r.var_meta_per_lookup),
+            r.type1_overflows.to_string(),
+            r.type2_overflows.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lcp_lookup_is_constant_variable_is_linear() {
+        let mut rng = Rng::new(1);
+        let page = Synthetic::SmallInts.generate(PAGE_BYTES, &mut rng);
+        let r = measure_page("t", &page, 3);
+        assert!((r.lcp_meta_per_lookup - 1.0).abs() < 1e-9);
+        // mean of 1..=64 = 32.5
+        assert!((r.var_meta_per_lookup - 32.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lcp_pays_bounded_ratio_cost_for_o1_addressing() {
+        let mut rng = Rng::new(2);
+        for s in [Synthetic::SmallInts, Synthetic::Pointers, Synthetic::Activations] {
+            let page = s.generate(PAGE_BYTES, &mut rng);
+            let r = measure_page(&s.name(), &page, 5);
+            // fixed slots + metadata cost some ratio vs perfect packing,
+            // but never more than ~55% on compressible data
+            assert!(
+                r.lcp_ratio > 0.45 * r.var_ratio,
+                "{}: lcp {:.3} vs var {:.3}",
+                s.name(),
+                r.lcp_ratio,
+                r.var_ratio
+            );
+        }
+    }
+
+    #[test]
+    fn noise_writes_cause_overflows_on_compressed_pages() {
+        let r = measure_page("zeros", &vec![0u8; PAGE_BYTES], 7);
+        assert!(r.type1_overflows > 0);
+    }
+}

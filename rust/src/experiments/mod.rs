@@ -1,0 +1,58 @@
+//! Experiment implementations E1..E8 (see DESIGN.md §2).
+//!
+//! Each experiment is a pure function from configuration to printable
+//! rows, so the CLI (`snnapc run-bench`), the criterion-style bench
+//! binaries (`rust/benches/e*.rs`) and the end-to-end example all share
+//! one implementation and EXPERIMENTS.md quotes a single source of truth.
+
+pub mod e1_compression;
+pub mod e2_speedup;
+pub mod e3_energy;
+pub mod e4_quality;
+pub mod e5_bandwidth;
+pub mod e6_batching;
+pub mod e7_lcp;
+pub mod e8_ablation;
+
+use anyhow::Result;
+
+use crate::fixed::QFormat;
+use crate::npu::program::NpuProgram;
+use crate::npu::Activation;
+use crate::runtime::Manifest;
+
+/// Build the quantized NPU program for a benchmark from its artifact
+/// (trained weights) — the shared setup step.
+pub fn program_from_artifact(
+    manifest: &Manifest,
+    bench: &str,
+    fmt: QFormat,
+) -> Result<NpuProgram> {
+    let art = manifest.get(bench)?;
+    let weights = art.load_weights()?;
+    NpuProgram::from_f32(bench, &art.sizes, &art.activations, &weights, fmt)
+}
+
+/// Build a program from the workload topology with synthetic weights
+/// (used when artifacts are unavailable, e.g. pure-simulation benches).
+pub fn program_from_workload(
+    w: &dyn crate::bench_suite::Workload,
+    fmt: QFormat,
+    seed: u64,
+) -> NpuProgram {
+    let sizes = w.sizes();
+    let n: usize = sizes.windows(2).map(|p| p[0] * p[1] + p[1]).sum();
+    let mut rng = crate::util::rng::Rng::new(seed);
+    // Glorot-ish random weights: right scale for timing/traffic shape
+    let flat: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 0.8).collect();
+    let acts: Vec<Activation> = w.activations();
+    NpuProgram::from_f32(w.name(), &sizes, &acts, &flat, fmt).expect("topology is valid")
+}
+
+/// Load the manifest from the default location, or explain how to build
+/// it. Experiments that need trained weights call this.
+pub fn load_manifest() -> Result<Manifest> {
+    Manifest::load(&Manifest::default_path()).map_err(|e| {
+        anyhow::anyhow!("{e}\nhint: run `make artifacts` to build the AOT bundle")
+    })
+}

@@ -1,0 +1,230 @@
+//! Fixed-point arithmetic for the NPU datapath.
+//!
+//! SNNAP's FPGA datapath computes in 16-bit fixed point (DSP48 slices with
+//! wide accumulators). We model a runtime-configurable signed Q(i).(f)
+//! format stored in `i32` (so Q7.8, Q3.12, Q15.16 all fit), with
+//! round-to-nearest conversion, saturating arithmetic, and 64-bit MAC
+//! accumulation — the exact datapath the cycle simulator executes, and the
+//! quantization bound the f32-vs-fixed tests assert.
+
+/// A signed fixed-point format: `int_bits` integer bits (excluding sign) and
+/// `frac_bits` fractional bits. Total width = 1 + int_bits + frac_bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    pub int_bits: u32,
+    pub frac_bits: u32,
+}
+
+/// SNNAP's default datapath format: Q7.8 (16-bit).
+pub const Q7_8: QFormat = QFormat { int_bits: 7, frac_bits: 8 };
+/// Wider format used for ablations (E8).
+pub const Q15_16: QFormat = QFormat { int_bits: 15, frac_bits: 16 };
+/// Narrow 8-bit format (Q3.4) used for ablations (E8).
+pub const Q3_4: QFormat = QFormat { int_bits: 3, frac_bits: 4 };
+
+impl QFormat {
+    pub const fn total_bits(&self) -> u32 {
+        1 + self.int_bits + self.frac_bits
+    }
+
+    /// Storage bytes per value in the accelerator's memories (rounded up to
+    /// a power-of-two container, as the FPGA BRAM packing does).
+    pub const fn storage_bytes(&self) -> usize {
+        let bits = self.total_bits();
+        if bits <= 8 {
+            1
+        } else if bits <= 16 {
+            2
+        } else {
+            4
+        }
+    }
+
+    pub fn scale(&self) -> f32 {
+        (1u64 << self.frac_bits) as f32
+    }
+
+    pub fn max_raw(&self) -> i32 {
+        ((1i64 << (self.int_bits + self.frac_bits)) - 1) as i32
+    }
+
+    pub fn min_raw(&self) -> i32 {
+        -(1i64 << (self.int_bits + self.frac_bits)) as i32
+    }
+
+    /// f32 -> raw fixed, round-to-nearest-even, saturating.
+    pub fn from_f32(&self, v: f32) -> i32 {
+        if v.is_nan() {
+            return 0;
+        }
+        let scaled = (v as f64) * f64::from(self.scale());
+        let r = scaled.round_ties_even();
+        r.clamp(f64::from(self.min_raw()), f64::from(self.max_raw())) as i32
+    }
+
+    pub fn to_f32(&self, raw: i32) -> f32 {
+        raw as f32 / self.scale()
+    }
+
+    /// Saturating add in this format.
+    pub fn sat_add(&self, a: i32, b: i32) -> i32 {
+        (i64::from(a) + i64::from(b)).clamp(i64::from(self.min_raw()), i64::from(self.max_raw()))
+            as i32
+    }
+
+    /// Fixed-point multiply with rounding: (a*b) >> frac_bits, saturating.
+    pub fn mul(&self, a: i32, b: i32) -> i32 {
+        let wide = i64::from(a) * i64::from(b);
+        let half = 1i64 << (self.frac_bits - 1).min(62);
+        let rounded = (wide + half) >> self.frac_bits;
+        rounded.clamp(i64::from(self.min_raw()), i64::from(self.max_raw())) as i32
+    }
+
+    /// Reduce a 64-bit MAC accumulator (sum of raw*raw products, i.e. scale
+    /// 2^(2*frac)) back to this format, with rounding + saturation. This is
+    /// the DSP-slice post-adder truncation stage.
+    pub fn reduce_acc(&self, acc: i64) -> i32 {
+        let half = 1i64 << (self.frac_bits - 1).min(62);
+        let rounded = acc.saturating_add(half) >> self.frac_bits;
+        rounded.clamp(i64::from(self.min_raw()), i64::from(self.max_raw())) as i32
+    }
+
+    /// Worst-case absolute quantization error of one conversion.
+    pub fn quantum(&self) -> f32 {
+        1.0 / self.scale()
+    }
+
+    /// Quantize an f32 slice to raw values.
+    pub fn quantize_slice(&self, vs: &[f32]) -> Vec<i32> {
+        vs.iter().map(|&v| self.from_f32(v)).collect()
+    }
+
+    /// Pack raw values into little-endian bytes of `storage_bytes` each —
+    /// the byte stream the NPU's weight memory holds and the compression
+    /// path (E1/E8) analyses.
+    pub fn pack_bytes(&self, raw: &[i32]) -> Vec<u8> {
+        let nb = self.storage_bytes();
+        let mut out = Vec::with_capacity(raw.len() * nb);
+        for &r in raw {
+            let le = r.to_le_bytes();
+            out.extend_from_slice(&le[..nb]);
+        }
+        out
+    }
+
+    /// Inverse of [`pack_bytes`] (sign-extends).
+    pub fn unpack_bytes(&self, bytes: &[u8]) -> Vec<i32> {
+        let nb = self.storage_bytes();
+        assert_eq!(bytes.len() % nb, 0, "byte stream not a multiple of element size");
+        bytes
+            .chunks_exact(nb)
+            .map(|c| {
+                let mut buf = [0u8; 4];
+                buf[..nb].copy_from_slice(c);
+                let v = i32::from_le_bytes(buf);
+                // sign-extend from nb*8 bits
+                let shift = 32 - (nb as u32) * 8;
+                if shift == 0 {
+                    v
+                } else {
+                    (v << shift) >> shift
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q78_basics() {
+        assert_eq!(Q7_8.total_bits(), 16);
+        assert_eq!(Q7_8.storage_bytes(), 2);
+        assert_eq!(Q7_8.from_f32(1.0), 256);
+        assert_eq!(Q7_8.from_f32(-1.0), -256);
+        assert_eq!(Q7_8.to_f32(128), 0.5);
+        assert_eq!(Q7_8.from_f32(1000.0), Q7_8.max_raw());
+        assert_eq!(Q7_8.from_f32(-1000.0), Q7_8.min_raw());
+        assert_eq!(Q7_8.from_f32(f32::NAN), 0);
+    }
+
+    #[test]
+    fn mul_matches_float_within_quantum() {
+        let f = Q7_8;
+        let a = f.from_f32(1.5);
+        let b = f.from_f32(-2.25);
+        let p = f.mul(a, b);
+        assert!((f.to_f32(p) - (-3.375)).abs() <= f.quantum());
+    }
+
+    #[test]
+    fn reduce_acc_matches_sum_of_products() {
+        let f = Q7_8;
+        let xs = [0.5f32, -1.25, 3.0];
+        let ws = [2.0f32, 0.75, -0.125];
+        let acc: i64 = xs
+            .iter()
+            .zip(&ws)
+            .map(|(&x, &w)| i64::from(f.from_f32(x)) * i64::from(f.from_f32(w)))
+            .sum();
+        let got = f.to_f32(f.reduce_acc(acc));
+        let want: f32 = xs.iter().zip(&ws).map(|(x, w)| x * w).sum();
+        assert!((got - want).abs() <= 4.0 * f.quantum(), "{got} vs {want}");
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_all_formats() {
+        for fmt in [Q3_4, Q7_8, Q15_16] {
+            let raw: Vec<i32> = vec![fmt.min_raw(), -1, 0, 1, fmt.max_raw()];
+            let bytes = fmt.pack_bytes(&raw);
+            assert_eq!(bytes.len(), raw.len() * fmt.storage_bytes());
+            assert_eq!(fmt.unpack_bytes(&bytes), raw);
+        }
+    }
+
+    #[test]
+    fn prop_from_to_f32_error_bounded() {
+        crate::util::prop::check(256, |rng| {
+            let v = rng.f32_range(-100.0, 100.0);
+            let f = Q7_8;
+            let back = f.to_f32(f.from_f32(v));
+            assert!((back - v).abs() <= 0.5 * f.quantum() + 1e-6);
+        });
+    }
+
+    #[test]
+    fn prop_sat_add_never_overflows() {
+        crate::util::prop::check(256, |rng| {
+            let f = Q7_8;
+            let a = rng.next_u32() as i16;
+            let b = rng.next_u32() as i16;
+            let s = f.sat_add(i32::from(a), i32::from(b));
+            assert!(s >= f.min_raw() && s <= f.max_raw());
+        });
+    }
+
+    #[test]
+    fn prop_pack_roundtrip() {
+        crate::util::prop::check(64, |rng| {
+            let f = Q7_8;
+            let n = rng.range(0, 64);
+            let v: Vec<i32> = (0..n).map(|_| rng.next_u32() as i16 as i32).collect();
+            assert_eq!(f.unpack_bytes(&f.pack_bytes(&v)), v);
+        });
+    }
+
+    #[test]
+    fn prop_mul_error_bounded() {
+        crate::util::prop::check(256, |rng| {
+            let f = Q7_8;
+            let a = rng.f32_range(-10.0, 10.0);
+            let b = rng.f32_range(-10.0, 10.0);
+            let got = f.to_f32(f.mul(f.from_f32(a), f.from_f32(b)));
+            let want = (a * b).clamp(f.to_f32(f.min_raw()), f.to_f32(f.max_raw()));
+            let bound = (a.abs() + b.abs() + 1.0) * f.quantum();
+            assert!((got - want).abs() <= bound, "{} vs {}", got, want);
+        });
+    }
+}

@@ -1,0 +1,22 @@
+//! # snnap-c
+//!
+//! A reproduction of *"Applying Data Compression Techniques on Systolic
+//! Neural Network Accelerator"* (Mirnouri, 2016): an SNNAP-style neural
+//! accelerator with BDI/FPC/LCP compression applied to its memory traffic.
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod bench_suite;
+pub mod compress;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod mem;
+pub mod npu;
+pub mod runtime;
+pub mod trace;
+pub mod energy;
+pub mod metrics;
+pub mod fixed;
+pub mod util;

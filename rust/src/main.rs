@@ -1,0 +1,271 @@
+//! `snnapc` — the SNNAP-C launcher.
+//!
+//! Subcommands:
+//!   info            show artifact manifest + effective config
+//!   serve           start the batching server and drive it with a
+//!                   synthetic open-loop client (requests/s, duration)
+//!   run-bench       run experiment tables: e1..e8 or all
+//!   compress-file   per-scheme compression report for any file
+//!   trace           dump + compress a benchmark's NPU streams
+//!   config          print the effective configuration (reloadable)
+//!
+//! Examples:
+//!   snnapc info
+//!   snnapc serve --benchmark sobel --requests 5000 --set batch.max=64
+//!   snnapc run-bench --experiment e1
+//!   snnapc compress-file artifacts/jmeint.weights.bin
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use snnap_c::bench_suite::{workload, Workload};
+use snnap_c::cli::Args;
+use snnap_c::config::Config;
+use snnap_c::coordinator::{Backend, DeviceBackend, NpuServer, PjrtBackend, ServerConfig};
+use snnap_c::experiments as ex;
+use snnap_c::npu::NpuDevice;
+use snnap_c::runtime::{Manifest, NpuExecutor};
+use snnap_c::trace::Trace;
+use snnap_c::util::rng::Rng;
+
+const HELP: &str = "snnapc — systolic NPU + compressed memory (see README.md)
+
+USAGE: snnapc <command> [--options]
+
+COMMANDS:
+  info                      manifest + config summary
+  serve                     run the batching server with a synthetic client
+    --benchmark NAME        workload to serve (default from config)
+    --requests N            total requests (default 2000)
+    --clients N             client threads (default 4)
+    --backend sim|pjrt      execution backend (default sim)
+  run-bench                 print experiment tables
+    --experiment e1..e8|all which experiment (default all)
+    --invocations N         stream length knob (default 256)
+  compress-file FILE        per-scheme report for a file
+  trace                     dump a benchmark's NPU streams
+    --benchmark NAME        workload (default sobel)
+    --out DIR               write streams as .bin files
+  config                    print effective config
+GLOBAL:
+  --config FILE             load key=value config file
+  --set key=value           override any config key (repeatable)
+";
+
+fn build_config(args: &Args) -> Result<Config> {
+    let mut cfg = Config::default();
+    if let Some(f) = args.opt("config") {
+        cfg.load_file(Path::new(f))?;
+    }
+    cfg.apply_overrides(&args.opt_all("set"))?;
+    if let Some(b) = args.opt("benchmark") {
+        cfg.benchmark = b.to_string();
+    }
+    Ok(cfg)
+}
+
+fn cmd_info(cfg: &Config) -> Result<()> {
+    println!("snnap-c: systolic NPU with compressed memory\n");
+    println!("== config ==\n{}", cfg.to_string_pretty());
+    match Manifest::load(Path::new(&cfg.artifacts)) {
+        Err(e) => println!("== artifacts ==\n(not built: {e})\nrun `make artifacts`"),
+        Ok(m) => {
+            println!("== artifacts ({}) ==", cfg.artifacts);
+            println!("batch buckets: {:?}", m.batch_buckets);
+            for (name, b) in &m.benchmarks {
+                println!(
+                    "  {:<14} sizes={:?} params={} val_mse={:.2e} rel_err={:.1}%",
+                    name,
+                    b.sizes,
+                    b.n_params,
+                    b.val_mse,
+                    b.val_mean_rel_err * 100.0
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
+    let requests: usize = args.opt_parse("requests", 2000)?;
+    let clients: usize = args.opt_parse("clients", 4)?;
+    let backend_kind = args.opt("backend").unwrap_or("sim").to_string();
+    workload(&cfg.benchmark)
+        .with_context(|| format!("unknown benchmark {:?}", cfg.benchmark))?;
+
+    let cfg2 = cfg.clone();
+    let factory: snnap_c::coordinator::server::BackendFactory = Box::new(move || {
+        let manifest = Manifest::load(Path::new(&cfg2.artifacts))?;
+        match backend_kind.as_str() {
+            "pjrt" => {
+                let ex = NpuExecutor::new(manifest.get(&cfg2.benchmark)?.clone())?;
+                Ok(Box::new(PjrtBackend { executor: ex }) as Box<dyn Backend>)
+            }
+            "sim" => {
+                let program = ex::program_from_artifact(
+                    &manifest,
+                    &cfg2.benchmark,
+                    cfg2.qformat,
+                )?;
+                Ok(Box::new(DeviceBackend {
+                    device: NpuDevice::new(cfg2.npu, program)?,
+                }) as Box<dyn Backend>)
+            }
+            other => bail!("unknown backend {other:?} (sim|pjrt)"),
+        }
+    });
+    let server = NpuServer::start(factory, ServerConfig { policy: cfg.policy })?;
+    let server = std::sync::Arc::new(server);
+
+    println!(
+        "serving {} on {} backend, {} clients x {} requests",
+        cfg.benchmark,
+        args.opt("backend").unwrap_or("sim"),
+        clients,
+        requests / clients
+    );
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let server = server.clone();
+        let w: Box<dyn Workload> = workload(&cfg.benchmark).unwrap();
+        let per_client = requests / clients;
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut rng = Rng::new(c as u64 + 100);
+            for _ in 0..per_client {
+                let x = w.gen_input(&mut rng);
+                let _ = server.submit(x)?.wait()?;
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let dt = t0.elapsed();
+    println!("== results ==");
+    println!("{}", server.metrics().report());
+    println!(
+        "wall time {:?}  throughput {:.0} req/s",
+        dt,
+        (requests as f64 / dt.as_secs_f64())
+    );
+    Ok(())
+}
+
+fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
+    let which = args.opt("experiment").unwrap_or("all");
+    let invocations: usize = args.opt_parse("invocations", 256)?;
+    let run_all = which == "all";
+    if run_all || which == "e1" {
+        println!("\n== E1: compression ratio per workload stream ==");
+        let rows = ex::e1_compression::run(cfg.qformat, invocations)?;
+        ex::e1_compression::print_table(&rows);
+        println!("\n-- synthetic characterization --");
+        for r in ex::e1_compression::measure_synthetics(64 * 512, 3) {
+            print!("{}", r.table());
+        }
+    }
+    if run_all || which == "e2" {
+        println!("\n== E2: speedup vs CPU baseline ==");
+        ex::e2_speedup::print_table(&ex::e2_speedup::run(cfg.qformat, invocations, cfg.policy.max_batch)?);
+    }
+    if run_all || which == "e3" {
+        println!("\n== E3: energy vs CPU baseline ==");
+        ex::e3_energy::print_table(&ex::e3_energy::run(cfg.qformat, invocations, cfg.policy.max_batch)?);
+    }
+    if run_all || which == "e4" {
+        println!("\n== E4: quality loss ==");
+        ex::e4_quality::print_table(&ex::e4_quality::run(cfg.qformat, invocations)?);
+    }
+    if run_all || which == "e5" {
+        println!("\n== E5: effective bandwidth with compression (the paper's proposal) ==");
+        ex::e5_bandwidth::print_table(&ex::e5_bandwidth::run(cfg.qformat, cfg.policy.max_batch, 8)?);
+    }
+    if run_all || which == "e6" {
+        println!("\n== E6: batching sweep ==");
+        for b in ["sobel", "jmeint"] {
+            ex::e6_batching::print_table(&ex::e6_batching::sweep(b, cfg.qformat)?);
+        }
+    }
+    if run_all || which == "e7" {
+        println!("\n== E7: LCP overheads vs variable-size baseline ==");
+        ex::e7_lcp::print_table(&ex::e7_lcp::run(cfg.qformat)?);
+    }
+    if run_all || which == "e8" {
+        println!("\n== E8: fixed-point width ablation ==");
+        ex::e8_ablation::print_width_table(&ex::e8_ablation::run_width(invocations)?);
+    }
+    Ok(())
+}
+
+fn cmd_compress_file(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .context("usage: snnapc compress-file FILE")?;
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    let report = ex::e1_compression::file_report(&bytes);
+    print!("{}", report.table());
+    Ok(())
+}
+
+fn cmd_trace(cfg: &Config, args: &Args) -> Result<()> {
+    let w = workload(&cfg.benchmark)
+        .with_context(|| format!("unknown benchmark {:?}", cfg.benchmark))?;
+    let manifest = Manifest::load(Path::new(&cfg.artifacts)).ok();
+    let program = match &manifest {
+        Some(m) => ex::program_from_artifact(m, w.name(), cfg.qformat)?,
+        None => ex::program_from_workload(w.as_ref(), cfg.qformat, 42),
+    };
+    let mut rng = Rng::new(7);
+    let inputs = w.gen_batch(&mut rng, 256);
+    let pu = snnap_c::npu::PuSim::new(program.clone(), cfg.npu.array_width);
+    let outputs: Vec<Vec<f32>> = inputs.iter().map(|x| pu.forward_f32(x)).collect();
+    let streams = [
+        Trace::weights(&program),
+        Trace::inputs(w.name(), cfg.qformat, &inputs),
+        Trace::outputs(w.name(), cfg.qformat, &outputs),
+    ];
+    for t in &streams {
+        let r = snnap_c::compress::SchemeReport::measure(
+            &format!("{}/{}", t.benchmark, t.kind.name()),
+            &t.bytes,
+        );
+        print!("{}", r.table());
+        if let Some(dir) = args.opt("out") {
+            std::fs::create_dir_all(dir)?;
+            let p = format!("{dir}/{}_{}.bin", t.benchmark, t.kind.name());
+            std::fs::write(&p, &t.bytes)?;
+            println!("wrote {p} ({} bytes)", t.bytes.len());
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["help", "verbose"])?;
+    if args.flag("help") || args.command.is_empty() {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let cfg = build_config(&args)?;
+    match args.command.as_str() {
+        "info" => cmd_info(&cfg),
+        "serve" => cmd_serve(&cfg, &args),
+        "run-bench" => cmd_run_bench(&cfg, &args),
+        "compress-file" => cmd_compress_file(&args),
+        "trace" => cmd_trace(&cfg, &args),
+        "config" => {
+            print!("{}", cfg.to_string_pretty());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print!("{HELP}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Byte-serial channel timing model (ACP / DRAM bus).
+
+/// Static channel parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChannelConfig {
+    /// Payload bytes moved per bus cycle once a burst is streaming.
+    pub bytes_per_cycle: usize,
+    /// Fixed latency per transfer (arbitration + CAS / ACP round trip).
+    pub latency_cycles: u64,
+    /// Bus clock in MHz (used only to convert cycles to seconds/GBps).
+    pub clock_mhz: f64,
+}
+
+impl ChannelConfig {
+    /// Zynq-7000 ACP port: 64-bit AXI @ 150 MHz, ~40-cycle round trip
+    /// (SNNAP HPCA'15 measures ~radio 90 cycles end-to-end for a sync;
+    /// the port itself arbitrates in ~40).
+    pub fn zynq_acp() -> Self {
+        ChannelConfig { bytes_per_cycle: 8, latency_cycles: 40, clock_mhz: 150.0 }
+    }
+
+    /// ZC702 DDR3-1066 x32: 4 bytes/cycle @ 533 MHz effective, ~28-cycle
+    /// first-word latency.
+    pub fn zc702_ddr3() -> Self {
+        ChannelConfig { bytes_per_cycle: 4, latency_cycles: 28, clock_mhz: 533.0 }
+    }
+
+    /// Peak bandwidth in GB/s.
+    pub fn peak_gbps(&self) -> f64 {
+        self.bytes_per_cycle as f64 * self.clock_mhz * 1e6 / 1e9
+    }
+}
+
+/// Aggregate transfer statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferStats {
+    pub transfers: u64,
+    pub payload_bytes: u64,
+    pub busy_cycles: u64,
+}
+
+/// A channel with cumulative accounting.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub cfg: ChannelConfig,
+    stats: TransferStats,
+}
+
+impl Channel {
+    pub fn new(cfg: ChannelConfig) -> Self {
+        Channel { cfg, stats: TransferStats::default() }
+    }
+
+    /// Cost of moving `bytes` as one burst; returns the cycle count and
+    /// accumulates stats. Zero-byte transfers still pay latency (a sync).
+    pub fn transfer(&mut self, bytes: usize) -> u64 {
+        let stream = (bytes.div_ceil(self.cfg.bytes_per_cycle)) as u64;
+        let cycles = self.cfg.latency_cycles + stream;
+        self.stats.transfers += 1;
+        self.stats.payload_bytes += bytes as u64;
+        self.stats.busy_cycles += cycles;
+        cycles
+    }
+
+    /// Cost without recording (what-if queries used by the scheduler).
+    pub fn cost(&self, bytes: usize) -> u64 {
+        self.cfg.latency_cycles + (bytes.div_ceil(self.cfg.bytes_per_cycle)) as u64
+    }
+
+    pub fn stats(&self) -> TransferStats {
+        self.stats
+    }
+
+    pub fn reset(&mut self) {
+        self.stats = TransferStats::default();
+    }
+
+    /// Achieved payload bandwidth in GB/s over the busy period.
+    pub fn achieved_gbps(&self) -> f64 {
+        if self.stats.busy_cycles == 0 {
+            return 0.0;
+        }
+        let secs = self.stats.busy_cycles as f64 / (self.cfg.clock_mhz * 1e6);
+        self.stats.payload_bytes as f64 / 1e9 / secs
+    }
+
+    /// Effective bandwidth amplification when moving `logical` bytes as
+    /// `physical` compressed bytes: the paper's headline metric.
+    pub fn effective_amplification(logical: u64, physical: u64) -> f64 {
+        if physical == 0 {
+            return f64::INFINITY;
+        }
+        logical as f64 / physical as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_cost_includes_latency() {
+        let mut ch = Channel::new(ChannelConfig { bytes_per_cycle: 8, latency_cycles: 40, clock_mhz: 100.0 });
+        assert_eq!(ch.transfer(64), 40 + 8);
+        assert_eq!(ch.transfer(0), 40);
+        assert_eq!(ch.transfer(1), 41);
+        let s = ch.stats();
+        assert_eq!(s.transfers, 3);
+        assert_eq!(s.payload_bytes, 65);
+    }
+
+    #[test]
+    fn cost_is_pure() {
+        let ch = Channel::new(ChannelConfig::zynq_acp());
+        let before = ch.stats();
+        let _ = ch.cost(4096);
+        assert_eq!(ch.stats(), before);
+    }
+
+    #[test]
+    fn zynq_parameters_sane() {
+        assert!((ChannelConfig::zynq_acp().peak_gbps() - 1.2).abs() < 0.01);
+        assert!((ChannelConfig::zc702_ddr3().peak_gbps() - 2.132).abs() < 0.01);
+    }
+
+    #[test]
+    fn achieved_bandwidth_below_peak() {
+        let mut ch = Channel::new(ChannelConfig::zynq_acp());
+        for _ in 0..100 {
+            ch.transfer(64);
+        }
+        let achieved = ch.achieved_gbps();
+        assert!(achieved > 0.0 && achieved < ch.cfg.peak_gbps());
+    }
+
+    #[test]
+    fn amplification() {
+        assert_eq!(Channel::effective_amplification(100, 50), 2.0);
+        assert_eq!(Channel::effective_amplification(100, 0), f64::INFINITY);
+    }
+
+    #[test]
+    fn big_transfers_amortize_latency() {
+        let ch = Channel::new(ChannelConfig::zynq_acp());
+        let per_byte_small = ch.cost(8) as f64 / 8.0;
+        let per_byte_big = ch.cost(4096) as f64 / 4096.0;
+        assert!(per_byte_big < per_byte_small / 10.0);
+    }
+}

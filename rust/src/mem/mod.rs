@@ -1,0 +1,16 @@
+//! Memory subsystem: channel timing model + compressed main memory.
+//!
+//! Models the two channels SNNAP's traffic crosses on the Zynq PSoC:
+//! the ACP port (CPU<->NPU coherent transfers) and the DRAM channel —
+//! both as byte-serial buses with fixed per-transfer latency, calibrated
+//! to ZC702 numbers (see [`ChannelConfig`] constructors).
+//!
+//! [`CompressedDram`] stores pages in LCP layout and bills every line
+//! access with the *compressed* transfer size — the mechanism by which
+//! the paper's proposal turns compression ratio into effective bandwidth.
+
+pub mod channel;
+pub mod dram;
+
+pub use channel::{Channel, ChannelConfig, TransferStats};
+pub use dram::{CompressedDram, DramMode};

@@ -1,0 +1,155 @@
+//! Counters and latency histograms for the coordinator's serving loop.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// A monotone counter (shared across threads).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A log-bucketed latency histogram: bucket i holds samples in
+/// [2^i, 2^(i+1)) microseconds. Lock-free recording.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: (0..40).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
+    }
+
+    /// Approximate quantile (upper bucket edge).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((n as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(1 << (i + 1));
+            }
+        }
+        Duration::from_micros(1 << self.buckets.len())
+    }
+}
+
+/// Serving metrics bundle (one per coordinator).
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    pub requests: Counter,
+    pub batches: Counter,
+    pub rejected: Counter,
+    pub queue_full_events: Counter,
+    pub latency: LatencyHistogram,
+}
+
+impl ServerMetrics {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} batches={} rejected={} mean_latency={:?} p50={:?} p99={:?}",
+            self.requests.get(),
+            self.batches.get(),
+            self.rejected.get(),
+            self.latency.mean(),
+            self.latency.quantile(0.5),
+            self.latency.quantile(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrency() {
+        let c = std::sync::Arc::new(Counter::default());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::default();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280] {
+            for _ in 0..10 {
+                h.record(Duration::from_micros(us));
+            }
+        }
+        assert_eq!(h.count(), 80);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.mean() > Duration::ZERO);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn report_formats() {
+        let m = ServerMetrics::default();
+        m.requests.inc();
+        assert!(m.report().contains("requests=1"));
+    }
+}

@@ -1,0 +1,271 @@
+//! The full accelerator: a ring of PUs behind the ACP port.
+//!
+//! Timing composition for a batch of `n` invocations:
+//!   * input transfer over ACP (batched enqueue: one burst);
+//!   * compute: invocations round-robin across `pu_count` PUs running in
+//!     parallel (the makespan is the max per-PU share);
+//!   * output transfer over ACP (one burst);
+//!   * a fixed sync cost per *batch* (the CPU's enqueue/wait ioctl pair) —
+//!     this is why batching matters (paper challenge #2, E6).
+//!
+//! Compute and transfer overlap through the input/output FIFOs, so batch
+//! wall-clock = sync + max(compute, transfers) with a fill bubble.
+
+use anyhow::{bail, Result};
+
+use crate::mem::{Channel, ChannelConfig};
+
+use super::program::NpuProgram;
+use super::pu::PuSim;
+
+/// Accelerator configuration (defaults = SNNAP on ZC702).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NpuConfig {
+    /// Number of processing units.
+    pub pu_count: usize,
+    /// Systolic lanes per PU.
+    pub array_width: usize,
+    /// FPGA fabric clock (MHz).
+    pub clock_mhz: f64,
+    /// ACP port parameters.
+    pub acp: ChannelConfig,
+    /// CPU cycles for one enqueue+wait sync pair, in *CPU* cycles
+    /// (converted at 667 MHz A9). SNNAP measures ~90 NPU-visible cycles.
+    pub sync_cycles: u64,
+    /// Overlap compute with ACP streaming through the FIFOs.
+    pub overlap: bool,
+}
+
+impl Default for NpuConfig {
+    fn default() -> Self {
+        NpuConfig {
+            pu_count: 8,
+            array_width: 8,
+            clock_mhz: 167.0,
+            acp: ChannelConfig::zynq_acp(),
+            sync_cycles: 90,
+            overlap: true,
+        }
+    }
+}
+
+/// Result of one batch execution.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    /// One output vector per input, f32-decoded.
+    pub outputs: Vec<Vec<f32>>,
+    /// Compute makespan in NPU cycles.
+    pub compute_cycles: u64,
+    /// ACP transfer cycles (input + output bursts, ACP clock).
+    pub acp_cycles: u64,
+    /// End-to-end batch cycles in NPU-clock terms (incl. sync).
+    pub total_cycles: u64,
+    /// Logical bytes in + out.
+    pub io_bytes: u64,
+}
+
+impl BatchResult {
+    /// Wall-clock seconds at the device clock.
+    pub fn seconds(&self, clock_mhz: f64) -> f64 {
+        self.total_cycles as f64 / (clock_mhz * 1e6)
+    }
+}
+
+/// An NPU device executing one program on `pu_count` PUs.
+pub struct NpuDevice {
+    pub cfg: NpuConfig,
+    pus: Vec<PuSim>,
+    /// ACP channel with cumulative stats.
+    pub acp: Channel,
+    /// Total invocations served.
+    pub invocations: u64,
+    /// Total batches served.
+    pub batches: u64,
+}
+
+impl NpuDevice {
+    pub fn new(cfg: NpuConfig, program: NpuProgram) -> Result<Self> {
+        if cfg.pu_count == 0 || cfg.array_width == 0 {
+            bail!("pu_count and array_width must be positive");
+        }
+        let pus = (0..cfg.pu_count)
+            .map(|_| PuSim::new(program.clone(), cfg.array_width))
+            .collect();
+        Ok(NpuDevice { cfg, pus, acp: Channel::new(cfg.acp), invocations: 0, batches: 0 })
+    }
+
+    pub fn program(&self) -> &NpuProgram {
+        &self.pus[0].program
+    }
+
+    /// Execute a batch functionally + under the timing model.
+    pub fn execute_batch(&mut self, inputs: &[Vec<f32>]) -> Result<BatchResult> {
+        let in_dim = self.program().input_dim();
+        let out_dim = self.program().output_dim();
+        let elem = self.program().fmt.storage_bytes();
+        for (i, x) in inputs.iter().enumerate() {
+            if x.len() != in_dim {
+                bail!("input {i} has arity {} (want {in_dim})", x.len());
+            }
+        }
+        let n = inputs.len() as u64;
+
+        // --- functional: round-robin across PUs (same numerics each) ---
+        let outputs: Vec<Vec<f32>> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| self.pus[i % self.cfg.pu_count].forward_f32(x))
+            .collect();
+
+        // --- timing ---
+        let in_bytes = inputs.len() * in_dim * elem;
+        let out_bytes = inputs.len() * out_dim * elem;
+        let acp_cycles = self.acp.transfer(in_bytes) + self.acp.transfer(out_bytes);
+
+        // compute makespan: ceil-split of n across PUs
+        let per_pu = n.div_ceil(self.cfg.pu_count as u64);
+        let compute_cycles = if n == 0 { 0 } else { self.pus[0].batch_cycles(per_pu) };
+
+        // ACP cycles are at the ACP clock; convert to NPU-clock cycles
+        let acp_in_npu = (acp_cycles as f64 * self.cfg.clock_mhz / self.cfg.acp.clock_mhz).ceil() as u64;
+        let total = if self.cfg.overlap {
+            self.cfg.sync_cycles + compute_cycles.max(acp_in_npu)
+        } else {
+            self.cfg.sync_cycles + compute_cycles + acp_in_npu
+        };
+
+        self.invocations += n;
+        self.batches += 1;
+        Ok(BatchResult {
+            outputs,
+            compute_cycles,
+            acp_cycles,
+            total_cycles: total,
+            io_bytes: (in_bytes + out_bytes) as u64,
+        })
+    }
+
+    /// Latency of a single invocation (batch of 1) in NPU cycles — the
+    /// number E6 sweeps against batch size.
+    pub fn single_invocation_cycles(&self) -> u64 {
+        let elem = self.program().fmt.storage_bytes();
+        let acp = self.acp.cost(self.program().input_dim() * elem)
+            + self.acp.cost(self.program().output_dim() * elem);
+        let acp_in_npu = (acp as f64 * self.cfg.clock_mhz / self.cfg.acp.clock_mhz).ceil() as u64;
+        let compute = self.pus[0].batch_cycles(1);
+        if self.cfg.overlap {
+            self.cfg.sync_cycles + compute.max(acp_in_npu)
+        } else {
+            self.cfg.sync_cycles + compute + acp_in_npu
+        }
+    }
+
+    /// Throughput (invocations/second) for a given batch size, from the
+    /// timing model.
+    pub fn throughput_at_batch(&mut self, batch: usize) -> Result<f64> {
+        let inputs = vec![vec![0.25f32; self.program().input_dim()]; batch];
+        let r = self.execute_batch(&inputs)?;
+        Ok(batch as f64 / r.seconds(self.cfg.clock_mhz))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q7_8;
+    use crate::npu::program::Activation;
+
+    fn program() -> NpuProgram {
+        let sizes = [9usize, 8, 1];
+        let n: usize = sizes.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+        let flat: Vec<f32> = (0..n).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect();
+        NpuProgram::from_f32(
+            "sobel",
+            &sizes,
+            &[Activation::Sigmoid, Activation::Linear],
+            &flat,
+            Q7_8,
+        )
+        .unwrap()
+    }
+
+    fn device() -> NpuDevice {
+        NpuDevice::new(NpuConfig::default(), program()).unwrap()
+    }
+
+    #[test]
+    fn batch_outputs_match_single_pu() {
+        let mut d = device();
+        let pu = PuSim::new(program(), 8);
+        let inputs: Vec<Vec<f32>> = (0..20)
+            .map(|i| (0..9).map(|j| ((i * 9 + j) as f32 % 7.0) / 7.0).collect())
+            .collect();
+        let r = d.execute_batch(&inputs).unwrap();
+        for (x, y) in inputs.iter().zip(&r.outputs) {
+            assert_eq!(y, &pu.forward_f32(x), "all PUs are numerically identical");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let mut d = device();
+        assert!(d.execute_batch(&[vec![0.0; 3]]).is_err());
+    }
+
+    #[test]
+    fn batching_amortizes_sync() {
+        let mut d = device();
+        let one = d.execute_batch(&[vec![0.1; 9]]).unwrap().total_cycles;
+        let inputs = vec![vec![0.1; 9]; 64];
+        let batch = d.execute_batch(&inputs).unwrap().total_cycles;
+        // 64 invocations in one batch must be far cheaper than 64 singles
+        assert!(batch < 64 * one / 2, "batch {batch} vs 64x single {}", 64 * one);
+    }
+
+    #[test]
+    fn more_pus_cut_compute_makespan() {
+        let mut small = NpuDevice::new(NpuConfig { pu_count: 1, ..Default::default() }, program()).unwrap();
+        let mut big = NpuDevice::new(NpuConfig { pu_count: 8, ..Default::default() }, program()).unwrap();
+        let inputs = vec![vec![0.1; 9]; 64];
+        let c1 = small.execute_batch(&inputs).unwrap().compute_cycles;
+        let c8 = big.execute_batch(&inputs).unwrap().compute_cycles;
+        assert_eq!(c1, 8 * c8, "perfect split at multiples of pu_count");
+    }
+
+    #[test]
+    fn empty_batch_costs_only_sync() {
+        let mut d = device();
+        let r = d.execute_batch(&[]).unwrap();
+        assert_eq!(r.outputs.len(), 0);
+        assert_eq!(r.compute_cycles, 0);
+        assert!(r.total_cycles >= d.cfg.sync_cycles);
+    }
+
+    #[test]
+    fn throughput_increases_with_batch() {
+        let mut d = device();
+        let t1 = d.throughput_at_batch(1).unwrap();
+        let t64 = d.throughput_at_batch(64).unwrap();
+        assert!(t64 > 3.0 * t1, "t1={t1} t64={t64}");
+    }
+
+    #[test]
+    fn io_accounting() {
+        let mut d = device();
+        let r = d.execute_batch(&[vec![0.1; 9], vec![0.2; 9]]).unwrap();
+        // 2 x (9 in + 1 out) x 2 bytes
+        assert_eq!(r.io_bytes, 2 * 10 * 2);
+        assert_eq!(d.invocations, 2);
+        assert_eq!(d.batches, 1);
+    }
+
+    #[test]
+    fn overlap_beats_serial() {
+        let mut a = NpuDevice::new(NpuConfig { overlap: true, ..Default::default() }, program()).unwrap();
+        let mut b = NpuDevice::new(NpuConfig { overlap: false, ..Default::default() }, program()).unwrap();
+        let inputs = vec![vec![0.1; 9]; 32];
+        let ta = a.execute_batch(&inputs).unwrap().total_cycles;
+        let tb = b.execute_batch(&inputs).unwrap().total_cycles;
+        assert!(ta < tb);
+    }
+}

@@ -1,0 +1,27 @@
+//! SNNAP: the systolic neural-network accelerator (HPCA'15 [1]), modelled
+//! cycle-level and bit-exact.
+//!
+//! The accelerator is a ring of Processing Units (PUs); each PU is a
+//! `width`-lane systolic array of DSP-slice MACs feeding a sigmoid LUT.
+//! An MLP layer with `n_in` inputs and `n_out` neurons executes as
+//! `ceil(n_out / width)` systolic passes; each pass streams the `n_in`
+//! activations through the array (one MAC per lane per cycle), then drains
+//! through the activation unit. Weights are resident in BRAM (loaded once
+//! per configuration), inputs/outputs cross the ACP port.
+//!
+//! Two views of the same hardware:
+//! * **functional** — [`pu::PuSim::forward_fixed`] computes the exact
+//!   Q-format arithmetic the FPGA would (the quality numbers in E4);
+//! * **timing** — [`pu::PuSim::invocation_cycles`] counts cycles from the
+//!   schedule above (the speedup numbers in E2/E6), and
+//!   [`NpuDevice`] adds ACP/queue costs and multi-PU parallelism.
+
+pub mod device;
+pub mod program;
+pub mod pu;
+pub mod sigmoid;
+
+pub use device::{BatchResult, NpuConfig, NpuDevice};
+pub use program::{Activation, NpuProgram};
+pub use pu::PuSim;
+pub use sigmoid::SigmoidLut;

@@ -1,0 +1,177 @@
+//! NPU programs: an MLP topology with quantized weights and the static
+//! schedule metadata the PU needs — SNNAP's "NN configuration" that the
+//! compiler writes into BRAM before invocations begin.
+
+use anyhow::{bail, Result};
+
+use crate::fixed::QFormat;
+
+/// Per-layer activation function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Linear,
+    Sigmoid,
+    Tanh,
+    Relu,
+}
+
+impl Activation {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "linear" => Activation::Linear,
+            "sigmoid" => Activation::Sigmoid,
+            "tanh" => Activation::Tanh,
+            "relu" => Activation::Relu,
+            other => bail!("unknown activation {other:?}"),
+        })
+    }
+}
+
+/// One layer's quantized parameters.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub activation: Activation,
+    /// Row-major [n_in][n_out] raw fixed-point weights.
+    pub weights: Vec<i32>,
+    /// [n_out] raw fixed-point biases.
+    pub biases: Vec<i32>,
+}
+
+/// A compiled NPU program (topology + quantized weights).
+#[derive(Debug, Clone)]
+pub struct NpuProgram {
+    pub name: String,
+    pub fmt: QFormat,
+    pub layers: Vec<Layer>,
+}
+
+impl NpuProgram {
+    /// Quantize f32 params (layer-major `w||b` flat layout, as written by
+    /// `python/compile/aot.py`) into an NPU program.
+    pub fn from_f32(
+        name: &str,
+        sizes: &[usize],
+        activations: &[Activation],
+        flat: &[f32],
+        fmt: QFormat,
+    ) -> Result<Self> {
+        if sizes.len() < 2 {
+            bail!("need at least input+output sizes");
+        }
+        if activations.len() != sizes.len() - 1 {
+            bail!("{} layers but {} activations", sizes.len() - 1, activations.len());
+        }
+        let expect: usize = sizes.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+        if flat.len() != expect {
+            bail!("param size mismatch: got {}, want {}", flat.len(), expect);
+        }
+        let mut layers = Vec::new();
+        let mut off = 0;
+        for (i, w) in sizes.windows(2).enumerate() {
+            let (n_in, n_out) = (w[0], w[1]);
+            let weights = fmt.quantize_slice(&flat[off..off + n_in * n_out]);
+            off += n_in * n_out;
+            let biases = fmt.quantize_slice(&flat[off..off + n_out]);
+            off += n_out;
+            layers.push(Layer { n_in, n_out, activation: activations[i], weights, biases });
+        }
+        Ok(NpuProgram { name: name.to_string(), fmt, layers })
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.n_in)
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().map_or(0, |l| l.n_out)
+    }
+
+    /// Total parameter count (weights + biases).
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.weights.len() + l.biases.len()).sum()
+    }
+
+    /// The weight-memory byte stream as laid out in BRAM / DRAM — the
+    /// stream E1 compresses. Layer-major, weights then biases, packed at
+    /// the format's storage width.
+    pub fn weight_bytes(&self) -> Vec<u8> {
+        let mut raw = Vec::with_capacity(self.n_params());
+        for l in &self.layers {
+            raw.extend_from_slice(&l.weights);
+            raw.extend_from_slice(&l.biases);
+        }
+        self.fmt.pack_bytes(&raw)
+    }
+
+    /// BRAM bits needed for weights on-chip.
+    pub fn weight_bram_bits(&self) -> usize {
+        self.n_params() * self.fmt.total_bits() as usize
+    }
+
+    /// MAC operations per invocation.
+    pub fn macs_per_invocation(&self) -> u64 {
+        self.layers.iter().map(|l| (l.n_in * l.n_out) as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q7_8;
+
+    fn tiny() -> NpuProgram {
+        // sizes [2,3,1]: params = 2*3+3 + 3*1+1 = 13
+        let flat: Vec<f32> = (0..13).map(|i| (i as f32 - 6.0) / 8.0).collect();
+        NpuProgram::from_f32(
+            "tiny",
+            &[2, 3, 1],
+            &[Activation::Sigmoid, Activation::Linear],
+            &flat,
+            Q7_8,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shapes() {
+        let p = tiny();
+        assert_eq!(p.input_dim(), 2);
+        assert_eq!(p.output_dim(), 1);
+        assert_eq!(p.n_params(), 13);
+        assert_eq!(p.macs_per_invocation(), 9);
+        assert_eq!(p.weight_bytes().len(), 13 * 2);
+        assert_eq!(p.weight_bram_bits(), 13 * 16);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        assert!(NpuProgram::from_f32("x", &[2], &[], &[], Q7_8).is_err());
+        assert!(
+            NpuProgram::from_f32("x", &[2, 1], &[], &[0.0; 3], Q7_8).is_err(),
+            "missing activation"
+        );
+        assert!(NpuProgram::from_f32(
+            "x",
+            &[2, 1],
+            &[Activation::Linear],
+            &[0.0; 4],
+            Q7_8
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn activation_parse() {
+        assert_eq!(Activation::parse("sigmoid").unwrap(), Activation::Sigmoid);
+        assert!(Activation::parse("gelu").is_err());
+    }
+
+    #[test]
+    fn quantization_is_format_exact() {
+        let p = tiny();
+        // -6/8 = -0.75 -> raw -192 in Q7.8
+        assert_eq!(p.layers[0].weights[0], -192);
+    }
+}

@@ -1,0 +1,257 @@
+//! One Processing Unit: a `width`-lane systolic MAC array + activation
+//! unit, with a bit-exact functional model and a cycle-accurate schedule
+//! model.
+//!
+//! ## Timing model
+//!
+//! A layer (n_in -> n_out) runs as `ceil(n_out / width)` systolic passes.
+//! Each pass:
+//!   * streams n_in activation values through the array — 1 cycle each,
+//!     all `width` lanes MAC in parallel (weight-stationary columns);
+//!   * pays `PIPELINE_DEPTH` fill cycles (DSP48 register stages);
+//!   * drains min(width, remaining) outputs through the activation unit,
+//!     1 cycle each (the sigmoid LUT is single-ported).
+//!
+//! Invocation cycles = Σ over layers. This matches SNNAP's reported
+//! throughput shape: small nets are drain/fill-bound, wide layers are
+//! stream-bound.
+
+use super::program::{Activation, NpuProgram};
+use super::sigmoid::SigmoidLut;
+
+/// DSP48 pipeline register stages (multiplier + post-adder).
+pub const PIPELINE_DEPTH: u64 = 3;
+
+/// A processing unit bound to one program.
+pub struct PuSim {
+    pub program: NpuProgram,
+    pub width: usize,
+    lut: SigmoidLut,
+}
+
+impl PuSim {
+    pub fn new(program: NpuProgram, width: usize) -> Self {
+        assert!(width > 0);
+        let lut = SigmoidLut::snnap(program.fmt);
+        PuSim { program, width, lut }
+    }
+
+    fn activate(&self, acc_reduced: i32, act: Activation) -> i32 {
+        let fmt = self.program.fmt;
+        match act {
+            Activation::Linear => acc_reduced,
+            Activation::Relu => acc_reduced.max(0),
+            Activation::Sigmoid => self.lut.lookup(acc_reduced),
+            // tanh(x) = 2*sigmoid(2x) - 1, computed with the same LUT as
+            // the FPGA does (shift, lookup, shift-subtract)
+            Activation::Tanh => {
+                let two_x = fmt.sat_add(acc_reduced, acc_reduced);
+                let s = self.lut.lookup(two_x);
+                fmt.sat_add(fmt.sat_add(s, s), -fmt.from_f32(1.0))
+            }
+        }
+    }
+
+    /// Bit-exact fixed-point forward pass for one input vector (raw
+    /// values in the program's format). This is what the FPGA computes.
+    pub fn forward_fixed(&self, input: &[i32]) -> Vec<i32> {
+        assert_eq!(input.len(), self.program.input_dim(), "input arity");
+        let fmt = self.program.fmt;
+        let mut act = input.to_vec();
+        for layer in &self.program.layers {
+            let mut next = Vec::with_capacity(layer.n_out);
+            for o in 0..layer.n_out {
+                // 64-bit MAC accumulator, exactly as the DSP cascade
+                let mut acc: i64 = i64::from(layer.biases[o]) << fmt.frac_bits;
+                for (i, &a) in act.iter().enumerate() {
+                    acc += i64::from(a) * i64::from(layer.weights[i * layer.n_out + o]);
+                }
+                let reduced = fmt.reduce_acc(acc);
+                next.push(self.activate(reduced, layer.activation));
+            }
+            act = next;
+        }
+        act
+    }
+
+    /// f32 convenience wrapper: quantize -> forward_fixed -> dequantize.
+    pub fn forward_f32(&self, input: &[f32]) -> Vec<f32> {
+        let fmt = self.program.fmt;
+        let raw: Vec<i32> = input.iter().map(|&v| fmt.from_f32(v)).collect();
+        self.forward_fixed(&raw).iter().map(|&r| fmt.to_f32(r)).collect()
+    }
+
+    /// Cycles for one layer under the systolic schedule.
+    pub fn layer_cycles(&self, n_in: usize, n_out: usize) -> u64 {
+        let passes = n_out.div_ceil(self.width) as u64;
+        let stream = n_in as u64 + PIPELINE_DEPTH;
+        let drain_total = n_out as u64; // 1 cycle per output through the LUT
+        passes * stream + drain_total
+    }
+
+    /// Cycles for one full invocation (all layers, one input vector).
+    pub fn invocation_cycles(&self) -> u64 {
+        self.program
+            .layers
+            .iter()
+            .map(|l| self.layer_cycles(l.n_in, l.n_out))
+            .sum()
+    }
+
+    /// Cycles for `n` invocations executed back-to-back on this PU.
+    /// Consecutive inputs pipeline into the array with a fixed per-item
+    /// restart bubble (schedule swap), so batching amortizes nothing at
+    /// the PU level beyond the bubble — the big batching win is at the
+    /// ACP/sync level (see device.rs).
+    pub fn batch_cycles(&self, n: u64) -> u64 {
+        const RESTART_BUBBLE: u64 = 2;
+        n * (self.invocation_cycles() + RESTART_BUBBLE)
+    }
+
+    /// Peak MAC utilization of the schedule: useful MACs / (lanes x busy
+    /// cycles). The E2 tables report this per benchmark.
+    pub fn mac_utilization(&self) -> f64 {
+        let useful = self.program.macs_per_invocation() as f64;
+        let capacity = (self.invocation_cycles() * self.width as u64) as f64;
+        useful / capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{Q7_8, QFormat};
+    use crate::npu::program::{Activation, NpuProgram};
+
+    fn program(sizes: &[usize], acts: &[Activation], scale: f32, fmt: QFormat) -> NpuProgram {
+        let n: usize = sizes.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+        let flat: Vec<f32> = (0..n).map(|i| ((i % 7) as f32 - 3.0) * scale).collect();
+        NpuProgram::from_f32("t", sizes, acts, &flat, fmt).unwrap()
+    }
+
+    /// f64 reference of the same quantized network (no intermediate
+    /// quantization differences for linear nets with exact Q values).
+    fn reference_f32(p: &NpuProgram, input: &[f32]) -> Vec<f32> {
+        let fmt = p.fmt;
+        let mut act: Vec<f64> = input.iter().map(|&v| f64::from(fmt.to_f32(fmt.from_f32(v)))).collect();
+        for l in &p.layers {
+            let mut next = Vec::new();
+            for o in 0..l.n_out {
+                let mut acc = f64::from(fmt.to_f32(l.biases[o]));
+                for (i, &a) in act.iter().enumerate() {
+                    acc += a * f64::from(fmt.to_f32(l.weights[i * l.n_out + o]));
+                }
+                next.push(match l.activation {
+                    Activation::Linear => acc,
+                    Activation::Relu => acc.max(0.0),
+                    Activation::Sigmoid => 1.0 / (1.0 + (-acc).exp()),
+                    Activation::Tanh => acc.tanh(),
+                });
+            }
+            act = next;
+        }
+        act.iter().map(|&v| v as f32).collect()
+    }
+
+    #[test]
+    fn linear_net_matches_reference_exactly() {
+        let p = program(&[4, 3], &[Activation::Linear], 0.125, Q7_8);
+        let pu = PuSim::new(p.clone(), 8);
+        let input = [0.5f32, -0.25, 0.125, 1.0];
+        let got = pu.forward_f32(&input);
+        let want = reference_f32(&p, &input);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 2.0 * Q7_8.quantum(), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_net_error_bounded() {
+        let p = program(&[6, 8, 2], &[Activation::Sigmoid, Activation::Sigmoid], 0.25, Q7_8);
+        let pu = PuSim::new(p.clone(), 8);
+        crate::util::prop::check(128, |rng| {
+            let input: Vec<f32> = (0..6).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let got = pu.forward_f32(&input);
+            let want = reference_f32(&p, &input);
+            for (g, w) in got.iter().zip(&want) {
+                // quantization + LUT error through 2 layers
+                assert!((g - w).abs() < 0.03, "{g} vs {w}");
+            }
+        });
+    }
+
+    #[test]
+    fn relu_and_tanh_behave() {
+        let p = program(&[3, 3, 3], &[Activation::Relu, Activation::Tanh], 0.5, Q7_8);
+        let pu = PuSim::new(p, 8);
+        let out = pu.forward_f32(&[0.3, -0.7, 0.9]);
+        for v in out {
+            assert!((-1.01..=1.01).contains(&v), "tanh range: {v}");
+        }
+    }
+
+    #[test]
+    fn layer_cycles_schedule() {
+        let p = program(&[8, 8], &[Activation::Sigmoid], 0.1, Q7_8);
+        let pu = PuSim::new(p, 8);
+        // 1 pass: (8 + 3) + 8 drain = 19
+        assert_eq!(pu.layer_cycles(8, 8), 19);
+        // 2 passes for 9 outputs: 2*(8+3) + 9 = 31
+        assert_eq!(pu.layer_cycles(8, 9), 31);
+    }
+
+    #[test]
+    fn invocation_cycles_sum_layers() {
+        let p = program(&[2, 8, 2], &[Activation::Sigmoid, Activation::Linear], 0.1, Q7_8);
+        let pu = PuSim::new(p, 8);
+        assert_eq!(
+            pu.invocation_cycles(),
+            pu.layer_cycles(2, 8) + pu.layer_cycles(8, 2)
+        );
+    }
+
+    #[test]
+    fn narrower_array_is_slower() {
+        let p = program(&[16, 32, 8], &[Activation::Sigmoid, Activation::Sigmoid], 0.1, Q7_8);
+        let wide = PuSim::new(p.clone(), 16).invocation_cycles();
+        let narrow = PuSim::new(p, 4).invocation_cycles();
+        assert!(narrow > 2 * wide, "narrow {narrow} wide {wide}");
+    }
+
+    #[test]
+    fn utilization_in_unit_range() {
+        let p = program(&[18, 32, 8, 2], &[Activation::Sigmoid; 3], 0.05, Q7_8);
+        let pu = PuSim::new(p, 8);
+        let u = pu.mac_utilization();
+        assert!(u > 0.0 && u <= 1.0, "{u}");
+    }
+
+    #[test]
+    fn batch_cycles_linear_in_n() {
+        let p = program(&[9, 8, 1], &[Activation::Sigmoid, Activation::Linear], 0.1, Q7_8);
+        let pu = PuSim::new(p, 8);
+        let one = pu.batch_cycles(1);
+        let hundred = pu.batch_cycles(100);
+        assert_eq!(hundred, 100 * one);
+    }
+
+    #[test]
+    fn wider_format_reduces_error() {
+        use crate::fixed::Q15_16;
+        let p8 = program(&[6, 8, 1], &[Activation::Sigmoid, Activation::Linear], 0.3, Q7_8);
+        let p16 = program(&[6, 8, 1], &[Activation::Sigmoid, Activation::Linear], 0.3, Q15_16);
+        let pu8 = PuSim::new(p8.clone(), 8);
+        let pu16 = PuSim::new(p16.clone(), 8);
+        let mut err8 = 0.0f64;
+        let mut err16 = 0.0f64;
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..200 {
+            let input: Vec<f32> = (0..6).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let w8 = reference_f32(&p8, &input);
+            let w16 = reference_f32(&p16, &input);
+            err8 += f64::from((pu8.forward_f32(&input)[0] - w8[0]).abs());
+            err16 += f64::from((pu16.forward_f32(&input)[0] - w16[0]).abs());
+        }
+        assert!(err16 < err8, "Q15.16 {err16} should beat Q7.8 {err8}");
+    }
+}

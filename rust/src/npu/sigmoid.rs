@@ -1,0 +1,135 @@
+//! Fixed-point sigmoid via lookup table — SNNAP's activation unit.
+//!
+//! The FPGA stores a BRAM LUT sampling sigmoid over a clamped input range;
+//! we model the same: `entries` samples uniformly covering [-range, range),
+//! nearest-entry lookup (no interpolation, as the hardware), saturating
+//! outside. Error vs the real sigmoid is bounded by the sampling step and
+//! asserted in tests.
+
+use crate::fixed::QFormat;
+
+/// A sigmoid lookup table in a given fixed-point format.
+#[derive(Debug, Clone)]
+pub struct SigmoidLut {
+    fmt: QFormat,
+    /// Input clamp range (|x| >= range saturates to 0/1).
+    range: f32,
+    table: Vec<i32>,
+}
+
+impl SigmoidLut {
+    /// Build a LUT with `entries` samples over [-range, range).
+    pub fn new(fmt: QFormat, entries: usize, range: f32) -> Self {
+        assert!(entries.is_power_of_two(), "LUT size must be a power of two");
+        let table = (0..entries)
+            .map(|i| {
+                let x = -range + (i as f32 + 0.5) * (2.0 * range / entries as f32);
+                let y = 1.0 / (1.0 + (-x).exp());
+                fmt.from_f32(y)
+            })
+            .collect();
+        SigmoidLut { fmt, range, table }
+    }
+
+    /// SNNAP's configuration: 2048-entry LUT over [-8, 8).
+    pub fn snnap(fmt: QFormat) -> Self {
+        SigmoidLut::new(fmt, 2048, 8.0)
+    }
+
+    /// Look up sigmoid(raw) where `raw` is in `fmt`. One cycle in hardware.
+    pub fn lookup(&self, raw: i32) -> i32 {
+        let x = self.fmt.to_f32(raw);
+        if x <= -self.range {
+            return 0;
+        }
+        if x >= self.range {
+            return self.fmt.from_f32(1.0);
+        }
+        let step = 2.0 * self.range / self.table.len() as f32;
+        let idx = ((x + self.range) / step) as usize;
+        self.table[idx.min(self.table.len() - 1)]
+    }
+
+    /// Worst-case LUT error bound vs exact sigmoid: half the input step
+    /// times the max slope (0.25) plus one output quantum.
+    pub fn error_bound(&self) -> f32 {
+        let step = 2.0 * self.range / self.table.len() as f32;
+        0.25 * step + self.fmt.quantum()
+    }
+
+    pub fn entries(&self) -> usize {
+        self.table.len()
+    }
+
+    /// BRAM bits this LUT occupies (one entry per word).
+    pub fn bram_bits(&self) -> usize {
+        self.table.len() * self.fmt.total_bits() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q7_8;
+
+    #[test]
+    fn endpoints_saturate() {
+        let lut = SigmoidLut::snnap(Q7_8);
+        assert_eq!(lut.lookup(Q7_8.from_f32(-20.0)), 0);
+        assert_eq!(lut.lookup(Q7_8.from_f32(20.0)), Q7_8.from_f32(1.0));
+    }
+
+    #[test]
+    fn midpoint_is_half() {
+        let lut = SigmoidLut::snnap(Q7_8);
+        let y = Q7_8.to_f32(lut.lookup(0));
+        assert!((y - 0.5).abs() <= lut.error_bound(), "{y}");
+    }
+
+    #[test]
+    fn error_bound_holds_everywhere() {
+        let lut = SigmoidLut::snnap(Q7_8);
+        let bound = lut.error_bound();
+        for i in -2048..=2048 {
+            let raw = i; // covers [-8, 8] in Q7.8
+            let x = Q7_8.to_f32(raw);
+            let want = 1.0 / (1.0 + (-x).exp());
+            let got = Q7_8.to_f32(lut.lookup(raw));
+            assert!(
+                (got - want).abs() <= bound + 0.5 * Q7_8.quantum(),
+                "x={x} got={got} want={want} bound={bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let lut = SigmoidLut::snnap(Q7_8);
+        let mut prev = i32::MIN;
+        for i in -3000..3000 {
+            let y = lut.lookup(i);
+            assert!(y >= prev);
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn bram_budget() {
+        // 2048 x 16-bit = 32 Kib = one 36Kb BRAM block on Zynq
+        let lut = SigmoidLut::snnap(Q7_8);
+        assert_eq!(lut.bram_bits(), 2048 * 16);
+        assert!(lut.bram_bits() <= 36 * 1024);
+    }
+
+    #[test]
+    fn prop_lut_close_to_sigmoid() {
+        let lut = SigmoidLut::snnap(Q7_8);
+        crate::util::prop::check(512, |rng| {
+            let x = rng.f32_range(-10.0, 10.0);
+            let raw = Q7_8.from_f32(x);
+            let got = Q7_8.to_f32(lut.lookup(raw));
+            let want = 1.0 / (1.0 + (-Q7_8.to_f32(raw)).exp());
+            assert!((got - want).abs() <= lut.error_bound() + Q7_8.quantum());
+        });
+    }
+}

@@ -1,0 +1,173 @@
+//! PJRT executor: compile the AOT HLO once per (benchmark, batch bucket)
+//! and run batches with bucket padding.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::BenchArtifact;
+
+/// A compiled model for one benchmark, all batch buckets.
+pub struct NpuExecutor {
+    pub artifact: BenchArtifact,
+    client: xla::PjRtClient,
+    /// bucket -> compiled executable (lazy).
+    compiled: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl NpuExecutor {
+    /// Create with a fresh CPU client; compiles nothing yet.
+    pub fn new(artifact: BenchArtifact) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(NpuExecutor { artifact, client, compiled: BTreeMap::new() })
+    }
+
+    /// Eagerly compile every bucket (startup-time option).
+    pub fn compile_all(&mut self) -> Result<()> {
+        let buckets: Vec<usize> = self.artifact.hlo_files.keys().copied().collect();
+        for b in buckets {
+            self.ensure_compiled(b)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&mut self, bucket: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(&bucket) {
+            let path = self
+                .artifact
+                .hlo_files
+                .get(&bucket)
+                .with_context(|| format!("no HLO for bucket {bucket}"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("hlo path utf-8")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {} bucket {bucket}", self.artifact.name))?;
+            self.compiled.insert(bucket, exe);
+        }
+        Ok(&self.compiled[&bucket])
+    }
+
+    /// Which buckets have been compiled so far.
+    pub fn compiled_buckets(&self) -> Vec<usize> {
+        self.compiled.keys().copied().collect()
+    }
+
+    /// Run a batch through the smallest fitting bucket (padding with
+    /// zeros, truncating the result). Batches larger than the largest
+    /// bucket are split into chunks.
+    pub fn run_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let in_dim = *self.artifact.sizes.first().unwrap();
+        let out_dim = *self.artifact.sizes.last().unwrap();
+        for (i, x) in inputs.iter().enumerate() {
+            if x.len() != in_dim {
+                bail!("input {i} arity {} != {in_dim}", x.len());
+            }
+        }
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let max_bucket = *self.artifact.hlo_files.keys().next_back().unwrap();
+        let mut out = Vec::with_capacity(inputs.len());
+        for chunk in inputs.chunks(max_bucket) {
+            let bucket = self.artifact.bucket_for(chunk.len());
+            // flatten + zero-pad to the bucket
+            let mut flat = vec![0.0f32; bucket * in_dim];
+            for (i, x) in chunk.iter().enumerate() {
+                flat[i * in_dim..(i + 1) * in_dim].copy_from_slice(x);
+            }
+            let exe = self.ensure_compiled(bucket)?;
+            let lit = xla::Literal::vec1(&flat).reshape(&[bucket as i64, in_dim as i64])?;
+            let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            let tuple = result.to_tuple1()?;
+            let ys = tuple.to_vec::<f32>()?;
+            if ys.len() != bucket * out_dim {
+                bail!("output length {} != {}", ys.len(), bucket * out_dim);
+            }
+            for i in 0..chunk.len() {
+                out.push(ys[i * out_dim..(i + 1) * out_dim].to_vec());
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    /// These tests exercise the real artifacts; they are skipped (with a
+    /// loud message) when `make artifacts` has not run.
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_path();
+        match Manifest::load(&dir) {
+            Ok(m) => Some(m),
+            Err(e) => {
+                eprintln!("SKIP executor tests (run `make artifacts`): {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn sobel_artifact_runs_and_matches_target() {
+        let Some(m) = manifest() else { return };
+        let mut ex = NpuExecutor::new(m.get("sobel").unwrap().clone()).unwrap();
+        let mut rng = crate::util::rng::Rng::new(0);
+        let w = crate::bench_suite::sobel::Sobel;
+        use crate::bench_suite::Workload;
+        let inputs = w.gen_batch(&mut rng, 16);
+        let got = ex.run_batch(&inputs).unwrap();
+        let want = w.run_precise(&inputs);
+        // the NN is an approximator: errors are bounded, not tiny
+        let rmse = crate::bench_suite::QualityMetric::Rmse.score(&got, &want);
+        assert!(rmse < 0.2, "sobel NN rmse {rmse}");
+    }
+
+    #[test]
+    fn bucket_padding_roundtrip() {
+        let Some(m) = manifest() else { return };
+        let mut ex = NpuExecutor::new(m.get("sobel").unwrap().clone()).unwrap();
+        // n=3 pads into bucket 16; outputs must still be 3 and identical
+        // to running one-by-one
+        let inputs: Vec<Vec<f32>> = (0..3)
+            .map(|i| (0..9).map(|j| ((i * 9 + j) as f32) / 30.0).collect())
+            .collect();
+        let batched = ex.run_batch(&inputs).unwrap();
+        assert_eq!(batched.len(), 3);
+        for (x, y) in inputs.iter().zip(&batched) {
+            let single = ex.run_batch(std::slice::from_ref(x)).unwrap();
+            for (a, b) in single[0].iter().zip(y) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_batch_splits() {
+        let Some(m) = manifest() else { return };
+        let mut ex = NpuExecutor::new(m.get("fft").unwrap().clone()).unwrap();
+        let inputs: Vec<Vec<f32>> = (0..300).map(|i| vec![(i as f32) / 300.0]).collect();
+        let out = ex.run_batch(&inputs).unwrap();
+        assert_eq!(out.len(), 300);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let Some(m) = manifest() else { return };
+        let mut ex = NpuExecutor::new(m.get("sobel").unwrap().clone()).unwrap();
+        assert!(ex.run_batch(&[vec![0.0; 5]]).is_err());
+    }
+
+    #[test]
+    fn empty_batch_ok() {
+        let Some(m) = manifest() else { return };
+        let mut ex = NpuExecutor::new(m.get("sobel").unwrap().clone()).unwrap();
+        assert_eq!(ex.run_batch(&[]).unwrap().len(), 0);
+    }
+}

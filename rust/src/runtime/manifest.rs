@@ -1,0 +1,225 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::npu::program::Activation;
+use crate::util::json::Json;
+
+/// One benchmark's artifact set.
+#[derive(Debug, Clone)]
+pub struct BenchArtifact {
+    pub name: String,
+    pub sizes: Vec<usize>,
+    pub activations: Vec<Activation>,
+    pub n_params: usize,
+    /// f32 little-endian flat params (layer-major w||b).
+    pub weights_file: PathBuf,
+    /// batch bucket -> HLO text file.
+    pub hlo_files: BTreeMap<usize, PathBuf>,
+    /// Training quality stats recorded by aot.py.
+    pub val_mse: f64,
+    pub val_mean_rel_err: f64,
+}
+
+impl BenchArtifact {
+    /// Load the flat f32 weights.
+    pub fn load_weights(&self) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&self.weights_file)
+            .with_context(|| format!("reading {}", self.weights_file.display()))?;
+        if bytes.len() != self.n_params * 4 {
+            bail!(
+                "{}: weight file has {} bytes, want {}",
+                self.name,
+                bytes.len(),
+                self.n_params * 4
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Smallest bucket that fits `n` inputs (or the largest bucket if none
+    /// does — the caller then splits).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        self.hlo_files
+            .keys()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| *self.hlo_files.keys().next_back().unwrap())
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch_buckets: Vec<usize>,
+    pub benchmarks: BTreeMap<String, BenchArtifact>,
+}
+
+impl Manifest {
+    /// Default artifact location relative to the repo root.
+    pub fn default_path() -> PathBuf {
+        PathBuf::from(std::env::var("SNNAPC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))
+    }
+
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let buckets: Vec<usize> = root
+            .get("batch_buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing batch_buckets"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let benches = root
+            .get("benchmarks")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing benchmarks"))?;
+        let mut benchmarks = BTreeMap::new();
+        for (name, b) in benches {
+            let sizes: Vec<usize> = b
+                .get("sizes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing sizes"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let activations = b
+                .get("activations")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing activations"))?
+                .iter()
+                .map(|a| {
+                    Activation::parse(a.as_str().unwrap_or("?"))
+                        .map_err(|e| anyhow!("{name}: {e}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let mut hlo_files = BTreeMap::new();
+            for (bucket, f) in b
+                .get("hlo")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow!("{name}: missing hlo map"))?
+            {
+                let bucket: usize = bucket.parse().context("hlo bucket key")?;
+                hlo_files.insert(
+                    bucket,
+                    dir.join(f.as_str().ok_or_else(|| anyhow!("{name}: hlo path"))?),
+                );
+            }
+            let train = b.get("train");
+            let stat = |k: &str| {
+                train
+                    .and_then(|t| t.get(k))
+                    .and_then(Json::as_f64)
+                    .unwrap_or(f64::NAN)
+            };
+            benchmarks.insert(
+                name.clone(),
+                BenchArtifact {
+                    name: name.clone(),
+                    sizes,
+                    activations,
+                    n_params: b
+                        .get("n_params")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("{name}: missing n_params"))?,
+                    weights_file: dir.join(
+                        b.get("weights")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("{name}: missing weights"))?,
+                    ),
+                    hlo_files,
+                    val_mse: stat("val_mse"),
+                    val_mean_rel_err: stat("val_mean_rel_err"),
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), batch_buckets: buckets, benchmarks })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&BenchArtifact> {
+        self.benchmarks
+            .get(name)
+            .ok_or_else(|| anyhow!("benchmark {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{
+            "version": 1,
+            "batch_buckets": [1, 16, 128],
+            "benchmarks": {
+                "sobel": {
+                    "sizes": [9, 8, 1],
+                    "activations": ["sigmoid", "linear"],
+                    "n_params": 89,
+                    "weights": "sobel.weights.bin",
+                    "hlo": {"1": "sobel_b1.hlo.txt", "16": "sobel_b16.hlo.txt"},
+                    "train": {"val_mse": 0.001, "val_mean_rel_err": 0.1}
+                }
+            }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let weights: Vec<u8> = (0..89).flat_map(|i| (i as f32 * 0.01).to_le_bytes()).collect();
+        std::fs::write(dir.join("sobel.weights.bin"), weights).unwrap();
+    }
+
+    #[test]
+    fn parses_fixture() {
+        let dir = std::env::temp_dir().join("snnapc_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch_buckets, vec![1, 16, 128]);
+        let b = m.get("sobel").unwrap();
+        assert_eq!(b.sizes, vec![9, 8, 1]);
+        assert_eq!(b.activations.len(), 2);
+        let w = b.load_weights().unwrap();
+        assert_eq!(w.len(), 89);
+        assert!((w[1] - 0.01).abs() < 1e-7);
+        assert!((b.val_mse - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let dir = std::env::temp_dir().join("snnapc_manifest_test2");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let b = m.get("sobel").unwrap();
+        assert_eq!(b.bucket_for(1), 1);
+        assert_eq!(b.bucket_for(2), 16);
+        assert_eq!(b.bucket_for(16), 16);
+        assert_eq!(b.bucket_for(64), 16, "largest available bucket");
+    }
+
+    #[test]
+    fn missing_benchmark_errors() {
+        let dir = std::env::temp_dir().join("snnapc_manifest_test3");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn corrupt_weights_rejected() {
+        let dir = std::env::temp_dir().join("snnapc_manifest_test4");
+        write_fixture(&dir);
+        std::fs::write(dir.join("sobel.weights.bin"), [0u8; 10]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("sobel").unwrap().load_weights().is_err());
+    }
+}

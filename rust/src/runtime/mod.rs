@@ -1,0 +1,15 @@
+//! Runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` + manifest)
+//! and executes them on the PJRT CPU client via the `xla` crate.
+//!
+//! Python is involved only at `make artifacts` time; this module is the
+//! entire request-path interface to the compiled models.
+//!
+//! Interchange is HLO **text** — jax >= 0.5 emits HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::NpuExecutor;
+pub use manifest::{BenchArtifact, Manifest};

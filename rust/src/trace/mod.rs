@@ -1,0 +1,246 @@
+//! Memory-traffic traces: capture of the NPU's byte streams plus synthetic
+//! generators with controlled value distributions.
+//!
+//! E1 compresses these streams; E8 sweeps their fixed-point width. The
+//! synthetic generators exist so the compression algorithms can be
+//! characterized independently of any particular benchmark (and are used
+//! heavily in unit tests).
+
+use crate::fixed::QFormat;
+use crate::npu::NpuProgram;
+use crate::util::rng::Rng;
+
+/// Which accelerator stream a trace came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StreamKind {
+    /// Weight memory contents (written once at configure time).
+    Weights,
+    /// Input queue traffic (CPU -> NPU).
+    Inputs,
+    /// Output queue traffic (NPU -> CPU).
+    Outputs,
+}
+
+impl StreamKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamKind::Weights => "weights",
+            StreamKind::Inputs => "inputs",
+            StreamKind::Outputs => "outputs",
+        }
+    }
+}
+
+/// A captured byte stream with provenance.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub kind: StreamKind,
+    pub benchmark: String,
+    pub bytes: Vec<u8>,
+}
+
+impl Trace {
+    /// Capture the weight stream of a compiled program.
+    pub fn weights(program: &NpuProgram) -> Trace {
+        Trace {
+            kind: StreamKind::Weights,
+            benchmark: program.name.clone(),
+            bytes: program.weight_bytes(),
+        }
+    }
+
+    /// Capture a quantized input-queue stream from f32 batches.
+    pub fn inputs(benchmark: &str, fmt: QFormat, batches: &[Vec<f32>]) -> Trace {
+        let mut bytes = Vec::new();
+        for b in batches {
+            bytes.extend(fmt.pack_bytes(&fmt.quantize_slice(b)));
+        }
+        Trace { kind: StreamKind::Inputs, benchmark: benchmark.to_string(), bytes }
+    }
+
+    /// Capture a quantized output-queue stream.
+    pub fn outputs(benchmark: &str, fmt: QFormat, batches: &[Vec<f32>]) -> Trace {
+        let mut t = Trace::inputs(benchmark, fmt, batches);
+        t.kind = StreamKind::Outputs;
+        t
+    }
+}
+
+/// Synthetic stream distributions (for characterization + tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Synthetic {
+    /// All zero bytes.
+    Zeros,
+    /// Uniform random bytes (incompressible).
+    Noise,
+    /// 64-bit pointers into a small heap region (BDI's best case).
+    Pointers,
+    /// Small signed 32-bit integers, mixed with zeros (FPC's best case).
+    SmallInts,
+    /// Gaussian Q7.8 fixed-point values, sigma in quanta (NN weights).
+    FixedPoint { sigma_quanta: u32 },
+    /// Sigmoid-saturated activations: mostly near 0 or 1 in Q7.8.
+    Activations,
+}
+
+impl Synthetic {
+    pub fn name(&self) -> String {
+        match self {
+            Synthetic::Zeros => "zeros".into(),
+            Synthetic::Noise => "noise".into(),
+            Synthetic::Pointers => "pointers".into(),
+            Synthetic::SmallInts => "small-ints".into(),
+            Synthetic::FixedPoint { sigma_quanta } => format!("fixed-q7.8-s{sigma_quanta}"),
+            Synthetic::Activations => "activations".into(),
+        }
+    }
+
+    /// Generate `n` bytes of this distribution.
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n);
+        match self {
+            Synthetic::Zeros => out.resize(n, 0),
+            Synthetic::Noise => {
+                out.resize(n, 0);
+                rng.fill_bytes(&mut out);
+            }
+            Synthetic::Pointers => {
+                let heap = 0x0000_55aa_1000_0000u64 + rng.below(1 << 20);
+                while out.len() < n {
+                    let p = heap + rng.below(1 << 16) * 8;
+                    out.extend_from_slice(&p.to_le_bytes());
+                }
+                out.truncate(n);
+            }
+            Synthetic::SmallInts => {
+                while out.len() < n {
+                    let v: i32 = if rng.bool(0.4) {
+                        0
+                    } else {
+                        (rng.below(2048) as i32) - 1024
+                    };
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out.truncate(n);
+            }
+            Synthetic::FixedPoint { sigma_quanta } => {
+                while out.len() < n {
+                    let v = (rng.normal() * f64::from(*sigma_quanta)) as i64;
+                    let v = v.clamp(-32768, 32767) as i16;
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out.truncate(n);
+            }
+            Synthetic::Activations => {
+                while out.len() < n {
+                    // sigmoid outputs cluster at the rails
+                    let v: i16 = if rng.bool(0.45) {
+                        (rng.below(8)) as i16 // ~0
+                    } else if rng.bool(0.8) {
+                        256 - rng.below(8) as i16 // ~1.0 in Q7.8
+                    } else {
+                        rng.below(257) as i16
+                    };
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out.truncate(n);
+            }
+        }
+        out
+    }
+
+    /// The characterization sweep E1 runs alongside the real traces.
+    pub fn all() -> Vec<Synthetic> {
+        vec![
+            Synthetic::Zeros,
+            Synthetic::Noise,
+            Synthetic::Pointers,
+            Synthetic::SmallInts,
+            Synthetic::FixedPoint { sigma_quanta: 32 },
+            Synthetic::FixedPoint { sigma_quanta: 128 },
+            Synthetic::Activations,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Bdi, CompressionStats, Fpc, Hybrid};
+    use crate::fixed::Q7_8;
+    use crate::npu::program::Activation;
+
+    #[test]
+    fn weight_trace_matches_program() {
+        let flat: Vec<f32> = (0..13).map(|i| i as f32 * 0.01).collect();
+        let p = NpuProgram::from_f32(
+            "t",
+            &[2, 3, 1],
+            &[Activation::Sigmoid, Activation::Linear],
+            &flat,
+            Q7_8,
+        )
+        .unwrap();
+        let t = Trace::weights(&p);
+        assert_eq!(t.bytes.len(), 26);
+        assert_eq!(t.kind, StreamKind::Weights);
+    }
+
+    #[test]
+    fn input_trace_quantizes() {
+        let t = Trace::inputs("x", Q7_8, &[vec![0.5, -0.5], vec![1.0, 0.0]]);
+        assert_eq!(t.bytes.len(), 8);
+        assert_eq!(&t.bytes[0..2], &128i16.to_le_bytes());
+    }
+
+    #[test]
+    fn generators_hit_requested_length() {
+        let mut rng = Rng::new(0);
+        for s in Synthetic::all() {
+            for n in [0, 1, 63, 64, 1000] {
+                assert_eq!(s.generate(n, &mut rng).len(), n, "{}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn zeros_compress_noise_does_not() {
+        let mut rng = Rng::new(1);
+        let z = CompressionStats::measure(&Bdi, &Synthetic::Zeros.generate(6400, &mut rng));
+        let n = CompressionStats::measure(&Bdi, &Synthetic::Noise.generate(6400, &mut rng));
+        assert!(z.ratio > 50.0);
+        assert!(n.ratio < 1.05);
+    }
+
+    #[test]
+    fn pointers_favor_bdi_small_ints_favor_fpc() {
+        let mut rng = Rng::new(2);
+        let ptr = Synthetic::Pointers.generate(64 * 256, &mut rng);
+        let ints = Synthetic::SmallInts.generate(64 * 256, &mut rng);
+        let bdi_ptr = CompressionStats::measure(&Bdi, &ptr).ratio;
+        let fpc_ptr = CompressionStats::measure(&Fpc, &ptr).ratio;
+        let bdi_int = CompressionStats::measure(&Bdi, &ints).ratio;
+        let fpc_int = CompressionStats::measure(&Fpc, &ints).ratio;
+        assert!(bdi_ptr > fpc_ptr, "pointers: bdi {bdi_ptr} vs fpc {fpc_ptr}");
+        assert!(fpc_int > bdi_int, "small ints: fpc {fpc_int} vs bdi {bdi_int}");
+    }
+
+    #[test]
+    fn narrow_weights_compress_better_than_wide() {
+        let mut rng = Rng::new(3);
+        let narrow = Synthetic::FixedPoint { sigma_quanta: 16 }.generate(64 * 128, &mut rng);
+        let wide = Synthetic::FixedPoint { sigma_quanta: 4096 }.generate(64 * 128, &mut rng);
+        let h = Hybrid::default();
+        let rn = CompressionStats::measure(&h, &narrow).ratio;
+        let rw = CompressionStats::measure(&h, &wide).ratio;
+        assert!(rn > rw, "narrow {rn} vs wide {rw}");
+    }
+
+    #[test]
+    fn activations_compress_well() {
+        let mut rng = Rng::new(4);
+        let act = Synthetic::Activations.generate(64 * 256, &mut rng);
+        let r = CompressionStats::measure(&Hybrid::default(), &act).ratio;
+        assert!(r > 1.5, "saturated activations should compress: {r}");
+    }
+}

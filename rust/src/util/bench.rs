@@ -1,0 +1,188 @@
+//! Measurement harness behind `cargo bench` (offline criterion
+//! replacement).
+//!
+//! Each `rust/benches/e*.rs` is a `harness = false` binary that builds a
+//! [`BenchRunner`], registers closures, and prints a fixed-width results
+//! table (mean / median / p95 over N timed samples after warmup) plus the
+//! experiment's paper-shaped rows. Results can also be dumped as JSON for
+//! EXPERIMENTS.md bookkeeping.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+
+/// One benchmark's timing summary.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Sample {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("iters".into(), Json::Num(self.iters as f64));
+        m.insert("mean_ns".into(), Json::Num(self.mean.as_nanos() as f64));
+        m.insert("median_ns".into(), Json::Num(self.median.as_nanos() as f64));
+        m.insert("p95_ns".into(), Json::Num(self.p95.as_nanos() as f64));
+        m.insert("min_ns".into(), Json::Num(self.min.as_nanos() as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Runs and records benchmarks.
+pub struct BenchRunner {
+    /// Timed samples per benchmark.
+    pub samples: usize,
+    /// Warmup iterations before timing.
+    pub warmup: usize,
+    results: Vec<Sample>,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        // Honour a quick mode so `cargo bench` in CI stays fast:
+        // SNNAPC_BENCH_SAMPLES=5 etc.
+        let samples = std::env::var("SNNAPC_BENCH_SAMPLES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(20);
+        BenchRunner { samples, warmup: 3, results: Vec::new() }
+    }
+}
+
+impl BenchRunner {
+    pub fn new(samples: usize, warmup: usize) -> Self {
+        BenchRunner { samples, warmup, results: Vec::new() }
+    }
+
+    /// Time `f` (one logical iteration per call) and record a sample row.
+    /// Returns the f's last output so benches can print derived metrics.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> T {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        let mut last = None;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            last = Some(std::hint::black_box(f()));
+            times.push(t0.elapsed());
+        }
+        times.sort_unstable();
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let sample = Sample {
+            name: name.to_string(),
+            iters: self.samples as u64,
+            mean,
+            median: times[times.len() / 2],
+            p95: times[(times.len() * 95 / 100).min(times.len() - 1)],
+            min: times[0],
+        };
+        println!(
+            "bench {:<44} mean {:>12?} median {:>12?} p95 {:>12?}",
+            sample.name, sample.mean, sample.median, sample.p95
+        );
+        self.results.push(sample);
+        last.expect("samples >= 1")
+    }
+
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+
+    /// Dump all rows as a JSON array (benches append to bench_output via
+    /// stdout; this is for machine-readable logs).
+    pub fn json(&self) -> Json {
+        Json::Arr(self.results.iter().map(Sample::to_json).collect())
+    }
+}
+
+/// Fixed-width table printer used by every experiment binary so the
+/// paper-shaped rows look uniform in bench_output.txt.
+pub struct Table {
+    header: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            widths: header.iter().map(|h| h.len()).collect(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:<w$}  "));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.header, &self.widths);
+        println!(
+            "{}",
+            self.widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>().trim_end()
+        );
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_and_returns() {
+        let mut b = BenchRunner::new(5, 1);
+        let out = b.bench("add", || 2 + 2);
+        assert_eq!(out, 4);
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].iters, 5);
+        assert!(b.results()[0].min <= b.results()[0].p95);
+    }
+
+    #[test]
+    fn json_dump_has_fields() {
+        let mut b = BenchRunner::new(3, 0);
+        b.bench("x", || ());
+        let j = b.json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("x"));
+        assert!(arr[0].get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new(&["bench", "ratio"]);
+        t.row(&["sobel".into(), "1.93".into()]);
+        t.print();
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

