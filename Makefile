@@ -1,0 +1,27 @@
+# Developer entry points. CI runs the same commands (see .github/workflows/ci.yml).
+
+.PHONY: build test sweep smoke artifacts clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Full e1..e8 sweep in parallel -> harness-report.json
+sweep:
+	cargo run --release -- experiments --all --out harness-report.json
+
+# The CI smoke scenario: tiny, artifact-free, seconds to run
+smoke:
+	cargo run --release -- experiments --experiment e1 --benchmarks sobel \
+		--schemes bdi --invocations 1 --jobs 2 --out harness-report.json
+
+# AOT artifact bundle (needs jax; optional — everything falls back to
+# synthetic weights without it)
+artifacts:
+	cd python && python3 compile/aot.py --out ../artifacts
+
+clean:
+	cargo clean
+	rm -f harness-report.json

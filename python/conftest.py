@@ -1,0 +1,16 @@
+"""Pytest bootstrap: make `compile.*` importable regardless of invocation
+directory (`pytest python/tests -q` from the repo root, or `pytest tests`
+from python/), and skip collection cleanly when jax/hypothesis are
+unavailable — the AOT/PJRT toolchain is optional in CI runners."""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+# Tests import jax + hypothesis at module scope; without them, importing
+# the test modules would error at collection time. Ignore them instead so
+# the job reports "no tests ran" rather than failing.
+if any(importlib.util.find_spec(m) is None for m in ("jax", "hypothesis", "numpy")):
+    collect_ignore_glob = ["tests/*"]

@@ -78,6 +78,18 @@ impl Args {
                 .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
         }
     }
+
+    /// A comma-separated list option (`--benchmarks sobel,fft`); `None`
+    /// when absent, entries trimmed and empties dropped.
+    pub fn opt_csv(&self, name: &str) -> Option<Vec<String>> {
+        self.opt(name).map(|v| {
+            v.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(String::from)
+                .collect()
+        })
+    }
 }
 
 #[cfg(test)]
@@ -124,6 +136,16 @@ mod tests {
         assert_eq!(a.opt_parse("missing", 7usize).unwrap(), 7);
         let a = parse("x --n banana");
         assert!(a.opt_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn csv_option() {
+        let a = parse("experiments --benchmarks sobel,fft, jmeint");
+        // note: "jmeint" after the space is positional, not part of the csv
+        assert_eq!(a.opt_csv("benchmarks"), Some(vec!["sobel".to_string(), "fft".to_string()]));
+        assert_eq!(a.opt_csv("schemes"), None);
+        let a = parse("x --s a, ,b");
+        assert_eq!(a.opt_csv("s"), Some(vec!["a".to_string()]));
     }
 
     #[test]

@@ -62,6 +62,32 @@ impl CompressionStats {
         let lines = super::compress_stream(comp, bytes);
         Self::from_lines(comp.name(), &lines)
     }
+
+    /// Machine-readable form for the experiment harness report.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("scheme", self.scheme.clone().into()),
+            ("lines", self.lines.into()),
+            ("raw_bytes", self.raw_bytes.into()),
+            ("compressed_bytes", self.compressed_bytes.into()),
+            (
+                "ratio",
+                // empty streams have an infinite ratio; JSON has no inf
+                if self.ratio.is_finite() { self.ratio.into() } else { Json::Null },
+            ),
+            ("uncompressed_frac", self.uncompressed_frac.into()),
+            (
+                "encodings",
+                Json::obj(
+                    self.encodings
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::from(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 /// A per-scheme comparison over one named workload stream (one E1 row).
@@ -78,6 +104,15 @@ impl SchemeReport {
             .map(|s| CompressionStats::measure(s.as_ref(), bytes))
             .collect();
         SchemeReport { workload: workload.to_string(), stats }
+    }
+
+    /// Machine-readable form for the experiment harness report.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("schemes", Json::Arr(self.stats.iter().map(CompressionStats::to_json).collect())),
+        ])
     }
 
     /// Fixed-width table rows, one per scheme (used by benches + CLI).
@@ -131,5 +166,22 @@ mod tests {
         let s = CompressionStats::measure(&Bdi, &[]);
         assert_eq!(s.lines, 0);
         assert_eq!(s.uncompressed_frac, 0.0);
+    }
+
+    #[test]
+    fn json_form_parses_back() {
+        use crate::util::json::Json;
+        let r = SchemeReport::measure("t", &vec![0u8; 256]);
+        let j = Json::parse(&r.to_json().dump()).unwrap();
+        assert_eq!(j.get("workload").unwrap().as_str(), Some("t"));
+        let schemes = j.get("schemes").unwrap().as_arr().unwrap();
+        assert_eq!(schemes.len(), 4);
+        assert_eq!(schemes[0].get("scheme").unwrap().as_str(), Some("none"));
+        assert!(schemes[0].get("ratio").unwrap().as_f64().is_some());
+
+        // infinite ratio (empty stream) serializes as null, stays valid JSON
+        let empty = CompressionStats::measure(&Bdi, &[]);
+        let j = Json::parse(&empty.to_json().dump()).unwrap();
+        assert_eq!(j.get("ratio"), Some(&Json::Null));
     }
 }

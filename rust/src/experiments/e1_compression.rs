@@ -18,6 +18,17 @@ pub struct E1Row {
     pub report: SchemeReport,
 }
 
+impl E1Row {
+    /// Machine-readable form for the harness report.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("stream", self.stream.into()),
+            ("report", self.report.to_json()),
+        ])
+    }
+}
+
 /// Capture the three real streams for one workload and compress them
 /// under every scheme. `invocations` controls stream length.
 pub fn measure_workload(

@@ -24,6 +24,21 @@ pub struct E2Row {
     pub mac_utilization: f64,
 }
 
+impl E2Row {
+    /// Machine-readable form for the harness report.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("invocations", self.invocations.into()),
+            ("cpu_region_us", self.cpu_region_us.into()),
+            ("npu_region_us", self.npu_region_us.into()),
+            ("region_speedup", self.region_speedup.into()),
+            ("app_speedup", self.app_speedup.into()),
+            ("mac_utilization", self.mac_utilization.into()),
+        ])
+    }
+}
+
 /// Measure one workload under a given NPU configuration.
 pub fn measure(
     w: &dyn Workload,

@@ -20,6 +20,29 @@ pub struct E3Row {
     pub savings: f64,
 }
 
+impl E3Row {
+    /// Machine-readable form for the harness report.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let breakdown = |e: &EnergyBreakdown| {
+            Json::obj(vec![
+                ("cpu_pj", e.cpu_pj.into()),
+                ("npu_compute_pj", e.npu_compute_pj.into()),
+                ("acp_pj", e.acp_pj.into()),
+                ("dram_pj", e.dram_pj.into()),
+                ("static_pj", e.static_pj.into()),
+                ("total_mj", e.total_mj().into()),
+            ])
+        };
+        Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("cpu_only", breakdown(&self.cpu_only)),
+            ("with_npu", breakdown(&self.with_npu)),
+            ("savings", self.savings.into()),
+        ])
+    }
+}
+
 pub fn measure(
     w: &dyn Workload,
     program: crate::npu::NpuProgram,

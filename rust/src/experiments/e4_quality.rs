@@ -24,6 +24,21 @@ pub struct E4Row {
     pub path_disagreement: Option<f64>,
 }
 
+impl E4Row {
+    /// Machine-readable form for the harness report.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let opt = |v: Option<f64>| v.map_or(Json::Null, Json::Num);
+        Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("metric", self.metric.into()),
+            ("fixed_error", self.fixed_error.into()),
+            ("f32_error", opt(self.f32_error)),
+            ("path_disagreement", opt(self.path_disagreement)),
+        ])
+    }
+}
+
 /// Score one workload. `pjrt_outputs` (from the runtime) are optional.
 pub fn measure(
     w: &dyn Workload,

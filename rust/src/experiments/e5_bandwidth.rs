@@ -38,6 +38,23 @@ pub struct E5Row {
     pub delivered_throughput: f64,
 }
 
+impl E5Row {
+    /// Machine-readable form for the harness report.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("scheme", self.scheme.clone().into()),
+            ("logical_mb", self.logical_mb.into()),
+            ("physical_mb", self.physical_mb.into()),
+            ("amplification", self.amplification.into()),
+            ("channel_cycles", self.channel_cycles.into()),
+            ("membound_throughput", self.membound_throughput.into()),
+            ("compute_throughput", self.compute_throughput.into()),
+            ("delivered_throughput", self.delivered_throughput.into()),
+        ])
+    }
+}
+
 fn scheme_by_name(name: &str) -> Option<Box<dyn Compressor>> {
     match name {
         "none" => None,

@@ -20,6 +20,20 @@ pub struct E6Row {
     pub sync_fraction: f64,
 }
 
+impl E6Row {
+    /// Machine-readable form for the harness report.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("batch", self.batch.into()),
+            ("total_cycles", self.total_cycles.into()),
+            ("latency_us_per_invocation", self.latency_us_per_invocation.into()),
+            ("throughput_inv_s", self.throughput_inv_s.into()),
+            ("sync_fraction", self.sync_fraction.into()),
+        ])
+    }
+}
+
 pub const BATCH_SWEEP: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
 
 pub fn measure(

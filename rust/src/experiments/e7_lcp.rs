@@ -26,6 +26,23 @@ pub struct E7Row {
     pub type2_overflows: u64,
 }
 
+impl E7Row {
+    /// Machine-readable form for the harness report.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("source", self.source.clone().into()),
+            ("lcp_ratio", self.lcp_ratio.into()),
+            ("var_ratio", self.var_ratio.into()),
+            ("slot_size", self.slot_size.into()),
+            ("exceptions", self.exceptions.into()),
+            ("lcp_meta_per_lookup", self.lcp_meta_per_lookup.into()),
+            ("var_meta_per_lookup", self.var_meta_per_lookup.into()),
+            ("type1_overflows", self.type1_overflows.into()),
+            ("type2_overflows", self.type2_overflows.into()),
+        ])
+    }
+}
+
 /// Analyze one 4 KiB page image.
 pub fn measure_page(source: &str, page: &[u8], seed: u64) -> E7Row {
     assert_eq!(page.len(), PAGE_BYTES);

@@ -26,6 +26,20 @@ pub struct E8WidthRow {
     pub metric: &'static str,
 }
 
+impl E8WidthRow {
+    /// Machine-readable form for the harness report.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("qformat", self.qformat.clone().into()),
+            ("weight_ratio", self.weight_ratio.into()),
+            ("queue_ratio", self.queue_ratio.into()),
+            ("quality_error", self.quality_error.into()),
+            ("metric", self.metric.into()),
+        ])
+    }
+}
+
 pub const FORMATS: [(&str, QFormat); 3] =
     [("q3.4", Q3_4), ("q7.8", Q7_8), ("q15.16", Q15_16)];
 

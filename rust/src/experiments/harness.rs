@@ -1,0 +1,639 @@
+//! Unified, multi-threaded experiment harness.
+//!
+//! One registry ([`EXPERIMENTS`]) describes E1..E8; [`build_jobs`] expands
+//! a [`HarnessConfig`] into the full sweep grid (every bench_suite kernel
+//! × every compression scheme where the experiment varies by scheme, plus
+//! the synthetic-distribution jobs); [`run`] fans the jobs out over a
+//! std-thread worker pool (the same threading idiom as the coordinator's
+//! driver threads — no async runtime in the vendored dependency set) and
+//! folds every row into **one machine-readable JSON report** that CI
+//! archives as the perf trajectory.
+//!
+//! Experiments that prefer trained weights (`make artifacts`) fall back to
+//! deterministic synthetic weights, so the whole sweep runs from a clean
+//! checkout — the property the CI smoke job relies on.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench_suite::{all_workloads, workload, Workload};
+use crate::compress::lcp::PAGE_BYTES;
+use crate::fixed::{QFormat, Q7_8};
+use crate::npu::{NpuConfig, NpuProgram};
+use crate::trace::Synthetic;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::{e1_compression, e2_speedup, e3_energy, e4_quality, e5_bandwidth};
+use super::{e6_batching, e7_lcp, e8_ablation};
+
+/// What a job measures: a bench_suite kernel or a synthetic distribution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Target {
+    /// One of the seven bench_suite kernels, by name.
+    Bench(String),
+    /// A synthetic trace distribution (see [`Synthetic::all`]), by name.
+    Synthetic(String),
+}
+
+impl Target {
+    pub fn name(&self) -> &str {
+        match self {
+            Target::Bench(n) | Target::Synthetic(n) => n,
+        }
+    }
+}
+
+/// One cell of the sweep grid: everything a worker needs to run a
+/// measurement, with deterministic seeding.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub target: Target,
+    /// Compression scheme (meaningful for per-scheme experiments; "-"
+    /// when the experiment sweeps schemes internally or uses none).
+    pub scheme: String,
+    pub qformat: QFormat,
+    pub invocations: usize,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+/// A registry entry describing one experiment.
+#[derive(Debug, Clone, Copy)]
+pub struct ExperimentSpec {
+    /// Stable id ("e1".."e8") — the CLI/CI selector and report key.
+    pub id: &'static str,
+    pub title: &'static str,
+    /// Whether the sweep fans out one job per compression scheme.
+    pub per_scheme: bool,
+    /// Whether synthetic-distribution jobs are added alongside kernels.
+    pub synthetics: bool,
+}
+
+/// All experiments, in report order.
+pub static EXPERIMENTS: [ExperimentSpec; 8] = [
+    ExperimentSpec {
+        id: "e1",
+        title: "compression ratio per workload stream",
+        per_scheme: false, // SchemeReport sweeps all schemes per stream
+        synthetics: true,
+    },
+    ExperimentSpec {
+        id: "e2",
+        title: "speedup vs CPU baseline",
+        per_scheme: false,
+        synthetics: false,
+    },
+    ExperimentSpec {
+        id: "e3",
+        title: "energy vs CPU baseline",
+        per_scheme: false,
+        synthetics: false,
+    },
+    ExperimentSpec {
+        id: "e4",
+        title: "application quality loss",
+        per_scheme: false,
+        synthetics: false,
+    },
+    ExperimentSpec {
+        id: "e5",
+        title: "effective bandwidth with compression",
+        per_scheme: true,
+        synthetics: false,
+    },
+    ExperimentSpec {
+        id: "e6",
+        title: "batching sweep",
+        per_scheme: false,
+        synthetics: false,
+    },
+    ExperimentSpec {
+        id: "e7",
+        title: "LCP overheads vs variable-size baseline",
+        per_scheme: false,
+        synthetics: true,
+    },
+    ExperimentSpec {
+        id: "e8",
+        title: "fixed-point width + stream ablation",
+        per_scheme: false,
+        synthetics: false,
+    },
+];
+
+/// Look an experiment up by id.
+pub fn experiment(id: &str) -> Option<&'static ExperimentSpec> {
+    EXPERIMENTS.iter().find(|e| e.id == id)
+}
+
+/// Sweep configuration (defaults = the full e1–e8 grid).
+#[derive(Debug, Clone)]
+pub struct HarnessConfig {
+    /// Experiment ids to run (subset of "e1".."e8").
+    pub experiments: Vec<String>,
+    /// Kernels to sweep (subset of the bench_suite names).
+    pub benchmarks: Vec<String>,
+    /// Compression schemes for per-scheme experiments.
+    pub schemes: Vec<String>,
+    pub qformat: QFormat,
+    /// Stream-length knob (invocations per measurement).
+    pub invocations: usize,
+    /// Batch size for batched experiments.
+    pub batch: usize,
+    /// Worker threads.
+    pub jobs: usize,
+    /// Base RNG seed (every job derives a stable per-job seed from it).
+    pub seed: u64,
+}
+
+/// Sensible worker count for this machine.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+impl Default for HarnessConfig {
+    fn default() -> Self {
+        HarnessConfig {
+            experiments: EXPERIMENTS.iter().map(|e| e.id.to_string()).collect(),
+            benchmarks: all_workloads().iter().map(|w| w.name().to_string()).collect(),
+            schemes: e5_bandwidth::SCHEMES.iter().map(|s| s.to_string()).collect(),
+            qformat: Q7_8,
+            invocations: 256,
+            batch: 128,
+            jobs: default_jobs(),
+            seed: 42,
+        }
+    }
+}
+
+/// One schedulable unit of work.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub experiment: &'static str,
+    /// Human-readable id, e.g. `e5/sobel/bdi+fpc` — also the report key.
+    pub label: String,
+    pub scenario: Scenario,
+}
+
+/// Stable per-job seed: the base seed mixed with the job label via
+/// FNV-1a, so distinct jobs draw independent (but reproducible) RNG
+/// streams instead of correlated copies of one sequence.
+fn derive_seed(base: u64, label: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ base;
+    for b in label.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Expand a config into the concrete job list (validating every name).
+pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
+    if cfg.experiments.is_empty() {
+        bail!("no experiments selected");
+    }
+    // empty lists here are always operator error (a typo'd `--benchmarks ,`
+    // would otherwise produce a silently vacuous sweep that CI archives)
+    if cfg.benchmarks.is_empty() {
+        bail!("no benchmarks selected");
+    }
+    if cfg.schemes.is_empty() {
+        bail!("no compression schemes selected");
+    }
+    for b in &cfg.benchmarks {
+        if workload(b).is_none() {
+            bail!("unknown benchmark {b:?} (see bench_suite::all_workloads)");
+        }
+    }
+    for s in &cfg.schemes {
+        if !e5_bandwidth::SCHEMES.contains(&s.as_str()) {
+            bail!("unknown scheme {s:?} (expected one of {:?})", e5_bandwidth::SCHEMES);
+        }
+    }
+
+    let mut jobs = Vec::new();
+    for id in &cfg.experiments {
+        let spec = experiment(id)
+            .with_context(|| format!("unknown experiment {id:?} (expected e1..e8)"))?;
+        let schemes: Vec<&str> = if spec.per_scheme {
+            cfg.schemes.iter().map(String::as_str).collect()
+        } else {
+            vec!["-"]
+        };
+        for bench in &cfg.benchmarks {
+            for scheme in &schemes {
+                let label = if spec.per_scheme {
+                    format!("{}/{bench}/{scheme}", spec.id)
+                } else {
+                    format!("{}/{bench}", spec.id)
+                };
+                let seed = derive_seed(cfg.seed, &label);
+                jobs.push(Job {
+                    experiment: spec.id,
+                    label,
+                    scenario: Scenario {
+                        target: Target::Bench(bench.clone()),
+                        scheme: scheme.to_string(),
+                        qformat: cfg.qformat,
+                        invocations: cfg.invocations.max(1),
+                        batch: cfg.batch.max(1),
+                        seed,
+                    },
+                });
+            }
+        }
+        if spec.synthetics {
+            for s in Synthetic::all() {
+                let label = format!("{}/synthetic/{}", spec.id, s.name());
+                let seed = derive_seed(cfg.seed, &label);
+                jobs.push(Job {
+                    experiment: spec.id,
+                    label,
+                    scenario: Scenario {
+                        target: Target::Synthetic(s.name()),
+                        scheme: "-".to_string(),
+                        qformat: cfg.qformat,
+                        invocations: cfg.invocations.max(1),
+                        batch: cfg.batch.max(1),
+                        seed,
+                    },
+                });
+            }
+        }
+    }
+    Ok(jobs)
+}
+
+/// Resolve the NPU program for a kernel: trained artifact weights when
+/// `make artifacts` has run, deterministic synthetic weights otherwise.
+fn program_for(bench: &str, fmt: QFormat, seed: u64) -> Result<NpuProgram> {
+    let w = workload(bench).with_context(|| format!("unknown benchmark {bench:?}"))?;
+    if let Ok(m) = super::load_manifest() {
+        if let Ok(p) = super::program_from_artifact(&m, bench, fmt) {
+            return Ok(p);
+        }
+    }
+    Ok(super::program_from_workload(w.as_ref(), fmt, seed))
+}
+
+/// Synthetic distribution lookup by name.
+fn synthetic(name: &str) -> Result<Synthetic> {
+    Synthetic::all()
+        .into_iter()
+        .find(|s| s.name() == name)
+        .with_context(|| format!("unknown synthetic distribution {name:?}"))
+}
+
+/// Execute one job, returning its result rows.
+pub fn run_job(job: &Job) -> Result<Vec<Json>> {
+    let sc = &job.scenario;
+    let seed = sc.seed;
+    match (job.experiment, &sc.target) {
+        ("e1", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let rows =
+                e1_compression::measure_workload(w.as_ref(), p, sc.qformat, sc.invocations, seed);
+            Ok(rows.iter().map(e1_compression::E1Row::to_json).collect())
+        }
+        ("e1", Target::Synthetic(name)) => {
+            let s = synthetic(name)?;
+            let mut rng = Rng::new(seed);
+            let data = s.generate(64 * sc.invocations.max(8), &mut rng);
+            Ok(vec![crate::compress::SchemeReport::measure(name, &data).to_json()])
+        }
+        ("e2", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let row = e2_speedup::measure(
+                w.as_ref(),
+                p,
+                NpuConfig::default(),
+                sc.invocations,
+                sc.batch,
+                seed,
+            )?;
+            Ok(vec![row.to_json()])
+        }
+        ("e3", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let row = e3_energy::measure(
+                w.as_ref(),
+                p,
+                NpuConfig::default(),
+                sc.invocations,
+                sc.batch,
+                seed,
+            )?;
+            Ok(vec![row.to_json()])
+        }
+        ("e4", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let row = e4_quality::measure(w.as_ref(), p, sc.invocations, seed, None, None);
+            Ok(vec![row.to_json()])
+        }
+        ("e5", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let batches = sc.invocations.div_ceil(sc.batch).max(1);
+            let row = e5_bandwidth::measure(w.as_ref(), p, &sc.scheme, sc.batch, batches, seed)?;
+            Ok(vec![row.to_json()])
+        }
+        ("e6", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            e6_batching::BATCH_SWEEP
+                .iter()
+                .map(|&batch| {
+                    e6_batching::measure(w.as_ref(), p.clone(), NpuConfig::default(), batch, seed)
+                        .map(|r| r.to_json())
+                })
+                .collect()
+        }
+        ("e7", Target::Bench(b)) => {
+            let p = program_for(b, sc.qformat, seed)?;
+            let mut bytes = crate::trace::Trace::weights(&p).bytes;
+            bytes.resize(PAGE_BYTES, 0); // pad (or truncate) to exactly one page
+            Ok(vec![e7_lcp::measure_page(&format!("{b}-weights"), &bytes, seed).to_json()])
+        }
+        ("e7", Target::Synthetic(name)) => {
+            let s = synthetic(name)?;
+            let mut rng = Rng::new(seed);
+            let page = s.generate(PAGE_BYTES, &mut rng);
+            Ok(vec![e7_lcp::measure_page(name, &page, seed).to_json()])
+        }
+        ("e8", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            // width sweep needs f32 weights: artifact weights when trained,
+            // the same deterministic synthetic ones otherwise
+            let weights_f32 = super::load_manifest()
+                .and_then(|m| m.get(b)?.load_weights())
+                .unwrap_or_else(|_| super::synthetic_flat_weights(w.as_ref(), seed));
+            let rows = e8_ablation::width_sweep(w.as_ref(), &weights_f32, sc.invocations, seed)?;
+            let batches = sc.invocations.div_ceil(sc.batch).max(1);
+            let (wo, qo, both) =
+                e8_ablation::stream_ablation(w.as_ref(), p, sc.batch, batches, seed)?;
+            Ok(vec![Json::obj(vec![
+                ("workload", b.clone().into()),
+                ("width_sweep", Json::Arr(rows.iter().map(e8_ablation::E8WidthRow::to_json).collect())),
+                (
+                    "stream_ablation",
+                    Json::obj(vec![
+                        ("weights_only", wo.into()),
+                        ("queues_only", qo.into()),
+                        ("both", both.into()),
+                    ]),
+                ),
+            ])])
+        }
+        (id, target) => bail!("experiment {id} has no job for target {:?}", target),
+    }
+}
+
+/// The outcome of one job.
+#[derive(Debug)]
+pub struct JobResult {
+    pub label: String,
+    pub experiment: &'static str,
+    pub scenario: Scenario,
+    pub elapsed_ms: f64,
+    pub rows: Result<Vec<Json>>,
+}
+
+/// Run jobs on a fixed-size std-thread worker pool. Workers pull from a
+/// shared atomic cursor (no work item is ever lost or run twice); results
+/// come back in job order regardless of scheduling, so reports are
+/// deterministic for a fixed config + seed.
+pub fn run_jobs(jobs: &[Job], workers: usize) -> Vec<JobResult> {
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<(usize, JobResult)>> = Mutex::new(Vec::with_capacity(jobs.len()));
+    let n_workers = workers.clamp(1, jobs.len().max(1));
+    std::thread::scope(|s| {
+        for _ in 0..n_workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let job = &jobs[i];
+                let t0 = Instant::now();
+                let rows = run_job(job);
+                let r = JobResult {
+                    label: job.label.clone(),
+                    experiment: job.experiment,
+                    scenario: job.scenario.clone(),
+                    elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    rows,
+                };
+                out.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut results = out.into_inner().unwrap();
+    results.sort_by_key(|(i, _)| *i);
+    results.into_iter().map(|(_, r)| r).collect()
+}
+
+/// The consolidated outcome of one sweep.
+#[derive(Debug)]
+pub struct HarnessReport {
+    /// The full machine-readable report.
+    pub json: Json,
+    pub total_jobs: usize,
+    pub failed_jobs: usize,
+    pub elapsed_ms: f64,
+}
+
+fn config_json(cfg: &HarnessConfig) -> Json {
+    let q = cfg.qformat;
+    Json::obj(vec![
+        ("experiments", Json::arr(cfg.experiments.clone())),
+        ("benchmarks", Json::arr(cfg.benchmarks.clone())),
+        ("schemes", Json::arr(cfg.schemes.clone())),
+        ("qformat", format!("q{}.{}", q.int_bits, q.frac_bits).into()),
+        ("invocations", cfg.invocations.into()),
+        ("batch", cfg.batch.into()),
+        ("jobs", cfg.jobs.into()),
+        ("seed", cfg.seed.into()),
+    ])
+}
+
+/// Run the whole configured sweep and consolidate one JSON report.
+///
+/// Report layout (schema_version 1):
+/// ```json
+/// {
+///   "schema_version": 1,
+///   "config": { ... },
+///   "experiments": { "e1": [ {"label": ..., "rows": [...]}, ... ], ... },
+///   "timing_ms": { "<label>": 12.3, ..., "total": 456.7 },
+///   "failures": [ {"label": ..., "error": ...} ]
+/// }
+/// ```
+/// Timing lives outside `experiments` so the measurement payload is
+/// bit-identical across runs of the same config + seed (asserted in
+/// `rust/tests/harness.rs`).
+pub fn run(cfg: &HarnessConfig) -> Result<HarnessReport> {
+    let t0 = Instant::now();
+    let jobs = build_jobs(cfg)?;
+    let results = run_jobs(&jobs, cfg.jobs);
+
+    let mut by_experiment: std::collections::BTreeMap<String, Vec<Json>> = Default::default();
+    let mut timing: Vec<(String, Json)> = Vec::new();
+    let mut failures = Vec::new();
+    let mut failed = 0usize;
+    for r in &results {
+        timing.push((r.label.clone(), r.elapsed_ms.into()));
+        match &r.rows {
+            Ok(rows) => {
+                by_experiment.entry(r.experiment.to_string()).or_default().push(Json::obj(vec![
+                    ("label", r.label.clone().into()),
+                    ("target", r.scenario.target.name().into()),
+                    ("scheme", r.scenario.scheme.clone().into()),
+                    ("rows", Json::Arr(rows.clone())),
+                ]));
+            }
+            Err(e) => {
+                failed += 1;
+                failures.push(Json::obj(vec![
+                    ("label", r.label.clone().into()),
+                    ("error", format!("{e:#}").into()),
+                ]));
+            }
+        }
+    }
+    let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+    timing.push(("total".to_string(), elapsed_ms.into()));
+
+    let json = Json::obj(vec![
+        ("schema_version", 1usize.into()),
+        ("config", config_json(cfg)),
+        (
+            "experiments",
+            Json::Obj(by_experiment.into_iter().map(|(k, v)| (k, Json::Arr(v))).collect()),
+        ),
+        ("timing_ms", Json::obj(timing)),
+        ("failures", Json::Arr(failures)),
+    ]);
+    Ok(HarnessReport { json, total_jobs: results.len(), failed_jobs: failed, elapsed_ms })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> HarnessConfig {
+        HarnessConfig {
+            experiments: vec!["e1".into()],
+            benchmarks: vec!["sobel".into()],
+            schemes: vec!["bdi".into()],
+            invocations: 4,
+            batch: 4,
+            jobs: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn registry_ids_are_unique_and_ordered() {
+        let ids: Vec<_> = EXPERIMENTS.iter().map(|e| e.id).collect();
+        assert_eq!(ids, ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8"]);
+        assert!(experiment("e5").unwrap().per_scheme);
+        assert!(experiment("e9").is_none());
+    }
+
+    #[test]
+    fn job_expansion_counts() {
+        let cfg = HarnessConfig { invocations: 4, batch: 4, ..Default::default() };
+        let jobs = build_jobs(&cfg).unwrap();
+        let count = |id: &str| jobs.iter().filter(|j| j.experiment == id).count();
+        let n_synth = Synthetic::all().len();
+        assert_eq!(count("e1"), 7 + n_synth);
+        assert_eq!(count("e2"), 7);
+        assert_eq!(count("e5"), 7 * 4, "e5 fans out per scheme");
+        assert_eq!(count("e7"), 7 + n_synth);
+        assert_eq!(count("e8"), 7);
+    }
+
+    #[test]
+    fn build_jobs_validates_names() {
+        let mut cfg = tiny_cfg();
+        cfg.benchmarks = vec!["nope".into()];
+        assert!(build_jobs(&cfg).is_err());
+
+        let mut cfg = tiny_cfg();
+        cfg.schemes = vec!["zstd".into()];
+        assert!(build_jobs(&cfg).is_err());
+
+        let mut cfg = tiny_cfg();
+        cfg.experiments = vec!["e99".into()];
+        assert!(build_jobs(&cfg).is_err());
+
+        let mut cfg = tiny_cfg();
+        cfg.experiments.clear();
+        assert!(build_jobs(&cfg).is_err());
+
+        // an empty kernel/scheme list (e.g. a typo'd `--benchmarks ,`)
+        // must fail loudly, not produce a vacuous "green" sweep
+        let mut cfg = tiny_cfg();
+        cfg.benchmarks.clear();
+        assert!(build_jobs(&cfg).is_err());
+        let mut cfg = tiny_cfg();
+        cfg.schemes.clear();
+        assert!(build_jobs(&cfg).is_err());
+    }
+
+    #[test]
+    fn jobs_get_distinct_deterministic_seeds() {
+        let cfg = HarnessConfig { invocations: 4, batch: 4, ..Default::default() };
+        let jobs = build_jobs(&cfg).unwrap();
+        let again = build_jobs(&cfg).unwrap();
+        for (a, b) in jobs.iter().zip(&again) {
+            assert_eq!(a.scenario.seed, b.scenario.seed, "{}", a.label);
+        }
+        let mut seeds: Vec<u64> = jobs.iter().map(|j| j.scenario.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), jobs.len(), "per-job seeds must be distinct");
+
+        // a different base seed moves every job's stream
+        let cfg2 = HarnessConfig { seed: 43, ..cfg };
+        let other = build_jobs(&cfg2).unwrap();
+        assert!(jobs.iter().zip(&other).all(|(a, b)| a.scenario.seed != b.scenario.seed));
+    }
+
+    #[test]
+    fn tiny_sweep_runs_and_reports() {
+        let report = run(&tiny_cfg()).unwrap();
+        assert_eq!(report.failed_jobs, 0);
+        assert!(report.total_jobs >= 1);
+        let e1 = report.json.get("experiments").unwrap().get("e1").unwrap();
+        assert!(!e1.as_arr().unwrap().is_empty());
+        // the report must be valid JSON end to end
+        let text = report.json.dump();
+        assert_eq!(Json::parse(&text).unwrap(), report.json);
+    }
+
+    #[test]
+    fn results_do_not_depend_on_worker_count() {
+        let mut cfg = tiny_cfg();
+        cfg.experiments = vec!["e1".into(), "e2".into()];
+        cfg.benchmarks = vec!["sobel".into(), "fft".into()];
+        cfg.jobs = 1;
+        let serial = run(&cfg).unwrap();
+        cfg.jobs = 4;
+        let parallel = run(&cfg).unwrap();
+        assert_eq!(
+            serial.json.get("experiments").unwrap().dump(),
+            parallel.json.get("experiments").unwrap().dump(),
+            "measurement payload must not depend on worker count"
+        );
+    }
+}

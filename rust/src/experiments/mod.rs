@@ -4,6 +4,10 @@
 //! rows, so the CLI (`snnapc run-bench`), the criterion-style bench
 //! binaries (`rust/benches/e*.rs`) and the end-to-end example all share
 //! one implementation and EXPERIMENTS.md quotes a single source of truth.
+//!
+//! [`harness`] layers a registry + worker pool on top: one command runs
+//! the whole e1–e8 sweep (kernels × schemes) in parallel and emits a
+//! single machine-readable JSON report (`snnapc experiments --all`).
 
 pub mod e1_compression;
 pub mod e2_speedup;
@@ -13,6 +17,9 @@ pub mod e5_bandwidth;
 pub mod e6_batching;
 pub mod e7_lcp;
 pub mod e8_ablation;
+pub mod harness;
+
+pub use harness::{HarnessConfig, HarnessReport};
 
 use anyhow::Result;
 
@@ -33,6 +40,18 @@ pub fn program_from_artifact(
     NpuProgram::from_f32(bench, &art.sizes, &art.activations, &weights, fmt)
 }
 
+/// Deterministic Glorot-ish synthetic weights for a workload topology —
+/// the right scale for timing/traffic shape when trained artifacts are
+/// unavailable. The single source of truth for the synthetic fallback:
+/// `program_from_workload` and the harness's e8 width sweep both build
+/// from exactly this stream, so their weight sets always match.
+pub fn synthetic_flat_weights(w: &dyn crate::bench_suite::Workload, seed: u64) -> Vec<f32> {
+    let sizes = w.sizes();
+    let n: usize = sizes.windows(2).map(|p| p[0] * p[1] + p[1]).sum();
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (0..n).map(|_| (rng.f32() - 0.5) * 0.8).collect()
+}
+
 /// Build a program from the workload topology with synthetic weights
 /// (used when artifacts are unavailable, e.g. pure-simulation benches).
 pub fn program_from_workload(
@@ -40,11 +59,8 @@ pub fn program_from_workload(
     fmt: QFormat,
     seed: u64,
 ) -> NpuProgram {
+    let flat = synthetic_flat_weights(w, seed);
     let sizes = w.sizes();
-    let n: usize = sizes.windows(2).map(|p| p[0] * p[1] + p[1]).sum();
-    let mut rng = crate::util::rng::Rng::new(seed);
-    // Glorot-ish random weights: right scale for timing/traffic shape
-    let flat: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 0.8).collect();
     let acts: Vec<Activation> = w.activations();
     NpuProgram::from_f32(w.name(), &sizes, &acts, &flat, fmt).expect("topology is valid")
 }

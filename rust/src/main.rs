@@ -4,7 +4,9 @@
 //!   info            show artifact manifest + effective config
 //!   serve           start the batching server and drive it with a
 //!                   synthetic open-loop client (requests/s, duration)
-//!   run-bench       run experiment tables: e1..e8 or all
+//!   experiments     run the e1..e8 sweep in parallel and emit one
+//!                   consolidated JSON report (the harness)
+//!   run-bench       print experiment tables: e1..e8 or all (serial)
 //!   compress-file   per-scheme compression report for any file
 //!   trace           dump + compress a benchmark's NPU streams
 //!   config          print the effective configuration (reloadable)
@@ -12,6 +14,8 @@
 //! Examples:
 //!   snnapc info
 //!   snnapc serve --benchmark sobel --requests 5000 --set batch.max=64
+//!   snnapc experiments --all --jobs 8 --out harness-report.json
+//!   snnapc experiments --experiment e1 --benchmarks sobel --schemes bdi
 //!   snnapc run-bench --experiment e1
 //!   snnapc compress-file artifacts/jmeint.weights.bin
 
@@ -40,7 +44,20 @@ COMMANDS:
     --requests N            total requests (default 2000)
     --clients N             client threads (default 4)
     --backend sim|pjrt      execution backend (default sim)
-  run-bench                 print experiment tables
+  experiments               parallel e1..e8 sweep + one JSON report
+    --all                   run every experiment (default when no
+                            --experiment is given)
+    --experiment LIST       subset, e.g. e1 or e1,e5,e7
+    --benchmarks LIST       kernels to sweep (default: all seven)
+    --schemes LIST          schemes for per-scheme experiments
+                            (none|bdi|fpc|bdi+fpc; default: all)
+    --jobs N                worker threads (default: CPU count)
+    --invocations N         stream length knob (default 256)
+    --batch N               batch size (default batch.max)
+    --seed N                base RNG seed (default 42)
+    --out FILE              write the JSON report here
+                            (default harness-report.json)
+  run-bench                 print experiment tables (serial)
     --experiment e1..e8|all which experiment (default all)
     --invocations N         stream length knob (default 256)
   compress-file FILE        per-scheme report for a file
@@ -155,6 +172,63 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_experiments(cfg: &Config, args: &Args) -> Result<()> {
+    let mut hc = ex::HarnessConfig {
+        qformat: cfg.qformat,
+        batch: cfg.policy.max_batch,
+        ..Default::default()
+    };
+    if !args.flag("all") {
+        if let Some(list) = args.opt_csv("experiment") {
+            hc.experiments = list;
+        }
+    }
+    if let Some(benchmarks) = args.opt_csv("benchmarks") {
+        hc.benchmarks = benchmarks;
+    }
+    if let Some(schemes) = args.opt_csv("schemes") {
+        hc.schemes = schemes;
+    }
+    hc.invocations = args.opt_parse("invocations", hc.invocations)?;
+    hc.batch = args.opt_parse("batch", hc.batch)?;
+    hc.jobs = args.opt_parse("jobs", hc.jobs)?;
+    hc.seed = args.opt_parse("seed", hc.seed)?;
+
+    println!(
+        "experiment sweep: {} x {} kernels x {} schemes, {} workers",
+        hc.experiments.join(","),
+        hc.benchmarks.len(),
+        hc.schemes.len(),
+        hc.jobs
+    );
+    let report = ex::harness::run(&hc)?;
+    println!(
+        "ran {} jobs in {:.1}s ({} failed)",
+        report.total_jobs,
+        report.elapsed_ms / 1e3,
+        report.failed_jobs
+    );
+
+    let out = args.opt("out").unwrap_or("harness-report.json");
+    std::fs::write(out, report.json.dump() + "\n")
+        .with_context(|| format!("writing {out}"))?;
+    println!("wrote {out}");
+
+    if report.failed_jobs > 0 {
+        if let Some(fails) = report.json.get("failures").and_then(|f| f.as_arr()) {
+            for f in fails {
+                eprintln!(
+                    "FAILED {}: {}",
+                    f.get("label").and_then(|l| l.as_str()).unwrap_or("?"),
+                    f.get("error").and_then(|e| e.as_str()).unwrap_or("?"),
+                );
+            }
+        }
+        bail!("{} of {} jobs failed", report.failed_jobs, report.total_jobs);
+    }
+    Ok(())
+}
+
 fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
     let which = args.opt("experiment").unwrap_or("all");
     let invocations: usize = args.opt_parse("invocations", 256)?;
@@ -178,7 +252,12 @@ fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
     }
     if run_all || which == "e4" {
         println!("\n== E4: quality loss ==");
-        ex::e4_quality::print_table(&ex::e4_quality::run(cfg.qformat, invocations)?);
+        match ex::e4_quality::run(cfg.qformat, invocations) {
+            Ok(rows) => ex::e4_quality::print_table(&rows),
+            // degrade gracefully inside `all`, but fail an explicit request
+            Err(e) if run_all => println!("needs artifacts: {e}"),
+            Err(e) => return Err(e),
+        }
     }
     if run_all || which == "e5" {
         println!("\n== E5: effective bandwidth with compression (the paper's proposal) ==");
@@ -196,7 +275,11 @@ fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
     }
     if run_all || which == "e8" {
         println!("\n== E8: fixed-point width ablation ==");
-        ex::e8_ablation::print_width_table(&ex::e8_ablation::run_width(invocations)?);
+        match ex::e8_ablation::run_width(invocations) {
+            Ok(rows) => ex::e8_ablation::print_width_table(&rows),
+            Err(e) if run_all => println!("needs artifacts: {e}"),
+            Err(e) => return Err(e),
+        }
     }
     Ok(())
 }
@@ -246,7 +329,7 @@ fn cmd_trace(cfg: &Config, args: &Args) -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["help", "verbose"])?;
+    let args = Args::parse(std::env::args().skip(1), &["help", "verbose", "all"])?;
     if args.flag("help") || args.command.is_empty() {
         print!("{HELP}");
         return Ok(());
@@ -255,6 +338,7 @@ fn main() -> Result<()> {
     match args.command.as_str() {
         "info" => cmd_info(&cfg),
         "serve" => cmd_serve(&cfg, &args),
+        "experiments" => cmd_experiments(&cfg, &args),
         "run-bench" => cmd_run_bench(&cfg, &args),
         "compress-file" => cmd_compress_file(&args),
         "trace" => cmd_trace(&cfg, &args),

@@ -81,7 +81,10 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/inf; null is the conventional stand-in
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -130,6 +133,62 @@ fn write_escaped(s: &str, out: &mut String) {
         }
     }
     out.push('"');
+}
+
+/// Construction conveniences used by the experiment harness's report
+/// writer — build objects/arrays without spelling out the enum.
+impl Json {
+    /// An object from (key, value) pairs (later duplicates win).
+    pub fn obj<K: Into<String>>(pairs: Vec<(K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// An array from anything convertible to [`Json`].
+    pub fn arr<T: Into<Json>>(items: Vec<T>) -> Json {
+        Json::Arr(items.into_iter().map(Into::into).collect())
+    }
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Json {
+        Json::Bool(v)
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::Num(v)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(v: String) -> Json {
+        Json::Str(v)
+    }
+}
+
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Json {
+        Json::Arr(v)
+    }
 }
 
 /// Parse error with byte offset.
@@ -404,6 +463,32 @@ mod tests {
         assert_eq!(Json::parse("42").unwrap().as_usize(), Some(42));
         assert_eq!(Json::parse("42.5").unwrap().as_usize(), None);
         assert_eq!(Json::parse("-1").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(v).dump(), "null");
+        }
+        let j = Json::obj(vec![("x", Json::Num(f64::NAN))]);
+        assert_eq!(Json::parse(&j.dump()).unwrap().get("x"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn construction_helpers() {
+        let j = Json::obj(vec![
+            ("name", "e1".into()),
+            ("ratio", 1.5.into()),
+            ("lines", 64usize.into()),
+            ("ok", true.into()),
+            ("tags", Json::arr(vec!["a", "b"])),
+        ]);
+        let text = j.dump();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("name").unwrap().as_str(), Some("e1"));
+        assert_eq!(back.get("lines").unwrap().as_usize(), Some(64));
+        assert_eq!(back.get("tags").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(back, j);
     }
 
     #[test]

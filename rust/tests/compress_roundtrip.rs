@@ -1,0 +1,178 @@
+//! Property-based round-trip regression tests for the compression
+//! substrate (via the in-house `util::prop` harness — the offline
+//! proptest replacement).
+//!
+//! For every scheme (`Bdi`, `Fpc`, `Hybrid`) and every line class
+//! (all-zero, low-entropy, random):
+//!   * decompression is **bit-exact**;
+//!   * `size_bits` respects the scheme's size contract: at most
+//!     `LINE_BYTES * 8` on zero/low-entropy lines, and at most
+//!     `LINE_BYTES * 8 + META_BITS_CEILING` on arbitrary lines (the
+//!     honest-accounting per-line metadata: BDI pays a 4-bit tag on
+//!     incompressible lines, FPC 3 prefix bits per word, Hybrid one
+//!     selector bit on top).
+
+use snnap_c::compress::{all_schemes, Bdi, Compressor, Fpc, Hybrid, LINE_BYTES};
+use snnap_c::util::prop;
+use snnap_c::util::rng::Rng;
+
+/// Worst-case per-line metadata overhead across schemes, in bits:
+/// FPC's 16 x 3 prefix bits on an incompressible line, plus the Hybrid
+/// selector bit.
+const META_BITS_CEILING: usize = 16 * 3 + 1;
+
+fn schemes() -> Vec<Box<dyn Compressor>> {
+    vec![Box::new(Bdi), Box::new(Fpc), Box::new(Hybrid::default())]
+}
+
+fn assert_roundtrip(c: &dyn Compressor, line: &[u8]) -> usize {
+    let z = c.compress(line);
+    assert_eq!(
+        c.decompress(&z),
+        line,
+        "{}: decompression must be bit-exact ({:?})",
+        c.name(),
+        z.encoding
+    );
+    assert_eq!(z.size_bytes(), z.size_bits.div_ceil(8), "{}", c.name());
+    assert!(
+        z.size_bits <= LINE_BYTES * 8 + META_BITS_CEILING,
+        "{}: {} bits exceeds the metadata ceiling",
+        c.name(),
+        z.size_bits
+    );
+    z.size_bits
+}
+
+#[test]
+fn all_zero_lines_compress_under_line_size() {
+    let line = [0u8; LINE_BYTES];
+    for c in schemes() {
+        let bits = assert_roundtrip(c.as_ref(), &line);
+        assert!(
+            bits <= LINE_BYTES * 8 / 8,
+            "{}: an all-zero line must compress at least 8x, got {bits} bits",
+            c.name()
+        );
+    }
+}
+
+#[test]
+fn prop_low_entropy_lines_stay_under_line_size() {
+    // low-entropy: small Q7.8-style i16 values near zero — the trained-
+    // weight traffic the paper targets. Every scheme must encode such a
+    // line at or below the uncompressed 512 bits (BDI via b2d1
+    // immediates, FPC via sign-extended halfword bytes).
+    prop::check(300, |rng| {
+        let mut line = [0u8; LINE_BYTES];
+        for c in line.chunks_exact_mut(2) {
+            let v = (rng.below(128) as i64 - 64) as i16;
+            c.copy_from_slice(&v.to_le_bytes());
+        }
+        for c in schemes() {
+            let bits = assert_roundtrip(c.as_ref(), &line);
+            assert!(
+                bits <= LINE_BYTES * 8,
+                "{}: low-entropy line must not expand, got {bits} bits",
+                c.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_pointer_lines_compress_under_bdi_and_hybrid() {
+    // pointer-like traffic (large shared base, small spread): BDI's
+    // motivating case. FPC legitimately expands here, so the <= 512-bit
+    // bound is asserted for BDI and Hybrid only.
+    prop::check(200, |rng| {
+        let base = rng.next_u32() & 0x3fff_ffff;
+        let mut line = [0u8; LINE_BYTES];
+        for (i, c) in line.chunks_exact_mut(4).enumerate() {
+            let v = base.wrapping_add(rng.below(16) as u32 + i as u32);
+            c.copy_from_slice(&v.to_le_bytes());
+        }
+        for c in schemes() {
+            let bits = assert_roundtrip(c.as_ref(), &line);
+            if c.name() != "fpc" {
+                assert!(bits <= LINE_BYTES * 8, "{}: got {bits} bits", c.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_random_lines_roundtrip_bit_exactly() {
+    prop::check(500, |rng| {
+        let line = rng.bytes(LINE_BYTES);
+        for c in schemes() {
+            assert_roundtrip(c.as_ref(), &line);
+        }
+    });
+}
+
+#[test]
+fn prop_mixed_zero_runs_roundtrip() {
+    // lines mixing zero runs with random words exercise FPC's run-length
+    // path and BDI's immediate mask simultaneously
+    prop::check(300, |rng| {
+        let mut line = [0u8; LINE_BYTES];
+        for w in line.chunks_exact_mut(4) {
+            if rng.bool(0.5) {
+                let v = rng.next_u32();
+                w.copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        for c in schemes() {
+            assert_roundtrip(c.as_ref(), &line);
+        }
+    });
+}
+
+#[test]
+fn prop_hybrid_is_exactly_min_plus_selector_bit() {
+    prop::check(300, |rng| {
+        let line = rng.bytes(LINE_BYTES);
+        let h = Hybrid::default().compress(&line).size_bits;
+        let b = Bdi.compress(&line).size_bits;
+        let f = Fpc.compress(&line).size_bits;
+        assert_eq!(h, b.min(f) + 1);
+    });
+}
+
+#[test]
+fn prop_stream_compression_matches_per_line_sum() {
+    // compress_stream (the E1/E5/E8 workhorse) must agree with per-line
+    // compression, including tail padding
+    prop::check(60, |rng| {
+        let n = rng.range(1, 4 * LINE_BYTES + 7);
+        let data = rng.bytes(n);
+        for c in schemes() {
+            let lines = snnap_c::compress::compress_stream(c.as_ref(), &data);
+            assert_eq!(lines.len(), n.div_ceil(LINE_BYTES));
+            let mut rebuilt = Vec::new();
+            for z in &lines {
+                rebuilt.extend(c.decompress(z));
+            }
+            assert_eq!(&rebuilt[..n], &data[..], "{}", c.name());
+            assert!(rebuilt[n..].iter().all(|&b| b == 0), "tail must be zero padding");
+        }
+    });
+}
+
+#[test]
+fn registry_schemes_all_roundtrip_on_every_class() {
+    // belt and braces over the public registry (includes NoCompression)
+    let mut rng = Rng::new(0xC0DE);
+    let classes: Vec<Vec<u8>> = vec![
+        vec![0u8; LINE_BYTES],
+        (0..LINE_BYTES as u8).collect(),
+        rng.bytes(LINE_BYTES),
+    ];
+    for c in all_schemes() {
+        for line in &classes {
+            let z = c.compress(line);
+            assert_eq!(&c.decompress(&z), line, "{}", c.name());
+        }
+    }
+}

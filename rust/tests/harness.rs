@@ -1,0 +1,100 @@
+//! Integration tests for the parallel experiment harness: the public API
+//! the CLI (`snnapc experiments`) and the CI smoke job drive.
+
+use snnap_c::experiments::harness::{self, HarnessConfig, Target};
+use snnap_c::util::json::Json;
+
+fn smoke_cfg() -> HarnessConfig {
+    // the CI smoke scenario: sobel + bdi, 1 invocation
+    HarnessConfig {
+        experiments: vec!["e1".into()],
+        benchmarks: vec!["sobel".into()],
+        schemes: vec!["bdi".into()],
+        invocations: 1,
+        batch: 1,
+        jobs: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn smoke_scenario_produces_valid_report() {
+    let report = harness::run(&smoke_cfg()).unwrap();
+    assert_eq!(report.failed_jobs, 0, "smoke sweep must be green");
+    // e1: one sobel job + one per synthetic distribution
+    let parsed = Json::parse(&report.json.dump()).expect("report must be valid JSON");
+    let e1 = parsed.get("experiments").unwrap().get("e1").unwrap().as_arr().unwrap();
+    assert!(e1.len() > 1);
+    assert_eq!(e1[0].get("target").unwrap().as_str(), Some("sobel"));
+    // streams: weights, inputs, outputs — each with all four schemes
+    let rows = e1[0].get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 3);
+    let schemes = rows[0].get("report").unwrap().get("schemes").unwrap().as_arr().unwrap();
+    assert_eq!(schemes.len(), 4);
+    // config echo + timing present
+    assert_eq!(parsed.get("config").unwrap().get("invocations").unwrap().as_usize(), Some(1));
+    assert!(parsed.get("timing_ms").unwrap().get("total").unwrap().as_f64().is_some());
+    assert_eq!(parsed.get("failures").unwrap().as_arr().unwrap().len(), 0);
+}
+
+#[test]
+fn full_grid_covers_kernels_times_schemes() {
+    let cfg = HarnessConfig { invocations: 4, batch: 4, ..Default::default() };
+    let jobs = harness::build_jobs(&cfg).unwrap();
+    // e5 is the kernel x scheme product
+    let e5: Vec<_> = jobs.iter().filter(|j| j.experiment == "e5").collect();
+    assert_eq!(e5.len(), 7 * 4);
+    for bench in ["fft", "inversek2j", "jmeint", "jpeg", "kmeans", "sobel", "blackscholes"] {
+        for scheme in ["none", "bdi", "fpc", "bdi+fpc"] {
+            assert!(
+                e5.iter().any(|j| j.scenario.target == Target::Bench(bench.to_string())
+                    && j.scenario.scheme == scheme),
+                "missing e5 cell {bench}/{scheme}"
+            );
+        }
+    }
+    // labels are unique (they key the timing map)
+    let mut labels: Vec<_> = jobs.iter().map(|j| j.label.clone()).collect();
+    labels.sort();
+    let before = labels.len();
+    labels.dedup();
+    assert_eq!(labels.len(), before, "duplicate job labels");
+}
+
+#[test]
+fn multi_experiment_sweep_runs_in_parallel_without_artifacts() {
+    // a small but real slice of the full sweep: every experiment type,
+    // two kernels, two schemes, 4 workers — must be green from a clean
+    // checkout (no `make artifacts`)
+    let cfg = HarnessConfig {
+        experiments: (1..=8).map(|i| format!("e{i}")).collect(),
+        benchmarks: vec!["sobel".into(), "fft".into()],
+        schemes: vec!["none".into(), "bdi+fpc".into()],
+        invocations: 8,
+        batch: 8,
+        jobs: 4,
+        ..Default::default()
+    };
+    let report = harness::run(&cfg).unwrap();
+    assert_eq!(report.failed_jobs, 0, "{}", report.json.dump());
+    let experiments = report.json.get("experiments").unwrap().as_obj().unwrap();
+    for id in ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8"] {
+        assert!(experiments.contains_key(id), "report missing {id}");
+    }
+    // spot-check row payloads deep in the tree
+    let e2 = &experiments["e2"].as_arr().unwrap()[0];
+    let row = &e2.get("rows").unwrap().as_arr().unwrap()[0];
+    assert!(row.get("region_speedup").unwrap().as_f64().unwrap() > 0.0);
+    let e5 = &experiments["e5"].as_arr().unwrap()[0];
+    let row = &e5.get("rows").unwrap().as_arr().unwrap()[0];
+    assert!(row.get("amplification").unwrap().as_f64().unwrap() >= 1.0 - 1e-9);
+}
+
+#[test]
+fn failures_are_reported_not_fatal() {
+    // e4/e8-style jobs still run without artifacts via synthetic weights,
+    // so build an unknown-kernel failure instead at the build step
+    let mut cfg = smoke_cfg();
+    cfg.benchmarks = vec!["not-a-kernel".into()];
+    assert!(harness::run(&cfg).is_err(), "unknown kernels fail fast at job build");
+}

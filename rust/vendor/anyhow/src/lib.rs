@@ -1,0 +1,286 @@
+//! Vendored, API-compatible subset of the `anyhow` crate.
+//!
+//! The build is fully offline (no crates.io access), so the error-handling
+//! surface the codebase uses is implemented here from scratch:
+//!
+//! * [`Error`] — a boxed-free error carrying a context chain of messages;
+//! * [`Result<T>`] — `Result<T, Error>` with a defaulted error type;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Unlike upstream `anyhow`, the source chain is flattened into strings at
+//! construction time (no downcasting). Display prints the outermost
+//! message; `{:#}` joins the chain with `": "`; Debug prints the chain as
+//! a "Caused by" list — matching upstream's rendering closely enough for
+//! tests that assert on message substrings.
+
+use std::fmt::{self, Debug, Display};
+
+/// `Result` with a defaulted boxed error, as in upstream `anyhow`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error made of a chain of context messages (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn new(msg: String) -> Error {
+        Error { chain: vec![msg] }
+    }
+
+    /// Construct from anything displayable (upstream `Error::msg`).
+    pub fn msg<M: Display>(msg: M) -> Error {
+        Error::new(msg.to_string())
+    }
+
+    /// Push an outer context message onto the chain.
+    pub fn context<C: Display>(mut self, ctx: C) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain joined with ": "
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                if self.chain.len() > 2 {
+                    write!(f, "\n    {i}: {c}")?;
+                } else {
+                    write!(f, "\n    {c}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any concrete `std` error converts by flattening its source chain.
+/// (`Error` itself deliberately does not implement `std::error::Error`,
+/// exactly as upstream, so this blanket impl cannot conflict with the
+/// reflexive `From<Error> for Error`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T, E> {
+    /// Wrap the error with an outer message.
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily evaluated outer message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E>
+    for std::result::Result<T, E>
+{
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// Does not overlap with the blanket impl above because `Error` does not
+// implement `std::error::Error`.
+impl<T> Context<T, Error> for std::result::Result<T, Error> {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::new(ctx.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::new(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::new(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: {}",
+                ::std::stringify!($cond)
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_shows_outermost_message_only() {
+        let e: Error = io_err().into();
+        let e = e.context("reading config");
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: no such file");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::from(io_err()).context("layer1").context("layer0");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("layer0"), "{dbg}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("no such file"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_format_and_passthrough() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("n = {n} and {}", n + 1);
+        assert_eq!(b.to_string(), "n = 3 and 4");
+        let msg = String::from("owned message");
+        let c = anyhow!(msg.clone());
+        assert_eq!(c.to_string(), "owned message");
+    }
+
+    #[test]
+    fn bail_and_ensure_return_errors() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(7).unwrap(), 7);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+        assert_eq!(f(101).unwrap_err().to_string(), "too big: 101");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(e.to_string(), "ctx");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+
+        let ar: Result<()> = Err(anyhow!("inner"));
+        let e = ar.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("x").unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn source_chain_is_flattened() {
+        #[derive(Debug)]
+        struct Outer(std::io::Error);
+        impl Display for Outer {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "outer wrapper")
+            }
+        }
+        impl std::error::Error for Outer {
+            fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+                Some(&self.0)
+            }
+        }
+        let e = Error::from(Outer(io_err()));
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, ["outer wrapper", "no such file"]);
+    }
+}

@@ -1,0 +1,143 @@
+//! Offline stub of the `xla` crate (PJRT CPU client bindings).
+//!
+//! The real bindings need the `xla_extension` C++ distribution, which is
+//! not available in the offline build environment. This stub mirrors the
+//! API surface `snnap-c`'s runtime uses so every PJRT code path compiles
+//! and type-checks; constructing a client fails at runtime with a clear
+//! message, and all PJRT-dependent tests/examples already skip loudly
+//! when artifacts (or the runtime) are unavailable.
+//!
+//! Swapping in the real bindings is a Cargo.toml change only — no source
+//! edits — because the method signatures match the `xla` crate used by
+//! the AOT pipeline (see `python/compile/aot.py`).
+
+use std::fmt;
+
+/// Error type matching the real crate's `xla::Error` role.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT runtime unavailable: built against the offline `xla` stub \
+         (install xla_extension and switch rust/vendor/xla for the real \
+         bindings to enable the PJRT backend)"
+            .to_string(),
+    )
+}
+
+/// A PJRT client. The stub cannot construct one.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client — always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    /// Compile a computation — unreachable in practice (no client can
+    /// exist), kept for signature compatibility.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file — always fails in the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation built from an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; returns per-device, per-output
+    /// buffers in the real crate.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// A device-resident buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// A host literal (dense array value).
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 f32 literal.
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    /// Unpack a 1-tuple.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_with_clear_message() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("PJRT runtime unavailable"), "{err}");
+    }
+
+    #[test]
+    fn literal_builders_are_usable() {
+        // The literal constructors must work (they run before any client
+        // interaction in run_batch), even though execution cannot.
+        let lit = Literal::vec1(&[1.0, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(lit.to_tuple1().is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn error_implements_std_error() {
+        fn takes_std<E: std::error::Error>(_: E) {}
+        takes_std(unavailable());
+    }
+}
