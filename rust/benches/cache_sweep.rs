@@ -1,0 +1,73 @@
+//! Cache sweep bench — hit rate / capacity / effective bandwidth of the
+//! YACC-style compressed cache over a small geometry grid (the E9
+//! mechanism, timed). Works from a clean checkout: kernels fall back to
+//! deterministic synthetic weights when `make artifacts` hasn't run,
+//! exactly like `snnapc run-bench`.
+
+use snnap_c::bench_suite::workload;
+use snnap_c::experiments as ex;
+use snnap_c::experiments::e9_cache;
+use snnap_c::fixed::Q7_8;
+use snnap_c::runtime::Manifest;
+use snnap_c::util::bench::BenchRunner;
+
+fn main() {
+    let manifest = Manifest::load(&Manifest::default_path()).ok();
+    if manifest.is_none() {
+        println!("(no artifacts: deterministic synthetic weights; `make artifacts` for trained)\n");
+    }
+
+    let mut runner = BenchRunner::default();
+    let kernels = ["sobel", "jmeint"];
+    let schemes = ["none", "bdi+fpc", "cpack"];
+
+    let mut rows = Vec::new();
+    for name in kernels {
+        let w = workload(name).expect("known kernel");
+        let program = match &manifest {
+            Some(m) => ex::program_from_artifact(m, name, Q7_8)
+                .unwrap_or_else(|_| ex::program_from_workload(w.as_ref(), Q7_8, 42)),
+            None => ex::program_from_workload(w.as_ref(), Q7_8, 42),
+        };
+        for scheme in schemes {
+            for &geometry in &e9_cache::CACHE_CONFIGS {
+                let p = program.clone();
+                let label = format!(
+                    "e9/{name}/{scheme}/{}x{}x{}",
+                    geometry.0, geometry.1, geometry.2
+                );
+                let row = runner.bench(&label, || {
+                    e9_cache::measure(w.as_ref(), p.clone(), scheme, geometry, 32, 4, 31)
+                        .expect("replay is infallible without artifacts")
+                });
+                rows.push(row);
+            }
+        }
+    }
+
+    println!("\n=== hit rate / capacity / effective bandwidth ===");
+    e9_cache::print_table(&rows);
+
+    println!("\n--- compressed-vs-raw summary (same geometry) ---");
+    for name in kernels {
+        for &(sets, ways, degree) in &e9_cache::CACHE_CONFIGS {
+            let cache = format!("{sets}x{ways}x{degree}");
+            let base = rows
+                .iter()
+                .find(|r| r.workload == name && r.scheme == "none" && r.cache == cache)
+                .unwrap();
+            let best = rows
+                .iter()
+                .filter(|r| r.workload == name && r.scheme != "none" && r.cache == cache)
+                .max_by(|a, b| a.hit_rate.total_cmp(&b.hit_rate))
+                .unwrap();
+            println!(
+                "  {name:<8} {cache:<8} hit rate {:5.1}% -> {:5.1}% ({})  dram bytes {:.2}x",
+                base.hit_rate * 100.0,
+                best.hit_rate * 100.0,
+                best.scheme,
+                base.dram_bytes as f64 / best.dram_bytes.max(1) as f64,
+            );
+        }
+    }
+}

@@ -1,0 +1,391 @@
+//! C-Pack cache compression (Chen, Wong & Kim, IEEE TVLSI 2010).
+//!
+//! C-Pack is the canonical *cache* compression algorithm: each 32-bit
+//! word is matched against a small set of static patterns and against a
+//! 16-entry dictionary of recently seen words, and encoded as a short
+//! code plus only the bytes the pattern/dictionary cannot reconstruct.
+//! Unlike FPC (stream patterns) or BDI (one base per line), C-Pack
+//! exploits *repeated* word content within a line — exactly the traffic
+//! shape of tiled weight regions — which is why compressed-cache designs
+//! (YACC among them) pair with it.
+//!
+//! | code  | pattern | meaning                              | total bits    |
+//! |-------|---------|--------------------------------------|---------------|
+//! | 00    | zzzz    | all-zero word                        | 2             |
+//! | 01    | xxxx    | uncompressed word                    | 2 + 32        |
+//! | 10    | mmmm    | full 4-byte dictionary match         | 2 + 4 (index) |
+//! | 1100  | mmxx    | dict match on the upper 2 bytes      | 4 + 4 + 16    |
+//! | 1101  | zzzx    | zero word except the low byte        | 4 + 8         |
+//! | 1110  | mmmx    | dict match on the upper 3 bytes      | 4 + 4 + 8     |
+//!
+//! The dictionary is a 16-entry FIFO seeded empty per line (compression
+//! and decompression rebuild it identically: every word encoded as
+//! `xxxx`, `mmxx` or `mmmx` is pushed). `size_bits` counts codes,
+//! indices and literal bytes exactly, so ratios are bit-accurate, and
+//! decompression round-trips bit-exactly (enforced by proptest in
+//! `rust/tests/compress_roundtrip.rs`).
+
+use super::{Compressed, Compressor, Encoding, LINE_BYTES};
+
+const WORDS: usize = LINE_BYTES / 4;
+/// Dictionary entries (FIFO). The TVLSI design uses 16 x 4-byte entries.
+pub const DICT_ENTRIES: usize = 16;
+const INDEX_BITS: usize = 4;
+
+/// C-Pack compressor over 64-byte lines.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Cpack;
+
+/// LSB-first bit writer (twin of the one in [`super::fpc`], kept local so
+/// each scheme stays self-contained).
+#[derive(Default)]
+struct BitWriter {
+    bytes: Vec<u8>,
+    bitpos: usize,
+}
+
+impl BitWriter {
+    fn push(&mut self, value: u64, nbits: usize) {
+        debug_assert!(nbits <= 32);
+        let value = value & ((1u64 << nbits) - 1);
+        let off = self.bitpos % 8;
+        if off == 0 {
+            let needed = nbits.div_ceil(8);
+            let le = value.to_le_bytes();
+            self.bytes.extend_from_slice(&le[..needed]);
+        } else {
+            let idx = self.bytes.len() - 1;
+            let room = 8 - off;
+            self.bytes[idx] |= (value << off) as u8;
+            if nbits > room {
+                let rest = value >> room;
+                let needed = (nbits - room).div_ceil(8);
+                let le = rest.to_le_bytes();
+                self.bytes.extend_from_slice(&le[..needed]);
+            }
+        }
+        self.bitpos += nbits;
+        let want = self.bitpos.div_ceil(8);
+        self.bytes.truncate(want);
+        debug_assert_eq!(self.bytes.len(), want);
+    }
+}
+
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    bitpos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, bitpos: 0 }
+    }
+
+    fn pull(&mut self, nbits: usize) -> u64 {
+        debug_assert!(nbits <= 32);
+        if nbits == 0 {
+            return 0;
+        }
+        let start = self.bitpos / 8;
+        let off = self.bitpos % 8;
+        let mut buf = [0u8; 8];
+        let end = (self.bitpos + nbits).div_ceil(8).min(self.bytes.len());
+        buf[..end - start].copy_from_slice(&self.bytes[start..end]);
+        let word = u64::from_le_bytes(buf) >> off;
+        self.bitpos += nbits;
+        word & ((1u64 << nbits) - 1)
+    }
+}
+
+/// The 16-entry FIFO dictionary, rebuilt identically on both sides.
+struct Dict {
+    entries: [u32; DICT_ENTRIES],
+    len: usize,
+    head: usize,
+}
+
+impl Dict {
+    fn new() -> Self {
+        Dict { entries: [0; DICT_ENTRIES], len: 0, head: 0 }
+    }
+
+    /// Best match for `w`: full (4 bytes), 3-byte or 2-byte prefix match,
+    /// as (index, matched_bytes). Prefers more matched bytes, then the
+    /// lowest index, so encode/decode agree on ties.
+    fn best_match(&self, w: u32) -> Option<(usize, usize)> {
+        let mut best_i = 0usize;
+        let mut best_m = 0usize;
+        for (i, &e) in self.entries[..self.len].iter().enumerate() {
+            let matched = if e == w {
+                4
+            } else if (e & 0xffff_ff00) == (w & 0xffff_ff00) {
+                3
+            } else if (e & 0xffff_0000) == (w & 0xffff_0000) {
+                2
+            } else {
+                continue;
+            };
+            if matched > best_m {
+                best_i = i;
+                best_m = matched;
+            }
+        }
+        if best_m == 0 {
+            None
+        } else {
+            Some((best_i, best_m))
+        }
+    }
+
+    /// FIFO insert (the TVLSI design pushes every not-fully-matched word).
+    fn push(&mut self, w: u32) {
+        self.entries[self.head] = w;
+        self.head = (self.head + 1) % DICT_ENTRIES;
+        self.len = (self.len + 1).min(DICT_ENTRIES);
+    }
+
+    fn get(&self, i: usize) -> u32 {
+        self.entries[i]
+    }
+}
+
+impl Cpack {
+    /// Compressed size in bits without materializing the payload — used
+    /// by the cache's fit checks and by size-only sweeps.
+    pub fn size_bits_only(line: &[u8]) -> usize {
+        assert_eq!(line.len(), LINE_BYTES);
+        let mut dict = Dict::new();
+        let mut bits = 0usize;
+        for chunk in line.chunks_exact(4) {
+            let w = u32::from_le_bytes(chunk.try_into().unwrap());
+            bits += Self::encode_word(w, &mut dict, None);
+        }
+        bits
+    }
+
+    /// Encode one word into `bw` (or just size it when `bw` is `None`);
+    /// returns the bit cost. The single source of truth for the code
+    /// table, shared by `compress` and `size_bits_only`. The 4-bit codes
+    /// are emitted as two 2-bit groups (the `11` escape first) because
+    /// the bit stream is LSB-first and the decoder reads 2 bits at a time.
+    fn encode_word(w: u32, dict: &mut Dict, bw: Option<&mut BitWriter>) -> usize {
+        let mut emit: [(u64, usize); 4] = [(0, 0); 4];
+        let mut n_emit = 0usize;
+        let mut bits = 0usize;
+        let mut put = |groups: &[(u64, usize)]| {
+            for &(v, n) in groups {
+                emit[n_emit] = (v, n);
+                n_emit += 1;
+                bits += n;
+            }
+        };
+        if w == 0 {
+            put(&[(0b00, 2)]);
+        } else if w & 0xffff_ff00 == 0 {
+            // zzzx: zero except the low byte
+            put(&[(0b11, 2), (0b01, 2), (u64::from(w & 0xff), 8)]);
+        } else {
+            match dict.best_match(w) {
+                Some((i, 4)) => put(&[(0b10, 2), (i as u64, INDEX_BITS)]),
+                Some((i, 3)) => {
+                    // mmmx: upper 3 bytes from the dictionary, low byte literal
+                    put(&[(0b11, 2), (0b10, 2), (i as u64, INDEX_BITS), (u64::from(w & 0xff), 8)]);
+                    dict.push(w);
+                }
+                Some((i, 2)) => {
+                    // mmxx: upper 2 bytes from the dictionary, low half literal
+                    put(&[
+                        (0b11, 2),
+                        (0b00, 2),
+                        (i as u64, INDEX_BITS),
+                        (u64::from(w & 0xffff), 16),
+                    ]);
+                    dict.push(w);
+                }
+                _ => {
+                    // xxxx: uncompressed word, pushed for later matches
+                    put(&[(0b01, 2), (u64::from(w), 32)]);
+                    dict.push(w);
+                }
+            }
+        }
+        if let Some(bw) = bw {
+            for &(v, n) in &emit[..n_emit] {
+                bw.push(v, n);
+            }
+        }
+        bits
+    }
+}
+
+impl Compressor for Cpack {
+    fn name(&self) -> &'static str {
+        "cpack"
+    }
+
+    fn compress(&self, line: &[u8]) -> Compressed {
+        assert_eq!(line.len(), LINE_BYTES);
+        let mut dict = Dict::new();
+        let mut bw = BitWriter::default();
+        let mut bits = 0usize;
+        for chunk in line.chunks_exact(4) {
+            let w = u32::from_le_bytes(chunk.try_into().unwrap());
+            bits += Cpack::encode_word(w, &mut dict, Some(&mut bw));
+        }
+        if bits >= LINE_BYTES * 8 {
+            return Compressed {
+                encoding: Encoding::Uncompressed,
+                size_bits: bits, // honest accounting: C-Pack made it bigger
+                payload: line.to_vec(),
+            };
+        }
+        Compressed { encoding: Encoding::Cpack, size_bits: bits, payload: bw.bytes }
+    }
+
+    fn decompress(&self, c: &Compressed) -> Vec<u8> {
+        match &c.encoding {
+            Encoding::Uncompressed => c.payload.clone(),
+            Encoding::Cpack => {
+                let mut br = BitReader::new(&c.payload);
+                let mut dict = Dict::new();
+                let mut out = Vec::with_capacity(LINE_BYTES);
+                for _ in 0..WORDS {
+                    let w = match br.pull(2) {
+                        0b00 => 0u32,
+                        0b01 => {
+                            let w = br.pull(32) as u32;
+                            dict.push(w);
+                            w
+                        }
+                        0b10 => dict.get(br.pull(INDEX_BITS) as usize),
+                        _ => match br.pull(2) {
+                            // second half of the 4-bit code: 1100 / 1101 / 1110
+                            0b00 => {
+                                let i = br.pull(INDEX_BITS) as usize;
+                                let w = (dict.get(i) & 0xffff_0000) | br.pull(16) as u32;
+                                dict.push(w);
+                                w
+                            }
+                            0b01 => br.pull(8) as u32,
+                            0b10 => {
+                                let i = br.pull(INDEX_BITS) as usize;
+                                let w = (dict.get(i) & 0xffff_ff00) | br.pull(8) as u32;
+                                dict.push(w);
+                                w
+                            }
+                            other => panic!("bad C-Pack code 11{other:02b}"),
+                        },
+                    };
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+                out
+            }
+            other => panic!("not a C-Pack encoding: {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(line: &[u8]) -> Compressed {
+        let c = Cpack;
+        let z = c.compress(line);
+        assert_eq!(c.decompress(&z), line, "{:?}", z.encoding);
+        assert_eq!(z.size_bits, Cpack::size_bits_only(line));
+        z
+    }
+
+    #[test]
+    fn zero_line_costs_two_bits_per_word() {
+        let z = roundtrip(&[0u8; 64]);
+        assert_eq!(z.size_bits, 2 * 16);
+        assert!(z.ratio() > 15.0);
+    }
+
+    #[test]
+    fn repeated_word_hits_the_dictionary() {
+        // one xxxx miss (34 bits) then 15 mmmm hits (6 bits each)
+        let mut line = [0u8; 64];
+        for c in line.chunks_exact_mut(4) {
+            c.copy_from_slice(&0xdead_beefu32.to_le_bytes());
+        }
+        let z = roundtrip(&line);
+        assert_eq!(z.size_bits, 34 + 15 * 6);
+    }
+
+    #[test]
+    fn low_byte_words_use_zzzx() {
+        let mut line = [0u8; 64];
+        for (i, c) in line.chunks_exact_mut(4).enumerate() {
+            c.copy_from_slice(&((i as u32 % 200) + 1).to_le_bytes());
+        }
+        let z = roundtrip(&line);
+        assert_eq!(z.size_bits, 16 * 12);
+    }
+
+    #[test]
+    fn shared_prefix_words_use_partial_matches() {
+        // same upper 3 bytes, varying low byte: one miss then mmmx hits
+        let mut line = [0u8; 64];
+        for (i, c) in line.chunks_exact_mut(4).enumerate() {
+            c.copy_from_slice(&(0x1234_5600u32 | i as u32).to_le_bytes());
+        }
+        let z = roundtrip(&line);
+        assert_eq!(z.size_bits, 34 + 15 * 16);
+    }
+
+    #[test]
+    fn incompressible_marks_expansion_honestly() {
+        let mut s = 0x0123_4567_89ab_cdefu64;
+        let mut line = [0u8; 64];
+        for b in &mut line {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            *b = (s >> 32) as u8;
+        }
+        let z = roundtrip(&line);
+        assert!(z.size_bits >= 512);
+        assert_eq!(z.encoding, Encoding::Uncompressed);
+    }
+
+    #[test]
+    fn clustered_weight_lines_compress() {
+        // Q7.8 weights cluster on few distinct quanta after rounding;
+        // repeated word content is exactly C-Pack's dictionary case
+        let pool: [i16; 4] = [-96, -32, 0, 64];
+        let mut line = [0u8; 64];
+        for (i, c) in line.chunks_exact_mut(2).enumerate() {
+            c.copy_from_slice(&pool[i % 4].to_le_bytes());
+        }
+        let z = roundtrip(&line);
+        // 2 distinct words -> 2 misses + 14 full dictionary hits
+        assert_eq!(z.size_bits, 2 * 34 + 14 * 6);
+    }
+
+    #[test]
+    fn prop_roundtrip_any_line() {
+        crate::util::prop::check(400, |rng| {
+            let line = rng.bytes(64);
+            roundtrip(&line);
+        });
+    }
+
+    #[test]
+    fn prop_roundtrip_dictionary_heavy_lines() {
+        // draw words from a tiny pool so dictionary hits dominate
+        crate::util::prop::check(300, |rng| {
+            let pool: Vec<u32> = (0..4).map(|_| rng.next_u32()).collect();
+            let mut line = [0u8; 64];
+            for c in line.chunks_exact_mut(4) {
+                let w = pool[rng.range(0, pool.len())];
+                c.copy_from_slice(&w.to_le_bytes());
+            }
+            let z = roundtrip(&line);
+            // >= 5 repeats of <= 4 distinct words must beat raw
+            assert!(z.size_bits < 512, "{}", z.size_bits);
+        });
+    }
+}

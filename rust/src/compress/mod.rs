@@ -9,6 +9,8 @@
 //!   layout that turns per-line compression into main-memory bandwidth
 //!   gains with O(1) address calculation
 //! * [`hybrid`] — the per-line best-of BDI∪FPC selector LCP uses
+//! * [`cpack`] — C-Pack (Chen et al., TVLSI'10), the pattern+dictionary
+//!   scheme compressed caches pair with (see [`crate::cache`])
 //!
 //! All compressors implement [`Compressor`]: `compress` returns a
 //! [`Compressed`] whose `size_bits` is the exact on-the-wire cost
@@ -16,12 +18,14 @@
 //! bit-exactly (enforced by proptest in every submodule).
 
 pub mod bdi;
+pub mod cpack;
 pub mod fpc;
 pub mod hybrid;
 pub mod lcp;
 pub mod stats;
 
 pub use bdi::Bdi;
+pub use cpack::Cpack;
 pub use fpc::Fpc;
 pub use hybrid::Hybrid;
 pub use stats::{CompressionStats, SchemeReport};
@@ -66,6 +70,8 @@ pub enum Encoding {
     /// Hybrid selected BDI (...) or FPC.
     HybridBdi(bdi::BdiEncoding),
     HybridFpc,
+    /// C-Pack: the per-word code + dictionary stream is in the payload.
+    Cpack,
 }
 
 /// A cache-line compressor. Implementations must be deterministic and
@@ -113,6 +119,7 @@ pub fn all_schemes() -> Vec<Box<dyn Compressor>> {
         Box::new(Bdi::default()),
         Box::new(Fpc::default()),
         Box::new(Hybrid::default()),
+        Box::new(Cpack::default()),
     ]
 }
 
@@ -163,7 +170,7 @@ mod tests {
         let names: Vec<_> = all_schemes().iter().map(|s| s.name()).collect();
         let mut dedup = names.clone();
         dedup.dedup();
-        assert_eq!(names.len(), 4);
+        assert_eq!(names.len(), 5);
         assert_eq!(names, dedup);
     }
 }

@@ -30,8 +30,16 @@ fn tag_name(e: &Encoding) -> String {
             }
         },
         Encoding::Fpc | Encoding::HybridFpc => "fpc".into(),
+        Encoding::Cpack => "cpack".into(),
     }
 }
+
+/// Cap for reported compression ratios on degenerate streams (zero
+/// compressed bytes, e.g. an empty stream). `util::json` maps non-finite
+/// numbers to `null`, which silently knocked the `ratio` field out of
+/// the harness report; a large finite cap keeps the field numeric while
+/// the exact rational stays available as `raw_bytes` / `compressed_bytes`.
+pub const RATIO_CAP: f64 = 1e9;
 
 impl CompressionStats {
     /// Build stats from per-line results.
@@ -51,7 +59,11 @@ impl CompressionStats {
             lines: lines.len(),
             raw_bytes: raw,
             compressed_bytes: compressed,
-            ratio: if compressed == 0 { f64::INFINITY } else { raw as f64 / compressed as f64 },
+            ratio: if compressed == 0 {
+                RATIO_CAP
+            } else {
+                (raw as f64 / compressed as f64).min(RATIO_CAP)
+            },
             uncompressed_frac: if lines.is_empty() { 0.0 } else { unc as f64 / lines.len() as f64 },
             encodings,
         }
@@ -71,11 +83,9 @@ impl CompressionStats {
             ("lines", self.lines.into()),
             ("raw_bytes", self.raw_bytes.into()),
             ("compressed_bytes", self.compressed_bytes.into()),
-            (
-                "ratio",
-                // empty streams have an infinite ratio; JSON has no inf
-                if self.ratio.is_finite() { self.ratio.into() } else { Json::Null },
-            ),
+            // always finite (capped at RATIO_CAP in from_lines), so the
+            // JSON field is always a number, never null
+            ("ratio", self.ratio.into()),
             ("uncompressed_frac", self.uncompressed_frac.into()),
             (
                 "encodings",
@@ -157,8 +167,15 @@ mod tests {
     fn report_covers_all_schemes() {
         let r = SchemeReport::measure("test", &vec![0u8; 256]);
         let names: Vec<_> = r.stats.iter().map(|s| s.scheme.as_str()).collect();
-        assert_eq!(names, ["none", "bdi", "fpc", "bdi+fpc"]);
-        assert!(r.table().lines().count() == 4);
+        assert_eq!(names, ["none", "bdi", "fpc", "bdi+fpc", "cpack"]);
+        assert!(r.table().lines().count() == 5);
+    }
+
+    #[test]
+    fn cpack_encodings_land_in_the_histogram() {
+        let s = CompressionStats::measure(&crate::compress::Cpack, &vec![0u8; 64 * 10]);
+        assert_eq!(s.encodings.get("cpack"), Some(&10));
+        assert_eq!(s.uncompressed_frac, 0.0);
     }
 
     #[test]
@@ -175,13 +192,23 @@ mod tests {
         let j = Json::parse(&r.to_json().dump()).unwrap();
         assert_eq!(j.get("workload").unwrap().as_str(), Some("t"));
         let schemes = j.get("schemes").unwrap().as_arr().unwrap();
-        assert_eq!(schemes.len(), 4);
+        assert_eq!(schemes.len(), 5);
         assert_eq!(schemes[0].get("scheme").unwrap().as_str(), Some("none"));
         assert!(schemes[0].get("ratio").unwrap().as_f64().is_some());
+    }
 
-        // infinite ratio (empty stream) serializes as null, stays valid JSON
+    #[test]
+    fn degenerate_ratio_is_capped_finite_in_json() {
+        use crate::util::json::Json;
+        // empty stream: compressed == 0; the old f64::INFINITY sentinel
+        // leaked to JSON as null via the NaN/inf rule in util::json
         let empty = CompressionStats::measure(&Bdi, &[]);
+        assert_eq!(empty.ratio, RATIO_CAP);
+        assert!(empty.ratio.is_finite());
         let j = Json::parse(&empty.to_json().dump()).unwrap();
-        assert_eq!(j.get("ratio"), Some(&Json::Null));
+        assert_eq!(j.get("ratio").unwrap().as_f64(), Some(RATIO_CAP));
+        // the exact rational stays recoverable from the byte counters
+        assert_eq!(j.get("raw_bytes").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("compressed_bytes").unwrap().as_usize(), Some(0));
     }
 }

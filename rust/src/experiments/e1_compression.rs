@@ -133,7 +133,7 @@ mod tests {
         let rows = measure_workload(w.as_ref(), p, Q7_8, 64, 3);
         assert_eq!(rows.len(), 3);
         for r in &rows {
-            assert_eq!(r.report.stats.len(), 4);
+            assert_eq!(r.report.stats.len(), 5);
             for s in &r.report.stats {
                 assert!(s.ratio > 0.2 && s.ratio.is_finite());
             }
@@ -183,7 +183,7 @@ mod tests {
         let p = super::super::program_from_workload(w.as_ref(), Q7_8, 3);
         let rows = measure_workload(w.as_ref(), p, Q7_8, 32, 9);
         let g = geomean_by_scheme(&rows);
-        assert_eq!(g.len(), 4);
+        assert_eq!(g.len(), 5);
         let none = g.iter().find(|(k, _)| k == "none").unwrap().1;
         assert!((none - 1.0).abs() < 1e-9);
     }

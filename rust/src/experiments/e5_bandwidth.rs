@@ -14,7 +14,7 @@
 use anyhow::Result;
 
 use crate::bench_suite::{all_workloads, Workload};
-use crate::compress::{Bdi, Compressor, Fpc, Hybrid};
+use crate::compress::{Bdi, Compressor, Cpack, Fpc, Hybrid};
 use crate::fixed::QFormat;
 use crate::mem::{ChannelConfig, CompressedDram, DramMode};
 use crate::npu::{NpuConfig, PuSim};
@@ -55,12 +55,15 @@ impl E5Row {
     }
 }
 
-fn scheme_by_name(name: &str) -> Option<Box<dyn Compressor>> {
+/// Per-line compressor for a scheme name ("none" = uncompressed) —
+/// shared with E9, which sweeps the same scheme list.
+pub(crate) fn scheme_by_name(name: &str) -> Option<Box<dyn Compressor>> {
     match name {
         "none" => None,
         "bdi" => Some(Box::new(Bdi)),
         "fpc" => Some(Box::new(Fpc)),
         "bdi+fpc" => Some(Box::new(Hybrid::default())),
+        "cpack" => Some(Box::new(Cpack)),
         other => panic!("unknown scheme {other}"),
     }
 }
@@ -146,7 +149,8 @@ pub fn measure(
     })
 }
 
-pub const SCHEMES: [&str; 4] = ["none", "bdi", "fpc", "bdi+fpc"];
+/// Every scheme the per-scheme experiments (E5, E9) sweep.
+pub const SCHEMES: [&str; 5] = ["none", "bdi", "fpc", "bdi+fpc", "cpack"];
 
 /// Full E5: every workload x scheme.
 pub fn run(fmt: QFormat, batch: usize, batches: usize) -> Result<Vec<E5Row>> {

@@ -1,0 +1,303 @@
+//! E9 — compressed cache capacity: hit rate & effective bandwidth of a
+//! YACC-style superblock cache fronting the (LCP-compressed) DRAM.
+//!
+//! E5 measures the *bandwidth* half of the paper's thesis (compressed
+//! transfers over the channel); E9 measures the *capacity* half: the
+//! same multi-tenant replay (per-batch weight reload + invocation
+//! queues) runs against a `channel → cache → LCP-DRAM` hierarchy, and
+//! per-line compression lets one 64-byte data way hold several blocks —
+//! so the same SRAM geometry captures a larger working set, hits more,
+//! and sends fewer lines to DRAM. Each row is one (kernel, scheme,
+//! cache-geometry) cell; `none` rows are the same-geometry uncompressed
+//! baseline the compressed configs are judged against.
+
+use anyhow::Result;
+
+use crate::bench_suite::{all_workloads, Workload};
+use crate::cache::{CacheConfig, CompressedCache};
+use crate::compress::LINE_BYTES;
+use crate::fixed::QFormat;
+use crate::mem::{Channel, ChannelConfig, CompressedDram, DramMode, MemoryLevel};
+use crate::npu::{NpuConfig, PuSim};
+use crate::trace::Trace;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::e5_bandwidth::scheme_by_name;
+
+/// The cache-geometry sweep: (sets, ways, superblock degree). Spans
+/// SRAM budgets below, at and above the replay's working set so the
+/// capacity effect is visible in the hit-rate column.
+pub const CACHE_CONFIGS: [(usize, usize, usize); 3] = [(8, 2, 4), (16, 4, 4), (32, 8, 4)];
+
+/// Queue region base (away from the weight region's pages).
+const QUEUE_BASE: u64 = 1 << 20;
+
+#[derive(Debug, Clone)]
+pub struct E9Row {
+    pub workload: String,
+    pub scheme: String,
+    /// Geometry label, e.g. `16x4x4`.
+    pub cache: String,
+    pub sets: usize,
+    pub ways: usize,
+    pub degree: usize,
+    /// Physical SRAM data bytes of the geometry.
+    pub capacity_bytes: usize,
+    pub accesses: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub hit_rate: f64,
+    pub evictions: u64,
+    pub writebacks: u64,
+    /// Resident lines per data way at end of replay (>1 = compression
+    /// bought capacity; the uncompressed baseline caps at 1.0).
+    pub effective_capacity_ratio: f64,
+    /// Logical bytes the accelerator asked the hierarchy for.
+    pub logical_bytes: u64,
+    /// Physical bytes that actually crossed the DRAM channel.
+    pub dram_bytes: u64,
+    /// logical / physical — the delivered effective-bandwidth gain.
+    pub amplification: f64,
+    /// Hierarchy cycles for the whole replay (DRAM-channel clock).
+    pub mem_cycles: u64,
+}
+
+impl E9Row {
+    /// Machine-readable form for the harness report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("scheme", self.scheme.clone().into()),
+            ("cache", self.cache.clone().into()),
+            ("sets", self.sets.into()),
+            ("ways", self.ways.into()),
+            ("degree", self.degree.into()),
+            ("capacity_bytes", self.capacity_bytes.into()),
+            ("accesses", self.accesses.into()),
+            ("hits", self.hits.into()),
+            ("misses", self.misses.into()),
+            ("hit_rate", self.hit_rate.into()),
+            ("evictions", self.evictions.into()),
+            ("writebacks", self.writebacks.into()),
+            ("effective_capacity_ratio", self.effective_capacity_ratio.into()),
+            ("logical_bytes", self.logical_bytes.into()),
+            ("dram_bytes", self.dram_bytes.into()),
+            ("amplification", self.amplification.into()),
+            ("mem_cycles", self.mem_cycles.into()),
+        ])
+    }
+}
+
+/// Build the `cache → DRAM` hierarchy for one (scheme, geometry) cell:
+/// the cache compresses lines with the scheme, the DRAM stores pages in
+/// LCP layout under the same scheme (`none` = raw both).
+fn build_hierarchy(scheme: &str, geometry: (usize, usize, usize)) -> CompressedCache {
+    let dram = match scheme_by_name(scheme) {
+        None => CompressedDram::new(DramMode::Raw, ChannelConfig::zc702_ddr3()),
+        Some(c) => CompressedDram::new(DramMode::Lcp(c), ChannelConfig::zc702_ddr3()),
+    };
+    let (sets, ways, degree) = geometry;
+    let cfg = CacheConfig::new(sets, ways, degree);
+    CompressedCache::new(cfg, scheme_by_name(scheme), Box::new(dram))
+}
+
+/// Replay `batches` batches of the multi-tenant access stream (weight
+/// reload + input/output queues) for one workload through one
+/// (scheme, geometry) hierarchy.
+///
+/// The replay mirrors `NpuDevice::with_memory`'s access pattern but
+/// drives the hierarchy directly: E9 needs the slot-padded
+/// multi-configuration weight region and raw access counts, not the
+/// device's batch-timing composition.
+pub fn measure(
+    w: &dyn Workload,
+    program: crate::npu::NpuProgram,
+    scheme: &str,
+    geometry: (usize, usize, usize),
+    batch: usize,
+    batches: usize,
+    seed: u64,
+) -> Result<E9Row> {
+    let fmt = program.fmt;
+    let cfg = NpuConfig::default();
+    let mut rng = Rng::new(seed);
+    let mut mem = build_hierarchy(scheme, geometry);
+
+    let pu = PuSim::new(program.clone(), cfg.array_width);
+    // Weight region: many NN configurations back to back (the
+    // multi-tenant store E5 models), each zero-padded to a 256-byte DMA
+    // slot — one degree-4 superblock — as a DMA engine would lay them
+    // out. The dense weight lines and the slot's zero-pad tail lines
+    // are exactly the mix a superblock cache packs.
+    let one = Trace::weights(&program).bytes;
+    let slot = one.len().next_multiple_of(256).max(256);
+    let slots = 4096_usize.div_ceil(slot).max(1);
+    let mut weight_region = vec![0u8; slots * slot];
+    for s in 0..slots {
+        weight_region[s * slot..s * slot + one.len()].copy_from_slice(&one);
+    }
+    MemoryLevel::load(&mut mem, 0, &weight_region);
+    let weight_lines = weight_region.len() / LINE_BYTES;
+
+    let mut cycles = 0u64;
+    for _ in 0..batches {
+        // (1) weight reload for this batch's configuration
+        for i in 0..weight_lines {
+            cycles += mem.read_line((i * LINE_BYTES) as u64).1;
+        }
+        // (2) input queue: CPU writes, NPU reads; (3) output queue:
+        // NPU writes, CPU reads — both through the hierarchy
+        let inputs = w.gen_batch(&mut rng, batch);
+        let outputs: Vec<Vec<f32>> = inputs.iter().map(|x| pu.forward_f32(x)).collect();
+        let in_trace = Trace::inputs(w.name(), fmt, &inputs).bytes;
+        let out_trace = Trace::outputs(w.name(), fmt, &outputs).bytes;
+        let mut addr = QUEUE_BASE;
+        for stream in [&in_trace, &out_trace] {
+            for chunk in stream.chunks(LINE_BYTES) {
+                let mut line = [0u8; LINE_BYTES];
+                line[..chunk.len()].copy_from_slice(chunk);
+                cycles += mem.write_line(addr, &line);
+                cycles += mem.read_line(addr).1;
+                addr += LINE_BYTES as u64;
+            }
+        }
+    }
+    cycles += mem.flush();
+
+    let stats = mem.stats;
+    let (logical, physical) = MemoryLevel::traffic(&mem);
+    let (sets, ways, degree) = geometry;
+    Ok(E9Row {
+        workload: w.name().to_string(),
+        scheme: scheme.to_string(),
+        cache: mem.cfg.label(),
+        sets,
+        ways,
+        degree,
+        capacity_bytes: mem.cfg.capacity_bytes(),
+        accesses: stats.accesses(),
+        hits: stats.hits,
+        misses: stats.misses,
+        hit_rate: stats.hit_rate(),
+        evictions: stats.evictions,
+        writebacks: stats.writebacks,
+        effective_capacity_ratio: mem.effective_capacity_ratio(),
+        logical_bytes: logical,
+        dram_bytes: physical,
+        amplification: Channel::effective_amplification(logical, physical),
+        mem_cycles: cycles,
+    })
+}
+
+/// All cache geometries for one (workload, scheme) — one harness job.
+pub fn measure_all_configs(
+    w: &dyn Workload,
+    program: crate::npu::NpuProgram,
+    scheme: &str,
+    batch: usize,
+    batches: usize,
+    seed: u64,
+) -> Result<Vec<E9Row>> {
+    CACHE_CONFIGS
+        .iter()
+        .map(|&g| measure(w, program.clone(), scheme, g, batch, batches, seed))
+        .collect()
+}
+
+/// Full E9: every workload x scheme x geometry (run-bench / bench use).
+pub fn run(fmt: QFormat, batch: usize, batches: usize) -> Result<Vec<E9Row>> {
+    let manifest = super::load_manifest().ok();
+    let mut rows = Vec::new();
+    for w in all_workloads() {
+        let program = match &manifest {
+            Some(m) => super::program_from_artifact(m, w.name(), fmt)?,
+            None => super::program_from_workload(w.as_ref(), fmt, 42),
+        };
+        for scheme in super::e5_bandwidth::SCHEMES {
+            let r = measure_all_configs(w.as_ref(), program.clone(), scheme, batch, batches, 31)?;
+            rows.extend(r);
+        }
+    }
+    Ok(rows)
+}
+
+pub fn print_table(rows: &[E9Row]) {
+    let mut t = Table::new(&[
+        "workload",
+        "scheme",
+        "cache",
+        "capacity",
+        "hit-rate",
+        "cap-ratio",
+        "dram(KB)",
+        "amplif",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.workload.clone(),
+            r.scheme.clone(),
+            r.cache.clone(),
+            format!("{}KB", r.capacity_bytes / 1024),
+            format!("{:5.1}%", r.hit_rate * 100.0),
+            format!("{:.2}", r.effective_capacity_ratio),
+            format!("{:.1}", r.dram_bytes as f64 / 1024.0),
+            format!("{:.3}x", r.amplification),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::workload;
+    use crate::fixed::Q7_8;
+
+    fn row(scheme: &str, geometry: (usize, usize, usize)) -> E9Row {
+        let w = workload("sobel").unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+        measure(w.as_ref(), p, scheme, geometry, 32, 4, 3).unwrap()
+    }
+
+    #[test]
+    fn compression_buys_hit_rate_at_fixed_geometry() {
+        let base = row("none", (16, 4, 4));
+        let comp = row("bdi+fpc", (16, 4, 4));
+        assert!(
+            comp.hit_rate > base.hit_rate,
+            "compressed {:.3} must beat uncompressed {:.3}",
+            comp.hit_rate,
+            base.hit_rate
+        );
+        assert!(comp.effective_capacity_ratio > 1.0);
+        assert!(base.effective_capacity_ratio <= 1.0 + 1e-12);
+        assert!(comp.dram_bytes < base.dram_bytes, "fewer misses + LCP pages -> less DRAM traffic");
+    }
+
+    #[test]
+    fn bigger_geometry_never_hits_less() {
+        let small = row("cpack", CACHE_CONFIGS[0]);
+        let big = row("cpack", CACHE_CONFIGS[2]);
+        assert!(big.hit_rate >= small.hit_rate, "{} vs {}", big.hit_rate, small.hit_rate);
+    }
+
+    #[test]
+    fn logical_traffic_identical_across_schemes() {
+        let a = row("none", (16, 4, 4));
+        let b = row("cpack", (16, 4, 4));
+        assert_eq!(a.logical_bytes, b.logical_bytes);
+        assert_eq!(a.accesses, b.accesses);
+    }
+
+    #[test]
+    fn rows_serialize_with_the_acceptance_fields() {
+        let r = row("bdi", CACHE_CONFIGS[1]);
+        let j = Json::parse(&r.to_json().dump()).unwrap();
+        for field in ["hit_rate", "effective_capacity_ratio", "dram_bytes", "cache", "scheme"] {
+            assert!(j.get(field).is_some(), "missing {field}");
+        }
+        assert!(j.get("hit_rate").unwrap().as_f64().unwrap() >= 0.0);
+    }
+}

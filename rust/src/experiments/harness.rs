@@ -1,6 +1,6 @@
 //! Unified, multi-threaded experiment harness.
 //!
-//! One registry ([`EXPERIMENTS`]) describes E1..E8; [`build_jobs`] expands
+//! One registry ([`EXPERIMENTS`]) describes E1..E9; [`build_jobs`] expands
 //! a [`HarnessConfig`] into the full sweep grid (every bench_suite kernel
 //! × every compression scheme where the experiment varies by scheme, plus
 //! the synthetic-distribution jobs); [`run`] fans the jobs out over a
@@ -28,7 +28,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::{e1_compression, e2_speedup, e3_energy, e4_quality, e5_bandwidth};
-use super::{e6_batching, e7_lcp, e8_ablation};
+use super::{e6_batching, e7_lcp, e8_ablation, e9_cache};
 
 /// What a job measures: a bench_suite kernel or a synthetic distribution.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -64,7 +64,7 @@ pub struct Scenario {
 /// A registry entry describing one experiment.
 #[derive(Debug, Clone, Copy)]
 pub struct ExperimentSpec {
-    /// Stable id ("e1".."e8") — the CLI/CI selector and report key.
+    /// Stable id ("e1".."e9") — the CLI/CI selector and report key.
     pub id: &'static str,
     pub title: &'static str,
     /// Whether the sweep fans out one job per compression scheme.
@@ -74,7 +74,7 @@ pub struct ExperimentSpec {
 }
 
 /// All experiments, in report order.
-pub static EXPERIMENTS: [ExperimentSpec; 8] = [
+pub static EXPERIMENTS: [ExperimentSpec; 9] = [
     ExperimentSpec {
         id: "e1",
         title: "compression ratio per workload stream",
@@ -123,6 +123,12 @@ pub static EXPERIMENTS: [ExperimentSpec; 8] = [
         per_scheme: false,
         synthetics: false,
     },
+    ExperimentSpec {
+        id: "e9",
+        title: "compressed cache capacity / hit rate / effective bandwidth",
+        per_scheme: true, // cache + DRAM compressed with the same scheme
+        synthetics: false,
+    },
 ];
 
 /// Look an experiment up by id.
@@ -130,10 +136,10 @@ pub fn experiment(id: &str) -> Option<&'static ExperimentSpec> {
     EXPERIMENTS.iter().find(|e| e.id == id)
 }
 
-/// Sweep configuration (defaults = the full e1–e8 grid).
+/// Sweep configuration (defaults = the full e1–e9 grid).
 #[derive(Debug, Clone)]
 pub struct HarnessConfig {
-    /// Experiment ids to run (subset of "e1".."e8").
+    /// Experiment ids to run (subset of "e1".."e9").
     pub experiments: Vec<String>,
     /// Kernels to sweep (subset of the bench_suite names).
     pub benchmarks: Vec<String>,
@@ -218,7 +224,7 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
     let mut jobs = Vec::new();
     for id in &cfg.experiments {
         let spec = experiment(id)
-            .with_context(|| format!("unknown experiment {id:?} (expected e1..e8)"))?;
+            .with_context(|| format!("unknown experiment {id:?} (expected e1..e9)"))?;
         let schemes: Vec<&str> = if spec.per_scheme {
             cfg.schemes.iter().map(String::as_str).collect()
         } else {
@@ -367,6 +373,14 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
             let mut rng = Rng::new(seed);
             let page = s.generate(PAGE_BYTES, &mut rng);
             Ok(vec![e7_lcp::measure_page(name, &page, seed).to_json()])
+        }
+        ("e9", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let batches = sc.invocations.div_ceil(sc.batch).max(1);
+            let rows =
+                e9_cache::measure_all_configs(w.as_ref(), p, &sc.scheme, sc.batch, batches, seed)?;
+            Ok(rows.iter().map(e9_cache::E9Row::to_json).collect())
         }
         ("e8", Target::Bench(b)) => {
             let w = workload(b).unwrap();
@@ -544,9 +558,10 @@ mod tests {
     #[test]
     fn registry_ids_are_unique_and_ordered() {
         let ids: Vec<_> = EXPERIMENTS.iter().map(|e| e.id).collect();
-        assert_eq!(ids, ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8"]);
+        assert_eq!(ids, ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9"]);
         assert!(experiment("e5").unwrap().per_scheme);
-        assert!(experiment("e9").is_none());
+        assert!(experiment("e9").unwrap().per_scheme);
+        assert!(experiment("e10").is_none());
     }
 
     #[test]
@@ -557,9 +572,10 @@ mod tests {
         let n_synth = Synthetic::all().len();
         assert_eq!(count("e1"), 7 + n_synth);
         assert_eq!(count("e2"), 7);
-        assert_eq!(count("e5"), 7 * 4, "e5 fans out per scheme");
+        assert_eq!(count("e5"), 7 * 5, "e5 fans out per scheme");
         assert_eq!(count("e7"), 7 + n_synth);
         assert_eq!(count("e8"), 7);
+        assert_eq!(count("e9"), 7 * 5, "e9 fans out per scheme");
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Experiment implementations E1..E8 (see DESIGN.md §2).
+//! Experiment implementations E1..E9 (see DESIGN.md §2).
 //!
 //! Each experiment is a pure function from configuration to printable
 //! rows, so the CLI (`snnapc run-bench`), the criterion-style bench
@@ -6,7 +6,7 @@
 //! one implementation and EXPERIMENTS.md quotes a single source of truth.
 //!
 //! [`harness`] layers a registry + worker pool on top: one command runs
-//! the whole e1–e8 sweep (kernels × schemes) in parallel and emits a
+//! the whole e1–e9 sweep (kernels × schemes) in parallel and emits a
 //! single machine-readable JSON report (`snnapc experiments --all`).
 
 pub mod e1_compression;
@@ -17,6 +17,7 @@ pub mod e5_bandwidth;
 pub mod e6_batching;
 pub mod e7_lcp;
 pub mod e8_ablation;
+pub mod e9_cache;
 pub mod harness;
 
 pub use harness::{HarnessConfig, HarnessReport};

@@ -7,6 +7,7 @@
 //! See DESIGN.md for the system inventory and experiment index.
 
 pub mod bench_suite;
+pub mod cache;
 pub mod compress;
 pub mod cli;
 pub mod config;

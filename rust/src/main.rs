@@ -4,9 +4,9 @@
 //!   info            show artifact manifest + effective config
 //!   serve           start the batching server and drive it with a
 //!                   synthetic open-loop client (requests/s, duration)
-//!   experiments     run the e1..e8 sweep in parallel and emit one
+//!   experiments     run the e1..e9 sweep in parallel and emit one
 //!                   consolidated JSON report (the harness)
-//!   run-bench       print experiment tables: e1..e8 or all (serial)
+//!   run-bench       print experiment tables: e1..e9 or all (serial)
 //!   compress-file   per-scheme compression report for any file
 //!   trace           dump + compress a benchmark's NPU streams
 //!   config          print the effective configuration (reloadable)
@@ -33,7 +33,7 @@ use snnap_c::runtime::{Manifest, NpuExecutor};
 use snnap_c::trace::Trace;
 use snnap_c::util::rng::Rng;
 
-const HELP: &str = "snnapc — systolic NPU + compressed memory (see README.md)
+const HELP: &str = "snnapc — systolic NPU + compressed cache/memory hierarchy (see README.md)
 
 USAGE: snnapc <command> [--options]
 
@@ -44,21 +44,23 @@ COMMANDS:
     --requests N            total requests (default 2000)
     --clients N             client threads (default 4)
     --backend sim|pjrt      execution backend (default sim)
-  experiments               parallel e1..e8 sweep + one JSON report
+  experiments               parallel e1..e9 sweep + one JSON report
     --all                   run every experiment (default when no
                             --experiment is given)
-    --experiment LIST       subset, e.g. e1 or e1,e5,e7
+    --experiment LIST       subset, e.g. e1 or e1,e5,e9
     --benchmarks LIST       kernels to sweep (default: all seven)
     --schemes LIST          schemes for per-scheme experiments
-                            (none|bdi|fpc|bdi+fpc; default: all)
+                            (none|bdi|fpc|bdi+fpc|cpack; default: all)
     --jobs N                worker threads (default: CPU count)
     --invocations N         stream length knob (default 256)
     --batch N               batch size (default batch.max)
     --seed N                base RNG seed (default 42)
     --out FILE              write the JSON report here
                             (default harness-report.json)
+                            (e9 sweeps kernels x schemes x cache
+                            geometries through cache -> LCP-DRAM)
   run-bench                 print experiment tables (serial)
-    --experiment e1..e8|all which experiment (default all)
+    --experiment e1..e9|all which experiment (default all)
     --invocations N         stream length knob (default 256)
   compress-file FILE        per-scheme report for a file
   trace                     dump a benchmark's NPU streams
@@ -280,6 +282,10 @@ fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
             Err(e) if run_all => println!("needs artifacts: {e}"),
             Err(e) => return Err(e),
         }
+    }
+    if run_all || which == "e9" {
+        println!("\n== E9: compressed cache capacity (YACC superblocks over LCP-DRAM) ==");
+        ex::e9_cache::print_table(&ex::e9_cache::run(cfg.qformat, cfg.policy.max_batch, 4)?);
     }
     Ok(())
 }

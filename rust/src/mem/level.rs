@@ -1,0 +1,133 @@
+//! [`MemoryLevel`] — the one interface every level of the memory
+//! hierarchy speaks, so levels compose: channel → cache → LCP-DRAM.
+//!
+//! A level moves 64-byte lines and reports the cycle cost of each access
+//! at its own clock. [`crate::mem::CompressedDram`] is the terminal level
+//! (page store + channel billing), [`crate::cache::CompressedCache`] is a
+//! filtering level that forwards misses to whatever level backs it, and a
+//! bare [`Channel`] is the degenerate data-less level used for
+//! pure-timing replay (reads return zero lines, writes are dropped —
+//! only the billing matters).
+
+use crate::compress::LINE_BYTES;
+
+use super::channel::Channel;
+use super::dram::CompressedDram;
+
+/// One level of the memory hierarchy: line-granular reads/writes with
+/// cycle accounting, unbilled DMA initialization, and traffic counters.
+pub trait MemoryLevel: Send {
+    /// Short name for reports ("dram", "cache", "channel").
+    fn level_name(&self) -> &'static str;
+
+    /// Read one 64-byte line; returns (data, cycles at this level's clock).
+    fn read_line(&mut self, addr: u64) -> (Vec<u8>, u64);
+
+    /// Write one 64-byte line; returns cycles.
+    fn write_line(&mut self, addr: u64, line: &[u8]) -> u64;
+
+    /// Bulk-load a line-aligned byte range without billing — models DMA
+    /// initialization of weights/inputs before timed replay starts.
+    fn load(&mut self, addr: u64, data: &[u8]);
+
+    /// Write any dirty buffered state back to the terminal level; returns
+    /// cycles. The terminal levels have nothing to flush.
+    fn flush(&mut self) -> u64 {
+        0
+    }
+
+    /// (logical, physical) bytes moved so far — the amplification pair.
+    fn traffic(&self) -> (u64, u64);
+
+    /// Clock of the cycles this level reports, in MHz.
+    fn clock_mhz(&self) -> f64;
+}
+
+impl MemoryLevel for CompressedDram {
+    fn level_name(&self) -> &'static str {
+        "dram"
+    }
+
+    fn read_line(&mut self, addr: u64) -> (Vec<u8>, u64) {
+        CompressedDram::read_line(self, addr)
+    }
+
+    fn write_line(&mut self, addr: u64, line: &[u8]) -> u64 {
+        CompressedDram::write_line(self, addr, line)
+    }
+
+    fn load(&mut self, addr: u64, data: &[u8]) {
+        CompressedDram::load(self, addr, data);
+    }
+
+    fn traffic(&self) -> (u64, u64) {
+        (self.logical_bytes, self.physical_bytes)
+    }
+
+    fn clock_mhz(&self) -> f64 {
+        self.channel.cfg.clock_mhz
+    }
+}
+
+/// The zero-storage bus endpoint: every access bills one full-line
+/// transfer and carries no data (reads return zero lines). Useful when
+/// only the timing of a stream matters, e.g. what-if replays.
+impl MemoryLevel for Channel {
+    fn level_name(&self) -> &'static str {
+        "channel"
+    }
+
+    fn read_line(&mut self, _addr: u64) -> (Vec<u8>, u64) {
+        (vec![0u8; LINE_BYTES], self.transfer(LINE_BYTES))
+    }
+
+    fn write_line(&mut self, _addr: u64, line: &[u8]) -> u64 {
+        assert_eq!(line.len(), LINE_BYTES);
+        self.transfer(LINE_BYTES)
+    }
+
+    fn load(&mut self, _addr: u64, _data: &[u8]) {}
+
+    fn traffic(&self) -> (u64, u64) {
+        let s = self.stats();
+        (s.payload_bytes, s.payload_bytes)
+    }
+
+    fn clock_mhz(&self) -> f64 {
+        self.cfg.clock_mhz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{ChannelConfig, DramMode};
+
+    #[test]
+    fn dram_satisfies_the_trait() {
+        let mut d: Box<dyn MemoryLevel> =
+            Box::new(CompressedDram::new(DramMode::Raw, ChannelConfig::zc702_ddr3()));
+        let line = [3u8; LINE_BYTES];
+        let wc = d.write_line(0, &line);
+        let (back, rc) = d.read_line(0);
+        assert_eq!(back, line);
+        assert!(wc > 0 && rc > 0);
+        assert_eq!(d.flush(), 0);
+        let (logical, physical) = d.traffic();
+        assert_eq!(logical, 2 * LINE_BYTES as u64);
+        assert_eq!(physical, 2 * LINE_BYTES as u64);
+        assert_eq!(d.level_name(), "dram");
+    }
+
+    #[test]
+    fn channel_is_a_data_less_timing_endpoint() {
+        let mut ch: Box<dyn MemoryLevel> = Box::new(Channel::new(ChannelConfig::zynq_acp()));
+        let cycles = ch.write_line(64, &[9u8; LINE_BYTES]);
+        assert!(cycles > 0);
+        let (data, _) = ch.read_line(64);
+        assert_eq!(data, vec![0u8; LINE_BYTES], "writes are dropped by design");
+        let (logical, physical) = ch.traffic();
+        assert_eq!(logical, physical);
+        assert_eq!(logical, 2 * LINE_BYTES as u64);
+    }
+}

@@ -8,9 +8,15 @@
 //! [`CompressedDram`] stores pages in LCP layout and bills every line
 //! access with the *compressed* transfer size — the mechanism by which
 //! the paper's proposal turns compression ratio into effective bandwidth.
+//!
+//! [`MemoryLevel`] is the composition seam: every level of the hierarchy
+//! (bare channel, [`crate::cache::CompressedCache`], LCP-DRAM) speaks the
+//! same line-granular read/write-with-cycles interface, so levels stack.
 
 pub mod channel;
 pub mod dram;
+pub mod level;
 
 pub use channel::{Channel, ChannelConfig, TransferStats};
 pub use dram::{CompressedDram, DramMode};
+pub use level::MemoryLevel;

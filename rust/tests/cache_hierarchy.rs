@@ -1,0 +1,154 @@
+//! Integration tests for the compressed cache hierarchy: coherence
+//! through the cache, eviction/writeback correctness against a flat
+//! `CompressedDram` oracle, determinism of the E9 report, and the E9
+//! acceptance criterion (compression buys hit rate at fixed geometry).
+
+use snnap_c::bench_suite::workload;
+use snnap_c::cache::{CacheConfig, CompressedCache};
+use snnap_c::compress::{Compressor, Cpack, Hybrid, LINE_BYTES};
+use snnap_c::experiments::e9_cache;
+use snnap_c::experiments::program_from_workload;
+use snnap_c::fixed::Q7_8;
+use snnap_c::mem::{ChannelConfig, CompressedDram, DramMode, MemoryLevel};
+use snnap_c::util::rng::Rng;
+
+fn dram(mode: DramMode) -> CompressedDram {
+    CompressedDram::new(mode, ChannelConfig::zc702_ddr3())
+}
+
+/// A line from a mixed population: zeros / small fixed-point / noise —
+/// so compressed sizes (and therefore packing decisions) vary.
+fn random_line(rng: &mut Rng) -> Vec<u8> {
+    match rng.below(3) {
+        0 => vec![0u8; LINE_BYTES],
+        1 => {
+            let mut line = vec![0u8; LINE_BYTES];
+            for c in line.chunks_exact_mut(2) {
+                let v = (rng.below(64) as i64 - 32) as i16;
+                c.copy_from_slice(&v.to_le_bytes());
+            }
+            line
+        }
+        _ => rng.bytes(LINE_BYTES),
+    }
+}
+
+#[test]
+fn read_after_write_is_coherent_through_the_cache() {
+    let mut cache = CompressedCache::new(
+        CacheConfig::new(4, 2, 4),
+        Some(Box::new(Hybrid::default())),
+        Box::new(dram(DramMode::Raw)),
+    );
+    let mut rng = Rng::new(11);
+    let mut model = std::collections::BTreeMap::<u64, Vec<u8>>::new();
+    for _ in 0..500 {
+        let addr = rng.below(64) * LINE_BYTES as u64;
+        if rng.bool(0.5) {
+            let line = random_line(&mut rng);
+            cache.write_line(addr, &line);
+            model.insert(addr, line);
+        } else {
+            let (got, _) = cache.read_line(addr);
+            let want = model.get(&addr).cloned().unwrap_or_else(|| vec![0u8; LINE_BYTES]);
+            assert_eq!(got, want, "addr {addr:#x}");
+        }
+    }
+}
+
+/// Drive the identical access stream through a tiny cache (constant
+/// eviction pressure) and a flat `CompressedDram`; every read must
+/// agree, and after a flush the two backing stores must be identical.
+#[test]
+fn eviction_and_writeback_match_a_flat_dram_oracle() {
+    for comp in [
+        None::<Box<dyn Compressor>>,
+        Some(Box::new(Hybrid::default()) as Box<dyn Compressor>),
+        Some(Box::new(Cpack) as Box<dyn Compressor>),
+    ] {
+        // 1 set x 2 ways: every few accesses evict something
+        let mut cache =
+            CompressedCache::new(CacheConfig::new(1, 2, 4), comp, Box::new(dram(DramMode::Raw)));
+        let mut oracle = dram(DramMode::Raw);
+        let mut rng = Rng::new(23);
+        for _ in 0..400 {
+            let addr = rng.below(32) * LINE_BYTES as u64;
+            if rng.bool(0.4) {
+                let line = random_line(&mut rng);
+                cache.write_line(addr, &line);
+                oracle.write_line(addr, &line);
+            } else {
+                let (a, _) = cache.read_line(addr);
+                let (b, _) = oracle.read_line(addr);
+                assert_eq!(a, b, "divergence at {addr:#x}");
+            }
+        }
+        assert!(cache.stats.evictions > 0, "the tiny cache must be evicting");
+        cache.flush();
+        // after the flush both stores answer identically line by line
+        for i in 0..32u64 {
+            let addr = i * LINE_BYTES as u64;
+            let (a, _) = cache.read_line(addr);
+            let (b, _) = oracle.read_line(addr);
+            assert_eq!(a, b, "post-flush divergence at {addr:#x}");
+        }
+    }
+}
+
+/// The acceptance criterion: cached reads round-trip bit-exactly against
+/// a `CompressedDram` oracle even when the cache compresses with one
+/// scheme and the DRAM pages with another (LCP).
+#[test]
+fn cached_reads_roundtrip_against_an_lcp_dram_oracle() {
+    let mut cache = CompressedCache::new(
+        CacheConfig::new(2, 2, 4),
+        Some(Box::new(Cpack)),
+        Box::new(dram(DramMode::Lcp(Box::new(Hybrid::default())))),
+    );
+    let mut oracle = dram(DramMode::Lcp(Box::new(Hybrid::default())));
+    let mut rng = Rng::new(5);
+    let data: Vec<u8> = (0..4096).map(|_| (rng.below(64) as i64 - 32) as u8).collect();
+    MemoryLevel::load(&mut cache, 0, &data);
+    oracle.load(0, &data);
+    for i in 0..64u64 {
+        let addr = i * LINE_BYTES as u64;
+        let (a, _) = cache.read_line(addr);
+        let (b, _) = oracle.read_line(addr);
+        assert_eq!(a, b, "line {i}");
+        assert_eq!(&a[..], &data[i as usize * LINE_BYTES..(i as usize + 1) * LINE_BYTES]);
+    }
+}
+
+#[test]
+fn e9_report_is_deterministic_for_a_fixed_seed() {
+    let w = workload("sobel").unwrap();
+    let run = || {
+        let p = program_from_workload(w.as_ref(), Q7_8, 7);
+        e9_cache::measure_all_configs(w.as_ref(), p, "bdi+fpc", 32, 4, 99)
+            .unwrap()
+            .iter()
+            .map(|r| r.to_json().dump())
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run(), "same seed must give an identical E9 report");
+}
+
+#[test]
+fn e9_acceptance_compression_beats_uncompressed_baseline() {
+    // for at least one kernel, some compressed scheme at some geometry
+    // strictly beats the same-geometry uncompressed baseline on hit
+    // rate while moving fewer DRAM bytes
+    let w = workload("sobel").unwrap();
+    let geometry = e9_cache::CACHE_CONFIGS[1];
+    let p = program_from_workload(w.as_ref(), Q7_8, 7);
+    let base = e9_cache::measure(w.as_ref(), p.clone(), "none", geometry, 32, 4, 3).unwrap();
+    let comp = e9_cache::measure(w.as_ref(), p, "bdi+fpc", geometry, 32, 4, 3).unwrap();
+    assert!(
+        comp.hit_rate > base.hit_rate,
+        "compressed hit rate {:.3} must strictly beat the baseline {:.3}",
+        comp.hit_rate,
+        base.hit_rate
+    );
+    assert!(comp.dram_bytes < base.dram_bytes);
+    assert!(comp.effective_capacity_ratio > base.effective_capacity_ratio);
+}

@@ -2,27 +2,27 @@
 //! substrate (via the in-house `util::prop` harness — the offline
 //! proptest replacement).
 //!
-//! For every scheme (`Bdi`, `Fpc`, `Hybrid`) and every line class
-//! (all-zero, low-entropy, random):
+//! For every scheme (`Bdi`, `Fpc`, `Hybrid`, `Cpack`) and every line
+//! class (all-zero, low-entropy, random):
 //!   * decompression is **bit-exact**;
 //!   * `size_bits` respects the scheme's size contract: at most
 //!     `LINE_BYTES * 8` on zero/low-entropy lines, and at most
 //!     `LINE_BYTES * 8 + META_BITS_CEILING` on arbitrary lines (the
 //!     honest-accounting per-line metadata: BDI pays a 4-bit tag on
-//!     incompressible lines, FPC 3 prefix bits per word, Hybrid one
-//!     selector bit on top).
+//!     incompressible lines, FPC 3 prefix bits per word, C-Pack 2 code
+//!     bits per word, Hybrid one selector bit on top).
 
-use snnap_c::compress::{all_schemes, Bdi, Compressor, Fpc, Hybrid, LINE_BYTES};
+use snnap_c::compress::{all_schemes, Bdi, Compressor, Cpack, Fpc, Hybrid, LINE_BYTES};
 use snnap_c::util::prop;
 use snnap_c::util::rng::Rng;
 
 /// Worst-case per-line metadata overhead across schemes, in bits:
-/// FPC's 16 x 3 prefix bits on an incompressible line, plus the Hybrid
-/// selector bit.
+/// FPC's 16 x 3 prefix bits on an incompressible line (C-Pack's 16 x 2
+/// code bits sit under that), plus the Hybrid selector bit.
 const META_BITS_CEILING: usize = 16 * 3 + 1;
 
 fn schemes() -> Vec<Box<dyn Compressor>> {
-    vec![Box::new(Bdi), Box::new(Fpc), Box::new(Hybrid::default())]
+    vec![Box::new(Bdi), Box::new(Fpc), Box::new(Hybrid::default()), Box::new(Cpack)]
 }
 
 fn assert_roundtrip(c: &dyn Compressor, line: &[u8]) -> usize {
@@ -60,9 +60,11 @@ fn all_zero_lines_compress_under_line_size() {
 #[test]
 fn prop_low_entropy_lines_stay_under_line_size() {
     // low-entropy: small Q7.8-style i16 values near zero — the trained-
-    // weight traffic the paper targets. Every scheme must encode such a
-    // line at or below the uncompressed 512 bits (BDI via b2d1
-    // immediates, FPC via sign-extended halfword bytes).
+    // weight traffic the paper targets. BDI (b2d1 immediates), FPC
+    // (sign-extended halfword bytes) and Hybrid must encode such a line
+    // at or below the uncompressed 512 bits. C-Pack only round-trips
+    // here: without repeated word content its dictionary legitimately
+    // misses (the dual of FPC expanding on pointer lines below).
     prop::check(300, |rng| {
         let mut line = [0u8; LINE_BYTES];
         for c in line.chunks_exact_mut(2) {
@@ -71,11 +73,13 @@ fn prop_low_entropy_lines_stay_under_line_size() {
         }
         for c in schemes() {
             let bits = assert_roundtrip(c.as_ref(), &line);
-            assert!(
-                bits <= LINE_BYTES * 8,
-                "{}: low-entropy line must not expand, got {bits} bits",
-                c.name()
-            );
+            if c.name() != "cpack" {
+                assert!(
+                    bits <= LINE_BYTES * 8,
+                    "{}: low-entropy line must not expand, got {bits} bits",
+                    c.name()
+                );
+            }
         }
     });
 }
@@ -157,6 +161,38 @@ fn prop_stream_compression_matches_per_line_sum() {
             assert_eq!(&rebuilt[..n], &data[..], "{}", c.name());
             assert!(rebuilt[n..].iter().all(|&b| b == 0), "tail must be zero padding");
         }
+    });
+}
+
+#[test]
+fn prop_cpack_random_lines_roundtrip_bit_exactly() {
+    // the satellite contract: arbitrary lines survive C-Pack exactly
+    prop::check(500, |rng| {
+        let line = rng.bytes(LINE_BYTES);
+        assert_roundtrip(&Cpack, &line);
+    });
+}
+
+#[test]
+fn cpack_zero_lines_compress_and_roundtrip() {
+    let z = Cpack.compress(&[0u8; LINE_BYTES]);
+    assert_eq!(Cpack.decompress(&z), vec![0u8; LINE_BYTES]);
+    assert_eq!(z.size_bits, 16 * 2, "zzzz costs 2 bits per word");
+}
+
+#[test]
+fn prop_cpack_repeated_word_lines_hit_the_dictionary() {
+    // lines made of few distinct words: the dictionary case C-Pack is
+    // built for must land well under half a line
+    prop::check(300, |rng| {
+        let pool: Vec<u32> = (0..2).map(|_| rng.next_u32() | 0x0100).collect();
+        let mut line = [0u8; LINE_BYTES];
+        for c in line.chunks_exact_mut(4) {
+            c.copy_from_slice(&pool[rng.range(0, pool.len())].to_le_bytes());
+        }
+        let bits = assert_roundtrip(&Cpack, &line);
+        // worst case: 2 misses (34 bits) + 14 full matches (6 bits)
+        assert!(bits <= 2 * 34 + 14 * 6, "{bits} bits");
     });
 }
 

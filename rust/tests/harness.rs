@@ -30,7 +30,7 @@ fn smoke_scenario_produces_valid_report() {
     let rows = e1[0].get("rows").unwrap().as_arr().unwrap();
     assert_eq!(rows.len(), 3);
     let schemes = rows[0].get("report").unwrap().get("schemes").unwrap().as_arr().unwrap();
-    assert_eq!(schemes.len(), 4);
+    assert_eq!(schemes.len(), 5);
     // config echo + timing present
     assert_eq!(parsed.get("config").unwrap().get("invocations").unwrap().as_usize(), Some(1));
     assert!(parsed.get("timing_ms").unwrap().get("total").unwrap().as_f64().is_some());
@@ -43,9 +43,9 @@ fn full_grid_covers_kernels_times_schemes() {
     let jobs = harness::build_jobs(&cfg).unwrap();
     // e5 is the kernel x scheme product
     let e5: Vec<_> = jobs.iter().filter(|j| j.experiment == "e5").collect();
-    assert_eq!(e5.len(), 7 * 4);
+    assert_eq!(e5.len(), 7 * 5);
     for bench in ["fft", "inversek2j", "jmeint", "jpeg", "kmeans", "sobel", "blackscholes"] {
-        for scheme in ["none", "bdi", "fpc", "bdi+fpc"] {
+        for scheme in ["none", "bdi", "fpc", "bdi+fpc", "cpack"] {
             assert!(
                 e5.iter().any(|j| j.scenario.target == Target::Bench(bench.to_string())
                     && j.scenario.scheme == scheme),
@@ -67,7 +67,7 @@ fn multi_experiment_sweep_runs_in_parallel_without_artifacts() {
     // two kernels, two schemes, 4 workers — must be green from a clean
     // checkout (no `make artifacts`)
     let cfg = HarnessConfig {
-        experiments: (1..=8).map(|i| format!("e{i}")).collect(),
+        experiments: (1..=9).map(|i| format!("e{i}")).collect(),
         benchmarks: vec!["sobel".into(), "fft".into()],
         schemes: vec!["none".into(), "bdi+fpc".into()],
         invocations: 8,
@@ -78,7 +78,7 @@ fn multi_experiment_sweep_runs_in_parallel_without_artifacts() {
     let report = harness::run(&cfg).unwrap();
     assert_eq!(report.failed_jobs, 0, "{}", report.json.dump());
     let experiments = report.json.get("experiments").unwrap().as_obj().unwrap();
-    for id in ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8"] {
+    for id in ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9"] {
         assert!(experiments.contains_key(id), "report missing {id}");
     }
     // spot-check row payloads deep in the tree
@@ -88,6 +88,14 @@ fn multi_experiment_sweep_runs_in_parallel_without_artifacts() {
     let e5 = &experiments["e5"].as_arr().unwrap()[0];
     let row = &e5.get("rows").unwrap().as_arr().unwrap()[0];
     assert!(row.get("amplification").unwrap().as_f64().unwrap() >= 1.0 - 1e-9);
+    // e9: one row per cache geometry, hit rate in [0, 1]
+    let e9 = &experiments["e9"].as_arr().unwrap()[0];
+    let rows = e9.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), snnap_c::experiments::e9_cache::CACHE_CONFIGS.len());
+    for r in rows {
+        let hr = r.get("hit_rate").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&hr), "hit rate {hr}");
+    }
 }
 
 #[test]
