@@ -1,0 +1,62 @@
+//! E10 bench — the sharded serving pool under open-loop load, timed.
+//! Sweeps scheme x shard count for two kernels and prints the
+//! compressed-vs-raw throughput picture at equal shard counts. Works
+//! from a clean checkout (deterministic synthetic weights).
+
+use snnap_c::bench_suite::workload;
+use snnap_c::experiments as ex;
+use snnap_c::experiments::e10_serving;
+use snnap_c::fixed::Q7_8;
+use snnap_c::util::bench::BenchRunner;
+
+fn main() {
+    let mut runner = BenchRunner::default();
+    let kernels = ["jmeint", "sobel"];
+    let schemes = ["none", "bdi+fpc", "cpack"];
+    let shard_counts = [1usize, 4];
+    let (n, batch, seed) = (96usize, 32usize, 31u64);
+
+    let mut rows = Vec::new();
+    for name in kernels {
+        let w = workload(name).expect("known kernel");
+        let program = ex::program_from_workload(w.as_ref(), Q7_8, 42);
+        for scheme in schemes {
+            for &shards in &shard_counts {
+                let label = format!("e10/{name}/{scheme}/x{shards}");
+                let p = program.clone();
+                let row = runner.bench(&label, || {
+                    e10_serving::measure(w.as_ref(), &p, scheme, shards, n, batch, seed)
+                        .expect("serving replay is infallible for registered schemes")
+                });
+                rows.push(row);
+            }
+        }
+    }
+
+    println!("\n=== open-loop serving: throughput / latency / DRAM traffic ===");
+    e10_serving::print_table(&rows);
+
+    println!("\n--- compressed-vs-raw at equal shard count ---");
+    for name in kernels {
+        for &shards in &shard_counts {
+            let raw = rows
+                .iter()
+                .find(|r| r.workload == name && r.scheme == "none" && r.shards == shards)
+                .unwrap();
+            let best = rows
+                .iter()
+                .filter(|r| r.workload == name && r.scheme != "none" && r.shards == shards)
+                .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+                .unwrap();
+            println!(
+                "{name:<10} x{shards}: {} {:.0} inv/s vs raw {:.0} inv/s ({:+.1}%), DRAM {:.1} KB vs {:.1} KB",
+                best.scheme,
+                best.throughput,
+                raw.throughput,
+                (best.throughput / raw.throughput - 1.0) * 100.0,
+                best.dram_bytes as f64 / 1024.0,
+                raw.dram_bytes as f64 / 1024.0,
+            );
+        }
+    }
+}

@@ -407,6 +407,14 @@ impl MemoryLevel for CompressedCache {
         (logical, self.backing.traffic().1)
     }
 
+    fn hit_stats(&self) -> Option<(u64, u64)> {
+        Some((self.stats.hits, self.stats.accesses()))
+    }
+
+    fn capacity_ratio(&self) -> f64 {
+        self.effective_capacity_ratio()
+    }
+
     fn clock_mhz(&self) -> f64 {
         self.backing.clock_mhz()
     }

@@ -30,8 +30,10 @@ pub struct Config {
     /// Batching policy.
     pub policy: BatchPolicy,
     /// Compression scheme on the NPU<->DRAM path:
-    /// none | bdi | fpc | bdi+fpc.
+    /// none | bdi | fpc | bdi+fpc | cpack.
     pub compression: String,
+    /// Device shards in the serving pool (`snnapc serve`).
+    pub pool_shards: usize,
 }
 
 impl Default for Config {
@@ -43,6 +45,7 @@ impl Default for Config {
             qformat: Q7_8,
             policy: BatchPolicy::default(),
             compression: "bdi+fpc".into(),
+            pool_shards: 1,
         }
     }
 }
@@ -64,10 +67,16 @@ impl Config {
             "benchmark" => self.benchmark = v.into(),
             "artifacts" => self.artifacts = v.into(),
             "compression" => {
-                if !["none", "bdi", "fpc", "bdi+fpc"].contains(&v) {
+                if !["none", "bdi", "fpc", "bdi+fpc", "cpack"].contains(&v) {
                     bail!("unknown compression {v:?}");
                 }
                 self.compression = v.into();
+            }
+            "pool.shards" => {
+                self.pool_shards = v.parse().context("pool.shards")?;
+                if self.pool_shards == 0 {
+                    bail!("pool.shards must be positive");
+                }
             }
             "qformat" => self.qformat = parse_qformat(v)?,
             "npu.pu_count" => self.npu.pu_count = v.parse().context("npu.pu_count")?,
@@ -147,6 +156,7 @@ impl Config {
         out.push_str(&format!("batch.max = {}\n", self.policy.max_batch));
         out.push_str(&format!("batch.wait_us = {}\n", self.policy.max_wait.as_micros()));
         out.push_str(&format!("batch.queue_cap = {}\n", self.policy.queue_cap));
+        out.push_str(&format!("pool.shards = {}\n", self.pool_shards));
         out
     }
 
@@ -180,13 +190,15 @@ mod tests {
             "npu.pu_count=4".into(),
             "batch.max=64".into(),
             "qformat=q15.16".into(),
-            "compression=bdi".into(),
+            "compression=cpack".into(),
+            "pool.shards=4".into(),
         ])
         .unwrap();
         assert_eq!(cfg.npu.pu_count, 4);
         assert_eq!(cfg.policy.max_batch, 64);
         assert_eq!(cfg.qformat, Q15_16);
-        assert_eq!(cfg.compression, "bdi");
+        assert_eq!(cfg.compression, "cpack");
+        assert_eq!(cfg.pool_shards, 4);
     }
 
     #[test]
@@ -196,6 +208,7 @@ mod tests {
         assert!(cfg.set("compression", "zstd").is_err());
         assert!(cfg.set("qformat", "q1.2").is_err());
         assert!(cfg.set("npu.pu_count", "banana").is_err());
+        assert!(cfg.set("pool.shards", "0").is_err());
     }
 
     #[test]

@@ -22,6 +22,24 @@ pub trait Backend {
 
     /// Execute a batch; one output per input.
     fn run_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+
+    /// Execute a batch and report its simulated device cycles — the
+    /// pool's per-shard cycle accounting. Backends without a timing
+    /// model (PJRT) report 0.
+    fn run_batch_timed(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, u64)> {
+        Ok((self.run_batch(inputs)?, 0))
+    }
+
+    /// (hits, accesses) of the backend's memory hierarchy, when it has a
+    /// filtering level — the pool's per-shard hit-rate metric.
+    fn hit_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
+
+    /// (logical, physical) bytes the backend's memory hierarchy moved.
+    fn mem_traffic(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// The cycle-accurate fixed-point simulator as a backend.
@@ -44,6 +62,19 @@ impl Backend for DeviceBackend {
 
     fn run_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         Ok(self.device.execute_batch(inputs)?.outputs)
+    }
+
+    fn run_batch_timed(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, u64)> {
+        let r = self.device.execute_batch(inputs)?;
+        Ok((r.outputs, r.total_cycles))
+    }
+
+    fn hit_stats(&self) -> Option<(u64, u64)> {
+        self.device.mem_hit_stats()
+    }
+
+    fn mem_traffic(&self) -> Option<(u64, u64)> {
+        self.device.memory().map(|m| m.traffic())
     }
 }
 
@@ -146,5 +177,38 @@ mod tests {
         let out = b.run_batch(&[vec![0.1, 0.2], vec![0.3, 0.4]]).unwrap();
         assert_eq!(out.len(), 2);
         assert_eq!(b.name(), "t");
+    }
+
+    #[test]
+    fn device_backend_reports_cycles_and_hierarchy_stats() {
+        use crate::cache::{CacheConfig, CompressedCache};
+        use crate::compress::Hybrid;
+        use crate::mem::{ChannelConfig, CompressedDram, DramMode};
+
+        let mut plain = DeviceBackend {
+            device: NpuDevice::new(NpuConfig::default(), program()).unwrap(),
+        };
+        let (out, cycles) = plain.run_batch_timed(&[vec![0.1, 0.2]]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(cycles > 0, "sim backend reports real cycles");
+        assert!(plain.hit_stats().is_none(), "no hierarchy attached");
+        assert!(plain.mem_traffic().is_none());
+
+        let dram = CompressedDram::new(DramMode::Raw, ChannelConfig::zc702_ddr3());
+        let cache = CompressedCache::new(
+            CacheConfig::new(64, 8, 4),
+            Some(Box::new(Hybrid::default())),
+            Box::new(dram),
+        );
+        let mut backed = DeviceBackend {
+            device: NpuDevice::new(NpuConfig::default(), program())
+                .unwrap()
+                .with_memory(Box::new(cache)),
+        };
+        let _ = backed.run_batch_timed(&[vec![0.1, 0.2]]).unwrap();
+        let (hits, accesses) = backed.hit_stats().expect("cache level reports hits");
+        assert!(accesses > 0 && hits <= accesses);
+        let (logical, physical) = backed.mem_traffic().unwrap();
+        assert!(logical > 0 && physical > 0);
     }
 }

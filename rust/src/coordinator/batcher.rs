@@ -184,6 +184,82 @@ mod tests {
     }
 
     #[test]
+    fn take_batch_on_empty_is_a_clean_noop() {
+        let mut b: Batcher<u8> = Batcher::new(BatchPolicy::default());
+        let t = Instant::now();
+        assert!(b.take_batch(t).is_empty());
+        assert_eq!(b.len(), 0);
+        assert_eq!(b.time_to_deadline(t), None);
+        assert!(!b.should_flush(t));
+        // a fresh push after the no-op take starts a new deadline epoch
+        b.push(1, t).unwrap();
+        assert_eq!(b.time_to_deadline(t), Some(b.policy().max_wait));
+    }
+
+    #[test]
+    fn prop_rejected_push_round_trips_item_and_leaves_state_unchanged() {
+        crate::util::prop::check(64, |rng| {
+            let max_batch = rng.range(1, 8);
+            let cap = max_batch + rng.range(0, 8);
+            let mut b = Batcher::new(policy(max_batch, rng.range(1, 1000) as u64, cap));
+            let t0 = Instant::now();
+            for i in 0..cap {
+                b.push(i, t0).unwrap();
+            }
+            let len = b.len();
+            let deadline = b.time_to_deadline(t0);
+            let rejected_before = b.rejected;
+            // refusal must hand back exactly the pushed item, untouched
+            assert_eq!(b.push(usize::MAX, t0), Err(usize::MAX));
+            assert_eq!(b.len(), len, "refusal must not grow the queue");
+            assert_eq!(b.time_to_deadline(t0), deadline, "refusal must not move the deadline");
+            assert_eq!(b.rejected, rejected_before + 1);
+            // after draining one batch the refused item fits again and
+            // round-trips through take_batch intact
+            let drained = b.take_batch(t0).len();
+            assert!(drained > 0);
+            b.push(usize::MAX, t0).unwrap();
+            let mut rest = Vec::new();
+            while !b.is_empty() {
+                rest.extend(b.take_batch(t0));
+            }
+            assert_eq!(rest.last(), Some(&usize::MAX), "item re-enqueues at the tail");
+        });
+    }
+
+    #[test]
+    fn prop_deadline_monotone_and_flush_never_unfires() {
+        crate::util::prop::check(64, |rng| {
+            let max_batch = rng.range(1, 16);
+            let wait_us = rng.range(1, 5_000) as u64;
+            let cap = max_batch + rng.range(0, 32);
+            let mut b = Batcher::new(policy(max_batch, wait_us, cap));
+            let t0 = Instant::now();
+            for i in 0..rng.range(1, cap + 1) {
+                let _ = b.push(i, t0);
+            }
+            // with no state changes, time only shrinks the deadline and
+            // can only turn should_flush on, never off
+            let mut last = b.time_to_deadline(t0).expect("non-empty has a deadline");
+            let mut fired = b.should_flush(t0);
+            let mut t = t0;
+            for _ in 0..8 {
+                t += Duration::from_micros(rng.range(0, 2 * wait_us as usize + 1) as u64);
+                let d = b.time_to_deadline(t).unwrap();
+                assert!(d <= last, "deadline must shrink monotonically");
+                assert!(d <= b.policy().max_wait);
+                let f = b.should_flush(t);
+                assert!(!fired || f, "should_flush must not un-fire");
+                if d.is_zero() {
+                    assert!(f, "an expired deadline must flush");
+                }
+                last = d;
+                fired = f;
+            }
+        });
+    }
+
+    #[test]
     fn prop_never_exceeds_bounds() {
         crate::util::prop::check(64, |rng| {
             let max_batch = rng.range(1, 20);

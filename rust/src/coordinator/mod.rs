@@ -6,16 +6,27 @@
 //! (the PJRT-compiled model, the cycle-accurate fixed-point simulator, or
 //! both) and routes results back to callers.
 //!
-//! Built on std threads + mpsc channels (the vendored dependency set has
-//! no async runtime; a blocking batcher thread is also exactly SNNAP's
-//! software architecture — one driver thread owning the accelerator).
+//! Built on std threads + condvar-guarded queues (the vendored
+//! dependency set has no async runtime; blocking driver threads are also
+//! exactly SNNAP's software architecture — each one owning an
+//! accelerator shard).
+//!
+//! Since PR 3 the unit of serving is the sharded [`NpuPool`]: N device
+//! workers behind one shared work queue with least-loaded placement and
+//! work stealing ([`router::pick_shard`] / [`router::pick_victim`]),
+//! per-shard [`Batcher`]s, and pool-level metrics. [`NpuServer`] is the
+//! one-shard special case; [`NpuRouter`] maps benchmarks to pools.
+//! [`PoolSim`] replays the same pool logic deterministically in virtual
+//! time for the E10 load experiment.
 
 pub mod backend;
 pub mod batcher;
+pub mod pool;
 pub mod router;
 pub mod server;
 
 pub use backend::{Backend, DeviceBackend, PairedBackend, PjrtBackend};
 pub use batcher::{BatchPolicy, Batcher};
+pub use pool::{BackendFactory, NpuPool, Pending, PoolSim, SimCompletion, SimReport, SimRequest};
 pub use router::NpuRouter;
 pub use server::{NpuServer, ServerConfig};

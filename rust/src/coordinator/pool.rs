@@ -1,0 +1,756 @@
+//! The sharded NPU device pool — L3 serving scaled out.
+//!
+//! [`NpuPool`] owns N backend workers ("shards"), each normally an
+//! [`crate::npu::NpuDevice`] fronted by its own compressed memory
+//! hierarchy (`NpuDevice::with_memory`, PR 2). Invocations land in a
+//! shared, lane-per-shard work queue: submission places each request on
+//! the least-loaded lane ([`super::router::pick_shard`]), every shard
+//! drains its lane into its own [`Batcher`], and an idle shard steals
+//! the oldest work from the deepest peer lane
+//! ([`super::router::pick_victim`]) so no shard sits idle while another
+//! has a backlog. Pool-level accounting lives in
+//! [`crate::metrics::PoolMetrics`].
+//!
+//! [`PoolSim`] is the same pool shape in *virtual time*: a
+//! single-threaded, deterministic discrete-event replay (one cycle ≡ one
+//! microsecond of virtual time so [`Batcher`]'s deadline arithmetic can
+//! be reused verbatim). E10 drives it with a seeded open-loop arrival
+//! process; two runs with the same seed produce bit-identical
+//! completions, which the threaded pool cannot promise (thread
+//! interleaving moves wall-clock batch boundaries, though never the
+//! *numerics* — every shard runs the same program).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::PoolMetrics;
+use crate::npu::NpuDevice;
+
+use super::backend::Backend;
+use super::batcher::{BatchPolicy, Batcher};
+use super::router::{pick_shard, pick_victim};
+use super::server::ServerConfig;
+
+/// Constructs one shard's backend on that shard's worker thread (PJRT
+/// clients are not `Send`, so they must be born where they live).
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+
+struct Invocation {
+    input: Vec<f32>,
+    submitted: Instant,
+    reply: Sender<Result<Vec<f32>>>,
+}
+
+/// A pending reply.
+pub struct Pending {
+    rx: Receiver<Result<Vec<f32>>>,
+}
+
+impl Pending {
+    /// Block for the result.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.rx.recv().map_err(|_| anyhow!("server dropped the invocation"))?
+    }
+}
+
+/// The shared work queue: one FIFO lane per shard plus claim accounting,
+/// all guarded by a single mutex (placement decisions and steals observe
+/// a consistent snapshot).
+struct Lanes {
+    /// Queued invocations, not yet claimed by a worker.
+    queues: Vec<VecDeque<Invocation>>,
+    /// Invocations a worker has moved into its private batcher (or is
+    /// executing) — still load on that shard for placement purposes.
+    claimed: Vec<usize>,
+}
+
+struct PoolShared {
+    lanes: Mutex<Lanes>,
+    cv: Condvar,
+    open: AtomicBool,
+    metrics: Arc<PoolMetrics>,
+    policy: BatchPolicy,
+}
+
+/// Handle to a running sharded pool. Share via `Arc`; `submit` takes
+/// `&self`.
+pub struct NpuPool {
+    shared: Arc<PoolShared>,
+    metrics: Arc<PoolMetrics>,
+    workers: Vec<JoinHandle<()>>,
+    input_dim: usize,
+}
+
+impl NpuPool {
+    /// Start one worker thread per factory; each factory runs on its
+    /// shard's thread to build that shard's backend. Fails (and reaps
+    /// every started worker) if any construction fails or the shards
+    /// disagree on input arity.
+    pub fn start(factories: Vec<BackendFactory>, cfg: ServerConfig) -> Result<NpuPool> {
+        anyhow::ensure!(!factories.is_empty(), "pool needs at least one shard");
+        let shards = factories.len();
+        let metrics = Arc::new(PoolMetrics::new(shards));
+        let shared = Arc::new(PoolShared {
+            lanes: Mutex::new(Lanes {
+                queues: (0..shards).map(|_| VecDeque::new()).collect(),
+                claimed: vec![0; shards],
+            }),
+            cv: Condvar::new(),
+            open: AtomicBool::new(true),
+            metrics: metrics.clone(),
+            policy: cfg.policy,
+        });
+        let (dim_tx, dim_rx) = mpsc::channel::<Result<usize>>();
+        let mut workers = Vec::with_capacity(shards);
+        for (shard, factory) in factories.into_iter().enumerate() {
+            let shared = shared.clone();
+            let dim_tx = dim_tx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("snnapc-shard-{shard}"))
+                    .spawn(move || {
+                        let backend = match factory() {
+                            Ok(b) => {
+                                let _ = dim_tx.send(Ok(b.input_dim()));
+                                b
+                            }
+                            Err(e) => {
+                                let _ = dim_tx.send(Err(e));
+                                return;
+                            }
+                        };
+                        drop(dim_tx);
+                        drive(&shared, shard, backend);
+                    })
+                    .expect("spawn shard worker"),
+            );
+        }
+        drop(dim_tx);
+
+        let mut dims = Vec::with_capacity(shards);
+        let mut first_err = None;
+        for _ in 0..shards {
+            match dim_rx.recv() {
+                Ok(Ok(d)) => dims.push(d),
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err =
+                            Some(anyhow!("shard worker died during backend construction"));
+                    }
+                }
+            }
+        }
+        let arity_err = (!dims.is_empty() && dims.iter().any(|&d| d != dims[0]))
+            .then(|| anyhow!("shards disagree on input arity: {dims:?}"));
+        if let Some(e) = first_err.or(arity_err) {
+            // flip `open` under the lanes lock (like begin_shutdown):
+            // a store+notify racing a worker's check-then-wait window
+            // would otherwise be missed and deadlock the join below
+            {
+                let _guard = shared.lanes.lock().unwrap();
+                shared.open.store(false, Ordering::SeqCst);
+            }
+            shared.cv.notify_all();
+            for h in workers {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        let input_dim = dims[0];
+        Ok(NpuPool { shared, metrics, workers, input_dim })
+    }
+
+    /// Submit one invocation. Backpressure (all lanes at `queue_cap`)
+    /// resolves the returned [`Pending`] with a queue-full error; a shut
+    /// down pool fails the submit itself.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Pending> {
+        anyhow::ensure!(
+            input.len() == self.input_dim,
+            "input arity {} != {}",
+            input.len(),
+            self.input_dim
+        );
+        let (reply, rx) = mpsc::channel();
+        let inv = Invocation { input, submitted: Instant::now(), reply };
+        {
+            let mut lanes = self.shared.lanes.lock().unwrap();
+            // checked under the lock: shutdown flips `open` under the
+            // same lock, so nothing can slip into a draining queue
+            if !self.shared.open.load(Ordering::Acquire) {
+                return Err(anyhow!("pool is shut down"));
+            }
+            // least-loaded placement among lanes with queue room (full
+            // lanes are masked to MAX so they lose to any open lane):
+            // a full lane overflows to the next-least-loaded one, and
+            // rejection really means *every* lane is at queue_cap
+            let cap = self.shared.policy.queue_cap;
+            let loads: Vec<usize> = lanes
+                .queues
+                .iter()
+                .zip(&lanes.claimed)
+                .map(|(q, &c)| if q.len() >= cap { usize::MAX } else { q.len() + c })
+                .collect();
+            let shard = pick_shard(&loads);
+            if lanes.queues[shard].len() >= cap {
+                self.metrics.server.rejected.inc();
+                self.metrics.server.queue_full_events.inc();
+                let _ = inv.reply.send(Err(anyhow!("queue full")));
+                return Ok(Pending { rx });
+            }
+            lanes.queues[shard].push_back(inv);
+            let depth: usize = lanes.queues.iter().map(VecDeque::len).sum();
+            self.metrics.max_queue_depth.observe(depth as u64);
+        }
+        self.shared.cv.notify_all();
+        Ok(Pending { rx })
+    }
+
+    /// Submit a whole slice and wait for all results (convenience).
+    pub fn submit_all(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let pending: Vec<Pending> =
+            inputs.iter().map(|x| self.submit(x.clone())).collect::<Result<_>>()?;
+        pending.into_iter().map(Pending::wait).collect()
+    }
+
+    pub fn metrics(&self) -> &PoolMetrics {
+        &self.metrics
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.metrics.shards.len()
+    }
+
+    fn begin_shutdown(&self) {
+        let guard = self.shared.lanes.lock().unwrap();
+        self.shared.open.store(false, Ordering::Release);
+        drop(guard);
+        self.shared.cv.notify_all();
+    }
+
+    /// Graceful shutdown: drain every lane and batcher, then join the
+    /// workers.
+    pub fn shutdown(mut self) {
+        self.begin_shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NpuPool {
+    fn drop(&mut self) {
+        self.begin_shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Move queued work into `batcher` (own lane first, then — only when
+/// otherwise idle — the oldest items of the deepest peer lane). Caps the
+/// batcher at `max_batch` so `Batcher::push` never hits its own
+/// backpressure bound.
+fn gather(
+    lanes: &mut Lanes,
+    shard: usize,
+    batcher: &mut Batcher<Invocation>,
+    policy: &BatchPolicy,
+    metrics: &PoolMetrics,
+) {
+    let now = Instant::now();
+    while batcher.len() < policy.max_batch {
+        match lanes.queues[shard].pop_front() {
+            Some(inv) => match batcher.push(inv, now) {
+                Ok(()) => lanes.claimed[shard] += 1,
+                Err(inv) => {
+                    lanes.queues[shard].push_front(inv);
+                    return;
+                }
+            },
+            None => break,
+        }
+    }
+    if batcher.is_empty() {
+        let depths: Vec<usize> = lanes.queues.iter().map(VecDeque::len).collect();
+        if let Some(victim) = pick_victim(&depths, shard) {
+            let mut stolen = false;
+            while batcher.len() < policy.max_batch {
+                match lanes.queues[victim].pop_front() {
+                    Some(inv) => match batcher.push(inv, now) {
+                        Ok(()) => {
+                            lanes.claimed[shard] += 1;
+                            stolen = true;
+                        }
+                        Err(inv) => {
+                            lanes.queues[victim].push_front(inv);
+                            break;
+                        }
+                    },
+                    None => break,
+                }
+            }
+            if stolen {
+                metrics.stolen_batches.inc();
+            }
+        }
+    }
+}
+
+/// One shard's driver loop: gather → (wait for size-or-deadline) →
+/// execute, until the pool is shut down and fully drained.
+fn drive(shared: &PoolShared, shard: usize, mut backend: Box<dyn Backend>) {
+    let policy = shared.policy;
+    let mut batcher: Batcher<Invocation> = Batcher::new(policy);
+    'serve: loop {
+        {
+            let mut lanes = shared.lanes.lock().unwrap();
+            loop {
+                gather(&mut lanes, shard, &mut batcher, &policy, &shared.metrics);
+                let now = Instant::now();
+                if batcher.should_flush(now) {
+                    break;
+                }
+                if !shared.open.load(Ordering::Acquire) {
+                    if batcher.is_empty() && lanes.queues.iter().all(VecDeque::is_empty) {
+                        break 'serve;
+                    }
+                    break; // draining: flush the partial batch now
+                }
+                if batcher.is_empty() {
+                    lanes = shared.cv.wait(lanes).unwrap();
+                } else {
+                    match batcher.time_to_deadline(now) {
+                        Some(d) if !d.is_zero() => {
+                            let (guard, _) = shared.cv.wait_timeout(lanes, d).unwrap();
+                            lanes = guard;
+                        }
+                        _ => break,
+                    }
+                }
+            }
+        }
+        if batcher.is_empty() {
+            continue;
+        }
+        let batch = batcher.take_batch(Instant::now());
+        execute(shared, shard, backend.as_mut(), batch);
+    }
+}
+
+/// Run one batch on this shard's backend and route replies + metrics.
+fn execute(shared: &PoolShared, shard: usize, backend: &mut dyn Backend, batch: Vec<Invocation>) {
+    let m = &shared.metrics;
+    let n = batch.len();
+    let inputs: Vec<Vec<f32>> = batch.iter().map(|i| i.input.clone()).collect();
+    m.server.batches.inc();
+    m.server.requests.add(n as u64);
+    m.shards[shard].batches.inc();
+    m.shards[shard].requests.add(n as u64);
+    match backend.run_batch_timed(&inputs) {
+        Ok((outputs, cycles)) => {
+            m.shards[shard].busy_cycles.add(cycles);
+            for (inv, out) in batch.into_iter().zip(outputs) {
+                m.server.latency.record(inv.submitted.elapsed());
+                m.cycle_latency.record(cycles);
+                let _ = inv.reply.send(Ok(out));
+            }
+        }
+        Err(e) => {
+            let msg = format!("batch failed: {e:#}");
+            for inv in batch {
+                let _ = inv.reply.send(Err(anyhow!(msg.clone())));
+            }
+        }
+    }
+    let mut lanes = shared.lanes.lock().unwrap();
+    lanes.claimed[shard] -= n;
+}
+
+// ---------------------------------------------------------------------
+// Deterministic virtual-time pool (E10's engine)
+// ---------------------------------------------------------------------
+
+/// One request of an open-loop trace: arrival in device cycles.
+#[derive(Debug, Clone)]
+pub struct SimRequest {
+    pub arrival: u64,
+    pub input: Vec<f32>,
+}
+
+/// One served request: where and when it ran, and what it produced.
+#[derive(Debug, Clone)]
+pub struct SimCompletion {
+    /// Index into the request trace.
+    pub index: usize,
+    pub shard: usize,
+    pub arrival: u64,
+    /// Completion cycle; latency = `done - arrival`.
+    pub done: u64,
+    pub output: Vec<f32>,
+}
+
+/// Outcome of one [`PoolSim::run`], completions sorted by request index.
+#[derive(Debug)]
+pub struct SimReport {
+    pub completions: Vec<SimCompletion>,
+    /// Cycle the last batch completed.
+    pub makespan: u64,
+    /// High-watermark of total queued (unflushed) requests.
+    pub max_depth: usize,
+    pub stolen_batches: u64,
+}
+
+struct SimShard {
+    device: NpuDevice,
+    batcher: Batcher<usize>,
+    /// Cycle this shard finishes its in-flight batch (0 = idle).
+    free_at: u64,
+}
+
+/// The pool's dispatch/batching logic replayed single-threaded in
+/// virtual time over [`NpuDevice`] cycle accounting. Virtual-time
+/// convention: **one device cycle ≡ one microsecond**, so the
+/// [`Batcher`]'s `Instant`/`Duration` deadline arithmetic applies
+/// unchanged (`BatchPolicy::max_wait` is therefore a cycle count here).
+pub struct PoolSim {
+    shards: Vec<SimShard>,
+    policy: BatchPolicy,
+    epoch: Instant,
+}
+
+impl PoolSim {
+    /// Build from per-shard devices (normally `NpuDevice::with_memory`,
+    /// so each shard fronts its own compressed hierarchy).
+    pub fn new(devices: Vec<NpuDevice>, policy: BatchPolicy) -> Result<PoolSim> {
+        anyhow::ensure!(!devices.is_empty(), "pool sim needs at least one shard");
+        let dim = devices[0].program().input_dim();
+        anyhow::ensure!(
+            devices.iter().all(|d| d.program().input_dim() == dim),
+            "shards disagree on input arity"
+        );
+        Ok(PoolSim {
+            shards: devices
+                .into_iter()
+                .map(|device| SimShard { device, batcher: Batcher::new(policy), free_at: 0 })
+                .collect(),
+            policy,
+            epoch: Instant::now(),
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard device (for post-run hierarchy stats).
+    pub fn device(&self, shard: usize) -> &NpuDevice {
+        &self.shards[shard].device
+    }
+
+    /// Virtual instant of a cycle.
+    fn v(&self, cycle: u64) -> Instant {
+        self.epoch + Duration::from_micros(cycle)
+    }
+
+    /// Next cycle at which shard `s` could flush a batch, if any.
+    fn next_flush(&self, s: usize, now: u64) -> Option<u64> {
+        let sh = &self.shards[s];
+        if sh.batcher.is_empty() {
+            return None;
+        }
+        let ready = if sh.batcher.len() >= self.policy.max_batch {
+            now
+        } else {
+            let d = sh.batcher.time_to_deadline(self.v(now)).unwrap_or(Duration::ZERO);
+            // ceil to whole cycles: flooring a sub-microsecond remainder
+            // to 0 would report ready==now while should_flush still says
+            // no, and the event loop would spin without advancing time
+            now + d.as_nanos().div_ceil(1_000) as u64
+        };
+        Some(ready.max(sh.free_at))
+    }
+
+    fn execute(
+        &mut self,
+        s: usize,
+        now: u64,
+        requests: &[SimRequest],
+        completions: &mut Vec<SimCompletion>,
+    ) -> Result<()> {
+        let at = self.v(now);
+        let idxs = self.shards[s].batcher.take_batch(at);
+        if idxs.is_empty() {
+            return Ok(());
+        }
+        let inputs: Vec<Vec<f32>> = idxs.iter().map(|&i| requests[i].input.clone()).collect();
+        let r = self.shards[s].device.execute_batch(&inputs)?;
+        let done = now + r.total_cycles;
+        self.shards[s].free_at = done;
+        for (i, out) in idxs.into_iter().zip(r.outputs) {
+            completions.push(SimCompletion {
+                index: i,
+                shard: s,
+                arrival: requests[i].arrival,
+                done,
+                output: out,
+            });
+        }
+        Ok(())
+    }
+
+    /// Replay an open-loop trace (arrivals must be nondecreasing).
+    /// Deterministic: same devices + policy + trace ⇒ identical report.
+    pub fn run(&mut self, requests: &[SimRequest]) -> Result<SimReport> {
+        anyhow::ensure!(
+            requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "open-loop trace must have nondecreasing arrivals"
+        );
+        let mut completions: Vec<SimCompletion> = Vec::with_capacity(requests.len());
+        let mut next = 0usize;
+        let mut now = 0u64;
+        let mut max_depth = 0usize;
+        let mut stolen = 0u64;
+        loop {
+            // next event: an arrival or the earliest possible flush
+            let ta = requests.get(next).map(|r| r.arrival);
+            let tf = (0..self.shards.len()).filter_map(|s| self.next_flush(s, now)).min();
+            now = match (ta, tf) {
+                (None, None) => break,
+                (Some(a), None) => a.max(now),
+                (None, Some(f)) => f.max(now),
+                (Some(a), Some(f)) => a.min(f).max(now),
+            };
+            // deliver due arrivals to the least-loaded shard
+            while next < requests.len() && requests[next].arrival <= now {
+                let loads: Vec<usize> = self
+                    .shards
+                    .iter()
+                    .map(|s| s.batcher.len() + usize::from(s.free_at > now))
+                    .collect();
+                let shard = pick_shard(&loads);
+                let at = self.v(requests[next].arrival);
+                if self.shards[shard].batcher.push(next, at).is_err() {
+                    anyhow::bail!("sim lane overflow: raise queue_cap for open-loop traces");
+                }
+                next += 1;
+            }
+            let depth: usize = self.shards.iter().map(|s| s.batcher.len()).sum();
+            max_depth = max_depth.max(depth);
+            // flush + steal until the state at `now` is quiescent
+            loop {
+                let mut progressed = false;
+                for s in 0..self.shards.len() {
+                    while self.shards[s].free_at <= now
+                        && self.shards[s].batcher.should_flush(self.v(now))
+                    {
+                        self.execute(s, now, requests, &mut completions)?;
+                        progressed = true;
+                    }
+                }
+                // an idle, empty shard adopts the oldest batch of the
+                // deepest *busy* peer (an idle peer can run its own
+                // work); the stolen work then follows the normal
+                // size-or-deadline flush rules, exactly like a threaded
+                // thief that gathered it into its batcher
+                for s in 0..self.shards.len() {
+                    if self.shards[s].free_at > now || !self.shards[s].batcher.is_empty() {
+                        continue;
+                    }
+                    let depths: Vec<usize> = self
+                        .shards
+                        .iter()
+                        .map(|sh| if sh.free_at > now { sh.batcher.len() } else { 0 })
+                        .collect();
+                    if let Some(victim) = pick_victim(&depths, s) {
+                        let at = self.v(now);
+                        let moved = self.shards[victim].batcher.take_batch(at);
+                        if moved.is_empty() {
+                            continue;
+                        }
+                        for idx in moved {
+                            let _ = self.shards[s].batcher.push(idx, at);
+                        }
+                        stolen += 1;
+                        progressed = true;
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+        }
+        anyhow::ensure!(
+            completions.len() == requests.len(),
+            "sim lost work: {} of {} completed",
+            completions.len(),
+            requests.len()
+        );
+        let makespan = completions.iter().map(|c| c.done).max().unwrap_or(0);
+        completions.sort_by_key(|c| c.index);
+        Ok(SimReport { completions, makespan, max_depth, stolen_batches: stolen })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::DeviceBackend;
+    use crate::fixed::Q7_8;
+    use crate::npu::program::{Activation, NpuProgram};
+    use crate::npu::{NpuConfig, PuSim};
+
+    fn program() -> NpuProgram {
+        let sizes = [2usize, 4, 1];
+        let n: usize = sizes.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+        let flat: Vec<f32> = (0..n).map(|i| (i as f32 % 5.0 - 2.0) * 0.15).collect();
+        NpuProgram::from_f32(
+            "t",
+            &sizes,
+            &[Activation::Sigmoid, Activation::Linear],
+            &flat,
+            Q7_8,
+        )
+        .unwrap()
+    }
+
+    fn factories(shards: usize) -> Vec<BackendFactory> {
+        (0..shards)
+            .map(|_| {
+                let p = program();
+                let f: BackendFactory = Box::new(move || {
+                    Ok(Box::new(DeviceBackend {
+                        device: NpuDevice::new(NpuConfig::default(), p)?,
+                    }) as Box<dyn Backend>)
+                });
+                f
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pool_serves_across_shards_with_correct_numerics() {
+        let pool = NpuPool::start(factories(4), ServerConfig::default()).unwrap();
+        assert_eq!(pool.shard_count(), 4);
+        let pu = PuSim::new(program(), 8);
+        let inputs: Vec<Vec<f32>> =
+            (0..80).map(|i| vec![(i as f32) / 80.0, 1.0 - (i as f32) / 80.0]).collect();
+        let got = pool.submit_all(&inputs).unwrap();
+        for (x, y) in inputs.iter().zip(&got) {
+            assert_eq!(y, &pu.forward_f32(x));
+        }
+        assert_eq!(pool.metrics().server.requests.get(), 80);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_rejects_wrong_arity() {
+        let pool = NpuPool::start(factories(2), ServerConfig::default()).unwrap();
+        assert!(pool.submit(vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn failed_shard_construction_fails_start_and_reaps_workers() {
+        let mut fs = factories(2);
+        fs.push(Box::new(|| Err(anyhow!("no such accelerator"))));
+        assert!(NpuPool::start(fs, ServerConfig::default()).is_err());
+    }
+
+    #[test]
+    fn empty_pool_rejected() {
+        assert!(NpuPool::start(Vec::new(), ServerConfig::default()).is_err());
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_an_error() {
+        let pool = NpuPool::start(factories(1), ServerConfig::default()).unwrap();
+        pool.begin_shutdown();
+        assert!(pool.submit(vec![0.1, 0.2]).is_err());
+    }
+
+    fn sim(shards: usize) -> PoolSim {
+        let devices = (0..shards)
+            .map(|_| NpuDevice::new(NpuConfig::default(), program()).unwrap())
+            .collect();
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(500), // = 500 cycles
+            queue_cap: 1 << 16,
+        };
+        PoolSim::new(devices, policy).unwrap()
+    }
+
+    fn trace(n: usize, gap: u64) -> Vec<SimRequest> {
+        (0..n)
+            .map(|i| SimRequest {
+                arrival: i as u64 * gap,
+                input: vec![(i as f32) / n as f32, 0.5],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sim_completes_every_request_exactly_once() {
+        let mut s = sim(2);
+        let t = trace(37, 100);
+        let r = s.run(&t).unwrap();
+        assert_eq!(r.completions.len(), 37);
+        for (i, c) in r.completions.iter().enumerate() {
+            assert_eq!(c.index, i, "sorted by request index");
+            assert!(c.done > c.arrival, "latency is positive");
+            assert!(c.shard < 2);
+        }
+        assert!(r.makespan >= r.completions.iter().map(|c| c.done).max().unwrap());
+    }
+
+    #[test]
+    fn sim_is_deterministic() {
+        let t = trace(50, 60);
+        let a = sim(4).run(&t).unwrap();
+        let b = sim(4).run(&t).unwrap();
+        assert_eq!(a.completions.len(), b.completions.len());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            let xt = (x.index, x.shard, x.arrival, x.done);
+            assert_eq!(xt, (y.index, y.shard, y.arrival, y.done));
+            assert_eq!(x.output, y.output);
+        }
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.stolen_batches, b.stolen_batches);
+        assert_eq!(a.max_depth, b.max_depth);
+    }
+
+    #[test]
+    fn sim_outputs_are_shard_count_invariant() {
+        let t = trace(64, 30);
+        let one = sim(1).run(&t).unwrap();
+        let four = sim(4).run(&t).unwrap();
+        for (a, b) in one.completions.iter().zip(&four.completions) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.output, b.output, "request {}", a.index);
+        }
+    }
+
+    #[test]
+    fn sim_rejects_unsorted_trace() {
+        let mut s = sim(1);
+        let t = vec![
+            SimRequest { arrival: 10, input: vec![0.1, 0.2] },
+            SimRequest { arrival: 5, input: vec![0.1, 0.2] },
+        ];
+        assert!(s.run(&t).is_err());
+    }
+}

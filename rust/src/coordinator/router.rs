@@ -1,38 +1,72 @@
 //! Multi-NPU router — the paper's §5 future-work direction made concrete:
 //! different applications get *customized* NPUs (per-benchmark topologies,
 //! as BenchNN argues), and a front-end router dispatches invocations by
-//! benchmark to the right accelerator instance, each with its own batcher
-//! and driver thread.
+//! benchmark to the right accelerator **pool**, each pool owning one or
+//! more device shards with their own batchers and driver threads.
 //!
-//! This is the vLLM-router shape scaled down to SNNAP: route → batch →
-//! execute → reply, with per-route metrics and aggregate reporting.
+//! This is the vLLM-router shape scaled down to SNNAP: route → pick the
+//! least-loaded shard → batch → execute → reply, with per-route metrics
+//! and aggregate reporting. The dispatch policies themselves
+//! ([`pick_shard`], [`pick_victim`]) live here so the threaded pool and
+//! the deterministic virtual-time pool ([`super::pool::PoolSim`]) share
+//! one implementation.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
-use super::server::{BackendFactory, NpuServer, Pending, ServerConfig};
+use super::pool::{BackendFactory, NpuPool, Pending};
+use super::server::ServerConfig;
 
-/// A named route to one NPU server.
-struct Route {
-    server: NpuServer,
+/// Least-loaded dispatch: the shard with the smallest load, lowest id on
+/// ties (deterministic, so the virtual-time pool replays identically).
+pub fn pick_shard(loads: &[usize]) -> usize {
+    loads
+        .iter()
+        .enumerate()
+        .min_by_key(|(i, l)| (**l, *i))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
 }
 
-/// Routes invocations to per-benchmark NPU servers.
+/// Work-stealing victim: the deepest queue other than `thief`'s, lowest
+/// id on ties; `None` when no peer has queued work.
+pub fn pick_victim(depths: &[usize], thief: usize) -> Option<usize> {
+    depths
+        .iter()
+        .enumerate()
+        .filter(|&(i, &d)| i != thief && d > 0)
+        .max_by_key(|&(i, d)| (*d, std::cmp::Reverse(i)))
+        .map(|(i, _)| i)
+}
+
+/// A named route to one NPU pool.
+struct Route {
+    pool: NpuPool,
+}
+
+/// Routes invocations to per-benchmark NPU pools.
 pub struct NpuRouter {
     routes: BTreeMap<String, Route>,
 }
 
 impl NpuRouter {
-    /// Build a router from (name, backend factory) pairs; each route gets
-    /// its own driver thread and batching policy.
-    pub fn new(
-        routes: Vec<(String, BackendFactory, ServerConfig)>,
+    /// Build a single-shard-per-benchmark router from
+    /// (name, backend factory) triples — the PR 2 shape, now a 1-shard
+    /// pool per route.
+    pub fn new(routes: Vec<(String, BackendFactory, ServerConfig)>) -> Result<NpuRouter> {
+        Self::new_sharded(routes.into_iter().map(|(n, f, c)| (n, vec![f], c)).collect())
+    }
+
+    /// Build a sharded router: each benchmark gets `factories.len()`
+    /// device shards behind one shared work queue.
+    pub fn new_sharded(
+        routes: Vec<(String, Vec<BackendFactory>, ServerConfig)>,
     ) -> Result<NpuRouter> {
         let mut map = BTreeMap::new();
-        for (name, factory, cfg) in routes {
-            let server = NpuServer::start(factory, cfg)?;
-            map.insert(name, Route { server });
+        for (name, factories, cfg) in routes {
+            let pool = NpuPool::start(factories, cfg)?;
+            map.insert(name, Route { pool });
         }
         if map.is_empty() {
             return Err(anyhow!("router needs at least one route"));
@@ -45,13 +79,18 @@ impl NpuRouter {
         self.routes.keys().map(String::as_str).collect()
     }
 
+    /// The pool behind a benchmark (for shard-level inspection).
+    pub fn pool(&self, benchmark: &str) -> Option<&NpuPool> {
+        self.routes.get(benchmark).map(|r| &r.pool)
+    }
+
     /// Submit an invocation for `benchmark`.
     pub fn submit(&self, benchmark: &str, input: Vec<f32>) -> Result<Pending> {
         let r = self
             .routes
             .get(benchmark)
             .ok_or_else(|| anyhow!("no route for benchmark {benchmark:?}"))?;
-        r.server.submit(input)
+        r.pool.submit(input)
     }
 
     /// Submit a mixed stream of (benchmark, input) pairs and wait for all
@@ -68,20 +107,20 @@ impl NpuRouter {
     pub fn report(&self) -> String {
         let mut out = String::new();
         for (name, r) in &self.routes {
-            out.push_str(&format!("{name:<14} {}\n", r.server.metrics().report()));
+            out.push_str(&format!("{name:<14} {}\n", r.pool.metrics().report()));
         }
         out
     }
 
     /// Total requests served across all routes.
     pub fn total_requests(&self) -> u64 {
-        self.routes.values().map(|r| r.server.metrics().requests.get()).sum()
+        self.routes.values().map(|r| r.pool.metrics().server.requests.get()).sum()
     }
 
     /// Graceful shutdown of every route.
     pub fn shutdown(self) {
         for (_, r) in self.routes {
-            r.server.shutdown();
+            r.pool.shutdown();
         }
     }
 }
@@ -97,21 +136,40 @@ mod tests {
     use crate::npu::{NpuConfig, NpuDevice, PuSim};
     use crate::util::rng::Rng;
 
+    fn factory_for(name: &str) -> BackendFactory {
+        let w = workload(name).unwrap();
+        let program = program_from_workload(w.as_ref(), Q7_8, 7);
+        Box::new(move || {
+            Ok(Box::new(DeviceBackend {
+                device: NpuDevice::new(NpuConfig::default(), program)?,
+            }) as Box<dyn Backend>)
+        })
+    }
+
     fn router_for(names: &[&str]) -> NpuRouter {
         let routes = names
             .iter()
-            .map(|&name| {
-                let w = workload(name).unwrap();
-                let program = program_from_workload(w.as_ref(), Q7_8, 7);
-                let factory: BackendFactory = Box::new(move || {
-                    Ok(Box::new(DeviceBackend {
-                        device: NpuDevice::new(NpuConfig::default(), program)?,
-                    }) as Box<dyn Backend>)
-                });
-                (name.to_string(), factory, ServerConfig::default())
-            })
+            .map(|&name| (name.to_string(), factory_for(name), ServerConfig::default()))
             .collect();
         NpuRouter::new(routes).unwrap()
+    }
+
+    #[test]
+    fn pick_shard_is_least_loaded_with_lowest_id_ties() {
+        assert_eq!(pick_shard(&[3, 1, 2]), 1);
+        assert_eq!(pick_shard(&[2, 0, 0, 1]), 1);
+        assert_eq!(pick_shard(&[5]), 0);
+        assert_eq!(pick_shard(&[]), 0);
+        assert_eq!(pick_shard(&[7, 7, 7]), 0);
+    }
+
+    #[test]
+    fn pick_victim_is_deepest_peer_or_none() {
+        assert_eq!(pick_victim(&[0, 4, 2], 0), Some(1));
+        assert_eq!(pick_victim(&[9, 4, 2], 0), Some(1), "thief excluded");
+        assert_eq!(pick_victim(&[0, 0, 0], 1), None);
+        assert_eq!(pick_victim(&[0, 3, 3], 0), Some(1), "ties pick lowest id");
+        assert_eq!(pick_victim(&[5], 0), None, "no peers");
     }
 
     #[test]
@@ -141,6 +199,36 @@ mod tests {
     }
 
     #[test]
+    fn sharded_route_spreads_work_and_keeps_numerics() {
+        let factories: Vec<BackendFactory> = (0..4).map(|_| factory_for("sobel")).collect();
+        let router = NpuRouter::new_sharded(vec![(
+            "sobel".to_string(),
+            factories,
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: std::time::Duration::from_micros(100),
+                    queue_cap: 1024,
+                },
+            },
+        )])
+        .unwrap();
+        assert_eq!(router.pool("sobel").unwrap().shard_count(), 4);
+        let w = workload("sobel").unwrap();
+        let program = program_from_workload(w.as_ref(), Q7_8, 7);
+        let pu = PuSim::new(program, 8);
+        let mut rng = Rng::new(9);
+        let inputs: Vec<Vec<f32>> = (0..128).map(|_| w.gen_input(&mut rng)).collect();
+        let pending: Vec<_> =
+            inputs.iter().map(|x| router.submit("sobel", x.clone()).unwrap()).collect();
+        for (x, p) in inputs.iter().zip(pending) {
+            assert_eq!(p.wait().unwrap(), pu.forward_f32(x));
+        }
+        assert_eq!(router.total_requests(), 128);
+        router.shutdown();
+    }
+
+    #[test]
     fn unknown_route_is_an_error() {
         let router = router_for(&["sobel"]);
         assert!(router.submit("jpeg", vec![0.0; 64]).is_err());
@@ -160,16 +248,9 @@ mod tests {
     #[test]
     fn per_route_policies_are_independent() {
         let mk = |name: &str, max_batch: usize| {
-            let w = workload(name).unwrap();
-            let program = program_from_workload(w.as_ref(), Q7_8, 7);
-            let factory: BackendFactory = Box::new(move || {
-                Ok(Box::new(DeviceBackend {
-                    device: NpuDevice::new(NpuConfig::default(), program)?,
-                }) as Box<dyn Backend>)
-            });
             (
                 name.to_string(),
-                factory,
+                factory_for(name),
                 ServerConfig {
                     policy: BatchPolicy {
                         max_batch,

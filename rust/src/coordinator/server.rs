@@ -1,17 +1,22 @@
-//! The driver thread: owns the backend, drains the invocation queue into
-//! batches, routes results back to callers.
+//! The single-accelerator server: one driver thread owning one backend.
+//!
+//! Since PR 3 this is a thin facade over a one-shard [`NpuPool`] — the
+//! batching/drain/backpressure logic lives in `pool.rs` and is shared
+//! with the sharded configuration, so every server test exercises the
+//! pool's driver loop. The public API (`start`/`submit`/`metrics`/
+//! `shutdown`) is unchanged from the pre-pool coordinator, with one
+//! semantic difference: backpressure is now fail-fast — a full queue
+//! resolves the [`Pending`] with a queue-full error immediately, where
+//! the old driver's bounded channel made `submit` *block* once
+//! `queue_cap` invocations were in flight.
 
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::Instant;
-
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::metrics::ServerMetrics;
 
-use super::backend::Backend;
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::BatchPolicy;
+use super::pool::NpuPool;
+pub use super::pool::{BackendFactory, Pending};
 
 /// Server configuration.
 #[derive(Debug, Clone, Copy, Default)]
@@ -19,171 +24,48 @@ pub struct ServerConfig {
     pub policy: BatchPolicy,
 }
 
-/// Constructs the backend on the driver thread (PJRT clients are not
-/// `Send`, so they must be born where they live).
-pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
-
-struct Invocation {
-    input: Vec<f32>,
-    submitted: Instant,
-    reply: Sender<Result<Vec<f32>>>,
-}
-
-enum Msg {
-    Invoke(Invocation),
-    Shutdown,
-}
-
-/// Handle to a running NPU server. Clone-free: share via `Arc` if needed;
-/// `submit` takes `&self`.
+/// Handle to a running NPU server (a one-shard pool). Clone-free: share
+/// via `Arc` if needed; `submit` takes `&self`.
 pub struct NpuServer {
-    tx: SyncSender<Msg>,
-    metrics: Arc<ServerMetrics>,
-    driver: Option<JoinHandle<()>>,
-    input_dim: usize,
-}
-
-/// A pending reply.
-pub struct Pending {
-    rx: Receiver<Result<Vec<f32>>>,
-}
-
-impl Pending {
-    /// Block for the result.
-    pub fn wait(self) -> Result<Vec<f32>> {
-        self.rx.recv().map_err(|_| anyhow!("server dropped the invocation"))?
-    }
+    pool: NpuPool,
 }
 
 impl NpuServer {
     /// Start the driver thread; `factory` runs on that thread to build
     /// the backend. Fails if construction fails.
     pub fn start(factory: BackendFactory, cfg: ServerConfig) -> Result<NpuServer> {
-        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.policy.queue_cap);
-        let metrics = Arc::new(ServerMetrics::default());
-        let m = metrics.clone();
-        let (dim_tx, dim_rx) = mpsc::channel::<Result<usize>>();
-        let driver = std::thread::Builder::new()
-            .name("snnapc-driver".into())
-            .spawn(move || {
-                let mut backend = match factory() {
-                    Ok(b) => {
-                        let _ = dim_tx.send(Ok(b.input_dim()));
-                        b
-                    }
-                    Err(e) => {
-                        let _ = dim_tx.send(Err(e));
-                        return;
-                    }
-                };
-                let mut batcher: Batcher<Invocation> = Batcher::new(cfg.policy);
-                let mut open = true;
-                while open || !batcher.is_empty() {
-                    // wait for work, bounded by the batch deadline
-                    let now = Instant::now();
-                    let msg = if open {
-                        match batcher.time_to_deadline(now) {
-                            None => rx.recv().map_err(|_| ()).map(Some).unwrap_or(None).map_or(
-                                Err(RecvTimeoutError::Disconnected),
-                                Ok,
-                            ),
-                            Some(d) => rx.recv_timeout(d),
-                        }
-                    } else {
-                        Err(RecvTimeoutError::Timeout)
-                    };
-                    match msg {
-                        Ok(Msg::Invoke(inv)) => {
-                            let now = Instant::now();
-                            if let Err(inv) = batcher.push(inv, now) {
-                                m.rejected.inc();
-                                m.queue_full_events.inc();
-                                let _ = inv.reply.send(Err(anyhow!("queue full")));
-                            }
-                        }
-                        Ok(Msg::Shutdown) => open = false,
-                        Err(RecvTimeoutError::Timeout) => {}
-                        Err(RecvTimeoutError::Disconnected) => open = false,
-                    }
-                    let now = Instant::now();
-                    if batcher.should_flush(now) || (!open && !batcher.is_empty()) {
-                        let batch = batcher.take_batch(now);
-                        let inputs: Vec<Vec<f32>> =
-                            batch.iter().map(|i| i.input.clone()).collect();
-                        m.batches.inc();
-                        m.requests.add(batch.len() as u64);
-                        match backend.run_batch(&inputs) {
-                            Ok(outputs) => {
-                                for (inv, out) in batch.into_iter().zip(outputs) {
-                                    m.latency.record(inv.submitted.elapsed());
-                                    let _ = inv.reply.send(Ok(out));
-                                }
-                            }
-                            Err(e) => {
-                                let msg = format!("batch failed: {e:#}");
-                                for inv in batch {
-                                    let _ = inv.reply.send(Err(anyhow!(msg.clone())));
-                                }
-                            }
-                        }
-                    }
-                }
-            })
-            .expect("spawn driver");
-        let input_dim = dim_rx
-            .recv()
-            .map_err(|_| anyhow!("driver thread died during backend construction"))??;
-        Ok(NpuServer { tx, metrics, driver: Some(driver), input_dim })
+        Ok(NpuServer { pool: NpuPool::start(vec![factory], cfg)? })
     }
 
     /// Submit one invocation; returns a [`Pending`] reply handle.
     pub fn submit(&self, input: Vec<f32>) -> Result<Pending> {
-        anyhow::ensure!(
-            input.len() == self.input_dim,
-            "input arity {} != {}",
-            input.len(),
-            self.input_dim
-        );
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Invoke(Invocation { input, submitted: Instant::now(), reply }))
-            .map_err(|_| anyhow!("server is shut down"))?;
-        Ok(Pending { rx })
+        self.pool.submit(input)
     }
 
     /// Submit a whole slice and wait for all results (convenience).
     pub fn submit_all(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let pending: Vec<Pending> =
-            inputs.iter().map(|x| self.submit(x.clone())).collect::<Result<_>>()?;
-        pending.into_iter().map(Pending::wait).collect()
+        self.pool.submit_all(inputs)
     }
 
     pub fn metrics(&self) -> &ServerMetrics {
-        &self.metrics
+        &self.pool.metrics().server
+    }
+
+    /// The underlying one-shard pool (cycle/steal/depth metrics).
+    pub fn pool(&self) -> &NpuPool {
+        &self.pool
     }
 
     /// Graceful shutdown: drain the queue, then join the driver.
-    pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.driver.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for NpuServer {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.driver.take() {
-            let _ = h.join();
-        }
+    pub fn shutdown(self) {
+        self.pool.shutdown()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::DeviceBackend;
+    use crate::coordinator::backend::{Backend, DeviceBackend};
     use crate::fixed::Q7_8;
     use crate::npu::program::{Activation, NpuProgram};
     use crate::npu::{NpuConfig, NpuDevice, PuSim};

@@ -1,0 +1,469 @@
+//! E10 — the serving experiment: a sharded device pool under open-loop
+//! load, over the compressed memory hierarchy.
+//!
+//! E5/E9 measure the paper's bandwidth and capacity claims one kernel at
+//! a time; E10 asks the systems question the ROADMAP's north star poses:
+//! what do those claims buy a *serving pool* under multi-tenant traffic?
+//! A deterministic seeded load generator produces an open-loop arrival
+//! process (exponential interarrivals, offered load a fixed multiple of
+//! one shard's service rate, mixed-kernel streams for the router case);
+//! [`PoolSim`] replays it in virtual time against N device shards, each
+//! fronted by its own `cache → LCP-DRAM` hierarchy
+//! ([`NpuDevice::with_memory`]); rows report delivered throughput,
+//! latency percentiles in device cycles, aggregate DRAM bytes, and the
+//! compressed-vs-raw capacity headroom. Everything is seeded, so two
+//! runs produce bit-identical rows (asserted in
+//! `rust/tests/serving_pool.rs`).
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::bench_suite::{all_workloads, workload, Workload};
+use crate::coordinator::{BatchPolicy, PoolSim, SimRequest};
+use crate::fixed::QFormat;
+use crate::npu::{NpuConfig, NpuDevice, NpuProgram};
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::e9_cache::build_hierarchy;
+
+/// The shard-count sweep.
+pub const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Per-shard cache geometry (sets, ways, degree): 1 KiB of SRAM, small
+/// on purpose — a serving batch's queue + weight working set must
+/// overflow it so the capacity *and* bandwidth effects of compression
+/// are visible under load (an oversized cache hides both).
+pub const E10_CACHE: (usize, usize, usize) = (8, 2, 4);
+
+/// Offered load as a multiple of one shard's compute-only service rate:
+/// saturates small pools, so the shard sweep shows real scaling.
+const OVERLOAD: f64 = 6.0;
+
+/// Batch-formation deadline in device cycles (the virtual-time pool's
+/// `max_wait`).
+const MAX_WAIT_CYCLES: u64 = 2_000;
+
+/// One (kernel, scheme, shard-count) cell of the serving sweep.
+#[derive(Debug, Clone)]
+pub struct E10Row {
+    pub workload: String,
+    pub scheme: String,
+    pub shards: usize,
+    pub requests: u64,
+    /// Offered arrival rate (invocations/s at the NPU clock).
+    pub offered_rate: f64,
+    /// Delivered rate: requests / makespan.
+    pub throughput: f64,
+    pub mean_cycles: f64,
+    pub p50_cycles: u64,
+    pub p95_cycles: u64,
+    pub p99_cycles: u64,
+    pub makespan_cycles: u64,
+    /// High-watermark of queued (unflushed) requests across shards.
+    pub max_queue_depth: usize,
+    pub stolen_batches: u64,
+    /// Aggregate cache hit rate across shards.
+    pub hit_rate: f64,
+    /// Logical bytes the shards asked their hierarchies for.
+    pub logical_bytes: u64,
+    /// Physical bytes that crossed the DRAM channels (all shards).
+    pub dram_bytes: u64,
+    /// Mean resident-lines-per-way across the shards that served
+    /// traffic: the compressed-vs-raw capacity headroom (raw caps
+    /// at 1.0; idle shards' empty caches are excluded).
+    pub capacity_ratio: f64,
+}
+
+impl E10Row {
+    /// Machine-readable form for the harness report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("scheme", self.scheme.clone().into()),
+            ("shards", self.shards.into()),
+            ("requests", self.requests.into()),
+            ("offered_rate", self.offered_rate.into()),
+            ("throughput", self.throughput.into()),
+            ("mean_cycles", self.mean_cycles.into()),
+            ("p50_cycles", self.p50_cycles.into()),
+            ("p95_cycles", self.p95_cycles.into()),
+            ("p99_cycles", self.p99_cycles.into()),
+            ("makespan_cycles", self.makespan_cycles.into()),
+            ("max_queue_depth", self.max_queue_depth.into()),
+            ("stolen_batches", self.stolen_batches.into()),
+            ("hit_rate", self.hit_rate.into()),
+            ("logical_bytes", self.logical_bytes.into()),
+            ("dram_bytes", self.dram_bytes.into()),
+            ("capacity_ratio", self.capacity_ratio.into()),
+        ])
+    }
+}
+
+/// Exact nearest-rank percentile of a sorted sample (deterministic —
+/// no histogram bucketing in the report rows).
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Deterministic open-loop trace for one kernel: exponential
+/// interarrivals whose mean is one shard's compute-only per-invocation
+/// service time divided by [`OVERLOAD`]. The probe device carries no
+/// memory hierarchy, so the same seed yields the *same arrivals for
+/// every scheme* — schemes compete on identical traffic.
+pub fn gen_trace(
+    w: &dyn Workload,
+    program: &NpuProgram,
+    n: usize,
+    batch: usize,
+    seed: u64,
+) -> Vec<SimRequest> {
+    let b = batch.max(1);
+    let mut probe = NpuDevice::new(NpuConfig::default(), program.clone()).expect("probe device");
+    let inputs = vec![vec![0.25f32; program.input_dim()]; b];
+    let probe_cycles = probe.execute_batch(&inputs).expect("probe batch").total_cycles;
+    let per_item = (probe_cycles as f64 / b as f64).max(1.0);
+    let mean = (per_item / OVERLOAD).max(1.0);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..n.max(1))
+        .map(|_| {
+            t += -(1.0 - rng.f64()).ln() * mean;
+            SimRequest { arrival: t as u64, input: w.gen_input(&mut rng) }
+        })
+        .collect()
+}
+
+/// Deterministic mixed-kernel trace: every kernel gets its own seeded
+/// arrival process (forked seed), merged by arrival cycle and cut at
+/// exactly `n` requests — the stream a front-end router splits across
+/// per-benchmark pools. Returns `(kernel index, request)` pairs sorted
+/// by `(arrival, kernel)`.
+pub fn mixed_trace(
+    kernels: &[Box<dyn Workload>],
+    programs: &[NpuProgram],
+    n: usize,
+    batch: usize,
+    seed: u64,
+) -> Vec<(usize, SimRequest)> {
+    let k = kernels.len().max(1);
+    let per = n.div_ceil(k).max(1);
+    let mut merged: Vec<(usize, SimRequest)> = Vec::with_capacity(per * k);
+    for (ki, (w, p)) in kernels.iter().zip(programs).enumerate() {
+        let sub_seed = seed ^ ((ki as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let trace = gen_trace(w.as_ref(), p, per, batch, sub_seed);
+        merged.extend(trace.into_iter().map(|r| (ki, r)));
+    }
+    merged.sort_by_key(|(ki, r)| (r.arrival, *ki));
+    // k may not divide n: drop the latest arrivals so the stream holds
+    // exactly the requested load (the cut is fair — it trims whichever
+    // kernels happened to arrive last)
+    merged.truncate(n);
+    merged
+}
+
+/// Run one (kernel, scheme, shard-count) cell over a prebuilt trace.
+fn measure_trace(
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    shards: usize,
+    batch: usize,
+    trace: &[SimRequest],
+) -> Result<E10Row> {
+    anyhow::ensure!(shards > 0, "shard count must be positive");
+    let devices = (0..shards)
+        .map(|_| {
+            Ok(NpuDevice::new(NpuConfig::default(), program.clone())?
+                .with_memory(Box::new(build_hierarchy(scheme, E10_CACHE)?)))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let policy = BatchPolicy {
+        max_batch: batch.max(1),
+        max_wait: Duration::from_micros(MAX_WAIT_CYCLES), // cycles, by sim convention
+        queue_cap: trace.len().max(batch.max(1)),
+    };
+    let mut sim = PoolSim::new(devices, policy)?;
+    let report = sim.run(trace)?;
+
+    let mut lat: Vec<u64> = report.completions.iter().map(|c| c.done - c.arrival).collect();
+    lat.sort_unstable();
+    let mean_cycles = if lat.is_empty() {
+        0.0
+    } else {
+        lat.iter().sum::<u64>() as f64 / lat.len() as f64
+    };
+
+    let clock_hz = NpuConfig::default().clock_mhz * 1e6;
+    let span = trace.last().map(|r| r.arrival).unwrap_or(0);
+    let offered_rate =
+        if span > 0 { trace.len() as f64 / (span as f64 / clock_hz) } else { 0.0 };
+    let throughput = if report.makespan > 0 {
+        trace.len() as f64 / (report.makespan as f64 / clock_hz)
+    } else {
+        0.0
+    };
+
+    let (mut hits, mut accesses, mut logical, mut physical) = (0u64, 0u64, 0u64, 0u64);
+    let (mut cap, mut active_shards) = (0.0f64, 0u32);
+    for s in 0..sim.shard_count() {
+        let mem = sim.device(s).memory().expect("shards carry a hierarchy");
+        if let Some((h, a)) = mem.hit_stats() {
+            hits += h;
+            accesses += a;
+            // only shards that served traffic speak to capacity: an
+            // idle shard's empty cache would dilute the headroom column
+            if a > 0 {
+                cap += mem.capacity_ratio();
+                active_shards += 1;
+            }
+        }
+        let (l, p) = mem.traffic();
+        logical += l;
+        physical += p;
+    }
+
+    Ok(E10Row {
+        workload: w.name().to_string(),
+        scheme: scheme.to_string(),
+        shards,
+        requests: trace.len() as u64,
+        offered_rate,
+        throughput,
+        mean_cycles,
+        p50_cycles: percentile(&lat, 0.50),
+        p95_cycles: percentile(&lat, 0.95),
+        p99_cycles: percentile(&lat, 0.99),
+        makespan_cycles: report.makespan,
+        max_queue_depth: report.max_depth,
+        stolen_batches: report.stolen_batches,
+        hit_rate: if accesses == 0 { 0.0 } else { hits as f64 / accesses as f64 },
+        logical_bytes: logical,
+        dram_bytes: physical,
+        capacity_ratio: if active_shards == 0 { 0.0 } else { cap / f64::from(active_shards) },
+    })
+}
+
+/// One cell with its own generated trace (single-kernel traffic).
+pub fn measure(
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    shards: usize,
+    n: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<E10Row> {
+    let trace = gen_trace(w, program, n, batch, seed);
+    measure_trace(w, program, scheme, shards, batch, &trace)
+}
+
+/// The shard sweep for one (kernel, scheme) — one harness job. The same
+/// seed generates one trace that every shard count replays.
+pub fn measure_all_shards(
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    n: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<Vec<E10Row>> {
+    let trace = gen_trace(w, program, n, batch, seed);
+    SHARD_COUNTS
+        .iter()
+        .map(|&shards| measure_trace(w, program, scheme, shards, batch, &trace))
+        .collect()
+}
+
+/// Resolve programs for a kernel set: trained artifact weights when
+/// available, deterministic synthetic weights otherwise.
+fn programs_for(ws: &[Box<dyn Workload>], fmt: QFormat) -> Vec<NpuProgram> {
+    let manifest = super::load_manifest().ok();
+    ws.iter()
+        .map(|w| match &manifest {
+            Some(m) => super::program_from_artifact(m, w.name(), fmt)
+                .unwrap_or_else(|_| super::program_from_workload(w.as_ref(), fmt, 42)),
+            None => super::program_from_workload(w.as_ref(), fmt, 42),
+        })
+        .collect()
+}
+
+/// One (scheme, shard-count) cell over a prebuilt mixed trace: route
+/// each kernel's substream to its own pool, one row per kernel.
+fn mix_rows(
+    ws: &[Box<dyn Workload>],
+    programs: &[NpuProgram],
+    merged: &[(usize, SimRequest)],
+    scheme: &str,
+    shards: usize,
+    batch: usize,
+) -> Result<Vec<E10Row>> {
+    let mut rows = Vec::with_capacity(ws.len());
+    for (ki, w) in ws.iter().enumerate() {
+        let sub: Vec<SimRequest> =
+            merged.iter().filter(|(k, _)| *k == ki).map(|(_, r)| r.clone()).collect();
+        rows.push(measure_trace(w.as_ref(), &programs[ki], scheme, shards, batch, &sub)?);
+    }
+    Ok(rows)
+}
+
+/// Mixed-kernel traffic at one (scheme, shard-count): a merged arrival
+/// stream routed to per-benchmark pools, one row per kernel.
+pub fn measure_mix(
+    kernels: &[&str],
+    fmt: QFormat,
+    scheme: &str,
+    shards: usize,
+    n: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<Vec<E10Row>> {
+    let ws: Vec<Box<dyn Workload>> = kernels
+        .iter()
+        .map(|k| workload(k).ok_or_else(|| anyhow!("unknown benchmark {k:?}")))
+        .collect::<Result<_>>()?;
+    let programs = programs_for(&ws, fmt);
+    let merged = mixed_trace(&ws, &programs, n, batch, seed);
+    mix_rows(&ws, &programs, &merged, scheme, shards, batch)
+}
+
+/// Full E10 for `run-bench`: mixed traffic over every kernel, sweeping
+/// schemes × shard counts. The trace is generated once and replayed by
+/// every (scheme, shards) cell — schemes compete on identical traffic
+/// and the probe devices don't rerun per cell.
+pub fn run(fmt: QFormat, invocations: usize, batch: usize) -> Result<Vec<E10Row>> {
+    let ws = all_workloads();
+    let programs = programs_for(&ws, fmt);
+    let merged = mixed_trace(&ws, &programs, invocations, batch, 47);
+    let mut rows = Vec::new();
+    for scheme in super::e5_bandwidth::SCHEMES {
+        for &shards in &SHARD_COUNTS {
+            rows.extend(mix_rows(&ws, &programs, &merged, scheme, shards, batch)?);
+        }
+    }
+    Ok(rows)
+}
+
+pub fn print_table(rows: &[E10Row]) {
+    let mut t = Table::new(&[
+        "workload",
+        "scheme",
+        "shards",
+        "offered(inv/s)",
+        "thpt(inv/s)",
+        "p50(cyc)",
+        "p99(cyc)",
+        "hit-rate",
+        "dram(KB)",
+        "cap-ratio",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.workload.clone(),
+            r.scheme.clone(),
+            format!("{}", r.shards),
+            format!("{:.0}", r.offered_rate),
+            format!("{:.0}", r.throughput),
+            format!("{}", r.p50_cycles),
+            format!("{}", r.p99_cycles),
+            format!("{:5.1}%", r.hit_rate * 100.0),
+            format!("{:.1}", r.dram_bytes as f64 / 1024.0),
+            format!("{:.2}", r.capacity_ratio),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q7_8;
+
+    fn setup(name: &str) -> (Box<dyn Workload>, NpuProgram) {
+        let w = workload(name).unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+        (w, p)
+    }
+
+    #[test]
+    fn trace_is_seeded_sorted_and_scheme_independent() {
+        let (w, p) = setup("sobel");
+        let a = gen_trace(w.as_ref(), &p, 64, 16, 5);
+        let b = gen_trace(w.as_ref(), &p, 64, 16, 5);
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.input, y.input);
+        }
+        assert!(a.windows(2).all(|v| v[0].arrival <= v[1].arrival));
+        let c = gen_trace(w.as_ref(), &p, 64, 16, 6);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival || x.input != y.input));
+    }
+
+    #[test]
+    fn mixed_trace_covers_every_kernel_in_arrival_order() {
+        let (ws, ps): (Vec<_>, Vec<_>) = ["sobel", "fft"]
+            .iter()
+            .map(|n| setup(n))
+            .unzip();
+        let merged = mixed_trace(&ws, &ps, 40, 8, 11);
+        assert_eq!(merged.len(), 40);
+        assert!(merged.windows(2).all(|v| v[0].1.arrival <= v[1].1.arrival));
+        for ki in 0..2 {
+            assert!(merged.iter().any(|(k, _)| *k == ki), "kernel {ki} missing");
+        }
+    }
+
+    #[test]
+    fn measure_smoke_single_kernel() {
+        let (w, p) = setup("sobel");
+        let r = measure(w.as_ref(), &p, "bdi", 2, 48, 16, 9).unwrap();
+        assert_eq!(r.requests, 48);
+        assert_eq!(r.shards, 2);
+        assert!(r.throughput > 0.0);
+        assert!(r.offered_rate > 0.0);
+        assert!(r.makespan_cycles > 0);
+        assert!(r.p50_cycles <= r.p95_cycles && r.p95_cycles <= r.p99_cycles);
+        assert!(r.dram_bytes > 0 && r.logical_bytes > 0);
+        assert!((0.0..=1.0).contains(&r.hit_rate));
+    }
+
+    #[test]
+    fn shard_sweep_replays_one_trace_per_scheme() {
+        let (w, p) = setup("fft");
+        let rows = measure_all_shards(w.as_ref(), &p, "none", 32, 8, 13).unwrap();
+        assert_eq!(rows.len(), SHARD_COUNTS.len());
+        for (row, &s) in rows.iter().zip(&SHARD_COUNTS) {
+            assert_eq!(row.shards, s);
+            assert_eq!(row.requests, 32);
+            // identical trace ⇒ identical offered load at every shard count
+            assert_eq!(row.offered_rate, rows[0].offered_rate);
+        }
+        // raw scheme never packs more than one line per way
+        assert!(rows.iter().all(|r| r.capacity_ratio <= 1.0 + 1e-12));
+    }
+
+    #[test]
+    fn unknown_scheme_is_a_clean_error() {
+        let (w, p) = setup("sobel");
+        assert!(measure(w.as_ref(), &p, "zstd", 1, 8, 4, 1).is_err());
+    }
+
+    #[test]
+    fn rows_serialize_with_the_acceptance_fields() {
+        let (w, p) = setup("sobel");
+        let r = measure(w.as_ref(), &p, "cpack", 1, 16, 8, 21).unwrap();
+        let j = Json::parse(&r.to_json().dump()).unwrap();
+        for field in
+            ["throughput", "p99_cycles", "dram_bytes", "capacity_ratio", "shards", "scheme"]
+        {
+            assert!(j.get(field).is_some(), "missing {field}");
+        }
+    }
+}

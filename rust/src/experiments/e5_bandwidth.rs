@@ -55,17 +55,19 @@ impl E5Row {
     }
 }
 
-/// Per-line compressor for a scheme name ("none" = uncompressed) —
-/// shared with E9, which sweeps the same scheme list.
-pub(crate) fn scheme_by_name(name: &str) -> Option<Box<dyn Compressor>> {
-    match name {
+/// Per-line compressor for a scheme name (`Ok(None)` = uncompressed) —
+/// shared with E9/E10, which sweep the same scheme list. A bad name is a
+/// recoverable `Err`, not a panic: one mistyped scheme must fail its own
+/// harness job, never abort a whole sweep.
+pub(crate) fn scheme_by_name(name: &str) -> Result<Option<Box<dyn Compressor>>> {
+    Ok(match name {
         "none" => None,
         "bdi" => Some(Box::new(Bdi)),
         "fpc" => Some(Box::new(Fpc)),
         "bdi+fpc" => Some(Box::new(Hybrid::default())),
         "cpack" => Some(Box::new(Cpack)),
-        other => panic!("unknown scheme {other}"),
-    }
+        other => anyhow::bail!("unknown scheme {other:?} (expected one of {:?})", SCHEMES),
+    })
 }
 
 /// Replay `batches` batches of size `batch` for one workload under one
@@ -82,7 +84,7 @@ pub fn measure(
     let cfg = NpuConfig::default();
     let mut rng = Rng::new(seed);
 
-    let mut dram = match scheme_by_name(scheme) {
+    let mut dram = match scheme_by_name(scheme)? {
         None => CompressedDram::new(DramMode::Raw, ChannelConfig::zc702_ddr3()),
         Some(c) => CompressedDram::new(DramMode::Lcp(c), ChannelConfig::zc702_ddr3()),
     };
@@ -247,6 +249,22 @@ mod tests {
                 .abs()
                     < 1e-6
             );
+        }
+    }
+
+    #[test]
+    fn unknown_scheme_is_an_error_not_a_panic() {
+        let err = scheme_by_name("zstd").unwrap_err();
+        assert!(err.to_string().contains("unknown scheme"), "{err}");
+        assert!(err.to_string().contains("zstd"), "{err}");
+        // and it propagates cleanly through a measurement
+        let w = workload("sobel").unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+        let r = measure(w.as_ref(), p, "zstd", 8, 1, 3);
+        assert!(r.is_err());
+        // every registered scheme still resolves
+        for s in SCHEMES {
+            assert!(scheme_by_name(s).is_ok(), "{s}");
         }
     }
 }

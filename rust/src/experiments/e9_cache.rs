@@ -92,15 +92,19 @@ impl E9Row {
 
 /// Build the `cache → DRAM` hierarchy for one (scheme, geometry) cell:
 /// the cache compresses lines with the scheme, the DRAM stores pages in
-/// LCP layout under the same scheme (`none` = raw both).
-fn build_hierarchy(scheme: &str, geometry: (usize, usize, usize)) -> CompressedCache {
-    let dram = match scheme_by_name(scheme) {
+/// LCP layout under the same scheme (`none` = raw both). Shared with
+/// E10 and the `serve` CLI, whose pool shards each front one of these.
+pub fn build_hierarchy(
+    scheme: &str,
+    geometry: (usize, usize, usize),
+) -> Result<CompressedCache> {
+    let dram = match scheme_by_name(scheme)? {
         None => CompressedDram::new(DramMode::Raw, ChannelConfig::zc702_ddr3()),
         Some(c) => CompressedDram::new(DramMode::Lcp(c), ChannelConfig::zc702_ddr3()),
     };
     let (sets, ways, degree) = geometry;
     let cfg = CacheConfig::new(sets, ways, degree);
-    CompressedCache::new(cfg, scheme_by_name(scheme), Box::new(dram))
+    Ok(CompressedCache::new(cfg, scheme_by_name(scheme)?, Box::new(dram)))
 }
 
 /// Replay `batches` batches of the multi-tenant access stream (weight
@@ -123,7 +127,7 @@ pub fn measure(
     let fmt = program.fmt;
     let cfg = NpuConfig::default();
     let mut rng = Rng::new(seed);
-    let mut mem = build_hierarchy(scheme, geometry);
+    let mut mem = build_hierarchy(scheme, geometry)?;
 
     let pu = PuSim::new(program.clone(), cfg.array_width);
     // Weight region: many NN configurations back to back (the
@@ -289,6 +293,14 @@ mod tests {
         let b = row("cpack", (16, 4, 4));
         assert_eq!(a.logical_bytes, b.logical_bytes);
         assert_eq!(a.accesses, b.accesses);
+    }
+
+    #[test]
+    fn unknown_scheme_fails_the_cell_not_the_process() {
+        let w = workload("sobel").unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+        let r = measure(w.as_ref(), p, "lz77", (16, 4, 4), 8, 1, 3);
+        assert!(r.unwrap_err().to_string().contains("unknown scheme"));
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Unified, multi-threaded experiment harness.
 //!
-//! One registry ([`EXPERIMENTS`]) describes E1..E9; [`build_jobs`] expands
+//! One registry ([`EXPERIMENTS`]) describes E1..E10; [`build_jobs`] expands
 //! a [`HarnessConfig`] into the full sweep grid (every bench_suite kernel
 //! × every compression scheme where the experiment varies by scheme, plus
 //! the synthetic-distribution jobs); [`run`] fans the jobs out over a
@@ -27,8 +27,8 @@ use crate::trace::Synthetic;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::{e1_compression, e2_speedup, e3_energy, e4_quality, e5_bandwidth};
-use super::{e6_batching, e7_lcp, e8_ablation, e9_cache};
+use super::{e10_serving, e1_compression, e2_speedup, e3_energy, e4_quality};
+use super::{e5_bandwidth, e6_batching, e7_lcp, e8_ablation, e9_cache};
 
 /// What a job measures: a bench_suite kernel or a synthetic distribution.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -64,7 +64,7 @@ pub struct Scenario {
 /// A registry entry describing one experiment.
 #[derive(Debug, Clone, Copy)]
 pub struct ExperimentSpec {
-    /// Stable id ("e1".."e9") — the CLI/CI selector and report key.
+    /// Stable id ("e1".."e10") — the CLI/CI selector and report key.
     pub id: &'static str,
     pub title: &'static str,
     /// Whether the sweep fans out one job per compression scheme.
@@ -74,7 +74,7 @@ pub struct ExperimentSpec {
 }
 
 /// All experiments, in report order.
-pub static EXPERIMENTS: [ExperimentSpec; 9] = [
+pub static EXPERIMENTS: [ExperimentSpec; 10] = [
     ExperimentSpec {
         id: "e1",
         title: "compression ratio per workload stream",
@@ -127,6 +127,12 @@ pub static EXPERIMENTS: [ExperimentSpec; 9] = [
         id: "e9",
         title: "compressed cache capacity / hit rate / effective bandwidth",
         per_scheme: true, // cache + DRAM compressed with the same scheme
+        synthetics: false,
+    },
+    ExperimentSpec {
+        id: "e10",
+        title: "sharded serving pool under open-loop load",
+        per_scheme: true, // each shard's hierarchy uses the scheme
         synthetics: false,
     },
 ];
@@ -224,7 +230,7 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
     let mut jobs = Vec::new();
     for id in &cfg.experiments {
         let spec = experiment(id)
-            .with_context(|| format!("unknown experiment {id:?} (expected e1..e9)"))?;
+            .with_context(|| format!("unknown experiment {id:?} (expected e1..e10)"))?;
         let schemes: Vec<&str> = if spec.per_scheme {
             cfg.schemes.iter().map(String::as_str).collect()
         } else {
@@ -381,6 +387,19 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
             let rows =
                 e9_cache::measure_all_configs(w.as_ref(), p, &sc.scheme, sc.batch, batches, seed)?;
             Ok(rows.iter().map(e9_cache::E9Row::to_json).collect())
+        }
+        ("e10", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let rows = e10_serving::measure_all_shards(
+                w.as_ref(),
+                &p,
+                &sc.scheme,
+                sc.invocations,
+                sc.batch,
+                seed,
+            )?;
+            Ok(rows.iter().map(e10_serving::E10Row::to_json).collect())
         }
         ("e8", Target::Bench(b)) => {
             let w = workload(b).unwrap();
@@ -558,10 +577,11 @@ mod tests {
     #[test]
     fn registry_ids_are_unique_and_ordered() {
         let ids: Vec<_> = EXPERIMENTS.iter().map(|e| e.id).collect();
-        assert_eq!(ids, ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9"]);
+        assert_eq!(ids, ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10"]);
         assert!(experiment("e5").unwrap().per_scheme);
         assert!(experiment("e9").unwrap().per_scheme);
-        assert!(experiment("e10").is_none());
+        assert!(experiment("e10").unwrap().per_scheme);
+        assert!(experiment("e11").is_none());
     }
 
     #[test]
@@ -576,6 +596,7 @@ mod tests {
         assert_eq!(count("e7"), 7 + n_synth);
         assert_eq!(count("e8"), 7);
         assert_eq!(count("e9"), 7 * 5, "e9 fans out per scheme");
+        assert_eq!(count("e10"), 7 * 5, "e10 fans out per scheme");
     }
 
     #[test]

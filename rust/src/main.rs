@@ -2,21 +2,21 @@
 //!
 //! Subcommands:
 //!   info            show artifact manifest + effective config
-//!   serve           start the batching server and drive it with a
+//!   serve           start the sharded batching pool and drive it with a
 //!                   synthetic open-loop client (requests/s, duration)
-//!   experiments     run the e1..e9 sweep in parallel and emit one
+//!   experiments     run the e1..e10 sweep in parallel and emit one
 //!                   consolidated JSON report (the harness)
-//!   run-bench       print experiment tables: e1..e9 or all (serial)
+//!   run-bench       print experiment tables: e1..e10 or all (serial)
 //!   compress-file   per-scheme compression report for any file
 //!   trace           dump + compress a benchmark's NPU streams
 //!   config          print the effective configuration (reloadable)
 //!
 //! Examples:
 //!   snnapc info
-//!   snnapc serve --benchmark sobel --requests 5000 --set batch.max=64
+//!   snnapc serve --benchmark sobel --requests 5000 --shards 4 --set batch.max=64
 //!   snnapc experiments --all --jobs 8 --out harness-report.json
-//!   snnapc experiments --experiment e1 --benchmarks sobel --schemes bdi
-//!   snnapc run-bench --experiment e1
+//!   snnapc experiments --experiment e10 --benchmarks sobel --schemes bdi
+//!   snnapc run-bench --experiment e10
 //!   snnapc compress-file artifacts/jmeint.weights.bin
 
 use std::path::Path;
@@ -26,7 +26,9 @@ use anyhow::{bail, Context, Result};
 use snnap_c::bench_suite::{workload, Workload};
 use snnap_c::cli::Args;
 use snnap_c::config::Config;
-use snnap_c::coordinator::{Backend, DeviceBackend, NpuServer, PjrtBackend, ServerConfig};
+use snnap_c::coordinator::{
+    Backend, BackendFactory, DeviceBackend, NpuPool, PjrtBackend, ServerConfig,
+};
 use snnap_c::experiments as ex;
 use snnap_c::npu::NpuDevice;
 use snnap_c::runtime::{Manifest, NpuExecutor};
@@ -39,15 +41,18 @@ USAGE: snnapc <command> [--options]
 
 COMMANDS:
   info                      manifest + config summary
-  serve                     run the batching server with a synthetic client
+  serve                     run the sharded batching pool with a synthetic client
     --benchmark NAME        workload to serve (default from config)
     --requests N            total requests (default 2000)
     --clients N             client threads (default 4)
-    --backend sim|pjrt      execution backend (default sim)
-  experiments               parallel e1..e9 sweep + one JSON report
+    --shards N              device shards in the pool (default pool.shards)
+    --backend sim|pjrt      execution backend (default sim; sim shards
+                            each front a cache -> LCP-DRAM hierarchy
+                            built from the `compression` config key)
+  experiments               parallel e1..e10 sweep + one JSON report
     --all                   run every experiment (default when no
                             --experiment is given)
-    --experiment LIST       subset, e.g. e1 or e1,e5,e9
+    --experiment LIST       subset, e.g. e1 or e1,e9,e10
     --benchmarks LIST       kernels to sweep (default: all seven)
     --schemes LIST          schemes for per-scheme experiments
                             (none|bdi|fpc|bdi+fpc|cpack; default: all)
@@ -58,9 +63,10 @@ COMMANDS:
     --out FILE              write the JSON report here
                             (default harness-report.json)
                             (e9 sweeps kernels x schemes x cache
-                            geometries through cache -> LCP-DRAM)
+                            geometries; e10 sweeps kernels x schemes x
+                            shard counts {1,2,4,8} under open-loop load)
   run-bench                 print experiment tables (serial)
-    --experiment e1..e9|all which experiment (default all)
+    --experiment e1..e10|all which experiment (default all)
     --invocations N         stream length knob (default 256)
   compress-file FILE        per-scheme report for a file
   trace                     dump a benchmark's NPU streams
@@ -110,52 +116,71 @@ fn cmd_info(cfg: &Config) -> Result<()> {
 fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     let requests: usize = args.opt_parse("requests", 2000)?;
     let clients: usize = args.opt_parse("clients", 4)?;
+    let shards: usize = args.opt_parse("shards", cfg.pool_shards)?;
+    anyhow::ensure!(shards > 0, "--shards must be positive");
     let backend_kind = args.opt("backend").unwrap_or("sim").to_string();
     workload(&cfg.benchmark)
         .with_context(|| format!("unknown benchmark {:?}", cfg.benchmark))?;
 
-    let cfg2 = cfg.clone();
-    let factory: snnap_c::coordinator::server::BackendFactory = Box::new(move || {
-        let manifest = Manifest::load(Path::new(&cfg2.artifacts))?;
-        match backend_kind.as_str() {
+    // one factory per shard; each runs on its shard's worker thread. The
+    // sim backend fronts every shard with its own cache -> LCP-DRAM
+    // hierarchy (the `compression` config key picks the scheme) and
+    // falls back to deterministic synthetic weights without artifacts.
+    let mut factories: Vec<BackendFactory> = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let cfg2 = cfg.clone();
+        let kind = backend_kind.clone();
+        factories.push(Box::new(move || match kind.as_str() {
             "pjrt" => {
+                let manifest = Manifest::load(Path::new(&cfg2.artifacts))?;
                 let ex = NpuExecutor::new(manifest.get(&cfg2.benchmark)?.clone())?;
                 Ok(Box::new(PjrtBackend { executor: ex }) as Box<dyn Backend>)
             }
             "sim" => {
-                let program = ex::program_from_artifact(
-                    &manifest,
-                    &cfg2.benchmark,
-                    cfg2.qformat,
-                )?;
+                let dir = Path::new(&cfg2.artifacts);
+                let program = match Manifest::load(dir) {
+                    Ok(m) => ex::program_from_artifact(&m, &cfg2.benchmark, cfg2.qformat)?,
+                    // a bundle that exists but won't load is an error
+                    // worth surfacing — only a genuinely absent bundle
+                    // falls back to synthetic weights
+                    Err(e) if dir.join("manifest.json").exists() => return Err(e),
+                    Err(_) => {
+                        let w = workload(&cfg2.benchmark).unwrap();
+                        ex::program_from_workload(w.as_ref(), cfg2.qformat, 42)
+                    }
+                };
+                let geometry = ex::e9_cache::CACHE_CONFIGS[2];
+                let hierarchy = ex::e9_cache::build_hierarchy(&cfg2.compression, geometry)?;
                 Ok(Box::new(DeviceBackend {
-                    device: NpuDevice::new(cfg2.npu, program)?,
+                    device: NpuDevice::new(cfg2.npu, program)?
+                        .with_memory(Box::new(hierarchy)),
                 }) as Box<dyn Backend>)
             }
             other => bail!("unknown backend {other:?} (sim|pjrt)"),
-        }
-    });
-    let server = NpuServer::start(factory, ServerConfig { policy: cfg.policy })?;
-    let server = std::sync::Arc::new(server);
+        }));
+    }
+    let pool = NpuPool::start(factories, ServerConfig { policy: cfg.policy })?;
+    let pool = std::sync::Arc::new(pool);
 
     println!(
-        "serving {} on {} backend, {} clients x {} requests",
+        "serving {} on {} backend, {} shards, {} clients x {} requests",
         cfg.benchmark,
         args.opt("backend").unwrap_or("sim"),
+        shards,
         clients,
         requests / clients
     );
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {
-        let server = server.clone();
+        let pool = pool.clone();
         let w: Box<dyn Workload> = workload(&cfg.benchmark).unwrap();
         let per_client = requests / clients;
         handles.push(std::thread::spawn(move || -> Result<()> {
             let mut rng = Rng::new(c as u64 + 100);
             for _ in 0..per_client {
                 let x = w.gen_input(&mut rng);
-                let _ = server.submit(x)?.wait()?;
+                let _ = pool.submit(x)?.wait()?;
             }
             Ok(())
         }));
@@ -165,7 +190,7 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     }
     let dt = t0.elapsed();
     println!("== results ==");
-    println!("{}", server.metrics().report());
+    println!("{}", pool.metrics().report());
     println!(
         "wall time {:?}  throughput {:.0} req/s",
         dt,
@@ -286,6 +311,14 @@ fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
     if run_all || which == "e9" {
         println!("\n== E9: compressed cache capacity (YACC superblocks over LCP-DRAM) ==");
         ex::e9_cache::print_table(&ex::e9_cache::run(cfg.qformat, cfg.policy.max_batch, 4)?);
+    }
+    if run_all || which == "e10" {
+        println!("\n== E10: sharded serving pool under open-loop mixed-kernel load ==");
+        ex::e10_serving::print_table(&ex::e10_serving::run(
+            cfg.qformat,
+            invocations,
+            cfg.policy.max_batch,
+        )?);
     }
     Ok(())
 }

@@ -39,6 +39,20 @@ pub trait MemoryLevel: Send {
     /// (logical, physical) bytes moved so far — the amplification pair.
     fn traffic(&self) -> (u64, u64);
 
+    /// Cumulative (hits, accesses) for filtering levels (caches); `None`
+    /// for terminal levels, which have no hit/miss concept.
+    fn hit_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
+
+    /// Resident-lines-per-way ratio of a filtering level — compression's
+    /// capacity win (>1.0 when packing buys capacity). 1.0 for a
+    /// conventional uncompressed cache and, by convention, for terminal
+    /// levels.
+    fn capacity_ratio(&self) -> f64 {
+        1.0
+    }
+
     /// Clock of the cycles this level reports, in MHz.
     fn clock_mhz(&self) -> f64;
 }
@@ -117,6 +131,9 @@ mod tests {
         assert_eq!(logical, 2 * LINE_BYTES as u64);
         assert_eq!(physical, 2 * LINE_BYTES as u64);
         assert_eq!(d.level_name(), "dram");
+        // terminal levels have no hit/miss concept and unit capacity
+        assert_eq!(d.hit_stats(), None);
+        assert_eq!(d.capacity_ratio(), 1.0);
     }
 
     #[test]

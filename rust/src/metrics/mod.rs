@@ -79,6 +79,79 @@ impl LatencyHistogram {
     }
 }
 
+/// A high-watermark gauge (e.g. max queue depth). Lock-free.
+#[derive(Debug, Default)]
+pub struct MaxGauge(AtomicU64);
+
+impl MaxGauge {
+    pub fn observe(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A log-bucketed histogram over plain u64 samples (simulated cycles,
+/// sizes, ...): bucket i holds samples in [2^i, 2^(i+1)). Lock-free,
+/// same shape as [`LatencyHistogram`] but unit-agnostic.
+#[derive(Debug)]
+pub struct ValueHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for ValueHistogram {
+    fn default() -> Self {
+        ValueHistogram {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl ValueHistogram {
+    pub fn record(&self, v: u64) {
+        let v = v.max(1);
+        let bucket = (63 - v.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate quantile (upper bucket edge); 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((n as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1).min(63);
+            }
+        }
+        u64::MAX
+    }
+}
+
 /// Serving metrics bundle (one per coordinator).
 #[derive(Debug, Default)]
 pub struct ServerMetrics {
@@ -99,6 +172,54 @@ impl ServerMetrics {
             self.latency.mean(),
             self.latency.quantile(0.5),
             self.latency.quantile(0.99),
+        )
+    }
+}
+
+/// Per-shard slice of a pool's accounting.
+#[derive(Debug, Default)]
+pub struct ShardMetrics {
+    pub requests: Counter,
+    pub batches: Counter,
+    /// Cumulative simulated device cycles this shard spent executing.
+    pub busy_cycles: Counter,
+}
+
+/// Metrics bundle for a sharded [`crate::coordinator::NpuPool`]:
+/// aggregate server counters plus pool-level queue/steal/cycle views.
+#[derive(Debug)]
+pub struct PoolMetrics {
+    /// Aggregate counters + wall-clock latency across all shards.
+    pub server: ServerMetrics,
+    /// Batches executed by a shard other than the one they queued on.
+    pub stolen_batches: Counter,
+    /// High-watermark of the total queued (not yet claimed) invocations.
+    pub max_queue_depth: MaxGauge,
+    /// Per-invocation service latency in simulated device cycles.
+    pub cycle_latency: ValueHistogram,
+    pub shards: Vec<ShardMetrics>,
+}
+
+impl PoolMetrics {
+    pub fn new(shards: usize) -> Self {
+        PoolMetrics {
+            server: ServerMetrics::default(),
+            stolen_batches: Counter::default(),
+            max_queue_depth: MaxGauge::default(),
+            cycle_latency: ValueHistogram::default(),
+            shards: (0..shards).map(|_| ShardMetrics::default()).collect(),
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{} shards={} stolen_batches={} max_queue_depth={} cycles_p50={} cycles_p99={}",
+            self.server.report(),
+            self.shards.len(),
+            self.stolen_batches.get(),
+            self.max_queue_depth.get(),
+            self.cycle_latency.quantile(0.5),
+            self.cycle_latency.quantile(0.99),
         )
     }
 }
@@ -151,5 +272,48 @@ mod tests {
         let m = ServerMetrics::default();
         m.requests.inc();
         assert!(m.report().contains("requests=1"));
+    }
+
+    #[test]
+    fn max_gauge_keeps_the_high_watermark() {
+        let g = MaxGauge::default();
+        assert_eq!(g.get(), 0);
+        g.observe(7);
+        g.observe(3);
+        assert_eq!(g.get(), 7);
+        g.observe(12);
+        assert_eq!(g.get(), 12);
+    }
+
+    #[test]
+    fn value_histogram_buckets_and_quantiles() {
+        let h = ValueHistogram::default();
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+        for v in [1u64, 2, 4, 8, 16, 32, 64, 128] {
+            for _ in 0..10 {
+                h.record(v);
+            }
+        }
+        assert_eq!(h.count(), 80);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.mean() > 0.0);
+        // zero samples clamp into the first bucket instead of underflowing
+        h.record(0);
+        assert_eq!(h.count(), 81);
+    }
+
+    #[test]
+    fn pool_metrics_report_includes_shard_fields() {
+        let m = PoolMetrics::new(4);
+        m.server.requests.add(3);
+        m.stolen_batches.inc();
+        m.max_queue_depth.observe(9);
+        m.cycle_latency.record(100);
+        let r = m.report();
+        assert!(r.contains("requests=3"), "{r}");
+        assert!(r.contains("shards=4"), "{r}");
+        assert!(r.contains("stolen_batches=1"), "{r}");
+        assert!(r.contains("max_queue_depth=9"), "{r}");
     }
 }

@@ -141,6 +141,13 @@ impl NpuDevice {
         self.mem.as_deref()
     }
 
+    /// Cumulative (hits, accesses) of the attached hierarchy's filtering
+    /// level — the serving pool's per-shard hit-rate metric. `None`
+    /// without a hierarchy or when the hierarchy has no cache level.
+    pub fn mem_hit_stats(&self) -> Option<(u64, u64)> {
+        self.memory().and_then(|m| m.hit_stats())
+    }
+
     pub fn program(&self) -> &NpuProgram {
         &self.pus[0].program
     }
