@@ -17,6 +17,15 @@ smoke:
 	cargo run --release -- experiments --experiment e1 --benchmarks sobel \
 		--schemes bdi --invocations 1 --jobs 2 --out harness-report.json
 
+# The CI perf-trend scenario: pinned (kernels, schemes, seed), gated
+# against BENCH_baseline.json by scripts/bench_trend.py
+trend:
+	cargo run --release -- experiments --experiment e1,e9,e10,e11 \
+		--benchmarks sobel,fft --schemes none,bdi+fpc,cpack \
+		--invocations 8 --seed 42 --jobs 4 --out harness-report.json
+	python3 scripts/bench_trend.py harness-report.json \
+		--baseline BENCH_baseline.json --out BENCH_local.json
+
 # AOT artifact bundle (needs jax; optional — everything falls back to
 # synthetic weights without it)
 artifacts:

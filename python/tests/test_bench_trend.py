@@ -1,0 +1,166 @@
+"""Unit tests for scripts/bench_trend.py (stdlib only — these run even
+when the jax/AOT toolchain is absent)."""
+
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+SCRIPT = Path(__file__).resolve().parents[2] / "scripts" / "bench_trend.py"
+spec = importlib.util.spec_from_file_location("bench_trend", SCRIPT)
+bench_trend = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_trend)
+
+
+def report(p99_e10=1000, p99_e11=2000, mem_e9=500):
+    return {
+        "schema_version": 1,
+        "config": {"seed": 42},
+        "experiments": {
+            "e1": [
+                {
+                    "label": "e1/sobel",
+                    "rows": [
+                        {
+                            "workload": "sobel",
+                            "stream": "weights",
+                            "report": {
+                                "workload": "sobel",
+                                "schemes": [
+                                    {"scheme": "bdi", "ratio": 1.9, "compressed_bytes": 333}
+                                ],
+                            },
+                        }
+                    ],
+                },
+                {
+                    "label": "e1/synthetic/zeros",
+                    "rows": [
+                        {
+                            "workload": "zeros",
+                            "schemes": [
+                                {"scheme": "bdi", "ratio": 30.0, "compressed_bytes": 9}
+                            ],
+                        }
+                    ],
+                },
+            ],
+            "e9": [
+                {
+                    "label": "e9/sobel/bdi",
+                    "rows": [
+                        {"cache": "8x2x4", "mem_cycles": mem_e9, "hit_rate": 0.5, "dram_bytes": 10}
+                    ],
+                }
+            ],
+            "e10": [
+                {
+                    "label": "e10/sobel/bdi",
+                    "rows": [
+                        {"shards": 1, "p99_cycles": p99_e10, "throughput": 9.0, "dram_bytes": 11},
+                        {"shards": 2, "p99_cycles": p99_e10, "throughput": 9.0, "dram_bytes": 11},
+                    ],
+                }
+            ],
+            "e11": [
+                {
+                    "label": "e11/sobel/bdi",
+                    "rows": [
+                        {
+                            "shards": 2,
+                            "policy": "rr",
+                            "p99_cycles": p99_e11,
+                            "slo_throughput": 5.0,
+                            "wait_cycles": 7,
+                            "dram_bytes": 13,
+                        }
+                    ],
+                }
+            ],
+        },
+    }
+
+
+def test_extract_flattens_all_trajectory_experiments():
+    metrics = bench_trend.extract_metrics(report())
+    assert metrics["e1/sobel/weights/bdi"]["ratio"] == 1.9
+    assert metrics["e1/synthetic/zeros/zeros/bdi"]["ratio"] == 30.0
+    assert metrics["e9/sobel/bdi/8x2x4"]["mem_cycles"] == 500
+    assert metrics["e10/sobel/bdi/x1"]["p99_cycles"] == 1000
+    assert metrics["e10/sobel/bdi/x2"]["p99_cycles"] == 1000
+    assert metrics["e11/sobel/bdi/x2/rr"]["slo_throughput"] == 5.0
+    assert metrics["e11/sobel/bdi/x2/rr"]["wait_cycles"] == 7
+    assert len(metrics) == 6
+    # e1 ratio cells are informational: never gated even when worse
+    base = bench_trend.trajectory_point(report(), "base")
+    worse = dict(metrics)
+    worse["e1/sobel/weights/bdi"] = {"ratio": 1.0, "compressed_bytes": 999}
+    assert bench_trend.compare(base, worse, 0.20) == []
+
+
+def baseline_from(rep):
+    return bench_trend.trajectory_point(rep, "base")
+
+
+def test_small_drift_passes_and_big_regression_fails():
+    base = baseline_from(report())
+    ok = bench_trend.extract_metrics(report(p99_e10=1100))  # +10%
+    assert bench_trend.compare(base, ok, 0.20) == []
+    bad = bench_trend.extract_metrics(report(p99_e10=1300))  # +30%
+    failures = bench_trend.compare(base, bad, 0.20)
+    assert len(failures) == 2, failures  # both e10 shard cells regressed
+    assert all("p99_cycles" in f for f in failures)
+
+
+def test_mem_cycles_are_gated_and_improvements_pass():
+    base = baseline_from(report())
+    worse = bench_trend.extract_metrics(report(mem_e9=700))  # +40%
+    assert any("mem_cycles" in f for f in bench_trend.compare(base, worse, 0.20))
+    better = bench_trend.extract_metrics(report(p99_e10=10, p99_e11=10, mem_e9=10))
+    assert bench_trend.compare(base, better, 0.20) == []
+
+
+def test_bootstrap_baseline_and_new_cells_gate_nothing():
+    bootstrap = {"schema_version": 1, "metrics": {}}
+    cur = bench_trend.extract_metrics(report(p99_e10=10**9))
+    assert bench_trend.compare(bootstrap, cur, 0.20) == []
+    # cells only on one side are growth/shrinkage, not regressions
+    base = baseline_from(report())
+    base["metrics"] = {"e10/other/none/x1": {"p99_cycles": 1}}
+    assert bench_trend.compare(base, cur, 0.20) == []
+
+
+def test_main_end_to_end(tmp_path):
+    rep = tmp_path / "harness-report.json"
+    rep.write_text(json.dumps(report()))
+    baseline = tmp_path / "BENCH_baseline.json"
+    out = tmp_path / "BENCH_run.json"
+    # seed a real baseline from the report itself
+    assert (
+        bench_trend.main([str(rep), "--baseline", str(baseline), "--write-baseline"]) == 0
+    )
+    # identical run gates green and writes the trajectory point
+    assert (
+        bench_trend.main(
+            [str(rep), "--baseline", str(baseline), "--out", str(out), "--run-id", "7"]
+        )
+        == 0
+    )
+    point = json.loads(out.read_text())
+    assert point["run"] == "7"
+    assert point["metrics"]
+    # a regressed run exits nonzero
+    rep.write_text(json.dumps(report(p99_e11=4000)))
+    assert (
+        bench_trend.main([str(rep), "--baseline", str(baseline), "--out", str(out)]) == 1
+    )
+    # a missing baseline is a pipeline misconfiguration
+    assert (
+        bench_trend.main([str(rep), "--baseline", str(tmp_path / "nope.json"), "--out", str(out)])
+        == 2
+    )
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

@@ -1,0 +1,64 @@
+//! E11 bench — closed-loop SLO serving over the shared DRAM channel,
+//! timed. Sweeps scheme x channel policy at a fixed shard count for two
+//! kernels and prints the throughput-at-SLO picture. Works from a clean
+//! checkout (deterministic synthetic weights).
+
+use snnap_c::bench_suite::workload;
+use snnap_c::experiments as ex;
+use snnap_c::experiments::e11_slo;
+use snnap_c::fixed::Q7_8;
+use snnap_c::util::bench::BenchRunner;
+
+fn main() {
+    let mut runner = BenchRunner::default();
+    let kernels = ["jmeint", "sobel"];
+    let schemes = ["none", "bdi+fpc", "cpack"];
+    let policies = ["fifo", "rr"];
+    let shards = 2usize;
+    let (n, batch, seed) = (48usize, 16usize, 31u64);
+
+    let mut rows = Vec::new();
+    for name in kernels {
+        let w = workload(name).expect("known kernel");
+        let program = ex::program_from_workload(w.as_ref(), Q7_8, 42);
+        let slo = e11_slo::slo_for(w.as_ref(), &program, n / 2, batch, seed)
+            .expect("baseline SLO is measurable");
+        for scheme in schemes {
+            for policy in policies {
+                let label = format!("e11/{name}/{scheme}/{policy}");
+                let p = program.clone();
+                let row = runner.bench(&label, || {
+                    e11_slo::measure(w.as_ref(), &p, scheme, shards, policy, slo, n, batch, seed)
+                        .expect("closed-loop replay is infallible for registered schemes")
+                });
+                rows.push(row);
+            }
+        }
+    }
+
+    println!("\n=== closed-loop SLO serving: throughput at p99 target ===");
+    e11_slo::print_table(&rows);
+
+    println!("\n--- compressed-vs-raw throughput-at-SLO at {shards} shards ---");
+    for name in kernels {
+        for policy in policies {
+            let raw = rows
+                .iter()
+                .find(|r| r.workload == name && r.scheme == "none" && r.policy == policy)
+                .unwrap();
+            let best = rows
+                .iter()
+                .filter(|r| r.workload == name && r.scheme != "none" && r.policy == policy)
+                .max_by(|a, b| a.slo_throughput.total_cmp(&b.slo_throughput))
+                .unwrap();
+            println!(
+                "{name:<10} {policy}: {} {:.0} inv/s@SLO vs raw {:.0} inv/s@SLO, wait-share {:.1}% vs {:.1}%",
+                best.scheme,
+                best.slo_throughput,
+                raw.slo_throughput,
+                best.wait_share * 100.0,
+                raw.wait_share * 100.0,
+            );
+        }
+    }
+}

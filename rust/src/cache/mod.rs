@@ -415,6 +415,16 @@ impl MemoryLevel for CompressedCache {
         self.effective_capacity_ratio()
     }
 
+    fn sync_cycle(&mut self, cycle: u64) {
+        // filtering levels have no clock of their own: forward the pool's
+        // virtual time down to the terminal (channel-owning) level
+        self.backing.sync_cycle(cycle);
+    }
+
+    fn wait_cycles(&self) -> u64 {
+        self.backing.wait_cycles()
+    }
+
     fn clock_mhz(&self) -> f64 {
         self.backing.clock_mhz()
     }

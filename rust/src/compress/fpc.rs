@@ -218,7 +218,9 @@ impl Compressor for Fpc {
                     match prefix {
                         0b000 => {
                             let run = br.pull(3) as usize + 1;
-                            words.extend(std::iter::repeat_n(0u32, run));
+                            // resize, not iter::repeat_n (a 1.82 API;
+                            // the crate's MSRV is 1.74)
+                            words.resize(words.len() + run, 0u32);
                         }
                         0b001 => words.push(sext(br.pull(4), 4)),
                         0b010 => words.push(sext(br.pull(8), 8)),

@@ -83,7 +83,9 @@ impl LcpPage {
                 continue;
             }
             let physical = Self::physical_size_for(slot, exc);
-            if best.is_none_or(|(p, _)| physical < p) {
+            // (map_or, not Option::is_none_or: that's a 1.82 API and the
+            // crate's MSRV is 1.74)
+            if best.map_or(true, |(p, _)| physical < p) {
                 best = Some((physical, slot));
             }
         }

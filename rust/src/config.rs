@@ -34,6 +34,28 @@ pub struct Config {
     pub compression: String,
     /// Device shards in the serving pool (`snnapc serve`).
     pub pool_shards: usize,
+    /// Per-shard compression schemes for heterogeneous pools, cycled
+    /// across shards (`pool.schemes = bdi,none,cpack`); empty = every
+    /// shard uses `compression`.
+    pub pool_schemes: Vec<String>,
+    /// Per-shard cache geometries `SETSxWAYSxDEGREE`, cycled across
+    /// shards (`pool.geometries = 8x2x4,32x8x4`); empty = the serve
+    /// default geometry.
+    pub pool_geometries: Vec<(usize, usize, usize)>,
+    /// Shared DRAM channel arbiter policy (`channel.policy = fifo|rr`).
+    /// Grant priority takes effect in the deterministic virtual-time
+    /// pool (`PoolSim` / E11, which orders same-cycle grants by it);
+    /// the threaded `serve` pool grants in arrival (lock) order, so
+    /// there the key is reported as channel metadata only.
+    pub channel_policy: String,
+}
+
+/// Is `name` a registered compression scheme? Resolved against
+/// [`crate::compress::all_schemes`] — the one scheme registry — so the
+/// `compression` / `pool.schemes` keys can never drift from what the
+/// experiments accept.
+pub fn is_known_scheme(name: &str) -> bool {
+    crate::compress::all_schemes().iter().any(|c| c.name() == name)
 }
 
 impl Default for Config {
@@ -46,8 +68,28 @@ impl Default for Config {
             policy: BatchPolicy::default(),
             compression: "bdi+fpc".into(),
             pool_shards: 1,
+            pool_schemes: Vec::new(),
+            pool_geometries: Vec::new(),
+            channel_policy: "fifo".into(),
         }
     }
+}
+
+fn parse_geometry(s: &str) -> Result<(usize, usize, usize)> {
+    let parts: Vec<&str> = s.split('x').collect();
+    if parts.len() != 3 {
+        bail!("geometry {s:?} must be SETSxWAYSxDEGREE, e.g. 8x2x4");
+    }
+    let sets: usize = parts[0].trim().parse().context("geometry sets")?;
+    let ways: usize = parts[1].trim().parse().context("geometry ways")?;
+    let degree: usize = parts[2].trim().parse().context("geometry degree")?;
+    if sets == 0 || ways == 0 {
+        bail!("geometry {s:?}: sets and ways must be positive");
+    }
+    if !matches!(degree, 1 | 2 | 4 | 8) {
+        bail!("geometry {s:?}: superblock degree must be 1, 2, 4 or 8");
+    }
+    Ok((sets, ways, degree))
 }
 
 fn parse_qformat(s: &str) -> Result<QFormat> {
@@ -67,7 +109,7 @@ impl Config {
             "benchmark" => self.benchmark = v.into(),
             "artifacts" => self.artifacts = v.into(),
             "compression" => {
-                if !["none", "bdi", "fpc", "bdi+fpc", "cpack"].contains(&v) {
+                if !is_known_scheme(v) {
                     bail!("unknown compression {v:?}");
                 }
                 self.compression = v.into();
@@ -77,6 +119,41 @@ impl Config {
                 if self.pool_shards == 0 {
                     bail!("pool.shards must be positive");
                 }
+            }
+            "pool.schemes" => {
+                // unknown names are a hard error here, at parse time —
+                // never a silent per-shard fallback at pool construction
+                let schemes: Vec<String> = v
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(String::from)
+                    .collect();
+                if schemes.is_empty() {
+                    bail!("pool.schemes needs at least one scheme");
+                }
+                for s in &schemes {
+                    if !is_known_scheme(s) {
+                        bail!("unknown compression {s:?} in pool.schemes");
+                    }
+                }
+                self.pool_schemes = schemes;
+            }
+            "pool.geometries" => {
+                let geos: Vec<(usize, usize, usize)> = v
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(parse_geometry)
+                    .collect::<Result<_>>()?;
+                if geos.is_empty() {
+                    bail!("pool.geometries needs at least one geometry");
+                }
+                self.pool_geometries = geos;
+            }
+            "channel.policy" => {
+                self.channel_policy =
+                    crate::mem::channel::ArbiterPolicy::parse(v)?.name().to_string();
             }
             "qformat" => self.qformat = parse_qformat(v)?,
             "npu.pu_count" => self.npu.pu_count = v.parse().context("npu.pu_count")?,
@@ -130,6 +207,30 @@ impl Config {
         Ok(())
     }
 
+    /// Scheme of shard `s`: heterogeneous lists cycle across shards;
+    /// the homogeneous default is `compression`.
+    pub fn shard_scheme(&self, s: usize) -> &str {
+        if self.pool_schemes.is_empty() {
+            &self.compression
+        } else {
+            &self.pool_schemes[s % self.pool_schemes.len()]
+        }
+    }
+
+    /// Cache geometry of shard `s` (heterogeneous lists cycle), or
+    /// `default` when none are configured.
+    pub fn shard_geometry(
+        &self,
+        s: usize,
+        default: (usize, usize, usize),
+    ) -> (usize, usize, usize) {
+        if self.pool_geometries.is_empty() {
+            default
+        } else {
+            self.pool_geometries[s % self.pool_geometries.len()]
+        }
+    }
+
     /// Dump as a reloadable config file.
     pub fn to_string_pretty(&self) -> String {
         let mut m = BTreeMap::new();
@@ -157,6 +258,18 @@ impl Config {
         out.push_str(&format!("batch.wait_us = {}\n", self.policy.max_wait.as_micros()));
         out.push_str(&format!("batch.queue_cap = {}\n", self.policy.queue_cap));
         out.push_str(&format!("pool.shards = {}\n", self.pool_shards));
+        if !self.pool_schemes.is_empty() {
+            out.push_str(&format!("pool.schemes = {}\n", self.pool_schemes.join(",")));
+        }
+        if !self.pool_geometries.is_empty() {
+            let geos: Vec<String> = self
+                .pool_geometries
+                .iter()
+                .map(|(s, w, d)| format!("{s}x{w}x{d}"))
+                .collect();
+            out.push_str(&format!("pool.geometries = {}\n", geos.join(",")));
+        }
+        out.push_str(&format!("channel.policy = {}\n", self.channel_policy));
         out
     }
 
@@ -209,6 +322,65 @@ mod tests {
         assert!(cfg.set("qformat", "q1.2").is_err());
         assert!(cfg.set("npu.pu_count", "banana").is_err());
         assert!(cfg.set("pool.shards", "0").is_err());
+        assert!(cfg.set("channel.policy", "lottery").is_err());
+        assert!(cfg.set("pool.geometries", "8x2").is_err());
+        assert!(cfg.set("pool.geometries", "8x2x3").is_err(), "degree must be 1|2|4|8");
+        assert!(cfg.set("pool.geometries", "0x2x4").is_err());
+    }
+
+    #[test]
+    fn scheme_validation_tracks_the_compress_registry() {
+        // no parallel name list to drift: every registered scheme is
+        // accepted, anything else rejected
+        for c in crate::compress::all_schemes() {
+            assert!(is_known_scheme(c.name()), "{}", c.name());
+        }
+        assert!(!is_known_scheme("zstd"));
+        assert!(!is_known_scheme(""));
+    }
+
+    #[test]
+    fn unknown_pool_scheme_is_a_hard_error_not_a_fallback() {
+        // the serve-path bugfix: a typo'd per-shard scheme must fail at
+        // parse time, never silently serve with `none` on that shard
+        let mut cfg = Config::default();
+        let err = cfg.set("pool.schemes", "bdi,zstd").unwrap_err().to_string();
+        assert!(err.contains("zstd"), "{err}");
+        assert!(cfg.pool_schemes.is_empty(), "a rejected list must not half-apply");
+        assert!(cfg.set("pool.schemes", " , ").is_err(), "an empty list is operator error");
+        cfg.set("pool.schemes", "bdi, none ,cpack").unwrap();
+        assert_eq!(cfg.pool_schemes, ["bdi", "none", "cpack"]);
+    }
+
+    #[test]
+    fn heterogeneous_pool_keys_cycle_across_shards() {
+        let mut cfg = Config::default();
+        assert_eq!(cfg.shard_scheme(0), "bdi+fpc", "homogeneous default = compression");
+        assert_eq!(cfg.shard_geometry(3, (8, 2, 4)), (8, 2, 4));
+        cfg.apply_overrides(&[
+            "pool.shards=4".into(),
+            "pool.schemes=bdi,none".into(),
+            "pool.geometries=8x2x4,32x8x4".into(),
+            "channel.policy=rr".into(),
+        ])
+        .unwrap();
+        assert_eq!(
+            (0..4).map(|s| cfg.shard_scheme(s).to_string()).collect::<Vec<_>>(),
+            ["bdi", "none", "bdi", "none"]
+        );
+        assert_eq!(cfg.shard_geometry(0, (1, 1, 1)), (8, 2, 4));
+        assert_eq!(cfg.shard_geometry(1, (1, 1, 1)), (32, 8, 4));
+        assert_eq!(cfg.shard_geometry(2, (1, 1, 1)), (8, 2, 4));
+        assert_eq!(cfg.channel_policy, "rr");
+        // the heterogeneous config round-trips through a file
+        let text = cfg.to_string_pretty();
+        let dir = std::env::temp_dir().join("snnapc_cfg_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.conf");
+        std::fs::write(&p, &text).unwrap();
+        let mut cfg2 = Config::default();
+        cfg2.load_file(&p).unwrap();
+        assert_eq!(cfg, cfg2);
     }
 
     #[test]

@@ -40,6 +40,20 @@ pub trait Backend {
     fn mem_traffic(&self) -> Option<(u64, u64)> {
         None
     }
+
+    /// Cumulative queuing delay the backend's hierarchy paid on a shared
+    /// DRAM channel (hierarchy-clock cycles) — the pool's per-shard
+    /// contention metric. `None` without a hierarchy.
+    fn mem_wait_cycles(&self) -> Option<u64> {
+        None
+    }
+
+    /// Anchor the backend's shared-channel clock at `now` device cycles
+    /// (the threaded pool passes elapsed wall-clock microseconds, the
+    /// same 1 cycle ≡ 1 µs convention `PoolSim` uses), so idle gaps
+    /// between batches don't register as channel queuing. No-op for
+    /// backends without a shared hierarchy.
+    fn sync_virtual_cycle(&mut self, _now: u64) {}
 }
 
 /// The cycle-accurate fixed-point simulator as a backend.
@@ -75,6 +89,14 @@ impl Backend for DeviceBackend {
 
     fn mem_traffic(&self) -> Option<(u64, u64)> {
         self.device.memory().map(|m| m.traffic())
+    }
+
+    fn mem_wait_cycles(&self) -> Option<u64> {
+        self.device.memory().map(|m| m.wait_cycles())
+    }
+
+    fn sync_virtual_cycle(&mut self, now: u64) {
+        self.device.sync_mem_cycle(now);
     }
 }
 

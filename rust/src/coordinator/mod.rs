@@ -18,6 +18,13 @@
 //! one-shard special case; [`NpuRouter`] maps benchmarks to pools.
 //! [`PoolSim`] replays the same pool logic deterministically in virtual
 //! time for the E10 load experiment.
+//!
+//! Since PR 4 the shards can also *contend*: their hierarchies may all
+//! sit on one arbitrated `mem::ChannelHub` (per-shard wait cycles land
+//! in [`crate::metrics::PoolMetrics`]), pools may be heterogeneous
+//! (per-shard scheme/geometry with scheme-aware placement,
+//! [`router::pick_shard_affine`]), and [`PoolSim::run_closed`] drives
+//! the pool with closed-loop clients for the E11 SLO experiment.
 
 pub mod backend;
 pub mod batcher;
@@ -27,6 +34,8 @@ pub mod server;
 
 pub use backend::{Backend, DeviceBackend, PairedBackend, PjrtBackend};
 pub use batcher::{BatchPolicy, Batcher};
-pub use pool::{BackendFactory, NpuPool, Pending, PoolSim, SimCompletion, SimReport, SimRequest};
+pub use pool::{
+    BackendFactory, ClientScript, NpuPool, Pending, PoolSim, SimCompletion, SimReport, SimRequest,
+};
 pub use router::NpuRouter;
 pub use server::{NpuServer, ServerConfig};

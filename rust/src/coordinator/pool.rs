@@ -29,12 +29,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::mem::ArbiterPolicy;
 use crate::metrics::PoolMetrics;
 use crate::npu::NpuDevice;
 
 use super::backend::Backend;
 use super::batcher::{BatchPolicy, Batcher};
-use super::router::{pick_shard, pick_victim};
+use super::router::{pick_shard, pick_shard_affine, pick_victim};
 use super::server::ServerConfig;
 
 /// Constructs one shard's backend on that shard's worker thread (PJRT
@@ -76,6 +77,13 @@ struct PoolShared {
     open: AtomicBool,
     metrics: Arc<PoolMetrics>,
     policy: BatchPolicy,
+    /// Per-shard placement affinity for heterogeneous pools (higher =
+    /// better fit); `None` = homogeneous least-loaded placement.
+    affinity: Option<Vec<f64>>,
+    /// Pool birth: shards anchor their shared-channel clocks to elapsed
+    /// wall time (1 cycle ≡ 1 µs, `PoolSim`'s convention) before every
+    /// batch, so idle gaps don't read as channel queuing.
+    epoch: Instant,
 }
 
 /// Handle to a running sharded pool. Share via `Arc`; `submit` takes
@@ -93,8 +101,27 @@ impl NpuPool {
     /// every started worker) if any construction fails or the shards
     /// disagree on input arity.
     pub fn start(factories: Vec<BackendFactory>, cfg: ServerConfig) -> Result<NpuPool> {
+        Self::start_affine(factories, cfg, None)
+    }
+
+    /// [`NpuPool::start`] for heterogeneous pools: `affinity` (one entry
+    /// per shard, higher = better fit for this route's traffic) breaks
+    /// placement load ties, so e.g. the shard whose compression scheme
+    /// suits this benchmark best fills first.
+    pub fn start_affine(
+        factories: Vec<BackendFactory>,
+        cfg: ServerConfig,
+        affinity: Option<Vec<f64>>,
+    ) -> Result<NpuPool> {
         anyhow::ensure!(!factories.is_empty(), "pool needs at least one shard");
         let shards = factories.len();
+        if let Some(a) = &affinity {
+            anyhow::ensure!(
+                a.len() == shards,
+                "affinity entries ({}) != shards ({shards})",
+                a.len()
+            );
+        }
         let metrics = Arc::new(PoolMetrics::new(shards));
         let shared = Arc::new(PoolShared {
             lanes: Mutex::new(Lanes {
@@ -105,6 +132,8 @@ impl NpuPool {
             open: AtomicBool::new(true),
             metrics: metrics.clone(),
             policy: cfg.policy,
+            affinity,
+            epoch: Instant::now(),
         });
         let (dim_tx, dim_rx) = mpsc::channel::<Result<usize>>();
         let mut workers = Vec::with_capacity(shards);
@@ -201,7 +230,10 @@ impl NpuPool {
                 .zip(&lanes.claimed)
                 .map(|(q, &c)| if q.len() >= cap { usize::MAX } else { q.len() + c })
                 .collect();
-            let shard = pick_shard(&loads);
+            let shard = match &self.shared.affinity {
+                Some(aff) => pick_shard_affine(&loads, aff),
+                None => pick_shard(&loads),
+            };
             if lanes.queues[shard].len() >= cap {
                 self.metrics.server.rejected.inc();
                 self.metrics.server.queue_full_events.inc();
@@ -361,9 +393,15 @@ fn execute(shared: &PoolShared, shard: usize, backend: &mut dyn Backend, batch: 
     m.server.requests.add(n as u64);
     m.shards[shard].batches.inc();
     m.shards[shard].requests.add(n as u64);
+    // forgive idle time on the shared channel before billing this batch
+    backend.sync_virtual_cycle(shared.epoch.elapsed().as_micros() as u64);
+    let wait_before = backend.mem_wait_cycles().unwrap_or(0);
     match backend.run_batch_timed(&inputs) {
         Ok((outputs, cycles)) => {
             m.shards[shard].busy_cycles.add(cycles);
+            // queuing delay this batch paid on a shared DRAM channel
+            let wait_after = backend.mem_wait_cycles().unwrap_or(0);
+            m.shards[shard].wait_cycles.add(wait_after.saturating_sub(wait_before));
             for (inv, out) in batch.into_iter().zip(outputs) {
                 m.server.latency.record(inv.submitted.elapsed());
                 m.cycle_latency.record(cycles);
@@ -431,11 +469,19 @@ pub struct PoolSim {
     shards: Vec<SimShard>,
     policy: BatchPolicy,
     epoch: Instant,
+    /// Grant order across shards whose batches become ready at the same
+    /// virtual cycle — the arbitration order onto a shared DRAM channel.
+    channel_policy: ArbiterPolicy,
+    /// Next rotating-priority holder (round-robin policy only).
+    next_grant: usize,
+    /// Scheme-aware placement for heterogeneous pools.
+    affinity: Option<Vec<f64>>,
 }
 
 impl PoolSim {
     /// Build from per-shard devices (normally `NpuDevice::with_memory`,
-    /// so each shard fronts its own compressed hierarchy).
+    /// so each shard fronts its own compressed hierarchy — or, since
+    /// PR 4, a hierarchy whose DRAM sits on a shared `mem::ChannelHub`).
     pub fn new(devices: Vec<NpuDevice>, policy: BatchPolicy) -> Result<PoolSim> {
         anyhow::ensure!(!devices.is_empty(), "pool sim needs at least one shard");
         let dim = devices[0].program().input_dim();
@@ -450,7 +496,32 @@ impl PoolSim {
                 .collect(),
             policy,
             epoch: Instant::now(),
+            channel_policy: ArbiterPolicy::Fifo,
+            next_grant: 0,
+            affinity: None,
         })
+    }
+
+    /// Set the grant-priority policy for same-cycle-ready batches.
+    /// [`ArbiterPolicy::Fifo`] (the default) reproduces the PR-3 scan
+    /// exactly: shard 0 always wins ties.
+    pub fn with_channel_policy(mut self, policy: ArbiterPolicy) -> Self {
+        self.channel_policy = policy;
+        self
+    }
+
+    /// Scheme-aware placement for heterogeneous pools: one affinity per
+    /// shard (higher = better fit), breaking load ties — see
+    /// [`super::router::pick_shard_affine`].
+    pub fn with_affinity(mut self, affinity: Vec<f64>) -> Result<Self> {
+        anyhow::ensure!(
+            affinity.len() == self.shards.len(),
+            "affinity entries ({}) != shards ({})",
+            affinity.len(),
+            self.shards.len()
+        );
+        self.affinity = Some(affinity);
+        Ok(self)
     }
 
     pub fn shard_count(&self) -> usize {
@@ -498,7 +569,7 @@ impl PoolSim {
             return Ok(());
         }
         let inputs: Vec<Vec<f32>> = idxs.iter().map(|&i| requests[i].input.clone()).collect();
-        let r = self.shards[s].device.execute_batch(&inputs)?;
+        let r = self.shards[s].device.execute_batch_at(&inputs, now)?;
         let done = now + r.total_cycles;
         self.shards[s].free_at = done;
         for (i, out) in idxs.into_iter().zip(r.outputs) {
@@ -511,6 +582,90 @@ impl PoolSim {
             });
         }
         Ok(())
+    }
+
+    /// Place one request on the least-loaded shard (affinity-aware for
+    /// heterogeneous pools); returns an error on lane overflow.
+    fn place(&mut self, index: usize, arrival: u64, now: u64) -> Result<()> {
+        let loads: Vec<usize> = self
+            .shards
+            .iter()
+            .map(|s| s.batcher.len() + usize::from(s.free_at > now))
+            .collect();
+        let shard = match &self.affinity {
+            Some(aff) => pick_shard_affine(&loads, aff),
+            None => pick_shard(&loads),
+        };
+        let at = self.v(arrival);
+        if self.shards[shard].batcher.push(index, at).is_err() {
+            anyhow::bail!("sim lane overflow: raise queue_cap for this trace");
+        }
+        Ok(())
+    }
+
+    /// Flush every ready batch and let idle shards steal, until the
+    /// state at `now` is quiescent. Shards whose batches are ready at
+    /// the same cycle are granted in channel-policy order: FIFO scans
+    /// from shard 0 (fixed priority), round-robin scans from the shard
+    /// after the last grantee (rotating priority) — the arbitration
+    /// order their bursts hit a shared DRAM channel in.
+    fn settle(
+        &mut self,
+        now: u64,
+        requests: &[SimRequest],
+        completions: &mut Vec<SimCompletion>,
+        stolen: &mut u64,
+    ) -> Result<()> {
+        let n = self.shards.len();
+        loop {
+            let mut progressed = false;
+            let base = match self.channel_policy {
+                ArbiterPolicy::Fifo => 0,
+                ArbiterPolicy::RoundRobin => self.next_grant % n,
+            };
+            for off in 0..n {
+                let s = (base + off) % n;
+                while self.shards[s].free_at <= now
+                    && self.shards[s].batcher.should_flush(self.v(now))
+                {
+                    self.execute(s, now, requests, completions)?;
+                    if self.channel_policy == ArbiterPolicy::RoundRobin {
+                        self.next_grant = (s + 1) % n;
+                    }
+                    progressed = true;
+                }
+            }
+            // an idle, empty shard adopts the oldest batch of the
+            // deepest *busy* peer (an idle peer can run its own
+            // work); the stolen work then follows the normal
+            // size-or-deadline flush rules, exactly like a threaded
+            // thief that gathered it into its batcher
+            for s in 0..n {
+                if self.shards[s].free_at > now || !self.shards[s].batcher.is_empty() {
+                    continue;
+                }
+                let depths: Vec<usize> = self
+                    .shards
+                    .iter()
+                    .map(|sh| if sh.free_at > now { sh.batcher.len() } else { 0 })
+                    .collect();
+                if let Some(victim) = pick_victim(&depths, s) {
+                    let at = self.v(now);
+                    let moved = self.shards[victim].batcher.take_batch(at);
+                    if moved.is_empty() {
+                        continue;
+                    }
+                    for idx in moved {
+                        let _ = self.shards[s].batcher.push(idx, at);
+                    }
+                    *stolen += 1;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                return Ok(());
+            }
+        }
     }
 
     /// Replay an open-loop trace (arrivals must be nondecreasing).
@@ -537,62 +692,12 @@ impl PoolSim {
             };
             // deliver due arrivals to the least-loaded shard
             while next < requests.len() && requests[next].arrival <= now {
-                let loads: Vec<usize> = self
-                    .shards
-                    .iter()
-                    .map(|s| s.batcher.len() + usize::from(s.free_at > now))
-                    .collect();
-                let shard = pick_shard(&loads);
-                let at = self.v(requests[next].arrival);
-                if self.shards[shard].batcher.push(next, at).is_err() {
-                    anyhow::bail!("sim lane overflow: raise queue_cap for open-loop traces");
-                }
+                self.place(next, requests[next].arrival, now)?;
                 next += 1;
             }
             let depth: usize = self.shards.iter().map(|s| s.batcher.len()).sum();
             max_depth = max_depth.max(depth);
-            // flush + steal until the state at `now` is quiescent
-            loop {
-                let mut progressed = false;
-                for s in 0..self.shards.len() {
-                    while self.shards[s].free_at <= now
-                        && self.shards[s].batcher.should_flush(self.v(now))
-                    {
-                        self.execute(s, now, requests, &mut completions)?;
-                        progressed = true;
-                    }
-                }
-                // an idle, empty shard adopts the oldest batch of the
-                // deepest *busy* peer (an idle peer can run its own
-                // work); the stolen work then follows the normal
-                // size-or-deadline flush rules, exactly like a threaded
-                // thief that gathered it into its batcher
-                for s in 0..self.shards.len() {
-                    if self.shards[s].free_at > now || !self.shards[s].batcher.is_empty() {
-                        continue;
-                    }
-                    let depths: Vec<usize> = self
-                        .shards
-                        .iter()
-                        .map(|sh| if sh.free_at > now { sh.batcher.len() } else { 0 })
-                        .collect();
-                    if let Some(victim) = pick_victim(&depths, s) {
-                        let at = self.v(now);
-                        let moved = self.shards[victim].batcher.take_batch(at);
-                        if moved.is_empty() {
-                            continue;
-                        }
-                        for idx in moved {
-                            let _ = self.shards[s].batcher.push(idx, at);
-                        }
-                        stolen += 1;
-                        progressed = true;
-                    }
-                }
-                if !progressed {
-                    break;
-                }
-            }
+            self.settle(now, requests, &mut completions, &mut stolen)?;
         }
         anyhow::ensure!(
             completions.len() == requests.len(),
@@ -604,6 +709,116 @@ impl PoolSim {
         completions.sort_by_key(|c| c.index);
         Ok(SimReport { completions, makespan, max_depth, stolen_batches: stolen })
     }
+
+    /// Drive the pool with **closed-loop clients**: each client issues
+    /// one request, waits for its completion, thinks for a scripted
+    /// number of cycles, and issues the next — the E11 engine. Unlike
+    /// the open-loop [`PoolSim::run`], arrival times here *react* to
+    /// service times (a slow pool slows its own offered load), which is
+    /// exactly what makes throughput-at-SLO a meaningful measurement.
+    ///
+    /// `clients[c]` scripts client `c`'s whole session: request `j`
+    /// fires `think[j]` cycles after request `j-1` completes (`think[0]`
+    /// from cycle 0) with input `inputs[j]`. Scripts are pregenerated,
+    /// so the same seed issues the same inputs under every scheme.
+    /// Deterministic: same devices + policy + scripts ⇒ identical
+    /// report. Completions are indexed in global issue order.
+    pub fn run_closed(&mut self, clients: &[ClientScript]) -> Result<SimReport> {
+        anyhow::ensure!(!clients.is_empty(), "closed loop needs at least one client");
+        let total: usize = clients.iter().map(|c| c.inputs.len()).sum();
+        for (i, c) in clients.iter().enumerate() {
+            anyhow::ensure!(
+                c.inputs.len() == c.think.len(),
+                "client {i}: {} inputs but {} think times",
+                c.inputs.len(),
+                c.think.len()
+            );
+        }
+        struct CState {
+            /// Next request index within this client's script.
+            next: usize,
+            /// Cycle the next request fires (valid when not in flight).
+            fire: u64,
+            inflight: bool,
+        }
+        let mut states: Vec<CState> = clients
+            .iter()
+            .map(|c| CState {
+                next: 0,
+                fire: c.think.first().copied().unwrap_or(0),
+                inflight: false,
+            })
+            .collect();
+        // the request log grows as clients fire; completions index it
+        let mut issued: Vec<SimRequest> = Vec::with_capacity(total);
+        let mut client_of: Vec<usize> = Vec::with_capacity(total);
+        let mut completions: Vec<SimCompletion> = Vec::with_capacity(total);
+        let mut done_seen = 0usize;
+        let mut now = 0u64;
+        let mut max_depth = 0usize;
+        let mut stolen = 0u64;
+        loop {
+            let ta = states
+                .iter()
+                .enumerate()
+                .filter(|(c, st)| !st.inflight && st.next < clients[*c].inputs.len())
+                .map(|(_, st)| st.fire)
+                .min();
+            let tf = (0..self.shards.len()).filter_map(|s| self.next_flush(s, now)).min();
+            now = match (ta, tf) {
+                (None, None) => break,
+                (Some(a), None) => a.max(now),
+                (None, Some(f)) => f.max(now),
+                (Some(a), Some(f)) => a.min(f).max(now),
+            };
+            // fire every due client (index order: deterministic)
+            for c in 0..clients.len() {
+                let st = &states[c];
+                if st.inflight || st.next >= clients[c].inputs.len() || st.fire > now {
+                    continue;
+                }
+                let index = issued.len();
+                let arrival = states[c].fire;
+                let input = clients[c].inputs[states[c].next].clone();
+                issued.push(SimRequest { arrival, input });
+                client_of.push(c);
+                self.place(index, arrival, now)?;
+                states[c].inflight = true;
+            }
+            let depth: usize = self.shards.iter().map(|s| s.batcher.len()).sum();
+            max_depth = max_depth.max(depth);
+            self.settle(now, &issued, &mut completions, &mut stolen)?;
+            // completed requests release their clients into think time
+            while done_seen < completions.len() {
+                let comp = &completions[done_seen];
+                done_seen += 1;
+                let c = client_of[comp.index];
+                let st = &mut states[c];
+                st.inflight = false;
+                st.next += 1;
+                if st.next < clients[c].think.len() {
+                    st.fire = comp.done + clients[c].think[st.next];
+                }
+            }
+        }
+        anyhow::ensure!(
+            completions.len() == total,
+            "closed loop lost work: {} of {total} completed",
+            completions.len()
+        );
+        let makespan = completions.iter().map(|c| c.done).max().unwrap_or(0);
+        completions.sort_by_key(|c| c.index);
+        Ok(SimReport { completions, makespan, max_depth, stolen_batches: stolen })
+    }
+}
+
+/// One closed-loop client's pregenerated session for
+/// [`PoolSim::run_closed`]: request `j` fires `think[j]` cycles after
+/// request `j-1` completes, carrying `inputs[j]`.
+#[derive(Debug, Clone)]
+pub struct ClientScript {
+    pub inputs: Vec<Vec<f32>>,
+    pub think: Vec<u64>,
 }
 
 #[cfg(test)]
@@ -752,5 +967,83 @@ mod tests {
             SimRequest { arrival: 5, input: vec![0.1, 0.2] },
         ];
         assert!(s.run(&t).is_err());
+    }
+
+    /// `clients` scripted sessions of `per` requests; input[0] encodes
+    /// the client id so completions can be attributed back.
+    fn scripts(clients: usize, per: usize, think: u64) -> Vec<ClientScript> {
+        (0..clients)
+            .map(|c| ClientScript {
+                inputs: (0..per)
+                    .map(|j| vec![c as f32 / 10.0, (j as f32) / (per as f32)])
+                    .collect(),
+                think: vec![think; per],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn closed_loop_completes_every_scripted_request() {
+        let mut s = sim(2);
+        let r = s.run_closed(&scripts(3, 5, 200)).unwrap();
+        assert_eq!(r.completions.len(), 15);
+        for (i, c) in r.completions.iter().enumerate() {
+            assert_eq!(c.index, i, "sorted by global issue order");
+            assert!(c.done > c.arrival);
+        }
+        assert!(r.makespan > 0);
+    }
+
+    #[test]
+    fn closed_loop_spacing_follows_think_time() {
+        // with a single client, attribution is trivial: request j+1 must
+        // fire exactly `think` cycles after request j completes — the
+        // closed-loop property that makes offered load react to service
+        let mut s1 = sim(1);
+        let one = s1.run_closed(&scripts(1, 6, 150)).unwrap();
+        assert_eq!(one.completions.len(), 6);
+        for w in one.completions.windows(2) {
+            assert_eq!(
+                w[1].arrival,
+                w[0].done + 150,
+                "next request fires exactly think cycles after the previous completion"
+            );
+        }
+    }
+
+    #[test]
+    fn closed_loop_is_deterministic_and_policies_conserve_work() {
+        let clients = scripts(4, 4, 100);
+        let a = sim(3).run_closed(&clients).unwrap();
+        let b = sim(3).run_closed(&clients).unwrap();
+        assert_eq!(a.completions.len(), b.completions.len());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            let xt = (x.index, x.shard, x.arrival, x.done);
+            assert_eq!(xt, (y.index, y.shard, y.arrival, y.done));
+            assert_eq!(x.output, y.output);
+        }
+        // rotating grant priority reorders grants, never loses work
+        let rr = sim(3)
+            .with_channel_policy(ArbiterPolicy::RoundRobin)
+            .run_closed(&clients)
+            .unwrap();
+        assert_eq!(rr.completions.len(), a.completions.len());
+        for (x, y) in a.completions.iter().zip(&rr.completions) {
+            assert_eq!(x.output, y.output, "policy must never change numerics");
+        }
+    }
+
+    #[test]
+    fn closed_loop_validates_scripts() {
+        let mut s = sim(1);
+        assert!(s.run_closed(&[]).is_err(), "no clients");
+        let bad = ClientScript { inputs: vec![vec![0.1, 0.2]], think: vec![] };
+        assert!(s.run_closed(&[bad]).is_err(), "inputs/think length mismatch");
+    }
+
+    #[test]
+    fn affinity_must_match_shard_count() {
+        assert!(sim(2).with_affinity(vec![1.0]).is_err());
+        assert!(sim(2).with_affinity(vec![1.0, 2.0]).is_ok());
     }
 }

@@ -15,6 +15,10 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
+use crate::compress::{all_schemes, compress_stream, Compressed, LINE_BYTES};
+use crate::npu::NpuProgram;
+use crate::trace::Trace;
+
 use super::pool::{BackendFactory, NpuPool, Pending};
 use super::server::ServerConfig;
 
@@ -27,6 +31,45 @@ pub fn pick_shard(loads: &[usize]) -> usize {
         .min_by_key(|(i, l)| (**l, *i))
         .map(|(i, _)| i)
         .unwrap_or(0)
+}
+
+/// Least-loaded dispatch over a *heterogeneous* pool: load decides
+/// first, then per-shard affinity (higher = better fit for this
+/// traffic), lowest id last. With uniform affinity this is exactly
+/// [`pick_shard`], so homogeneous pools are unaffected.
+pub fn pick_shard_affine(loads: &[usize], affinity: &[f64]) -> usize {
+    assert_eq!(loads.len(), affinity.len(), "one affinity per shard");
+    (0..loads.len())
+        .min_by(|&a, &b| {
+            loads[a]
+                .cmp(&loads[b])
+                .then(affinity[b].total_cmp(&affinity[a]))
+                .then(a.cmp(&b))
+        })
+        .unwrap_or(0)
+}
+
+/// Scheme-aware affinity signal for heterogeneous pools: the
+/// compression ratio this program's weight stream achieves under each
+/// shard's scheme (1.0 for `none`; <1.0 when a scheme expands the
+/// data). Deterministic, so placement replays identically in the
+/// virtual-time pool.
+pub fn scheme_affinity(program: &NpuProgram, schemes: &[String]) -> Result<Vec<f64>> {
+    let weights = Trace::weights(program).bytes;
+    let registry = all_schemes();
+    schemes
+        .iter()
+        .map(|name| {
+            let comp = registry
+                .iter()
+                .find(|c| c.name() == name)
+                .ok_or_else(|| anyhow!("unknown scheme {name:?} for shard affinity"))?;
+            let lines = compress_stream(comp.as_ref(), &weights);
+            let physical: usize = lines.iter().map(Compressed::size_bytes).sum();
+            let logical = lines.len() * LINE_BYTES;
+            Ok(logical as f64 / physical.max(1) as f64)
+        })
+        .collect()
 }
 
 /// Work-stealing victim: the deepest queue other than `thief`'s, lowest
@@ -161,6 +204,36 @@ mod tests {
         assert_eq!(pick_shard(&[5]), 0);
         assert_eq!(pick_shard(&[]), 0);
         assert_eq!(pick_shard(&[7, 7, 7]), 0);
+    }
+
+    #[test]
+    fn pick_shard_affine_breaks_load_ties_by_affinity() {
+        // load still dominates ...
+        assert_eq!(pick_shard_affine(&[3, 1, 2], &[9.0, 0.1, 9.0]), 1);
+        // ... affinity breaks ties, id breaks affinity ties
+        assert_eq!(pick_shard_affine(&[2, 2, 2], &[1.0, 3.5, 2.0]), 1);
+        assert_eq!(pick_shard_affine(&[0, 0], &[2.0, 2.0]), 0);
+        // uniform affinity degenerates to pick_shard
+        for loads in [&[3usize, 1, 2][..], &[7, 7, 7], &[0, 4, 0, 1]] {
+            let uniform = vec![1.0; loads.len()];
+            assert_eq!(pick_shard_affine(loads, &uniform), pick_shard(loads));
+        }
+    }
+
+    #[test]
+    fn scheme_affinity_ranks_compressible_schemes_above_none() {
+        let w = workload("sobel").unwrap();
+        let program = program_from_workload(w.as_ref(), Q7_8, 7);
+        let schemes: Vec<String> =
+            ["none", "bdi+fpc", "cpack"].iter().map(|s| s.to_string()).collect();
+        let aff = scheme_affinity(&program, &schemes).unwrap();
+        assert_eq!(aff.len(), 3);
+        assert!((aff[0] - 1.0).abs() < 1e-9, "none moves raw lines: affinity 1.0");
+        assert!(aff[1] > 1.0, "hybrid compresses Q7.8 weights: {}", aff[1]);
+        // determinism: the placement signal must replay identically
+        assert_eq!(aff, scheme_affinity(&program, &schemes).unwrap());
+        // unknown schemes are a hard error, not a silent fallback
+        assert!(scheme_affinity(&program, &["zstd".to_string()]).is_err());
     }
 
     #[test]

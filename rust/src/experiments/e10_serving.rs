@@ -103,8 +103,8 @@ impl E10Row {
 }
 
 /// Exact nearest-rank percentile of a sorted sample (deterministic —
-/// no histogram bucketing in the report rows).
-fn percentile(sorted: &[u64], q: f64) -> u64 {
+/// no histogram bucketing in the report rows). Shared with E11.
+pub(crate) fn percentile(sorted: &[u64], q: f64) -> u64 {
     if sorted.is_empty() {
         return 0;
     }

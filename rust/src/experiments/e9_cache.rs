@@ -102,9 +102,29 @@ pub fn build_hierarchy(
         None => CompressedDram::new(DramMode::Raw, ChannelConfig::zc702_ddr3()),
         Some(c) => CompressedDram::new(DramMode::Lcp(c), ChannelConfig::zc702_ddr3()),
     };
+    build_hierarchy_on(scheme, geometry, dram)
+}
+
+/// [`build_hierarchy`] over a caller-supplied DRAM — the seam E11 and
+/// the `serve` CLI use to put every shard's misses/writebacks on one
+/// *shared*, arbitrated channel ([`crate::mem::ChannelHub`]) instead of
+/// a private one.
+pub fn build_hierarchy_on(
+    scheme: &str,
+    geometry: (usize, usize, usize),
+    dram: CompressedDram,
+) -> Result<CompressedCache> {
     let (sets, ways, degree) = geometry;
     let cfg = CacheConfig::new(sets, ways, degree);
     Ok(CompressedCache::new(cfg, scheme_by_name(scheme)?, Box::new(dram)))
+}
+
+/// The LCP-DRAM page store for a scheme, on a caller-supplied channel.
+pub fn dram_for(scheme: &str, channel: crate::mem::DramChannel) -> Result<CompressedDram> {
+    Ok(match scheme_by_name(scheme)? {
+        None => CompressedDram::with_channel(DramMode::Raw, channel),
+        Some(c) => CompressedDram::with_channel(DramMode::Lcp(c), channel),
+    })
 }
 
 /// Replay `batches` batches of the multi-tenant access stream (weight

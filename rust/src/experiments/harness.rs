@@ -1,6 +1,6 @@
 //! Unified, multi-threaded experiment harness.
 //!
-//! One registry ([`EXPERIMENTS`]) describes E1..E10; [`build_jobs`] expands
+//! One registry ([`EXPERIMENTS`]) describes E1..E11; [`build_jobs`] expands
 //! a [`HarnessConfig`] into the full sweep grid (every bench_suite kernel
 //! × every compression scheme where the experiment varies by scheme, plus
 //! the synthetic-distribution jobs); [`run`] fans the jobs out over a
@@ -27,7 +27,7 @@ use crate::trace::Synthetic;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::{e10_serving, e1_compression, e2_speedup, e3_energy, e4_quality};
+use super::{e10_serving, e11_slo, e1_compression, e2_speedup, e3_energy, e4_quality};
 use super::{e5_bandwidth, e6_batching, e7_lcp, e8_ablation, e9_cache};
 
 /// What a job measures: a bench_suite kernel or a synthetic distribution.
@@ -59,81 +59,119 @@ pub struct Scenario {
     pub invocations: usize,
     pub batch: usize,
     pub seed: u64,
+    /// Shared-channel arbiter policies E11 sweeps (`fifo` / `rr`);
+    /// empty for experiments without a shared channel.
+    pub channel_policies: Vec<String>,
 }
 
 /// A registry entry describing one experiment.
 #[derive(Debug, Clone, Copy)]
 pub struct ExperimentSpec {
-    /// Stable id ("e1".."e10") — the CLI/CI selector and report key.
+    /// Stable id ("e1".."e11") — the CLI/CI selector and report key.
     pub id: &'static str,
     pub title: &'static str,
     /// Whether the sweep fans out one job per compression scheme.
     pub per_scheme: bool,
     /// Whether synthetic-distribution jobs are added alongside kernels.
     pub synthetics: bool,
+    /// Whether a kernel's scheme cells share one (scheme-stripped) seed
+    /// — required when the experiment's headline metric is compared
+    /// *across* schemes, so every cell measures identical programs,
+    /// scripts and targets (E11's throughput-at-SLO).
+    pub shared_seed_per_kernel: bool,
+    /// Whether jobs carry the shared-channel arbiter-policy sweep.
+    pub sweeps_channel_policies: bool,
 }
 
 /// All experiments, in report order.
-pub static EXPERIMENTS: [ExperimentSpec; 10] = [
+pub static EXPERIMENTS: [ExperimentSpec; 11] = [
     ExperimentSpec {
         id: "e1",
         title: "compression ratio per workload stream",
         per_scheme: false, // SchemeReport sweeps all schemes per stream
         synthetics: true,
+        shared_seed_per_kernel: false,
+        sweeps_channel_policies: false,
     },
     ExperimentSpec {
         id: "e2",
         title: "speedup vs CPU baseline",
         per_scheme: false,
         synthetics: false,
+        shared_seed_per_kernel: false,
+        sweeps_channel_policies: false,
     },
     ExperimentSpec {
         id: "e3",
         title: "energy vs CPU baseline",
         per_scheme: false,
         synthetics: false,
+        shared_seed_per_kernel: false,
+        sweeps_channel_policies: false,
     },
     ExperimentSpec {
         id: "e4",
         title: "application quality loss",
         per_scheme: false,
         synthetics: false,
+        shared_seed_per_kernel: false,
+        sweeps_channel_policies: false,
     },
     ExperimentSpec {
         id: "e5",
         title: "effective bandwidth with compression",
         per_scheme: true,
         synthetics: false,
+        shared_seed_per_kernel: false,
+        sweeps_channel_policies: false,
     },
     ExperimentSpec {
         id: "e6",
         title: "batching sweep",
         per_scheme: false,
         synthetics: false,
+        shared_seed_per_kernel: false,
+        sweeps_channel_policies: false,
     },
     ExperimentSpec {
         id: "e7",
         title: "LCP overheads vs variable-size baseline",
         per_scheme: false,
         synthetics: true,
+        shared_seed_per_kernel: false,
+        sweeps_channel_policies: false,
     },
     ExperimentSpec {
         id: "e8",
         title: "fixed-point width + stream ablation",
         per_scheme: false,
         synthetics: false,
+        shared_seed_per_kernel: false,
+        sweeps_channel_policies: false,
     },
     ExperimentSpec {
         id: "e9",
         title: "compressed cache capacity / hit rate / effective bandwidth",
         per_scheme: true, // cache + DRAM compressed with the same scheme
         synthetics: false,
+        shared_seed_per_kernel: false,
+        sweeps_channel_policies: false,
     },
     ExperimentSpec {
         id: "e10",
         title: "sharded serving pool under open-loop load",
         per_scheme: true, // each shard's hierarchy uses the scheme
         synthetics: false,
+        shared_seed_per_kernel: false,
+        sweeps_channel_policies: false,
+    },
+    ExperimentSpec {
+        id: "e11",
+        title: "closed-loop SLO serving over a shared DRAM channel",
+        per_scheme: true, // every shard's hierarchy uses the scheme
+        synthetics: false,
+        shared_seed_per_kernel: true,
+        sweeps_channel_policies: true,
     },
 ];
 
@@ -142,15 +180,17 @@ pub fn experiment(id: &str) -> Option<&'static ExperimentSpec> {
     EXPERIMENTS.iter().find(|e| e.id == id)
 }
 
-/// Sweep configuration (defaults = the full e1–e9 grid).
+/// Sweep configuration (defaults = the full e1–e11 grid).
 #[derive(Debug, Clone)]
 pub struct HarnessConfig {
-    /// Experiment ids to run (subset of "e1".."e9").
+    /// Experiment ids to run (subset of "e1".."e11").
     pub experiments: Vec<String>,
     /// Kernels to sweep (subset of the bench_suite names).
     pub benchmarks: Vec<String>,
     /// Compression schemes for per-scheme experiments.
     pub schemes: Vec<String>,
+    /// Shared-channel arbiter policies E11 sweeps (`fifo` / `rr`).
+    pub channel_policies: Vec<String>,
     pub qformat: QFormat,
     /// Stream-length knob (invocations per measurement).
     pub invocations: usize,
@@ -173,6 +213,7 @@ impl Default for HarnessConfig {
             experiments: EXPERIMENTS.iter().map(|e| e.id.to_string()).collect(),
             benchmarks: all_workloads().iter().map(|w| w.name().to_string()).collect(),
             schemes: e5_bandwidth::SCHEMES.iter().map(|s| s.to_string()).collect(),
+            channel_policies: e11_slo::POLICIES.iter().map(|p| p.to_string()).collect(),
             qformat: Q7_8,
             invocations: 256,
             batch: 128,
@@ -226,11 +267,17 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
             bail!("unknown scheme {s:?} (expected one of {:?})", e5_bandwidth::SCHEMES);
         }
     }
+    if cfg.channel_policies.is_empty() {
+        bail!("no channel policies selected");
+    }
+    for p in &cfg.channel_policies {
+        crate::mem::ArbiterPolicy::parse(p)?;
+    }
 
     let mut jobs = Vec::new();
     for id in &cfg.experiments {
         let spec = experiment(id)
-            .with_context(|| format!("unknown experiment {id:?} (expected e1..e10)"))?;
+            .with_context(|| format!("unknown experiment {id:?} (expected e1..e11)"))?;
         let schemes: Vec<&str> = if spec.per_scheme {
             cfg.schemes.iter().map(String::as_str).collect()
         } else {
@@ -243,7 +290,17 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
                 } else {
                     format!("{}/{bench}", spec.id)
                 };
-                let seed = derive_seed(cfg.seed, &label);
+                // experiments whose headline metric is compared *across
+                // schemes* (E11's throughput-at-SLO) share one seed per
+                // kernel — same program, same client scripts, same
+                // measured SLO; everything else derives the seed from
+                // the full label
+                let seed_label = if spec.shared_seed_per_kernel {
+                    format!("{}/{bench}", spec.id)
+                } else {
+                    label.clone()
+                };
+                let seed = derive_seed(cfg.seed, &seed_label);
                 jobs.push(Job {
                     experiment: spec.id,
                     label,
@@ -254,6 +311,11 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
                         invocations: cfg.invocations.max(1),
                         batch: cfg.batch.max(1),
                         seed,
+                        channel_policies: if spec.sweeps_channel_policies {
+                            cfg.channel_policies.clone()
+                        } else {
+                            Vec::new()
+                        },
                     },
                 });
             }
@@ -272,6 +334,7 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
                         invocations: cfg.invocations.max(1),
                         batch: cfg.batch.max(1),
                         seed,
+                        channel_policies: Vec::new(),
                     },
                 });
             }
@@ -401,6 +464,20 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
             )?;
             Ok(rows.iter().map(e10_serving::E10Row::to_json).collect())
         }
+        ("e11", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let rows = e11_slo::measure_all(
+                w.as_ref(),
+                &p,
+                &sc.scheme,
+                &sc.channel_policies,
+                sc.invocations,
+                sc.batch,
+                seed,
+            )?;
+            Ok(rows.iter().map(e11_slo::E11Row::to_json).collect())
+        }
         ("e8", Target::Bench(b)) => {
             let w = workload(b).unwrap();
             let p = program_for(b, sc.qformat, seed)?;
@@ -490,6 +567,7 @@ fn config_json(cfg: &HarnessConfig) -> Json {
         ("experiments", Json::arr(cfg.experiments.clone())),
         ("benchmarks", Json::arr(cfg.benchmarks.clone())),
         ("schemes", Json::arr(cfg.schemes.clone())),
+        ("channel_policies", Json::arr(cfg.channel_policies.clone())),
         ("qformat", format!("q{}.{}", q.int_bits, q.frac_bits).into()),
         ("invocations", cfg.invocations.into()),
         ("batch", cfg.batch.into()),
@@ -577,11 +655,12 @@ mod tests {
     #[test]
     fn registry_ids_are_unique_and_ordered() {
         let ids: Vec<_> = EXPERIMENTS.iter().map(|e| e.id).collect();
-        assert_eq!(ids, ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10"]);
+        assert_eq!(ids, ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11"]);
         assert!(experiment("e5").unwrap().per_scheme);
         assert!(experiment("e9").unwrap().per_scheme);
         assert!(experiment("e10").unwrap().per_scheme);
-        assert!(experiment("e11").is_none());
+        assert!(experiment("e11").unwrap().per_scheme);
+        assert!(experiment("e12").is_none());
     }
 
     #[test]
@@ -597,6 +676,28 @@ mod tests {
         assert_eq!(count("e8"), 7);
         assert_eq!(count("e9"), 7 * 5, "e9 fans out per scheme");
         assert_eq!(count("e10"), 7 * 5, "e10 fans out per scheme");
+        assert_eq!(count("e11"), 7 * 5, "e11 fans out per scheme");
+        // only e11 jobs carry the channel-policy sweep
+        for j in &jobs {
+            if j.experiment == "e11" {
+                assert_eq!(j.scenario.channel_policies, ["fifo", "rr"]);
+            } else {
+                assert!(j.scenario.channel_policies.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn build_jobs_validates_channel_policies() {
+        let mut cfg = tiny_cfg();
+        cfg.experiments = vec!["e11".into()];
+        cfg.channel_policies = vec!["lottery".into()];
+        assert!(build_jobs(&cfg).is_err());
+        cfg.channel_policies.clear();
+        assert!(build_jobs(&cfg).is_err(), "an empty policy list must fail loudly");
+        cfg.channel_policies = vec!["rr".into()];
+        let jobs = build_jobs(&cfg).unwrap();
+        assert!(jobs.iter().all(|j| j.scenario.channel_policies == ["rr"]));
     }
 
     #[test]
@@ -635,10 +736,30 @@ mod tests {
         for (a, b) in jobs.iter().zip(&again) {
             assert_eq!(a.scenario.seed, b.scenario.seed, "{}", a.label);
         }
-        let mut seeds: Vec<u64> = jobs.iter().map(|j| j.scenario.seed).collect();
+        let mut seeds: Vec<u64> =
+            jobs.iter().filter(|j| j.experiment != "e11").map(|j| j.scenario.seed).collect();
+        let non_e11 = seeds.len();
         seeds.sort_unstable();
         seeds.dedup();
-        assert_eq!(seeds.len(), jobs.len(), "per-job seeds must be distinct");
+        assert_eq!(seeds.len(), non_e11, "per-job seeds must be distinct");
+
+        // e11 scheme cells share one seed per kernel (the cross-scheme
+        // throughput-at-SLO comparison needs identical programs, scripts
+        // and SLO), but kernels still draw independent streams
+        let e11: Vec<&Job> = jobs.iter().filter(|j| j.experiment == "e11").collect();
+        assert!(!e11.is_empty());
+        for a in &e11 {
+            for b in &e11 {
+                let same_kernel = a.scenario.target == b.scenario.target;
+                assert_eq!(
+                    a.scenario.seed == b.scenario.seed,
+                    same_kernel,
+                    "{} vs {}",
+                    a.label,
+                    b.label
+                );
+            }
+        }
 
         // a different base seed moves every job's stream
         let cfg2 = HarnessConfig { seed: 43, ..cfg };

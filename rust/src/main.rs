@@ -4,9 +4,9 @@
 //!   info            show artifact manifest + effective config
 //!   serve           start the sharded batching pool and drive it with a
 //!                   synthetic open-loop client (requests/s, duration)
-//!   experiments     run the e1..e10 sweep in parallel and emit one
+//!   experiments     run the e1..e11 sweep in parallel and emit one
 //!                   consolidated JSON report (the harness)
-//!   run-bench       print experiment tables: e1..e10 or all (serial)
+//!   run-bench       print experiment tables: e1..e11 or all (serial)
 //!   compress-file   per-scheme compression report for any file
 //!   trace           dump + compress a benchmark's NPU streams
 //!   config          print the effective configuration (reloadable)
@@ -26,11 +26,13 @@ use anyhow::{bail, Context, Result};
 use snnap_c::bench_suite::{workload, Workload};
 use snnap_c::cli::Args;
 use snnap_c::config::Config;
+use snnap_c::coordinator::router::scheme_affinity;
 use snnap_c::coordinator::{
     Backend, BackendFactory, DeviceBackend, NpuPool, PjrtBackend, ServerConfig,
 };
 use snnap_c::experiments as ex;
-use snnap_c::npu::NpuDevice;
+use snnap_c::mem::{ArbiterPolicy, ChannelHub, DramChannel, SharedChannel};
+use snnap_c::npu::{NpuDevice, NpuProgram};
 use snnap_c::runtime::{Manifest, NpuExecutor};
 use snnap_c::trace::Trace;
 use snnap_c::util::rng::Rng;
@@ -47,15 +49,19 @@ COMMANDS:
     --clients N             client threads (default 4)
     --shards N              device shards in the pool (default pool.shards)
     --backend sim|pjrt      execution backend (default sim; sim shards
-                            each front a cache -> LCP-DRAM hierarchy
-                            built from the `compression` config key)
-  experiments               parallel e1..e10 sweep + one JSON report
+                            front per-shard cache -> LCP-DRAM hierarchies
+                            whose DRAM transfers all serialize on ONE
+                            arbitrated channel; config keys: compression,
+                            pool.schemes, pool.geometries, channel.policy)
+  experiments               parallel e1..e11 sweep + one JSON report
     --all                   run every experiment (default when no
                             --experiment is given)
-    --experiment LIST       subset, e.g. e1 or e1,e9,e10
+    --experiment LIST       subset, e.g. e1 or e1,e9,e10,e11
     --benchmarks LIST       kernels to sweep (default: all seven)
     --schemes LIST          schemes for per-scheme experiments
                             (none|bdi|fpc|bdi+fpc|cpack; default: all)
+    --channel-policy LIST   shared-channel arbiters E11 sweeps
+                            (fifo|rr; default: both)
     --jobs N                worker threads (default: CPU count)
     --invocations N         stream length knob (default 256)
     --batch N               batch size (default batch.max)
@@ -64,9 +70,12 @@ COMMANDS:
                             (default harness-report.json)
                             (e9 sweeps kernels x schemes x cache
                             geometries; e10 sweeps kernels x schemes x
-                            shard counts {1,2,4,8} under open-loop load)
+                            shard counts {1,2,4,8} under open-loop load;
+                            e11 sweeps kernels x schemes x shards x
+                            channel policies with closed-loop clients
+                            against a p99 SLO on a shared DRAM channel)
   run-bench                 print experiment tables (serial)
-    --experiment e1..e10|all which experiment (default all)
+    --experiment e1..e11|all which experiment (default all)
     --invocations N         stream length knob (default 256)
   compress-file FILE        per-scheme report for a file
   trace                     dump a benchmark's NPU streams
@@ -113,6 +122,21 @@ fn cmd_info(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the sim backend's NPU program: trained artifact weights when
+/// the bundle exists (a bundle that exists but won't load is an error
+/// worth surfacing), deterministic synthetic weights otherwise.
+fn resolve_sim_program(cfg: &Config) -> Result<NpuProgram> {
+    let dir = Path::new(&cfg.artifacts);
+    match Manifest::load(dir) {
+        Ok(m) => ex::program_from_artifact(&m, &cfg.benchmark, cfg.qformat),
+        Err(e) if dir.join("manifest.json").exists() => Err(e),
+        Err(_) => {
+            let w = workload(&cfg.benchmark).unwrap();
+            Ok(ex::program_from_workload(w.as_ref(), cfg.qformat, 42))
+        }
+    }
+}
+
 fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     let requests: usize = args.opt_parse("requests", 2000)?;
     let clients: usize = args.opt_parse("clients", 4)?;
@@ -122,14 +146,20 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     workload(&cfg.benchmark)
         .with_context(|| format!("unknown benchmark {:?}", cfg.benchmark))?;
 
-    // one factory per shard; each runs on its shard's worker thread. The
-    // sim backend fronts every shard with its own cache -> LCP-DRAM
-    // hierarchy (the `compression` config key picks the scheme) and
-    // falls back to deterministic synthetic weights without artifacts.
+    // one factory per shard; each runs on its shard's worker thread. Sim
+    // shards front per-shard cache -> LCP-DRAM hierarchies (scheme and
+    // geometry from `pool.schemes` / `pool.geometries`, cycled across
+    // shards; `compression` otherwise) whose DRAM transfers all
+    // serialize on ONE arbitrated channel (`channel.policy`), so shards
+    // genuinely contend for memory bandwidth. Falls back to
+    // deterministic synthetic weights without artifacts.
+    let policy = ArbiterPolicy::parse(&cfg.channel_policy)?;
+    let hub = ChannelHub::shared(cfg.dram_channel(), policy, shards);
     let mut factories: Vec<BackendFactory> = Vec::with_capacity(shards);
-    for _ in 0..shards {
+    for shard in 0..shards {
         let cfg2 = cfg.clone();
         let kind = backend_kind.clone();
+        let hub = hub.clone();
         factories.push(Box::new(move || match kind.as_str() {
             "pjrt" => {
                 let manifest = Manifest::load(Path::new(&cfg2.artifacts))?;
@@ -137,20 +167,15 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
                 Ok(Box::new(PjrtBackend { executor: ex }) as Box<dyn Backend>)
             }
             "sim" => {
-                let dir = Path::new(&cfg2.artifacts);
-                let program = match Manifest::load(dir) {
-                    Ok(m) => ex::program_from_artifact(&m, &cfg2.benchmark, cfg2.qformat)?,
-                    // a bundle that exists but won't load is an error
-                    // worth surfacing — only a genuinely absent bundle
-                    // falls back to synthetic weights
-                    Err(e) if dir.join("manifest.json").exists() => return Err(e),
-                    Err(_) => {
-                        let w = workload(&cfg2.benchmark).unwrap();
-                        ex::program_from_workload(w.as_ref(), cfg2.qformat, 42)
-                    }
-                };
-                let geometry = ex::e9_cache::CACHE_CONFIGS[2];
-                let hierarchy = ex::e9_cache::build_hierarchy(&cfg2.compression, geometry)?;
+                let program = resolve_sim_program(&cfg2)?;
+                let scheme = cfg2.shard_scheme(shard).to_string();
+                let geometry = cfg2.shard_geometry(shard, ex::e9_cache::CACHE_CONFIGS[2]);
+                let channel = DramChannel::Shared(SharedChannel::new(hub, shard));
+                let hierarchy = ex::e9_cache::build_hierarchy_on(
+                    &scheme,
+                    geometry,
+                    ex::e9_cache::dram_for(&scheme, channel)?,
+                )?;
                 Ok(Box::new(DeviceBackend {
                     device: NpuDevice::new(cfg2.npu, program)?
                         .with_memory(Box::new(hierarchy)),
@@ -159,7 +184,16 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
             other => bail!("unknown backend {other:?} (sim|pjrt)"),
         }));
     }
-    let pool = NpuPool::start(factories, ServerConfig { policy: cfg.policy })?;
+    // heterogeneous sim pools place scheme-aware: the shard whose scheme
+    // compresses this benchmark's weights best wins placement load ties
+    let affinity = if backend_kind == "sim" && !cfg.pool_schemes.is_empty() {
+        let program = resolve_sim_program(cfg)?;
+        let schemes: Vec<String> = (0..shards).map(|s| cfg.shard_scheme(s).to_string()).collect();
+        Some(scheme_affinity(&program, &schemes)?)
+    } else {
+        None
+    };
+    let pool = NpuPool::start_affine(factories, ServerConfig { policy: cfg.policy }, affinity)?;
     let pool = std::sync::Arc::new(pool);
 
     println!(
@@ -191,6 +225,20 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     let dt = t0.elapsed();
     println!("== results ==");
     println!("{}", pool.metrics().report());
+    // only the sim shards bill the shared channel; pjrt never attaches
+    // to it, so printing its (empty) stats would imply a modeled channel
+    if backend_kind == "sim" {
+        let h = hub.lock().unwrap();
+        let t = h.totals();
+        println!(
+            "channel: policy={} transfers={} busy={}cyc wait={}cyc wait-share={:.1}%",
+            h.policy.name(),
+            t.transfers,
+            t.busy_cycles,
+            t.wait_cycles,
+            h.wait_share() * 100.0,
+        );
+    }
     println!(
         "wall time {:?}  throughput {:.0} req/s",
         dt,
@@ -215,6 +263,9 @@ fn cmd_experiments(cfg: &Config, args: &Args) -> Result<()> {
     }
     if let Some(schemes) = args.opt_csv("schemes") {
         hc.schemes = schemes;
+    }
+    if let Some(policies) = args.opt_csv("channel-policy") {
+        hc.channel_policies = policies;
     }
     hc.invocations = args.opt_parse("invocations", hc.invocations)?;
     hc.batch = args.opt_parse("batch", hc.batch)?;
@@ -315,6 +366,14 @@ fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
     if run_all || which == "e10" {
         println!("\n== E10: sharded serving pool under open-loop mixed-kernel load ==");
         ex::e10_serving::print_table(&ex::e10_serving::run(
+            cfg.qformat,
+            invocations,
+            cfg.policy.max_batch,
+        )?);
+    }
+    if run_all || which == "e11" {
+        println!("\n== E11: closed-loop SLO serving over a shared DRAM channel ==");
+        ex::e11_slo::print_table(&ex::e11_slo::run(
             cfg.qformat,
             invocations,
             cfg.policy.max_batch,

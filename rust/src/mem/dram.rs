@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use crate::compress::lcp::{LcpPage, PAGE_BYTES, PAGE_LINES};
 use crate::compress::{Compressor, LINE_BYTES};
 
-use super::channel::{Channel, ChannelConfig};
+use super::channel::{Channel, ChannelConfig, SharedChannel};
 
 /// Storage policy for the simulated DRAM.
 pub enum DramMode {
@@ -18,6 +18,46 @@ pub enum DramMode {
     Raw,
     /// LCP-compressed with the given per-line scheme.
     Lcp(Box<dyn Compressor>),
+}
+
+/// The bus a [`CompressedDram`] bills its transfers on: privately owned
+/// (the single-hierarchy experiments) or one requester's handle onto the
+/// pool's arbitrated channel (`mem::ChannelHub`).
+pub enum DramChannel {
+    Private(Channel),
+    Shared(SharedChannel),
+}
+
+impl DramChannel {
+    pub fn cfg(&self) -> ChannelConfig {
+        match self {
+            DramChannel::Private(c) => c.cfg,
+            DramChannel::Shared(s) => s.cfg(),
+        }
+    }
+
+    fn transfer(&mut self, bytes: usize) -> u64 {
+        match self {
+            DramChannel::Private(c) => c.transfer(bytes),
+            DramChannel::Shared(s) => s.transfer(bytes),
+        }
+    }
+
+    /// Queuing delay paid so far (always 0 on a private bus).
+    pub fn wait_cycles(&self) -> u64 {
+        match self {
+            DramChannel::Private(_) => 0,
+            DramChannel::Shared(s) => s.wait_cycles(),
+        }
+    }
+
+    /// Join the pool's virtual clock (no-op on a private bus, which has
+    /// no competing requesters to race).
+    pub fn sync_to(&mut self, cycle: u64) {
+        if let DramChannel::Shared(s) = self {
+            s.sync_to(cycle);
+        }
+    }
 }
 
 enum PageStore {
@@ -29,7 +69,7 @@ enum PageStore {
 pub struct CompressedDram {
     mode: DramMode,
     pages: BTreeMap<u64, PageStore>,
-    pub channel: Channel,
+    pub channel: DramChannel,
     /// Total logical bytes the accelerator asked for.
     pub logical_bytes: u64,
     /// Total physical bytes that crossed the channel.
@@ -41,10 +81,20 @@ pub struct CompressedDram {
 
 impl CompressedDram {
     pub fn new(mode: DramMode, channel_cfg: ChannelConfig) -> Self {
+        Self::with_channel(mode, DramChannel::Private(Channel::new(channel_cfg)))
+    }
+
+    /// A DRAM billing on one requester's handle of a shared, arbitrated
+    /// channel — the pool's contended-memory configuration.
+    pub fn new_shared(mode: DramMode, shared: SharedChannel) -> Self {
+        Self::with_channel(mode, DramChannel::Shared(shared))
+    }
+
+    pub fn with_channel(mode: DramMode, channel: DramChannel) -> Self {
         CompressedDram {
             mode,
             pages: BTreeMap::new(),
-            channel: Channel::new(channel_cfg),
+            channel,
             logical_bytes: 0,
             physical_bytes: 0,
             type1_overflows: 0,

@@ -53,6 +53,20 @@ pub trait MemoryLevel: Send {
         1.0
     }
 
+    /// Join the pool's virtual clock: the cycle (at this level's clock)
+    /// at which the next accesses happen. Levels forward it down to the
+    /// terminal level; only a shared, arbitrated DRAM channel cares (a
+    /// requester idle since its last batch must not appear to have been
+    /// queued all along). No-op everywhere else.
+    fn sync_cycle(&mut self, _cycle: u64) {}
+
+    /// Cumulative queuing delay this hierarchy paid on a shared DRAM
+    /// channel (cycles at the terminal level's clock); 0 for private
+    /// hierarchies, which never contend.
+    fn wait_cycles(&self) -> u64 {
+        0
+    }
+
     /// Clock of the cycles this level reports, in MHz.
     fn clock_mhz(&self) -> f64;
 }
@@ -78,8 +92,16 @@ impl MemoryLevel for CompressedDram {
         (self.logical_bytes, self.physical_bytes)
     }
 
+    fn sync_cycle(&mut self, cycle: u64) {
+        self.channel.sync_to(cycle);
+    }
+
+    fn wait_cycles(&self) -> u64 {
+        self.channel.wait_cycles()
+    }
+
     fn clock_mhz(&self) -> f64 {
-        self.channel.cfg.clock_mhz
+        self.channel.cfg().clock_mhz
     }
 }
 

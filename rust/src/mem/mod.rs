@@ -12,11 +12,20 @@
 //! [`MemoryLevel`] is the composition seam: every level of the hierarchy
 //! (bare channel, [`crate::cache::CompressedCache`], LCP-DRAM) speaks the
 //! same line-granular read/write-with-cycles interface, so levels stack.
+//!
+//! Since PR 4 the DRAM channel can also be **shared**: one
+//! cycle-accounted [`ChannelHub`] arbitrates the bus across N requesters
+//! (pool shards), each holding a [`SharedChannel`] handle, so misses and
+//! writebacks from every shard serialize on the same channel and pay
+//! visible queuing delay ([`RequesterStats::wait_cycles`]).
 
 pub mod channel;
 pub mod dram;
 pub mod level;
 
-pub use channel::{Channel, ChannelConfig, TransferStats};
-pub use dram::{CompressedDram, DramMode};
+pub use channel::{
+    ArbiterPolicy, Channel, ChannelConfig, ChannelHub, RequesterStats, SharedChannel,
+    TransferStats,
+};
+pub use dram::{CompressedDram, DramChannel, DramMode};
 pub use level::MemoryLevel;

@@ -183,6 +183,10 @@ pub struct ShardMetrics {
     pub batches: Counter,
     /// Cumulative simulated device cycles this shard spent executing.
     pub busy_cycles: Counter,
+    /// Cumulative cycles this shard's memory traffic sat queued behind
+    /// other shards on the shared DRAM channel (hierarchy clock); stays
+    /// 0 when shards own private hierarchies.
+    pub wait_cycles: Counter,
 }
 
 /// Metrics bundle for a sharded [`crate::coordinator::NpuPool`]:
@@ -211,15 +215,21 @@ impl PoolMetrics {
         }
     }
 
+    /// Total shared-channel queuing delay across all shards.
+    pub fn total_wait_cycles(&self) -> u64 {
+        self.shards.iter().map(|s| s.wait_cycles.get()).sum()
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "{} shards={} stolen_batches={} max_queue_depth={} cycles_p50={} cycles_p99={}",
+            "{} shards={} stolen_batches={} max_queue_depth={} cycles_p50={} cycles_p99={} wait_cycles={}",
             self.server.report(),
             self.shards.len(),
             self.stolen_batches.get(),
             self.max_queue_depth.get(),
             self.cycle_latency.quantile(0.5),
             self.cycle_latency.quantile(0.99),
+            self.total_wait_cycles(),
         )
     }
 }
@@ -310,10 +320,14 @@ mod tests {
         m.stolen_batches.inc();
         m.max_queue_depth.observe(9);
         m.cycle_latency.record(100);
+        m.shards[1].wait_cycles.add(5);
+        m.shards[3].wait_cycles.add(7);
+        assert_eq!(m.total_wait_cycles(), 12);
         let r = m.report();
         assert!(r.contains("requests=3"), "{r}");
         assert!(r.contains("shards=4"), "{r}");
         assert!(r.contains("stolen_batches=1"), "{r}");
         assert!(r.contains("max_queue_depth=9"), "{r}");
+        assert!(r.contains("wait_cycles=12"), "{r}");
     }
 }

@@ -148,8 +148,34 @@ impl NpuDevice {
         self.memory().and_then(|m| m.hit_stats())
     }
 
+    /// Cumulative queuing delay this device paid on a shared DRAM
+    /// channel (hierarchy-clock cycles); 0 without a hierarchy or on a
+    /// private channel.
+    pub fn mem_wait_cycles(&self) -> u64 {
+        self.memory().map_or(0, |m| m.wait_cycles())
+    }
+
     pub fn program(&self) -> &NpuProgram {
         &self.pus[0].program
+    }
+
+    /// Anchor the attached hierarchy's channel clock at `now` device
+    /// cycles (converted to the hierarchy's clock), so a *shared* DRAM
+    /// channel knows this device was idle — not queued — since its last
+    /// batch. No-op for private hierarchies and bare devices.
+    pub fn sync_mem_cycle(&mut self, now: u64) {
+        if let Some(mem) = &mut self.mem {
+            let t = (now as f64 * mem.clock_mhz() / self.cfg.clock_mhz).floor() as u64;
+            mem.sync_cycle(t);
+        }
+    }
+
+    /// [`NpuDevice::execute_batch`] anchored at a pool's virtual cycle
+    /// via [`NpuDevice::sync_mem_cycle`]. Identical to `execute_batch`
+    /// for private hierarchies.
+    pub fn execute_batch_at(&mut self, inputs: &[Vec<f32>], now: u64) -> Result<BatchResult> {
+        self.sync_mem_cycle(now);
+        self.execute_batch(inputs)
     }
 
     /// Execute a batch functionally + under the timing model.

@@ -1,0 +1,182 @@
+#!/usr/bin/env python3
+"""Perf-trajectory pipeline: harness report -> BENCH_<run>.json + gate.
+
+Converts a ``snnapc experiments`` JSON report into one flat trajectory
+point (``BENCH_<run>.json``) and fails when a cycle metric regressed
+more than ``--max-p99-regress`` against the committed baseline
+(``BENCH_baseline.json``). The harness's cycle numbers are *simulated*
+and bit-identical for a pinned (scenario, seed), so a regression here
+is a real code change, never runner noise — which is what makes a hard
+CI gate honest.
+
+Usage (what .github/workflows/ci.yml runs):
+
+    python3 scripts/bench_trend.py harness-report.json \
+        --baseline BENCH_baseline.json --out BENCH_${RUN_ID}.json \
+        --run-id ${RUN_ID} --max-p99-regress 0.20
+
+Refreshing the committed baseline after an intentional perf change:
+
+    cargo run --release -- experiments --experiment e1,e9,e10,e11 \
+        --benchmarks sobel,fft --schemes none,bdi+fpc,cpack \
+        --invocations 8 --seed 42 --out harness-report.json
+    python3 scripts/bench_trend.py harness-report.json --write-baseline
+
+A baseline whose ``metrics`` object is empty is a *bootstrap* baseline
+(seeded in the PR that introduced this pipeline): the gate records the
+trajectory point but fails nothing until a real baseline is committed.
+Only the standard library is used.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+#: Cycle-denominated metrics the gate compares (higher = worse).
+GATED_METRICS = ("p99_cycles", "mem_cycles")
+
+
+def extract_metrics(report: dict) -> dict:
+    """Flatten a harness report into ``{cell_key: {metric: value}}``.
+
+    Cell keys are stable across runs of the same pinned scenario:
+    ``e1/<label>/<stream>/<scheme>`` (compression ratios, informational),
+    ``e9/<label>/<cache>``, ``e10/<label>/x<shards>``, and
+    ``e11/<label>/x<shards>/<policy>`` (cycle metrics, gated).
+    """
+    out: dict = {}
+    experiments = report.get("experiments", {})
+    for entry in experiments.get("e1", []):
+        for row in entry.get("rows", []):
+            # kernel rows nest a SchemeReport under "report"; synthetic
+            # rows *are* a SchemeReport ({"workload", "schemes"})
+            scheme_report = row.get("report", row)
+            stream = row.get("stream") or scheme_report.get("workload", "?")
+            for s in scheme_report.get("schemes", []):
+                key = f"{entry['label']}/{stream}/{s['scheme']}"
+                out[key] = {
+                    "ratio": s["ratio"],
+                    "compressed_bytes": s["compressed_bytes"],
+                }
+    for entry in experiments.get("e9", []):
+        for row in entry.get("rows", []):
+            key = f"{entry['label']}/{row['cache']}"
+            out[key] = {
+                "mem_cycles": row["mem_cycles"],
+                "hit_rate": row["hit_rate"],
+                "dram_bytes": row["dram_bytes"],
+            }
+    for entry in experiments.get("e10", []):
+        for row in entry.get("rows", []):
+            key = f"{entry['label']}/x{row['shards']}"
+            out[key] = {
+                "p99_cycles": row["p99_cycles"],
+                "throughput": row["throughput"],
+                "dram_bytes": row["dram_bytes"],
+            }
+    for entry in experiments.get("e11", []):
+        for row in entry.get("rows", []):
+            key = f"{entry['label']}/x{row['shards']}/{row['policy']}"
+            out[key] = {
+                "p99_cycles": row["p99_cycles"],
+                "slo_throughput": row["slo_throughput"],
+                "wait_cycles": row["wait_cycles"],
+                "dram_bytes": row["dram_bytes"],
+            }
+    return out
+
+
+def compare(baseline: dict, current_metrics: dict, max_regress: float) -> list:
+    """Regressions of GATED_METRICS beyond ``max_regress``, as messages.
+
+    Cells present only on one side are fine (the trajectory grows and
+    shrinks with the scenario set); an empty-``metrics`` baseline is the
+    bootstrap case and gates nothing.
+    """
+    base_metrics = baseline.get("metrics", {})
+    if not base_metrics:
+        return []
+    failures = []
+    for key in sorted(current_metrics):
+        base_row = base_metrics.get(key)
+        if base_row is None:
+            continue
+        for metric in GATED_METRICS:
+            base_value = base_row.get(metric)
+            value = current_metrics[key].get(metric)
+            if base_value is None or value is None or base_value <= 0:
+                continue
+            if value > base_value * (1.0 + max_regress):
+                pct = (value / base_value - 1.0) * 100.0
+                failures.append(
+                    f"{key}: {metric} {base_value:.0f} -> {value:.0f} "
+                    f"(+{pct:.1f}% > {max_regress * 100.0:.0f}% allowed)"
+                )
+    return failures
+
+
+def trajectory_point(report: dict, run_id: str) -> dict:
+    return {
+        "schema_version": 1,
+        "run": run_id,
+        "config": report.get("config", {}),
+        "metrics": extract_metrics(report),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("report", help="harness-report.json from `snnapc experiments`")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--out", default="BENCH_local.json")
+    ap.add_argument("--run-id", default="local")
+    ap.add_argument("--max-p99-regress", type=float, default=0.20)
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="overwrite --baseline with this report's metrics instead of gating",
+    )
+    args = ap.parse_args(argv)
+
+    report = json.loads(Path(args.report).read_text())
+    point = trajectory_point(report, args.run_id)
+    print(f"extracted {len(point['metrics'])} trajectory cells from {args.report}")
+
+    if args.write_baseline:
+        point["run"] = "baseline"
+        Path(args.baseline).write_text(json.dumps(point, indent=2, sort_keys=True) + "\n")
+        print(f"wrote baseline {args.baseline}")
+        return 0
+
+    Path(args.out).write_text(json.dumps(point, indent=2, sort_keys=True) + "\n")
+    print(f"wrote trajectory point {args.out}")
+
+    baseline_path = Path(args.baseline)
+    if not baseline_path.exists():
+        print(f"ERROR: baseline {args.baseline} not found", file=sys.stderr)
+        return 2
+    baseline = json.loads(baseline_path.read_text())
+    if not baseline.get("metrics"):
+        print(
+            f"baseline {args.baseline} is a bootstrap (empty metrics): "
+            "recording only, nothing gated. Refresh it with --write-baseline."
+        )
+        return 0
+
+    failures = compare(baseline, point["metrics"], args.max_p99_regress)
+    compared = sum(1 for k in point["metrics"] if k in baseline["metrics"])
+    print(f"compared {compared} cells against {args.baseline}")
+    if failures:
+        print(f"PERF REGRESSION ({len(failures)} cells):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("no p99/mem-cycle regressions beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
