@@ -8,7 +8,7 @@ build:
 test:
 	cargo test -q
 
-# Full e1..e8 sweep in parallel -> harness-report.json
+# Full e1..e12 sweep in parallel -> harness-report.json
 sweep:
 	cargo run --release -- experiments --all --out harness-report.json
 
@@ -20,11 +20,12 @@ smoke:
 # The CI perf-trend scenario: pinned (kernels, schemes, seed), gated
 # against BENCH_baseline.json by scripts/bench_trend.py
 trend:
-	cargo run --release -- experiments --experiment e1,e9,e10,e11 \
+	cargo run --release -- experiments --experiment e1,e9,e10,e11,e12 \
 		--benchmarks sobel,fft --schemes none,bdi+fpc,cpack \
 		--invocations 8 --seed 42 --jobs 4 --out harness-report.json
 	python3 scripts/bench_trend.py harness-report.json \
-		--baseline BENCH_baseline.json --out BENCH_local.json
+		--baseline BENCH_baseline.json --out BENCH_local.json \
+		--emit-refreshed BENCH_baseline.refreshed.json
 
 # AOT artifact bundle (needs jax; optional — everything falls back to
 # synthetic weights without it)

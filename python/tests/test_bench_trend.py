@@ -13,7 +13,7 @@ bench_trend = importlib.util.module_from_spec(spec)
 spec.loader.exec_module(bench_trend)
 
 
-def report(p99_e10=1000, p99_e11=2000, mem_e9=500):
+def report(p99_e10=1000, p99_e11=2000, mem_e9=500, fill_bdi=400, fill_none=900):
     return {
         "schema_version": 1,
         "config": {"seed": 42},
@@ -78,6 +78,32 @@ def report(p99_e10=1000, p99_e11=2000, mem_e9=500):
                     ],
                 }
             ],
+            "e12": [
+                {
+                    "label": "e12/sobel/none",
+                    "rows": [
+                        {
+                            "grid": "8x8@1B",
+                            "grid_cycles": 5000,
+                            "fill_cycles": fill_none,
+                            "gated_mac_share": 0.0,
+                            "dram_bytes": 1024,
+                        }
+                    ],
+                },
+                {
+                    "label": "e12/sobel/bdi",
+                    "rows": [
+                        {
+                            "grid": "8x8@1B",
+                            "grid_cycles": 4500,
+                            "fill_cycles": fill_bdi,
+                            "gated_mac_share": 0.1,
+                            "dram_bytes": 600,
+                        }
+                    ],
+                },
+            ],
         },
     }
 
@@ -91,7 +117,9 @@ def test_extract_flattens_all_trajectory_experiments():
     assert metrics["e10/sobel/bdi/x2"]["p99_cycles"] == 1000
     assert metrics["e11/sobel/bdi/x2/rr"]["slo_throughput"] == 5.0
     assert metrics["e11/sobel/bdi/x2/rr"]["wait_cycles"] == 7
-    assert len(metrics) == 6
+    assert metrics["e12/sobel/none/8x8@1B"]["fill_cycles"] == 900
+    assert metrics["e12/sobel/bdi/8x8@1B"]["grid_cycles"] == 4500
+    assert len(metrics) == 8
     # e1 ratio cells are informational: never gated even when worse
     base = bench_trend.trajectory_point(report(), "base")
     worse = dict(metrics)
@@ -119,6 +147,51 @@ def test_mem_cycles_are_gated_and_improvements_pass():
     assert any("mem_cycles" in f for f in bench_trend.compare(base, worse, 0.20))
     better = bench_trend.extract_metrics(report(p99_e10=10, p99_e11=10, mem_e9=10))
     assert bench_trend.compare(base, better, 0.20) == []
+
+
+def test_e12_invariant_gate():
+    # the shipped fixture satisfies it: bdi beats none on fill + dram
+    good = bench_trend.extract_metrics(report())
+    assert bench_trend.check_invariants(good) == []
+    # compressed fill no better than none -> invariant failure
+    bad = bench_trend.extract_metrics(report(fill_bdi=900))
+    failures = bench_trend.check_invariants(bad)
+    assert len(failures) == 1 and "E12 invariant" in failures[0]
+    # no e12 cells (or no `none` counterpart) -> nothing to enforce
+    no_e12 = {k: v for k, v in good.items() if not k.startswith("e12/")}
+    assert bench_trend.check_invariants(no_e12) == []
+    only_none = {k: v for k, v in good.items() if "/bdi/" not in k}
+    assert bench_trend.check_invariants(only_none) == []
+
+
+def test_fill_and_grid_cycles_are_gated():
+    base = bench_trend.trajectory_point(report(), "base")
+    worse = bench_trend.extract_metrics(report(fill_bdi=600))  # +50%
+    failures = bench_trend.compare(base, worse, 0.20)
+    assert any("fill_cycles" in f for f in failures)
+
+
+def test_main_fails_on_invariant_violation(tmp_path):
+    rep = tmp_path / "harness-report.json"
+    rep.write_text(json.dumps(report(fill_bdi=2000)))  # bdi worse than none
+    baseline = tmp_path / "BENCH_baseline.json"
+    baseline.write_text(json.dumps({"schema_version": 1, "metrics": {}}))
+    out = tmp_path / "BENCH_run.json"
+    refreshed = tmp_path / "refreshed.json"
+    rc = bench_trend.main(
+        [
+            str(rep),
+            "--baseline",
+            str(baseline),
+            "--out",
+            str(out),
+            "--emit-refreshed",
+            str(refreshed),
+        ]
+    )
+    assert rc == 1, "invariant violations must fail even on a bootstrap baseline"
+    # the refreshed-baseline candidate is still produced for inspection
+    assert json.loads(refreshed.read_text())["run"] == "baseline"
 
 
 def test_bootstrap_baseline_and_new_cells_gate_nothing():

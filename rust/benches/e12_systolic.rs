@@ -1,0 +1,62 @@
+//! E12 bench — the cycle-level systolic PE grid, timed. Sweeps scheme ×
+//! grid geometry for two kernels and prints the fill-cycle /
+//! gated-MAC-share picture, plus a compressed-vs-raw weight-fill
+//! summary at the decode-bound geometry. Works from a clean checkout
+//! (deterministic synthetic weights).
+
+use snnap_c::bench_suite::workload;
+use snnap_c::experiments as ex;
+use snnap_c::experiments::e12_systolic::{self, GRID_SWEEP};
+use snnap_c::fixed::Q7_8;
+use snnap_c::util::bench::BenchRunner;
+
+fn main() {
+    let mut runner = BenchRunner::default();
+    let kernels = ["sobel", "jmeint"];
+    let schemes = ["none", "bdi", "bdi+fpc", "cpack"];
+    let (n, seed) = (32usize, 17u64);
+
+    let mut rows = Vec::new();
+    for name in kernels {
+        let w = workload(name).expect("known kernel");
+        let program = ex::program_from_workload(w.as_ref(), Q7_8, 42);
+        for scheme in schemes {
+            for grid in GRID_SWEEP {
+                let label = format!("e12/{name}/{scheme}/{}", grid.label());
+                let p = program.clone();
+                let row = runner.bench(&label, || {
+                    e12_systolic::measure(w.as_ref(), p.clone(), scheme, grid, n, seed)
+                        .expect("grid replay is infallible for registered schemes")
+                });
+                rows.push(row);
+            }
+        }
+    }
+
+    println!("\n=== cycle-level PE grid: fills, streaming, gating ===");
+    e12_systolic::print_table(&rows);
+
+    println!("\n--- compressed-vs-raw weight fill at the decode-bound geometry ---");
+    for name in kernels {
+        let decode_bound = GRID_SWEEP[0].label();
+        let raw = rows
+            .iter()
+            .find(|r| r.workload == name && r.scheme == "none" && r.grid == decode_bound)
+            .unwrap();
+        let best = rows
+            .iter()
+            .filter(|r| r.workload == name && r.scheme != "none" && r.grid == decode_bound)
+            .min_by_key(|r| r.fill_cycles)
+            .unwrap();
+        println!(
+            "{name:<10} {}: fill {} cyc vs raw {} cyc ({:.2}x), dram {} B vs {} B, gated {:.1}%",
+            best.scheme,
+            best.fill_cycles,
+            raw.fill_cycles,
+            raw.fill_cycles as f64 / best.fill_cycles.max(1) as f64,
+            best.dram_bytes,
+            raw.dram_bytes,
+            best.gated_mac_share * 100.0,
+        );
+    }
+}

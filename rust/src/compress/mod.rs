@@ -123,6 +123,22 @@ pub fn all_schemes() -> Vec<Box<dyn Compressor>> {
     ]
 }
 
+/// Per-line compressor for a scheme name (`Ok(None)` = uncompressed),
+/// resolved against [`all_schemes`] — the one registry the config keys,
+/// the experiments and the systolic edge decompressor all share. A bad
+/// name is a recoverable `Err`, not a panic: one mistyped scheme must
+/// fail its own cell, never abort a whole sweep.
+pub fn scheme_by_name(name: &str) -> anyhow::Result<Option<Box<dyn Compressor>>> {
+    if name == "none" {
+        return Ok(None);
+    }
+    if let Some(c) = all_schemes().into_iter().find(|c| c.name() == name) {
+        return Ok(Some(c));
+    }
+    let known: Vec<&'static str> = all_schemes().iter().map(|c| c.name()).collect();
+    anyhow::bail!("unknown scheme {name:?} (expected one of {known:?})")
+}
+
 /// Compress a whole byte stream line by line (zero-padding the tail) and
 /// return per-line results. The workhorse of E1/E5/E8.
 pub fn compress_stream(c: &dyn Compressor, bytes: &[u8]) -> Vec<Compressed> {
@@ -172,5 +188,20 @@ mod tests {
         dedup.dedup();
         assert_eq!(names.len(), 5);
         assert_eq!(names, dedup);
+    }
+
+    #[test]
+    fn scheme_by_name_resolves_the_registry() {
+        assert!(scheme_by_name("none").unwrap().is_none());
+        for c in all_schemes() {
+            let resolved = scheme_by_name(c.name()).unwrap();
+            if c.name() == "none" {
+                assert!(resolved.is_none());
+            } else {
+                assert_eq!(resolved.unwrap().name(), c.name());
+            }
+        }
+        let err = scheme_by_name("zstd").unwrap_err().to_string();
+        assert!(err.contains("unknown scheme") && err.contains("zstd"), "{err}");
     }
 }

@@ -161,6 +161,25 @@ impl Config {
             "npu.clock_mhz" => self.npu.clock_mhz = v.parse().context("npu.clock_mhz")?,
             "npu.sync_cycles" => self.npu.sync_cycles = v.parse().context("npu.sync_cycles")?,
             "npu.overlap" => self.npu.overlap = v.parse().context("npu.overlap")?,
+            "npu.model" => self.npu.model = crate::systolic::TimingModel::parse(v)?,
+            "npu.grid_rows" => {
+                self.npu.grid.rows = v.parse().context("npu.grid_rows")?;
+                if self.npu.grid.rows == 0 {
+                    bail!("npu.grid_rows must be positive");
+                }
+            }
+            "npu.grid_cols" => {
+                self.npu.grid.cols = v.parse().context("npu.grid_cols")?;
+                if self.npu.grid.cols == 0 {
+                    bail!("npu.grid_cols must be positive");
+                }
+            }
+            "npu.decode_rate" => {
+                self.npu.grid.decode_bytes_per_cycle = v.parse().context("npu.decode_rate")?;
+                if self.npu.grid.decode_bytes_per_cycle == 0 {
+                    bail!("npu.decode_rate must be positive");
+                }
+            }
             "acp.bytes_per_cycle" => {
                 self.npu.acp.bytes_per_cycle = v.parse().context("acp.bytes_per_cycle")?
             }
@@ -251,6 +270,13 @@ impl Config {
         out.push_str(&format!("npu.clock_mhz = {}\n", self.npu.clock_mhz));
         out.push_str(&format!("npu.sync_cycles = {}\n", self.npu.sync_cycles));
         out.push_str(&format!("npu.overlap = {}\n", self.npu.overlap));
+        out.push_str(&format!("npu.model = {}\n", self.npu.model.name()));
+        out.push_str(&format!("npu.grid_rows = {}\n", self.npu.grid.rows));
+        out.push_str(&format!("npu.grid_cols = {}\n", self.npu.grid.cols));
+        out.push_str(&format!(
+            "npu.decode_rate = {}\n",
+            self.npu.grid.decode_bytes_per_cycle
+        ));
         out.push_str(&format!("acp.bytes_per_cycle = {}\n", self.npu.acp.bytes_per_cycle));
         out.push_str(&format!("acp.latency_cycles = {}\n", self.npu.acp.latency_cycles));
         out.push_str(&format!("acp.clock_mhz = {}\n", self.npu.acp.clock_mhz));
@@ -326,6 +352,36 @@ mod tests {
         assert!(cfg.set("pool.geometries", "8x2").is_err());
         assert!(cfg.set("pool.geometries", "8x2x3").is_err(), "degree must be 1|2|4|8");
         assert!(cfg.set("pool.geometries", "0x2x4").is_err());
+        assert!(cfg.set("npu.model", "tpu").is_err());
+        assert!(cfg.set("npu.grid_rows", "0").is_err());
+        assert!(cfg.set("npu.grid_cols", "0").is_err());
+        assert!(cfg.set("npu.decode_rate", "0").is_err());
+    }
+
+    #[test]
+    fn grid_model_keys_apply_and_roundtrip() {
+        use crate::systolic::TimingModel;
+        let mut cfg = Config::default();
+        assert_eq!(cfg.npu.model, TimingModel::Schedule);
+        cfg.apply_overrides(&[
+            "npu.model=grid".into(),
+            "npu.grid_rows=16".into(),
+            "npu.grid_cols=4".into(),
+            "npu.decode_rate=1".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.npu.model, TimingModel::Grid);
+        assert_eq!(cfg.npu.grid.rows, 16);
+        assert_eq!(cfg.npu.grid.cols, 4);
+        assert_eq!(cfg.npu.grid.decode_bytes_per_cycle, 1);
+        let text = cfg.to_string_pretty();
+        let dir = std::env::temp_dir().join("snnapc_cfg_test5");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.conf");
+        std::fs::write(&p, &text).unwrap();
+        let mut cfg2 = Config::default();
+        cfg2.load_file(&p).unwrap();
+        assert_eq!(cfg, cfg2);
     }
 
     #[test]

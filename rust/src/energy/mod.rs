@@ -18,6 +18,10 @@ pub struct EnergyModel {
     pub cpu_idle_cycle_pj: f64,
     /// One DSP-slice MAC (16-bit) including local routing.
     pub mac_pj: f64,
+    /// A zero-operand MAC slot the PE grid clock-gates: no multiplier
+    /// switching, only the clock tree + register residual (~10% of a
+    /// live MAC — the gating literature's usual planning number).
+    pub gated_mac_pj: f64,
     /// BRAM read/write per byte.
     pub bram_byte_pj: f64,
     /// ACP transfer per byte (on-die coherent port).
@@ -34,6 +38,7 @@ impl Default for EnergyModel {
             cpu_cycle_pj: 750.0,      // 0.5 W / 667 MHz
             cpu_idle_cycle_pj: 75.0,  // ~10% of active in WFI
             mac_pj: 5.0,              // DSP48E1 16-bit MAC
+            gated_mac_pj: 0.5,        // clock-gated residual
             bram_byte_pj: 2.5,
             acp_byte_pj: 15.0,
             dram_byte_pj: 70.0,
@@ -90,6 +95,26 @@ impl EnergyModel {
     /// Energy for DRAM traffic of `bytes` (compression reduces this).
     pub fn dram_traffic(&self, bytes: u64) -> EnergyBreakdown {
         EnergyBreakdown { dram_pj: bytes as f64 * self.dram_byte_pj, ..Default::default() }
+    }
+
+    /// Compute-side energy of a PE-grid batch from its counters: live
+    /// MACs switch at full cost, zero-operand MACs are clock-gated to
+    /// the residual cost, and weight traffic is priced per *fill byte*
+    /// through the BRAM/edge path (weight-stationary reuse — not per
+    /// MAC, as the schedule model's [`EnergyModel::npu_batch`] assumes).
+    pub fn grid_compute(
+        &self,
+        counters: &crate::systolic::GridCounters,
+        weight_fill_bytes: u64,
+    ) -> EnergyBreakdown {
+        let live = (counters.total_macs - counters.gated_macs) as f64;
+        let gated = counters.gated_macs as f64;
+        EnergyBreakdown {
+            npu_compute_pj: live * self.mac_pj
+                + gated * self.gated_mac_pj
+                + weight_fill_bytes as f64 * self.bram_byte_pj,
+            ..Default::default()
+        }
     }
 
     /// Combine breakdowns.
@@ -166,6 +191,23 @@ mod tests {
     fn dram_energy_tracks_compression() {
         let m = EnergyModel::default();
         assert!(m.dram_traffic(500).total_pj() < m.dram_traffic(1000).total_pj());
+    }
+
+    #[test]
+    fn gated_macs_cost_less_than_live_ones() {
+        use crate::systolic::GridCounters;
+        let m = EnergyModel::default();
+        let none = GridCounters { total_macs: 1000, gated_macs: 0 };
+        let half = GridCounters { total_macs: 1000, gated_macs: 500 };
+        let all = GridCounters { total_macs: 1000, gated_macs: 1000 };
+        let (e0, e1, e2) = (
+            m.grid_compute(&none, 64).total_pj(),
+            m.grid_compute(&half, 64).total_pj(),
+            m.grid_compute(&all, 64).total_pj(),
+        );
+        assert!(e2 < e1 && e1 < e0, "{e2} < {e1} < {e0}");
+        // gated slots still cost the clock residual, never zero
+        assert!(e2 > m.grid_compute(&GridCounters::default(), 64).total_pj());
     }
 
     #[test]

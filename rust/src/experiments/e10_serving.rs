@@ -115,8 +115,9 @@ pub(crate) fn percentile(sorted: &[u64], q: f64) -> u64 {
 /// Deterministic open-loop trace for one kernel: exponential
 /// interarrivals whose mean is one shard's compute-only per-invocation
 /// service time divided by [`OVERLOAD`]. The probe device carries no
-/// memory hierarchy, so the same seed yields the *same arrivals for
-/// every scheme* — schemes compete on identical traffic.
+/// memory hierarchy (and keeps the default `none` weight scheme), so
+/// the same seed yields the *same arrivals for every scheme* — schemes
+/// compete on identical traffic.
 pub fn gen_trace(
     w: &dyn Workload,
     program: &NpuProgram,
@@ -124,8 +125,21 @@ pub fn gen_trace(
     batch: usize,
     seed: u64,
 ) -> Vec<SimRequest> {
+    gen_trace_on(NpuConfig::default(), w, program, n, batch, seed)
+}
+
+/// [`gen_trace`] for an explicit NPU configuration (timing model,
+/// grid geometry) — arrivals follow that model's service time.
+pub fn gen_trace_on(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    n: usize,
+    batch: usize,
+    seed: u64,
+) -> Vec<SimRequest> {
     let b = batch.max(1);
-    let mut probe = NpuDevice::new(NpuConfig::default(), program.clone()).expect("probe device");
+    let mut probe = NpuDevice::new(npu, program.clone()).expect("probe device");
     let inputs = vec![vec![0.25f32; program.input_dim()]; b];
     let probe_cycles = probe.execute_batch(&inputs).expect("probe batch").total_cycles;
     let per_item = (probe_cycles as f64 / b as f64).max(1.0);
@@ -170,6 +184,7 @@ pub fn mixed_trace(
 
 /// Run one (kernel, scheme, shard-count) cell over a prebuilt trace.
 fn measure_trace(
+    npu: NpuConfig,
     w: &dyn Workload,
     program: &NpuProgram,
     scheme: &str,
@@ -180,7 +195,8 @@ fn measure_trace(
     anyhow::ensure!(shards > 0, "shard count must be positive");
     let devices = (0..shards)
         .map(|_| {
-            Ok(NpuDevice::new(NpuConfig::default(), program.clone())?
+            Ok(NpuDevice::new(npu, program.clone())?
+                .with_weight_scheme(scheme)?
                 .with_memory(Box::new(build_hierarchy(scheme, E10_CACHE)?)))
         })
         .collect::<Result<Vec<_>>>()?;
@@ -200,7 +216,7 @@ fn measure_trace(
         lat.iter().sum::<u64>() as f64 / lat.len() as f64
     };
 
-    let clock_hz = NpuConfig::default().clock_mhz * 1e6;
+    let clock_hz = npu.clock_mhz * 1e6;
     let span = trace.last().map(|r| r.arrival).unwrap_or(0);
     let offered_rate =
         if span > 0 { trace.len() as f64 / (span as f64 / clock_hz) } else { 0.0 };
@@ -261,7 +277,7 @@ pub fn measure(
     seed: u64,
 ) -> Result<E10Row> {
     let trace = gen_trace(w, program, n, batch, seed);
-    measure_trace(w, program, scheme, shards, batch, &trace)
+    measure_trace(NpuConfig::default(), w, program, scheme, shards, batch, &trace)
 }
 
 /// The shard sweep for one (kernel, scheme) — one harness job. The same
@@ -274,10 +290,26 @@ pub fn measure_all_shards(
     batch: usize,
     seed: u64,
 ) -> Result<Vec<E10Row>> {
-    let trace = gen_trace(w, program, n, batch, seed);
+    measure_all_shards_on(NpuConfig::default(), w, program, scheme, n, batch, seed)
+}
+
+/// [`measure_all_shards`] for an explicit NPU configuration — the seam
+/// that lets the pool serve on the cycle-level grid backend
+/// (`npu.model = grid`), with each shard's edge decompressor running
+/// the cell's scheme.
+pub fn measure_all_shards_on(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    n: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<Vec<E10Row>> {
+    let trace = gen_trace_on(npu, w, program, n, batch, seed);
     SHARD_COUNTS
         .iter()
-        .map(|&shards| measure_trace(w, program, scheme, shards, batch, &trace))
+        .map(|&shards| measure_trace(npu, w, program, scheme, shards, batch, &trace))
         .collect()
 }
 
@@ -308,7 +340,15 @@ fn mix_rows(
     for (ki, w) in ws.iter().enumerate() {
         let sub: Vec<SimRequest> =
             merged.iter().filter(|(k, _)| *k == ki).map(|(_, r)| r.clone()).collect();
-        rows.push(measure_trace(w.as_ref(), &programs[ki], scheme, shards, batch, &sub)?);
+        rows.push(measure_trace(
+            NpuConfig::default(),
+            w.as_ref(),
+            &programs[ki],
+            scheme,
+            shards,
+            batch,
+            &sub,
+        )?);
     }
     Ok(rows)
 }
@@ -453,6 +493,27 @@ mod tests {
     fn unknown_scheme_is_a_clean_error() {
         let (w, p) = setup("sobel");
         assert!(measure(w.as_ref(), &p, "zstd", 1, 8, 4, 1).is_err());
+    }
+
+    #[test]
+    fn grid_timing_backend_serves_the_pool() {
+        use crate::systolic::TimingModel;
+        let (w, p) = setup("sobel");
+        let npu = NpuConfig { model: TimingModel::Grid, ..Default::default() };
+        let rows = measure_all_shards_on(npu, w.as_ref(), &p, "bdi", 24, 8, 5).unwrap();
+        assert_eq!(rows.len(), SHARD_COUNTS.len());
+        for r in &rows {
+            assert!(r.throughput > 0.0);
+            assert!(r.makespan_cycles > 0);
+        }
+        // the grid model prices the same requests differently than the
+        // schedule model (fills + skew are explicit), so the rows must
+        // not be accidentally identical
+        let sched = measure_all_shards(w.as_ref(), &p, "bdi", 24, 8, 5).unwrap();
+        assert!(
+            rows.iter().zip(&sched).any(|(g, s)| g.makespan_cycles != s.makespan_cycles),
+            "grid and schedule timings should differ"
+        );
     }
 
     #[test]

@@ -146,11 +146,12 @@ impl E11Row {
 }
 
 /// Compute-only per-invocation service time of a `batch`-sized batch on
-/// a memory-less probe device — scheme-independent by construction, so
-/// the same seed scripts identical sessions for every scheme.
-fn per_item_cycles(program: &NpuProgram, batch: usize) -> f64 {
+/// a memory-less probe device — scheme-independent by construction (the
+/// probe keeps the default `none` weight scheme), so the same seed
+/// scripts identical sessions for every scheme.
+fn per_item_cycles(npu: NpuConfig, program: &NpuProgram, batch: usize) -> f64 {
     let b = batch.max(1);
-    let mut probe = NpuDevice::new(NpuConfig::default(), program.clone()).expect("probe device");
+    let mut probe = NpuDevice::new(npu, program.clone()).expect("probe device");
     let inputs = vec![vec![0.25f32; program.input_dim()]; b];
     let cycles = probe.execute_batch(&inputs).expect("probe batch").total_cycles;
     (cycles as f64 / b as f64).max(1.0)
@@ -183,6 +184,7 @@ pub fn gen_scripts(
 /// of the sweep.
 #[allow(clippy::too_many_arguments)]
 fn measure_point(
+    npu: NpuConfig,
     w: &dyn Workload,
     program: &NpuProgram,
     scheme: &str,
@@ -199,7 +201,8 @@ fn measure_point(
         .map(|s| {
             let channel = DramChannel::Shared(SharedChannel::new(hub.clone(), s));
             let hierarchy = build_hierarchy_on(scheme, E11_CACHE, dram_for(scheme, channel)?)?;
-            Ok(NpuDevice::new(NpuConfig::default(), program.clone())?
+            Ok(NpuDevice::new(npu, program.clone())?
+                .with_weight_scheme(scheme)?
                 .with_memory(Box::new(hierarchy)))
         })
         .collect::<Result<Vec<_>>>()?;
@@ -215,7 +218,7 @@ fn measure_point(
 
     let mut lat: Vec<u64> = report.completions.iter().map(|c| c.done - c.arrival).collect();
     lat.sort_unstable();
-    let clock_hz = NpuConfig::default().clock_mhz * 1e6;
+    let clock_hz = npu.clock_mhz * 1e6;
     let throughput = if report.makespan > 0 {
         report.completions.len() as f64 / (report.makespan as f64 / clock_hz)
     } else {
@@ -271,8 +274,22 @@ pub fn slo_for(
     batch: usize,
     seed: u64,
 ) -> Result<u64> {
-    let think_mean = per_item_cycles(program, batch) * THINK_FACTOR;
+    slo_for_on(NpuConfig::default(), w, program, per_client, batch, seed)
+}
+
+/// [`slo_for`] for an explicit NPU configuration — the baseline runs on
+/// the same timing model the contended cells use.
+pub fn slo_for_on(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    per_client: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<u64> {
+    let think_mean = per_item_cycles(npu, program, batch) * THINK_FACTOR;
     let (base, _) = measure_point(
+        npu,
         w,
         program,
         "none",
@@ -301,15 +318,45 @@ pub fn measure(
     batch: usize,
     seed: u64,
 ) -> Result<E11Row> {
+    measure_on(
+        NpuConfig::default(),
+        w,
+        program,
+        scheme,
+        shards,
+        policy_name,
+        slo_cycles,
+        n,
+        batch,
+        seed,
+    )
+}
+
+/// [`measure`] for an explicit NPU configuration (timing model + grid
+/// geometry; the shards' edge decompressors run the cell's scheme).
+#[allow(clippy::too_many_arguments)]
+pub fn measure_on(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    shards: usize,
+    policy_name: &str,
+    slo_cycles: u64,
+    n: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<E11Row> {
     anyhow::ensure!(shards > 0, "shard count must be positive");
     let policy = ArbiterPolicy::parse(policy_name)?;
-    let think_mean = per_item_cycles(program, batch) * THINK_FACTOR;
+    let think_mean = per_item_cycles(npu, program, batch) * THINK_FACTOR;
     let mut sweep: Vec<E11Point> = Vec::with_capacity(CLIENT_SWEEP.len());
     let mut details: Vec<PointDetail> = Vec::with_capacity(CLIENT_SWEEP.len());
     for &clients in &CLIENT_SWEEP {
         let per_client = (n / clients).max(1);
         let (mut point, detail) = measure_point(
-            w, program, scheme, shards, policy, clients, per_client, batch, think_mean, seed,
+            npu, w, program, scheme, shards, policy, clients, per_client, batch, think_mean,
+            seed,
         )?;
         point.met_slo = point.p99_cycles <= slo_cycles;
         sweep.push(point);
@@ -364,9 +411,26 @@ pub fn measure_all(
     batch: usize,
     seed: u64,
 ) -> Result<Vec<E11Row>> {
+    measure_all_on(NpuConfig::default(), w, program, scheme, policies, n, batch, seed)
+}
+
+/// [`measure_all`] for an explicit NPU configuration — the harness
+/// entry that lets `--set npu.model=grid` run the whole SLO sweep on
+/// the cycle-level grid backend.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_all_on(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    policies: &[String],
+    n: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<Vec<E11Row>> {
     let per_client_base = (n / CLIENT_SWEEP[0]).max(1);
-    let slo = slo_for(w, program, per_client_base, batch, seed)?;
-    measure_all_with_slo(w, program, scheme, policies, slo, n, batch, seed)
+    let slo = slo_for_on(npu, w, program, per_client_base, batch, seed)?;
+    measure_all_with_slo_on(npu, w, program, scheme, policies, slo, n, batch, seed)
 }
 
 /// [`measure_all`] against a precomputed SLO — callers sweeping many
@@ -383,11 +447,29 @@ pub fn measure_all_with_slo(
     batch: usize,
     seed: u64,
 ) -> Result<Vec<E11Row>> {
+    measure_all_with_slo_on(NpuConfig::default(), w, program, scheme, policies, slo, n, batch, seed)
+}
+
+/// [`measure_all_with_slo`] for an explicit NPU configuration.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_all_with_slo_on(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    policies: &[String],
+    slo: u64,
+    n: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<Vec<E11Row>> {
     anyhow::ensure!(!policies.is_empty(), "no channel policies selected");
     let mut rows = Vec::with_capacity(SHARD_COUNTS.len() * policies.len());
     for &shards in &SHARD_COUNTS {
         for policy in policies {
-            rows.push(measure(w, program, scheme, shards, policy, slo, n, batch, seed)?);
+            rows.push(measure_on(
+                npu, w, program, scheme, shards, policy, slo, n, batch, seed,
+            )?);
         }
     }
     Ok(rows)

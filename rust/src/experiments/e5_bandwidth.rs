@@ -14,7 +14,7 @@
 use anyhow::Result;
 
 use crate::bench_suite::{all_workloads, Workload};
-use crate::compress::{Bdi, Compressor, Cpack, Fpc, Hybrid};
+use crate::compress::Compressor;
 use crate::fixed::QFormat;
 use crate::mem::{ChannelConfig, CompressedDram, DramMode};
 use crate::npu::{NpuConfig, PuSim};
@@ -56,18 +56,12 @@ impl E5Row {
 }
 
 /// Per-line compressor for a scheme name (`Ok(None)` = uncompressed) —
-/// shared with E9/E10, which sweep the same scheme list. A bad name is a
-/// recoverable `Err`, not a panic: one mistyped scheme must fail its own
-/// harness job, never abort a whole sweep.
+/// shared with E9/E10, which sweep the same scheme list. Delegates to
+/// [`crate::compress::scheme_by_name`], the one scheme registry. A bad
+/// name is a recoverable `Err`, not a panic: one mistyped scheme must
+/// fail its own harness job, never abort a whole sweep.
 pub(crate) fn scheme_by_name(name: &str) -> Result<Option<Box<dyn Compressor>>> {
-    Ok(match name {
-        "none" => None,
-        "bdi" => Some(Box::new(Bdi)),
-        "fpc" => Some(Box::new(Fpc)),
-        "bdi+fpc" => Some(Box::new(Hybrid::default())),
-        "cpack" => Some(Box::new(Cpack)),
-        other => anyhow::bail!("unknown scheme {other:?} (expected one of {:?})", SCHEMES),
-    })
+    crate::compress::scheme_by_name(name)
 }
 
 /// Replay `batches` batches of size `batch` for one workload under one

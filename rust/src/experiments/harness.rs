@@ -1,6 +1,6 @@
 //! Unified, multi-threaded experiment harness.
 //!
-//! One registry ([`EXPERIMENTS`]) describes E1..E11; [`build_jobs`] expands
+//! One registry ([`EXPERIMENTS`]) describes E1..E12; [`build_jobs`] expands
 //! a [`HarnessConfig`] into the full sweep grid (every bench_suite kernel
 //! × every compression scheme where the experiment varies by scheme, plus
 //! the synthetic-distribution jobs); [`run`] fans the jobs out over a
@@ -27,8 +27,8 @@ use crate::trace::Synthetic;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::{e10_serving, e11_slo, e1_compression, e2_speedup, e3_energy, e4_quality};
-use super::{e5_bandwidth, e6_batching, e7_lcp, e8_ablation, e9_cache};
+use super::{e10_serving, e11_slo, e12_systolic, e1_compression, e2_speedup, e3_energy};
+use super::{e4_quality, e5_bandwidth, e6_batching, e7_lcp, e8_ablation, e9_cache};
 
 /// What a job measures: a bench_suite kernel or a synthetic distribution.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -62,6 +62,10 @@ pub struct Scenario {
     /// Shared-channel arbiter policies E11 sweeps (`fifo` / `rr`);
     /// empty for experiments without a shared channel.
     pub channel_policies: Vec<String>,
+    /// NPU shape + timing model the device-driven experiments build
+    /// their devices from (`npu.model = grid` runs the pools on the
+    /// cycle-level PE grid).
+    pub npu: NpuConfig,
 }
 
 /// A registry entry describing one experiment.
@@ -84,7 +88,7 @@ pub struct ExperimentSpec {
 }
 
 /// All experiments, in report order.
-pub static EXPERIMENTS: [ExperimentSpec; 11] = [
+pub static EXPERIMENTS: [ExperimentSpec; 12] = [
     ExperimentSpec {
         id: "e1",
         title: "compression ratio per workload stream",
@@ -173,6 +177,14 @@ pub static EXPERIMENTS: [ExperimentSpec; 11] = [
         shared_seed_per_kernel: true,
         sweeps_channel_policies: true,
     },
+    ExperimentSpec {
+        id: "e12",
+        title: "cycle-level PE grid: compressed weight streaming + sparsity gating",
+        per_scheme: true, // the edge decompressor consumes the scheme
+        synthetics: false,
+        shared_seed_per_kernel: false,
+        sweeps_channel_policies: false,
+    },
 ];
 
 /// Look an experiment up by id.
@@ -180,10 +192,10 @@ pub fn experiment(id: &str) -> Option<&'static ExperimentSpec> {
     EXPERIMENTS.iter().find(|e| e.id == id)
 }
 
-/// Sweep configuration (defaults = the full e1–e11 grid).
+/// Sweep configuration (defaults = the full e1–e12 grid).
 #[derive(Debug, Clone)]
 pub struct HarnessConfig {
-    /// Experiment ids to run (subset of "e1".."e11").
+    /// Experiment ids to run (subset of "e1".."e12").
     pub experiments: Vec<String>,
     /// Kernels to sweep (subset of the bench_suite names).
     pub benchmarks: Vec<String>,
@@ -200,6 +212,9 @@ pub struct HarnessConfig {
     pub jobs: usize,
     /// Base RNG seed (every job derives a stable per-job seed from it).
     pub seed: u64,
+    /// NPU shape + timing model (`npu.model=grid` runs the
+    /// device-driven experiments on the cycle-level PE grid).
+    pub npu: NpuConfig,
 }
 
 /// Sensible worker count for this machine.
@@ -219,6 +234,7 @@ impl Default for HarnessConfig {
             batch: 128,
             jobs: default_jobs(),
             seed: 42,
+            npu: NpuConfig::default(),
         }
     }
 }
@@ -277,7 +293,7 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
     let mut jobs = Vec::new();
     for id in &cfg.experiments {
         let spec = experiment(id)
-            .with_context(|| format!("unknown experiment {id:?} (expected e1..e11)"))?;
+            .with_context(|| format!("unknown experiment {id:?} (expected e1..e12)"))?;
         let schemes: Vec<&str> = if spec.per_scheme {
             cfg.schemes.iter().map(String::as_str).collect()
         } else {
@@ -316,6 +332,7 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
                         } else {
                             Vec::new()
                         },
+                        npu: cfg.npu,
                     },
                 });
             }
@@ -335,6 +352,7 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
                         batch: cfg.batch.max(1),
                         seed,
                         channel_policies: Vec::new(),
+                        npu: cfg.npu,
                     },
                 });
             }
@@ -387,7 +405,7 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
             let row = e2_speedup::measure(
                 w.as_ref(),
                 p,
-                NpuConfig::default(),
+                sc.npu,
                 sc.invocations,
                 sc.batch,
                 seed,
@@ -400,7 +418,7 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
             let row = e3_energy::measure(
                 w.as_ref(),
                 p,
-                NpuConfig::default(),
+                sc.npu,
                 sc.invocations,
                 sc.batch,
                 seed,
@@ -426,7 +444,7 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
             e6_batching::BATCH_SWEEP
                 .iter()
                 .map(|&batch| {
-                    e6_batching::measure(w.as_ref(), p.clone(), NpuConfig::default(), batch, seed)
+                    e6_batching::measure(w.as_ref(), p.clone(), sc.npu, batch, seed)
                         .map(|r| r.to_json())
                 })
                 .collect()
@@ -454,7 +472,8 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
         ("e10", Target::Bench(b)) => {
             let w = workload(b).unwrap();
             let p = program_for(b, sc.qformat, seed)?;
-            let rows = e10_serving::measure_all_shards(
+            let rows = e10_serving::measure_all_shards_on(
+                sc.npu,
                 w.as_ref(),
                 &p,
                 &sc.scheme,
@@ -467,7 +486,8 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
         ("e11", Target::Bench(b)) => {
             let w = workload(b).unwrap();
             let p = program_for(b, sc.qformat, seed)?;
-            let rows = e11_slo::measure_all(
+            let rows = e11_slo::measure_all_on(
+                sc.npu,
                 w.as_ref(),
                 &p,
                 &sc.scheme,
@@ -477,6 +497,18 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
                 seed,
             )?;
             Ok(rows.iter().map(e11_slo::E11Row::to_json).collect())
+        }
+        ("e12", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let rows = e12_systolic::measure_all_grids(
+                w.as_ref(),
+                p,
+                &sc.scheme,
+                sc.invocations,
+                seed,
+            )?;
+            Ok(rows.iter().map(e12_systolic::E12Row::to_json).collect())
         }
         ("e8", Target::Bench(b)) => {
             let w = workload(b).unwrap();
@@ -569,6 +601,7 @@ fn config_json(cfg: &HarnessConfig) -> Json {
         ("schemes", Json::arr(cfg.schemes.clone())),
         ("channel_policies", Json::arr(cfg.channel_policies.clone())),
         ("qformat", format!("q{}.{}", q.int_bits, q.frac_bits).into()),
+        ("npu_model", cfg.npu.model.name().into()),
         ("invocations", cfg.invocations.into()),
         ("batch", cfg.batch.into()),
         ("jobs", cfg.jobs.into()),
@@ -655,12 +688,16 @@ mod tests {
     #[test]
     fn registry_ids_are_unique_and_ordered() {
         let ids: Vec<_> = EXPERIMENTS.iter().map(|e| e.id).collect();
-        assert_eq!(ids, ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11"]);
+        assert_eq!(
+            ids,
+            ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12"]
+        );
         assert!(experiment("e5").unwrap().per_scheme);
         assert!(experiment("e9").unwrap().per_scheme);
         assert!(experiment("e10").unwrap().per_scheme);
         assert!(experiment("e11").unwrap().per_scheme);
-        assert!(experiment("e12").is_none());
+        assert!(experiment("e12").unwrap().per_scheme);
+        assert!(experiment("e13").is_none());
     }
 
     #[test]
@@ -677,6 +714,7 @@ mod tests {
         assert_eq!(count("e9"), 7 * 5, "e9 fans out per scheme");
         assert_eq!(count("e10"), 7 * 5, "e10 fans out per scheme");
         assert_eq!(count("e11"), 7 * 5, "e11 fans out per scheme");
+        assert_eq!(count("e12"), 7 * 5, "e12 fans out per scheme");
         // only e11 jobs carry the channel-policy sweep
         for j in &jobs {
             if j.experiment == "e11" {
@@ -777,6 +815,24 @@ mod tests {
         // the report must be valid JSON end to end
         let text = report.json.dump();
         assert_eq!(Json::parse(&text).unwrap(), report.json);
+    }
+
+    #[test]
+    fn grid_timing_model_runs_through_the_whole_stack() {
+        // `--set npu.model=grid` must carry through jobs into the
+        // device-driven experiments (E12 natively, E10's pool devices)
+        let mut cfg = tiny_cfg();
+        cfg.experiments = vec!["e10".into(), "e12".into()];
+        cfg.npu.model = crate::systolic::TimingModel::Grid;
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.failed_jobs, 0, "{}", report.json.dump());
+        let ex = report.json.get("experiments").unwrap();
+        assert!(!ex.get("e12").unwrap().as_arr().unwrap().is_empty());
+        assert!(!ex.get("e10").unwrap().as_arr().unwrap().is_empty());
+        assert_eq!(
+            report.json.get("config").unwrap().get("npu_model").unwrap().as_str(),
+            Some("grid")
+        );
     }
 
     #[test]

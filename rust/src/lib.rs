@@ -16,6 +16,7 @@ pub mod experiments;
 pub mod mem;
 pub mod npu;
 pub mod runtime;
+pub mod systolic;
 pub mod trace;
 pub mod energy;
 pub mod metrics;

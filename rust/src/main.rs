@@ -4,9 +4,9 @@
 //!   info            show artifact manifest + effective config
 //!   serve           start the sharded batching pool and drive it with a
 //!                   synthetic open-loop client (requests/s, duration)
-//!   experiments     run the e1..e11 sweep in parallel and emit one
+//!   experiments     run the e1..e12 sweep in parallel and emit one
 //!                   consolidated JSON report (the harness)
-//!   run-bench       print experiment tables: e1..e11 or all (serial)
+//!   run-bench       print experiment tables: e1..e12 or all (serial)
 //!   compress-file   per-scheme compression report for any file
 //!   trace           dump + compress a benchmark's NPU streams
 //!   config          print the effective configuration (reloadable)
@@ -53,10 +53,10 @@ COMMANDS:
                             whose DRAM transfers all serialize on ONE
                             arbitrated channel; config keys: compression,
                             pool.schemes, pool.geometries, channel.policy)
-  experiments               parallel e1..e11 sweep + one JSON report
+  experiments               parallel e1..e12 sweep + one JSON report
     --all                   run every experiment (default when no
                             --experiment is given)
-    --experiment LIST       subset, e.g. e1 or e1,e9,e10,e11
+    --experiment LIST       subset, e.g. e1 or e1,e9,e10,e11,e12
     --benchmarks LIST       kernels to sweep (default: all seven)
     --schemes LIST          schemes for per-scheme experiments
                             (none|bdi|fpc|bdi+fpc|cpack; default: all)
@@ -73,9 +73,13 @@ COMMANDS:
                             shard counts {1,2,4,8} under open-loop load;
                             e11 sweeps kernels x schemes x shards x
                             channel policies with closed-loop clients
-                            against a p99 SLO on a shared DRAM channel)
+                            against a p99 SLO on a shared DRAM channel;
+                            e12 sweeps kernels x schemes x PE-grid
+                            geometries on the cycle-level systolic grid:
+                            weight-fill cycles through the edge
+                            decompressor, gated-MAC share, DRAM bytes)
   run-bench                 print experiment tables (serial)
-    --experiment e1..e11|all which experiment (default all)
+    --experiment e1..e12|all which experiment (default all)
     --invocations N         stream length knob (default 256)
   compress-file FILE        per-scheme report for a file
   trace                     dump a benchmark's NPU streams
@@ -84,7 +88,10 @@ COMMANDS:
   config                    print effective config
 GLOBAL:
   --config FILE             load key=value config file
-  --set key=value           override any config key (repeatable)
+  --set key=value           override any config key (repeatable;
+                            npu.model=schedule|grid picks the timing
+                            backend, npu.grid_rows/npu.grid_cols/
+                            npu.decode_rate shape the PE grid)
 ";
 
 fn build_config(args: &Args) -> Result<Config> {
@@ -97,6 +104,15 @@ fn build_config(args: &Args) -> Result<Config> {
         cfg.benchmark = b.to_string();
     }
     Ok(cfg)
+}
+
+/// Parse a count-like option and reject zero: `--requests 0`,
+/// `--jobs 0` etc. are always operator error (a zero-request serve or a
+/// zero-worker sweep would "succeed" vacuously).
+fn opt_positive(args: &Args, name: &str, default: usize) -> Result<usize> {
+    let v: usize = args.opt_parse(name, default)?;
+    anyhow::ensure!(v > 0, "--{name} must be positive (got {v})");
+    Ok(v)
 }
 
 fn cmd_info(cfg: &Config) -> Result<()> {
@@ -138,10 +154,13 @@ fn resolve_sim_program(cfg: &Config) -> Result<NpuProgram> {
 }
 
 fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
-    let requests: usize = args.opt_parse("requests", 2000)?;
-    let clients: usize = args.opt_parse("clients", 4)?;
-    let shards: usize = args.opt_parse("shards", cfg.pool_shards)?;
-    anyhow::ensure!(shards > 0, "--shards must be positive");
+    let requests = opt_positive(args, "requests", 2000)?;
+    let clients = opt_positive(args, "clients", 4)?;
+    anyhow::ensure!(
+        requests >= clients,
+        "--requests ({requests}) must be at least --clients ({clients})"
+    );
+    let shards = opt_positive(args, "shards", cfg.pool_shards)?;
     let backend_kind = args.opt("backend").unwrap_or("sim").to_string();
     workload(&cfg.benchmark)
         .with_context(|| format!("unknown benchmark {:?}", cfg.benchmark))?;
@@ -178,6 +197,7 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
                 )?;
                 Ok(Box::new(DeviceBackend {
                     device: NpuDevice::new(cfg2.npu, program)?
+                        .with_weight_scheme(&scheme)?
                         .with_memory(Box::new(hierarchy)),
                 }) as Box<dyn Backend>)
             }
@@ -197,19 +217,20 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     let pool = std::sync::Arc::new(pool);
 
     println!(
-        "serving {} on {} backend, {} shards, {} clients x {} requests",
+        "serving {} on {} backend, {} shards, {} requests across {} clients",
         cfg.benchmark,
         args.opt("backend").unwrap_or("sim"),
         shards,
-        clients,
-        requests / clients
+        requests,
+        clients
     );
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {
         let pool = pool.clone();
         let w: Box<dyn Workload> = workload(&cfg.benchmark).unwrap();
-        let per_client = requests / clients;
+        // remainder-aware split: all `requests` are actually served
+        let per_client = requests / clients + usize::from(c < requests % clients);
         handles.push(std::thread::spawn(move || -> Result<()> {
             let mut rng = Rng::new(c as u64 + 100);
             for _ in 0..per_client {
@@ -251,6 +272,7 @@ fn cmd_experiments(cfg: &Config, args: &Args) -> Result<()> {
     let mut hc = ex::HarnessConfig {
         qformat: cfg.qformat,
         batch: cfg.policy.max_batch,
+        npu: cfg.npu,
         ..Default::default()
     };
     if !args.flag("all") {
@@ -267,9 +289,9 @@ fn cmd_experiments(cfg: &Config, args: &Args) -> Result<()> {
     if let Some(policies) = args.opt_csv("channel-policy") {
         hc.channel_policies = policies;
     }
-    hc.invocations = args.opt_parse("invocations", hc.invocations)?;
-    hc.batch = args.opt_parse("batch", hc.batch)?;
-    hc.jobs = args.opt_parse("jobs", hc.jobs)?;
+    hc.invocations = opt_positive(args, "invocations", hc.invocations)?;
+    hc.batch = opt_positive(args, "batch", hc.batch)?;
+    hc.jobs = opt_positive(args, "jobs", hc.jobs)?;
     hc.seed = args.opt_parse("seed", hc.seed)?;
 
     println!(
@@ -309,7 +331,7 @@ fn cmd_experiments(cfg: &Config, args: &Args) -> Result<()> {
 
 fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
     let which = args.opt("experiment").unwrap_or("all");
-    let invocations: usize = args.opt_parse("invocations", 256)?;
+    let invocations = opt_positive(args, "invocations", 256)?;
     let run_all = which == "all";
     if run_all || which == "e1" {
         println!("\n== E1: compression ratio per workload stream ==");
@@ -378,6 +400,10 @@ fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
             invocations,
             cfg.policy.max_batch,
         )?);
+    }
+    if run_all || which == "e12" {
+        println!("\n== E12: cycle-level PE grid (compressed weight streaming + gating) ==");
+        ex::e12_systolic::print_table(&ex::e12_systolic::run(cfg.qformat, invocations)?);
     }
     Ok(())
 }
@@ -449,5 +475,79 @@ fn main() -> Result<()> {
             print!("{HELP}");
             std::process::exit(2);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["help", "verbose", "all"]).unwrap()
+    }
+
+    #[test]
+    fn opt_positive_accepts_positive_and_defaults() {
+        let a = args("serve --requests 12");
+        assert_eq!(opt_positive(&a, "requests", 2000).unwrap(), 12);
+        assert_eq!(opt_positive(&a, "clients", 4).unwrap(), 4, "absent option = default");
+    }
+
+    #[test]
+    fn opt_positive_rejects_zero_with_the_flag_name() {
+        for flag in ["requests", "clients", "jobs", "invocations"] {
+            let a = args(&format!("x --{flag} 0"));
+            let err = opt_positive(&a, flag, 1).unwrap_err().to_string();
+            assert!(err.contains(&format!("--{flag}")), "{err}");
+            assert!(err.contains("positive"), "{err}");
+        }
+    }
+
+    #[test]
+    fn opt_positive_rejects_garbage() {
+        let a = args("x --jobs banana");
+        assert!(opt_positive(&a, "jobs", 1).is_err());
+    }
+
+    #[test]
+    fn serve_rejects_zero_counts() {
+        let cfg = Config::default();
+        for bad in ["serve --requests 0", "serve --clients 0", "serve --shards 0"] {
+            let err = cmd_serve(&cfg, &args(bad)).unwrap_err().to_string();
+            assert!(err.contains("positive"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn serve_rejects_more_clients_than_requests() {
+        // 3 requests / 4 clients would round per-client work down to
+        // zero — a vacuous "success" — so it must be operator error
+        let cfg = Config::default();
+        let err = cmd_serve(&cfg, &args("serve --requests 3 --clients 4"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--requests") && err.contains("--clients"), "{err}");
+    }
+
+    #[test]
+    fn experiments_reject_zero_knobs() {
+        let cfg = Config::default();
+        for bad in [
+            "experiments --invocations 0",
+            "experiments --jobs 0",
+            "experiments --batch 0",
+        ] {
+            let err = cmd_experiments(&cfg, &args(bad)).unwrap_err().to_string();
+            assert!(err.contains("positive"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn run_bench_rejects_zero_invocations() {
+        let cfg = Config::default();
+        let err = cmd_run_bench(&cfg, &args("run-bench --invocations 0"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--invocations"), "{err}");
     }
 }

@@ -15,6 +15,7 @@ use anyhow::{bail, Result};
 
 use crate::compress::LINE_BYTES;
 use crate::mem::{Channel, ChannelConfig, MemoryLevel};
+use crate::systolic::{GridConfig, GridCounters, GridSim, TimingModel};
 use crate::trace::Trace;
 
 use super::program::NpuProgram;
@@ -44,6 +45,11 @@ pub struct NpuConfig {
     pub sync_cycles: u64,
     /// Overlap compute with ACP streaming through the FIFOs.
     pub overlap: bool,
+    /// Timing backend: the closed-form schedule or the cycle-level PE
+    /// grid (`npu.model = schedule|grid`). Outputs are bit-identical.
+    pub model: TimingModel,
+    /// PE-grid geometry + edge decode rate (used when `model == Grid`).
+    pub grid: GridConfig,
 }
 
 impl Default for NpuConfig {
@@ -55,6 +61,8 @@ impl Default for NpuConfig {
             acp: ChannelConfig::zynq_acp(),
             sync_cycles: 90,
             overlap: true,
+            model: TimingModel::Schedule,
+            grid: GridConfig::default(),
         }
     }
 }
@@ -89,6 +97,13 @@ impl BatchResult {
 pub struct NpuDevice {
     pub cfg: NpuConfig,
     pus: Vec<PuSim>,
+    /// Cycle-level PE-grid engines, one per PU (empty unless
+    /// `cfg.model == TimingModel::Grid`). When present they carry both
+    /// the functional pass (bit-identical to the PUs) and the timing,
+    /// plus per-PE gating counters.
+    grids: Vec<GridSim>,
+    /// Weight-stream scheme at the grid's edge decompressor.
+    weight_scheme: String,
     /// ACP channel with cumulative stats.
     pub acp: Channel,
     /// Optional memory hierarchy the invocation queues live behind
@@ -110,18 +125,75 @@ impl NpuDevice {
         if cfg.pu_count == 0 || cfg.array_width == 0 {
             bail!("pu_count and array_width must be positive");
         }
+        let grids = Self::build_grids(&program, &cfg, "none")?;
         let pus = (0..cfg.pu_count)
             .map(|_| PuSim::new(program.clone(), cfg.array_width))
             .collect();
         Ok(NpuDevice {
             cfg,
             pus,
+            grids,
+            weight_scheme: "none".to_string(),
             acp: Channel::new(cfg.acp),
             mem: None,
             mem_weight_lines: 0,
             invocations: 0,
             batches: 0,
         })
+    }
+
+    /// The per-PU grid engines for one (program, config, scheme): the
+    /// tiling + weight-stream compression runs once, then the identical
+    /// engines are stamped out by cloning the precomputed plans. Empty
+    /// under the schedule model.
+    fn build_grids(program: &NpuProgram, cfg: &NpuConfig, scheme: &str) -> Result<Vec<GridSim>> {
+        match cfg.model {
+            TimingModel::Schedule => Ok(Vec::new()),
+            TimingModel::Grid => {
+                let one = GridSim::new(program.clone(), cfg.grid, scheme)?;
+                Ok(vec![one; cfg.pu_count])
+            }
+        }
+    }
+
+    /// Compress the weight stream feeding the grid's edge decompressor
+    /// with `scheme` (builder-style; validates the name for either
+    /// timing model, rebuilds the grid engines when `model == grid`).
+    pub fn with_weight_scheme(mut self, scheme: &str) -> Result<Self> {
+        crate::compress::scheme_by_name(scheme)?; // hard error on typos
+        if self.cfg.model == TimingModel::Grid {
+            let program = self.program().clone();
+            self.grids = Self::build_grids(&program, &self.cfg, scheme)?;
+        }
+        self.weight_scheme = scheme.to_string();
+        Ok(self)
+    }
+
+    /// Aggregated PE activity counters across the grid engines (`None`
+    /// under the schedule model, which has no per-PE visibility).
+    pub fn grid_counters(&self) -> Option<GridCounters> {
+        if self.grids.is_empty() {
+            return None;
+        }
+        let mut total = GridCounters::default();
+        for g in &self.grids {
+            total.merge(&g.counters());
+        }
+        Some(total)
+    }
+
+    /// The grid edge decompressor's weight scheme.
+    pub fn weight_scheme(&self) -> &str {
+        &self.weight_scheme
+    }
+
+    /// Compute cycles for `n` invocations on one PU under the active
+    /// timing model.
+    fn pu_batch_cycles(&self, n: u64) -> u64 {
+        match self.cfg.model {
+            TimingModel::Schedule => self.pus[0].batch_cycles(n),
+            TimingModel::Grid => self.grids[0].batch_cycles(n),
+        }
     }
 
     /// Attach a memory hierarchy for the weight + queue traffic
@@ -190,12 +262,23 @@ impl NpuDevice {
         }
         let n = inputs.len() as u64;
 
-        // --- functional: round-robin across PUs (same numerics each) ---
-        let outputs: Vec<Vec<f32>> = inputs
-            .iter()
-            .enumerate()
-            .map(|(i, x)| self.pus[i % self.cfg.pu_count].forward_f32(x))
-            .collect();
+        // --- functional: round-robin across PUs (same numerics each;
+        // the grid engines compute identical bits and also accumulate
+        // per-PE gating counters) ---
+        let outputs: Vec<Vec<f32>> = match self.cfg.model {
+            TimingModel::Schedule => inputs
+                .iter()
+                .enumerate()
+                .map(|(i, x)| self.pus[i % self.cfg.pu_count].forward_f32(x))
+                .collect(),
+            TimingModel::Grid => {
+                let mut out = Vec::with_capacity(inputs.len());
+                for (i, x) in inputs.iter().enumerate() {
+                    out.push(self.grids[i % self.cfg.pu_count].forward_f32(x));
+                }
+                out
+            }
+        };
 
         // --- timing ---
         let in_bytes = inputs.len() * in_dim * elem;
@@ -241,7 +324,7 @@ impl NpuDevice {
 
         // compute makespan: ceil-split of n across PUs
         let per_pu = n.div_ceil(self.cfg.pu_count as u64);
-        let compute_cycles = if n == 0 { 0 } else { self.pus[0].batch_cycles(per_pu) };
+        let compute_cycles = if n == 0 { 0 } else { self.pu_batch_cycles(per_pu) };
 
         let total = if self.cfg.overlap {
             self.cfg.sync_cycles + compute_cycles.max(transfer_in_npu)
@@ -268,7 +351,7 @@ impl NpuDevice {
         let acp = self.acp.cost(self.program().input_dim() * elem)
             + self.acp.cost(self.program().output_dim() * elem);
         let acp_in_npu = (acp as f64 * self.cfg.clock_mhz / self.cfg.acp.clock_mhz).ceil() as u64;
-        let compute = self.pus[0].batch_cycles(1);
+        let compute = self.pu_batch_cycles(1);
         if self.cfg.overlap {
             self.cfg.sync_cycles + compute.max(acp_in_npu)
         } else {
@@ -406,6 +489,35 @@ mod tests {
         let mem = d.memory().unwrap();
         let (logical, physical) = mem.traffic();
         assert!(logical > 0 && physical > 0);
+    }
+
+    #[test]
+    fn grid_model_is_bit_identical_and_counts_gating() {
+        use crate::systolic::TimingModel;
+        let mut schedule = device();
+        let mut grid = NpuDevice::new(
+            NpuConfig { model: TimingModel::Grid, ..Default::default() },
+            program(),
+        )
+        .unwrap()
+        .with_weight_scheme("bdi+fpc")
+        .unwrap();
+        assert_eq!(grid.weight_scheme(), "bdi+fpc");
+        let inputs: Vec<Vec<f32>> = (0..24)
+            .map(|i| (0..9).map(|j| ((i * 9 + j) as f32 % 5.0) / 5.0 - 0.4).collect())
+            .collect();
+        let a = schedule.execute_batch(&inputs).unwrap();
+        let b = grid.execute_batch(&inputs).unwrap();
+        assert_eq!(a.outputs, b.outputs, "both models compute the same bits");
+        assert!(b.compute_cycles > 0);
+        let c = grid.grid_counters().expect("grid model reports PE counters");
+        assert!(c.total_macs > 0 && c.gated_macs <= c.total_macs);
+        assert!(schedule.grid_counters().is_none());
+        // the grid device rejects unknown weight schemes loudly
+        assert!(NpuDevice::new(NpuConfig::default(), program())
+            .unwrap()
+            .with_weight_scheme("zstd")
+            .is_err());
     }
 
     #[test]

@@ -22,6 +22,30 @@ use super::sigmoid::SigmoidLut;
 /// DSP48 pipeline register stages (multiplier + post-adder).
 pub const PIPELINE_DEPTH: u64 = 3;
 
+/// The activation unit at the array's drain port: one reduced
+/// accumulator in, one activated value out, through the shared LUT.
+/// Free-standing so every array model (`PuSim`, the cycle-level
+/// [`crate::systolic::GridSim`]) computes the identical bits.
+pub fn activate(
+    lut: &SigmoidLut,
+    fmt: crate::fixed::QFormat,
+    acc_reduced: i32,
+    act: Activation,
+) -> i32 {
+    match act {
+        Activation::Linear => acc_reduced,
+        Activation::Relu => acc_reduced.max(0),
+        Activation::Sigmoid => lut.lookup(acc_reduced),
+        // tanh(x) = 2*sigmoid(2x) - 1, computed with the same LUT as
+        // the FPGA does (shift, lookup, shift-subtract)
+        Activation::Tanh => {
+            let two_x = fmt.sat_add(acc_reduced, acc_reduced);
+            let s = lut.lookup(two_x);
+            fmt.sat_add(fmt.sat_add(s, s), -fmt.from_f32(1.0))
+        }
+    }
+}
+
 /// A processing unit bound to one program.
 pub struct PuSim {
     pub program: NpuProgram,
@@ -37,19 +61,7 @@ impl PuSim {
     }
 
     fn activate(&self, acc_reduced: i32, act: Activation) -> i32 {
-        let fmt = self.program.fmt;
-        match act {
-            Activation::Linear => acc_reduced,
-            Activation::Relu => acc_reduced.max(0),
-            Activation::Sigmoid => self.lut.lookup(acc_reduced),
-            // tanh(x) = 2*sigmoid(2x) - 1, computed with the same LUT as
-            // the FPGA does (shift, lookup, shift-subtract)
-            Activation::Tanh => {
-                let two_x = fmt.sat_add(acc_reduced, acc_reduced);
-                let s = self.lut.lookup(two_x);
-                fmt.sat_add(fmt.sat_add(s, s), -fmt.from_f32(1.0))
-            }
-        }
+        activate(&self.lut, self.program.fmt, acc_reduced, act)
     }
 
     /// Bit-exact fixed-point forward pass for one input vector (raw

@@ -1,0 +1,131 @@
+//! The array-edge weight decompressor.
+//!
+//! Weight streams reach the PE grid compressed per 64-byte line (the
+//! same [`crate::compress`] schemes the cache/DRAM side uses). The edge
+//! decompressor consumes the *compressed* stream at a fixed
+//! `rate` bytes/cycle and emits the raw bytes in order, so the cycle at
+//! which raw byte `n` becomes available is determined by how many
+//! compressed bytes encode the prefix `[0, n)` — a better ratio makes
+//! the same raw prefix available sooner. This is the mechanism that
+//! turns compression ratios into shorter weight-fill phases instead of
+//! only fewer DRAM bytes.
+
+use crate::compress::{compress_stream, Compressor, NoCompression, LINE_BYTES};
+
+/// Per-line decode schedule for one raw weight stream.
+#[derive(Debug, Clone)]
+pub struct EdgeDecompressor {
+    /// Cumulative compressed bytes after each 64-byte raw line.
+    cum_compressed: Vec<usize>,
+    raw_len: usize,
+    rate: usize,
+}
+
+impl EdgeDecompressor {
+    /// Build the decode schedule for `raw` under `scheme` (`None` =
+    /// uncompressed lines, 64 bytes each on the wire). `rate` is the
+    /// compressed-bytes/cycle decode throughput and must be positive.
+    pub fn new(raw: &[u8], scheme: Option<&dyn Compressor>, rate: usize) -> Self {
+        assert!(rate > 0, "decode rate must be positive");
+        let none = NoCompression;
+        let c: &dyn Compressor = scheme.unwrap_or(&none);
+        let mut cum = Vec::with_capacity(raw.len().div_ceil(LINE_BYTES));
+        let mut total = 0usize;
+        for line in compress_stream(c, raw) {
+            total += line.size_bytes();
+            cum.push(total);
+        }
+        EdgeDecompressor { cum_compressed: cum, raw_len: raw.len(), rate }
+    }
+
+    /// Total compressed bytes on the wire (what a weight fill moves
+    /// across the memory channel).
+    pub fn compressed_bytes(&self) -> usize {
+        self.cum_compressed.last().copied().unwrap_or(0)
+    }
+
+    /// Raw (decoded) length of the stream.
+    pub fn raw_bytes(&self) -> usize {
+        self.raw_len
+    }
+
+    /// Cycle (counted from the start of the load phase) at which raw
+    /// bytes `[0, n)` have all been emitted. Line-granular: a raw byte
+    /// is available once its whole 64-byte line has been decoded.
+    pub fn cycles_for_raw_prefix(&self, n: usize) -> u64 {
+        if n == 0 || self.cum_compressed.is_empty() {
+            return 0;
+        }
+        let lines = n.min(self.raw_len).div_ceil(LINE_BYTES).min(self.cum_compressed.len());
+        let compressed = self.cum_compressed[lines - 1];
+        (compressed as u64).div_ceil(self.rate as u64)
+    }
+
+    /// Cycles to decode the whole stream.
+    pub fn total_cycles(&self) -> u64 {
+        self.cycles_for_raw_prefix(self.raw_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Hybrid;
+
+    #[test]
+    fn uncompressed_stream_decodes_at_line_rate() {
+        let raw = vec![0xA5u8; 256]; // 4 lines
+        let d = EdgeDecompressor::new(&raw, None, 4);
+        assert_eq!(d.compressed_bytes(), 256);
+        assert_eq!(d.raw_bytes(), 256);
+        assert_eq!(d.cycles_for_raw_prefix(0), 0);
+        assert_eq!(d.cycles_for_raw_prefix(1), 16, "first line = 64 B / 4 B-per-cycle");
+        assert_eq!(d.cycles_for_raw_prefix(64), 16);
+        assert_eq!(d.cycles_for_raw_prefix(65), 32);
+        assert_eq!(d.total_cycles(), 64);
+    }
+
+    #[test]
+    fn compression_makes_the_same_prefix_available_sooner() {
+        // low-entropy stream: small sign-extended 16-bit values
+        let mut raw = Vec::new();
+        for i in 0..512i16 {
+            raw.extend_from_slice(&((i % 50) - 25).to_le_bytes());
+        }
+        let h = Hybrid::default();
+        let plain = EdgeDecompressor::new(&raw, None, 2);
+        let comp = EdgeDecompressor::new(&raw, Some(&h), 2);
+        assert!(comp.compressed_bytes() < plain.compressed_bytes());
+        assert!(comp.total_cycles() < plain.total_cycles());
+        for n in [64, 256, raw.len()] {
+            assert!(
+                comp.cycles_for_raw_prefix(n) <= plain.cycles_for_raw_prefix(n),
+                "prefix {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn availability_is_monotone_in_prefix_and_rate() {
+        let mut raw = vec![0u8; 300];
+        for (i, b) in raw.iter_mut().enumerate() {
+            *b = (i * 7) as u8;
+        }
+        let slow = EdgeDecompressor::new(&raw, None, 1);
+        let fast = EdgeDecompressor::new(&raw, None, 8);
+        let mut prev = 0;
+        for n in 0..=raw.len() {
+            let c = slow.cycles_for_raw_prefix(n);
+            assert!(c >= prev, "monotone in prefix");
+            prev = c;
+            assert!(fast.cycles_for_raw_prefix(n) <= c, "faster decoder never later");
+        }
+    }
+
+    #[test]
+    fn empty_stream_is_free() {
+        let d = EdgeDecompressor::new(&[], None, 4);
+        assert_eq!(d.compressed_bytes(), 0);
+        assert_eq!(d.total_cycles(), 0);
+    }
+}

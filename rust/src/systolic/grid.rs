@@ -1,0 +1,444 @@
+//! [`GridSim`] — the cycle-level weight-stationary PE grid.
+//!
+//! ## Dataflow
+//!
+//! A layer `(n_in → n_out)` is tiled onto the `rows × cols` grid:
+//! `ceil(n_in/rows)` row tiles × `ceil(n_out/cols)` column tiles. Each
+//! tile runs three phases:
+//!
+//! 1. **Weight fill** — the tile's weights arrive column-major through
+//!    the [`EdgeDecompressor`]. Column `c` can start shifting into the
+//!    array once the decompressor has emitted its raw bytes (a better
+//!    compression ratio gets there sooner at the same decode rate);
+//!    shifting a column takes `tile_rows` cycles and columns load
+//!    sequentially over the single fill bus:
+//!    `end(c) = max(end(c-1), available(c)) + tile_rows`.
+//! 2. **Skewed activation streaming** — vector `k`'s activation for row
+//!    `r` enters at cycle `k + r`; PE `(r, c)` MACs at `k + r + c`; the
+//!    column's partial sum leaves the bottom `PIPELINE_DEPTH` cycles
+//!    later. `n` vectors pipeline one cycle apart, so a tile streams in
+//!    `n + tile_rows + tile_cols + PIPELINE_DEPTH − 2` cycles.
+//! 3. **Drain** — once a column tile's last row tile has streamed, its
+//!    `tile_cols` outputs per vector drain through the single-ported
+//!    sigmoid LUT, one value per cycle.
+//!
+//! Timing is data-independent (deterministic per geometry + scheme);
+//! the *functional* pass additionally counts per-PE zero-operand clock
+//! gating (`a == 0 || w == 0` ⇒ the MAC is gated), which
+//! [`crate::energy::EnergyModel::grid_compute`] prices below a live MAC.
+//!
+//! Biases are part of the drain unit's accumulator initialisation
+//! (loaded once at configure time, as in SNNAP), so they are not part
+//! of the per-fill weight stream.
+
+use anyhow::{ensure, Result};
+
+use crate::compress::scheme_by_name;
+use crate::npu::program::NpuProgram;
+use crate::npu::pu::{activate, PIPELINE_DEPTH};
+use crate::npu::sigmoid::SigmoidLut;
+
+use super::{EdgeDecompressor, GridConfig};
+
+/// One tile of a layer mapped onto the grid, with its precomputed fill
+/// schedule.
+#[derive(Debug, Clone)]
+struct TilePlan {
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    /// Cycles of the weight-load phase (decode + sequential column
+    /// shift-in).
+    fill_cycles: u64,
+    /// Raw bytes of the tile's weight stream.
+    raw_bytes: u64,
+    /// Compressed bytes that cross the channel / edge decoder per fill.
+    compressed_bytes: u64,
+}
+
+/// A layer's tiling: tiles in load order (column-tile major, row-tile
+/// minor — partial sums of one column tile accumulate across its row
+/// tiles before draining).
+#[derive(Debug, Clone)]
+struct LayerPlan {
+    tiles: Vec<TilePlan>,
+    /// Column-tile widths, in order (drain is `n × width` per column
+    /// tile).
+    col_tile_widths: Vec<usize>,
+}
+
+/// Cycle breakdown of one batch through the grid.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchTiming {
+    /// Weight-load cycles (edge decode + column shift-in), all tiles.
+    pub fill_cycles: u64,
+    /// Skewed streaming cycles, all tiles.
+    pub stream_cycles: u64,
+    /// LUT drain cycles, all column tiles × vectors.
+    pub drain_cycles: u64,
+}
+
+impl BatchTiming {
+    pub fn total(&self) -> u64 {
+        self.fill_cycles + self.stream_cycles + self.drain_cycles
+    }
+}
+
+/// Per-PE activity counters accumulated by the functional pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GridCounters {
+    /// MAC slots issued (gated + live).
+    pub total_macs: u64,
+    /// MACs clock-gated because an operand was zero.
+    pub gated_macs: u64,
+}
+
+impl GridCounters {
+    /// Share of MAC slots that were gated (0 when nothing ran).
+    pub fn gated_share(&self) -> f64 {
+        if self.total_macs == 0 {
+            0.0
+        } else {
+            self.gated_macs as f64 / self.total_macs as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &GridCounters) {
+        self.total_macs += other.total_macs;
+        self.gated_macs += other.gated_macs;
+    }
+}
+
+/// The cycle-level PE-grid simulator for one program. `Clone` is cheap
+/// relative to `new` (it copies the precomputed plans instead of
+/// re-tiling and re-compressing the weight stream), which is how a
+/// multi-PU device stamps out its identical engines.
+#[derive(Clone)]
+pub struct GridSim {
+    pub program: NpuProgram,
+    pub cfg: GridConfig,
+    scheme_name: String,
+    lut: SigmoidLut,
+    plans: Vec<LayerPlan>,
+    counters: GridCounters,
+}
+
+impl GridSim {
+    /// Build the grid for `program` with the weight stream compressed
+    /// under `scheme` (`"none"` = raw 64-byte lines at the edge).
+    pub fn new(program: NpuProgram, cfg: GridConfig, scheme: &str) -> Result<Self> {
+        ensure!(cfg.rows > 0 && cfg.cols > 0, "grid rows and cols must be positive");
+        ensure!(cfg.decode_bytes_per_cycle > 0, "grid decode rate must be positive");
+        let compressor = scheme_by_name(scheme)?;
+        let fmt = program.fmt;
+        let eb = fmt.storage_bytes();
+        let mut plans = Vec::with_capacity(program.layers.len());
+        for layer in &program.layers {
+            let mut tiles = Vec::new();
+            let mut col_tile_widths = Vec::new();
+            let mut col0 = 0;
+            while col0 < layer.n_out {
+                let tc = cfg.cols.min(layer.n_out - col0);
+                col_tile_widths.push(tc);
+                let mut row0 = 0;
+                while row0 < layer.n_in {
+                    let tr = cfg.rows.min(layer.n_in - row0);
+                    // column-major tile stream, in the order the fill
+                    // bus shifts it into the array
+                    let mut raw = Vec::with_capacity(tr * tc);
+                    for c in col0..col0 + tc {
+                        for r in row0..row0 + tr {
+                            raw.push(layer.weights[r * layer.n_out + c]);
+                        }
+                    }
+                    let stream = fmt.pack_bytes(&raw);
+                    let dec = EdgeDecompressor::new(
+                        &stream,
+                        compressor.as_deref(),
+                        cfg.decode_bytes_per_cycle,
+                    );
+                    let mut end = 0u64;
+                    for c in 0..tc {
+                        let available = dec.cycles_for_raw_prefix((c + 1) * tr * eb);
+                        end = end.max(available) + tr as u64;
+                    }
+                    tiles.push(TilePlan {
+                        row0,
+                        rows: tr,
+                        col0,
+                        cols: tc,
+                        fill_cycles: end,
+                        raw_bytes: stream.len() as u64,
+                        compressed_bytes: dec.compressed_bytes() as u64,
+                    });
+                    row0 += tr;
+                }
+                col0 += tc;
+            }
+            plans.push(LayerPlan { tiles, col_tile_widths });
+        }
+        let lut = SigmoidLut::snnap(fmt);
+        Ok(GridSim {
+            program,
+            cfg,
+            scheme_name: scheme.to_string(),
+            lut,
+            plans,
+            counters: GridCounters::default(),
+        })
+    }
+
+    /// The weight-stream compression scheme at the array edge.
+    pub fn scheme_name(&self) -> &str {
+        &self.scheme_name
+    }
+
+    /// (raw, compressed) weight-stream bytes of one full fill of every
+    /// tile — the per-batch weight traffic the DRAM channel carries.
+    pub fn weight_stream_bytes(&self) -> (u64, u64) {
+        let mut raw = 0;
+        let mut compressed = 0;
+        for plan in &self.plans {
+            for t in &plan.tiles {
+                raw += t.raw_bytes;
+                compressed += t.compressed_bytes;
+            }
+        }
+        (raw, compressed)
+    }
+
+    /// Cycle breakdown for one weight-stationary batch of `n` vectors:
+    /// every tile fills once, streams all `n` vectors, and each column
+    /// tile drains `n × width` outputs through the LUT.
+    pub fn batch_timing(&self, n: u64) -> BatchTiming {
+        let mut t = BatchTiming::default();
+        if n == 0 {
+            return t;
+        }
+        for plan in &self.plans {
+            for tile in &plan.tiles {
+                t.fill_cycles += tile.fill_cycles;
+                t.stream_cycles +=
+                    n + tile.rows as u64 + tile.cols as u64 + PIPELINE_DEPTH - 2;
+            }
+            for &w in &plan.col_tile_widths {
+                t.drain_cycles += n * w as u64;
+            }
+        }
+        t
+    }
+
+    /// Total cycles for a batch of `n` (the grid analogue of
+    /// [`crate::npu::PuSim::batch_cycles`]).
+    pub fn batch_cycles(&self, n: u64) -> u64 {
+        self.batch_timing(n).total()
+    }
+
+    /// Cycles for a single invocation.
+    pub fn invocation_cycles(&self) -> u64 {
+        self.batch_cycles(1)
+    }
+
+    /// Counters accumulated by the functional passes so far.
+    pub fn counters(&self) -> GridCounters {
+        self.counters
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.counters = GridCounters::default();
+    }
+
+    /// Bit-exact fixed-point forward pass — the identical arithmetic to
+    /// [`crate::npu::PuSim::forward_fixed`] (64-bit MAC accumulation is
+    /// order-independent, the reduction and activation unit are shared),
+    /// walked tile by tile so the per-PE gating counters are exact.
+    pub fn forward_fixed(&mut self, input: &[i32]) -> Vec<i32> {
+        assert_eq!(input.len(), self.program.input_dim(), "input arity");
+        let fmt = self.program.fmt;
+        let mut act = input.to_vec();
+        for (layer, plan) in self.program.layers.iter().zip(&self.plans) {
+            let mut acc: Vec<i64> = layer
+                .biases
+                .iter()
+                .map(|&b| i64::from(b) << fmt.frac_bits)
+                .collect();
+            for tile in &plan.tiles {
+                for c in tile.col0..tile.col0 + tile.cols {
+                    for (r, &a) in act
+                        .iter()
+                        .enumerate()
+                        .skip(tile.row0)
+                        .take(tile.rows)
+                    {
+                        let w = layer.weights[r * layer.n_out + c];
+                        self.counters.total_macs += 1;
+                        if a == 0 || w == 0 {
+                            self.counters.gated_macs += 1;
+                        }
+                        acc[c] += i64::from(a) * i64::from(w);
+                    }
+                }
+            }
+            act = acc
+                .iter()
+                .map(|&a| activate(&self.lut, fmt, fmt.reduce_acc(a), layer.activation))
+                .collect();
+        }
+        act
+    }
+
+    /// f32 convenience wrapper: quantize → forward_fixed → dequantize.
+    pub fn forward_f32(&mut self, input: &[f32]) -> Vec<f32> {
+        let fmt = self.program.fmt;
+        let raw: Vec<i32> = input.iter().map(|&v| fmt.from_f32(v)).collect();
+        self.forward_fixed(&raw).iter().map(|&r| fmt.to_f32(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{Q7_8, QFormat};
+    use crate::npu::program::{Activation, NpuProgram};
+    use crate::npu::PuSim;
+
+    fn program(sizes: &[usize], acts: &[Activation], scale: f32, fmt: QFormat) -> NpuProgram {
+        let n: usize = sizes.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+        let flat: Vec<f32> = (0..n).map(|i| ((i % 7) as f32 - 3.0) * scale).collect();
+        NpuProgram::from_f32("t", sizes, acts, &flat, fmt).unwrap()
+    }
+
+    fn grid(p: NpuProgram, rows: usize, cols: usize, rate: usize, scheme: &str) -> GridSim {
+        GridSim::new(
+            p,
+            GridConfig { rows, cols, decode_bytes_per_cycle: rate },
+            scheme,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn outputs_match_pusim_bit_exactly() {
+        let p = program(
+            &[9, 8, 3],
+            &[Activation::Sigmoid, Activation::Tanh],
+            0.17,
+            Q7_8,
+        );
+        let pu = PuSim::new(p.clone(), 8);
+        for (rows, cols) in [(8, 8), (4, 2), (16, 1), (3, 5)] {
+            let mut g = grid(p.clone(), rows, cols, 2, "bdi+fpc");
+            for k in 0..8 {
+                let input: Vec<i32> =
+                    (0..9).map(|i| ((i * 37 + k * 11) % 257) as i32 - 128).collect();
+                assert_eq!(
+                    g.forward_fixed(&input),
+                    pu.forward_fixed(&input),
+                    "{rows}x{cols} input {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gating_counts_zero_operands_exactly() {
+        // one linear layer, hand-countable: 2 inputs x 3 outputs
+        let flat = [0.0f32, 1.0, 0.5, 1.0, 0.0, -1.0, 0.0, 0.0, 0.0]; // w(2x3) + b(3)
+        let p = NpuProgram::from_f32("z", &[2, 3], &[Activation::Linear], &flat, Q7_8).unwrap();
+        let mut g = grid(p, 8, 8, 2, "none");
+        // input [0, 1]: row 0 gates all 3 PEs; row 1 gates only w[1][1]==0
+        g.forward_f32(&[0.0, 1.0]);
+        let c = g.counters();
+        assert_eq!(c.total_macs, 6);
+        assert_eq!(c.gated_macs, 4);
+        assert!((c.gated_share() - 4.0 / 6.0).abs() < 1e-12);
+        g.reset_counters();
+        assert_eq!(g.counters(), GridCounters::default());
+    }
+
+    #[test]
+    fn fill_timing_small_example_by_hand() {
+        // 4x4 weights on a 4x4 grid, Q7.8 (2 B/elem): one tile, 4
+        // columns x 8 raw bytes = 32 B = one (padded) 64-byte line.
+        let p = program(&[4, 4], &[Activation::Linear], 0.25, Q7_8);
+        let g = grid(p, 4, 4, 2, "none");
+        // every column waits for the single 64-B line: 32 cycles at
+        // 2 B/cyc, then 4 sequential shifts of 4 cycles
+        let t = g.batch_timing(1);
+        assert_eq!(t.fill_cycles, 32 + 4 * 4);
+        // stream: 1 + 4 + 4 + 3 - 2 = 10; drain: 4
+        assert_eq!(t.stream_cycles, 10);
+        assert_eq!(t.drain_cycles, 4);
+        assert_eq!(g.invocation_cycles(), t.total());
+    }
+
+    #[test]
+    fn batch_pipelines_instead_of_refilling() {
+        let p = program(&[16, 16, 4], &[Activation::Sigmoid, Activation::Linear], 0.1, Q7_8);
+        let g = grid(p, 8, 8, 2, "none");
+        let one = g.batch_cycles(1);
+        let many = g.batch_cycles(64);
+        assert!(many < 64 * one, "weight-stationary batching must amortize fills");
+        assert_eq!(g.batch_timing(64).fill_cycles, g.batch_timing(1).fill_cycles);
+        assert_eq!(g.batch_cycles(0), 0);
+    }
+
+    #[test]
+    fn compression_shortens_decode_bound_fills() {
+        // synthetic small weights compress well under the hybrid scheme
+        let p = program(&[32, 32], &[Activation::Sigmoid], 0.05, Q7_8);
+        let raw = grid(p.clone(), 8, 8, 1, "none");
+        let comp = grid(p.clone(), 8, 8, 1, "bdi+fpc");
+        assert!(
+            comp.batch_timing(1).fill_cycles < raw.batch_timing(1).fill_cycles,
+            "decode-bound fill must shrink with compression"
+        );
+        let (raw_bytes, comp_bytes) = comp.weight_stream_bytes();
+        assert!(comp_bytes < raw_bytes);
+        let (r2, c2) = raw.weight_stream_bytes();
+        assert_eq!(r2, raw_bytes, "raw stream identical across schemes");
+        // uncompressed lines are 64 B each on the wire, so the `none`
+        // wire bytes are the line-padded raw size
+        assert!(c2 >= raw_bytes);
+        // streaming and drain are scheme-independent
+        assert_eq!(comp.batch_timing(5).stream_cycles, raw.batch_timing(5).stream_cycles);
+        assert_eq!(comp.batch_timing(5).drain_cycles, raw.batch_timing(5).drain_cycles);
+    }
+
+    #[test]
+    fn grid_never_beats_the_schedule_lower_bound() {
+        for sizes in [&[9usize, 8, 1][..], &[18, 32, 8, 2][..], &[4, 4][..]] {
+            let acts = vec![Activation::Sigmoid; sizes.len() - 1];
+            let p = program(sizes, &acts, 0.1, Q7_8);
+            for (rows, cols) in [(8, 8), (4, 8), (64, 8)] {
+                let g = grid(p.clone(), rows, cols, 8, "none");
+                let pu = PuSim::new(p.clone(), cols);
+                assert!(
+                    g.invocation_cycles() >= pu.invocation_cycles(),
+                    "{sizes:?} {rows}x{cols}: grid {} < schedule {}",
+                    g.invocation_cycles(),
+                    pu.invocation_cycles()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_config_and_scheme() {
+        let p = program(&[4, 4], &[Activation::Linear], 0.25, Q7_8);
+        assert!(GridSim::new(
+            p.clone(),
+            GridConfig { rows: 0, cols: 8, decode_bytes_per_cycle: 2 },
+            "none"
+        )
+        .is_err());
+        assert!(GridSim::new(
+            p.clone(),
+            GridConfig { rows: 8, cols: 8, decode_bytes_per_cycle: 0 },
+            "none"
+        )
+        .is_err());
+        assert!(GridSim::new(p, GridConfig::default(), "zstd").is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Cycle-level systolic PE-grid dataflow engine.
+//!
+//! The schedule model in [`crate::npu::pu`] prices a layer with a
+//! closed-form formula; this module models the array itself: a
+//! `rows × cols` grid of weight-stationary PEs with
+//!
+//! * explicit **skewed activation streaming** (activation `r` of vector
+//!   `k` enters row `r` at cycle `k + r`; PE `(r, c)` fires at
+//!   `k + r + c`; vectors pipeline one cycle apart),
+//! * per-column **weight-load phases** fed by an [`EdgeDecompressor`]
+//!   that consumes a [`crate::compress`] scheme's output at a
+//!   configurable compressed-bytes/cycle decode rate — so BDI / FPC /
+//!   hybrid / C-Pack ratios change the array's *fill time*, not just
+//!   the DRAM byte count,
+//! * output accumulation and drain through the existing
+//!   [`crate::npu::SigmoidLut`] (single-ported, one value per cycle),
+//! * per-PE **zero-operand clock gating** counters (a MAC whose
+//!   activation or weight operand is zero is gated: it burns the
+//!   residual clock-tree energy, not the full switching energy) that
+//!   feed [`crate::energy::EnergyModel::grid_compute`].
+//!
+//! [`GridSim`] is bit-exact with [`crate::npu::PuSim::forward_fixed`]
+//! on outputs (same 64-bit MAC accumulation, same reduction, same
+//! activation unit — asserted by property tests in
+//! `rust/tests/systolic_grid.rs`) and plugs into [`crate::npu::NpuDevice`]
+//! as the alternative timing backend selected by the `npu.model = grid`
+//! config key.
+
+pub mod decompress;
+pub mod grid;
+
+pub use decompress::EdgeDecompressor;
+pub use grid::{BatchTiming, GridCounters, GridSim};
+
+use anyhow::{bail, Result};
+
+/// Which timing backend an [`crate::npu::NpuDevice`] prices batches
+/// with. The functional outputs are bit-identical either way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TimingModel {
+    /// The closed-form systolic schedule ([`crate::npu::PuSim`]).
+    #[default]
+    Schedule,
+    /// The cycle-level PE grid ([`GridSim`]).
+    Grid,
+}
+
+impl TimingModel {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "schedule" => TimingModel::Schedule,
+            "grid" => TimingModel::Grid,
+            other => bail!("unknown npu.model {other:?} (schedule|grid)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TimingModel::Schedule => "schedule",
+            TimingModel::Grid => "grid",
+        }
+    }
+}
+
+/// Geometry and edge-decode rate of the PE grid. `Copy` so
+/// [`crate::npu::NpuConfig`] stays `Copy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GridConfig {
+    /// PE rows (activation-streaming direction; one input element per
+    /// row per cycle).
+    pub rows: usize,
+    /// PE columns (one output accumulator chain per column).
+    pub cols: usize,
+    /// Compressed bytes the edge decompressor consumes per cycle during
+    /// a weight-load phase. Small rates make fills decode-bound (where
+    /// compression shortens them); large rates make the per-column
+    /// shift-in the floor.
+    pub decode_bytes_per_cycle: usize,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        // 8×8 matches the schedule model's default array_width; 2 B/cyc
+        // keeps an uncompressed Q7.8 fill decode-bound, so `grid` runs
+        // surface the compression effect out of the box.
+        GridConfig { rows: 8, cols: 8, decode_bytes_per_cycle: 2 }
+    }
+}
+
+impl GridConfig {
+    /// Geometry label for reports, e.g. `8x8@2B`.
+    pub fn label(&self) -> String {
+        format!("{}x{}@{}B", self.rows, self.cols, self.decode_bytes_per_cycle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_model_parse_roundtrip() {
+        for m in [TimingModel::Schedule, TimingModel::Grid] {
+            assert_eq!(TimingModel::parse(m.name()).unwrap(), m);
+        }
+        assert!(TimingModel::parse("systolic?").is_err());
+        assert_eq!(TimingModel::default(), TimingModel::Schedule);
+    }
+
+    #[test]
+    fn grid_config_labels() {
+        assert_eq!(GridConfig::default().label(), "8x8@2B");
+        let g = GridConfig { rows: 16, cols: 4, decode_bytes_per_cycle: 1 };
+        assert_eq!(g.label(), "16x4@1B");
+    }
+}

@@ -67,7 +67,7 @@ fn multi_experiment_sweep_runs_in_parallel_without_artifacts() {
     // two kernels, two schemes, 4 workers — must be green from a clean
     // checkout (no `make artifacts`)
     let cfg = HarnessConfig {
-        experiments: (1..=11).map(|i| format!("e{i}")).collect(),
+        experiments: (1..=12).map(|i| format!("e{i}")).collect(),
         benchmarks: vec!["sobel".into(), "fft".into()],
         schemes: vec!["none".into(), "bdi+fpc".into()],
         invocations: 8,
@@ -78,7 +78,7 @@ fn multi_experiment_sweep_runs_in_parallel_without_artifacts() {
     let report = harness::run(&cfg).unwrap();
     assert_eq!(report.failed_jobs, 0, "{}", report.json.dump());
     let experiments = report.json.get("experiments").unwrap().as_obj().unwrap();
-    for id in ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11"] {
+    for id in ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12"] {
         assert!(experiments.contains_key(id), "report missing {id}");
     }
     // spot-check row payloads deep in the tree
@@ -120,6 +120,16 @@ fn multi_experiment_sweep_runs_in_parallel_without_artifacts() {
         assert!((0.0..=1.0).contains(&share), "wait share {share}");
         let policy = r.get("policy").unwrap().as_str().unwrap();
         assert!(policy == "fifo" || policy == "rr");
+    }
+    // e12: one row per grid geometry, with the fields CI greps
+    let e12 = &experiments["e12"].as_arr().unwrap()[0];
+    let rows = e12.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), snnap_c::experiments::e12_systolic::GRID_SWEEP.len());
+    for r in rows {
+        assert!(r.get("fill_cycles").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("grid_cycles").unwrap().as_f64().unwrap() > 0.0);
+        let share = r.get("gated_mac_share").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&share), "gated share {share}");
     }
 }
 

@@ -23,8 +23,14 @@ Refreshing the committed baseline after an intentional perf change:
     python3 scripts/bench_trend.py harness-report.json --write-baseline
 
 A baseline whose ``metrics`` object is empty is a *bootstrap* baseline
-(seeded in the PR that introduced this pipeline): the gate records the
-trajectory point but fails nothing until a real baseline is committed.
+(seeded in the PR that introduced this pipeline): the absolute gate
+records the trajectory point without comparing until a real baseline is
+committed (``--emit-refreshed`` writes one from the current run, ready
+to commit verbatim). Independently of the baseline, the
+*scenario-internal invariant* gate always enforces: at equal E12 grid
+geometry, at least one compressed scheme must beat ``none`` on both
+weight-fill cycles and DRAM bytes (the E12 acceptance criterion) —
+so the job fails on real regressions even in the bootstrap state.
 Only the standard library is used.
 """
 
@@ -36,7 +42,7 @@ import sys
 from pathlib import Path
 
 #: Cycle-denominated metrics the gate compares (higher = worse).
-GATED_METRICS = ("p99_cycles", "mem_cycles")
+GATED_METRICS = ("p99_cycles", "mem_cycles", "grid_cycles", "fill_cycles")
 
 
 def extract_metrics(report: dict) -> dict:
@@ -44,8 +50,9 @@ def extract_metrics(report: dict) -> dict:
 
     Cell keys are stable across runs of the same pinned scenario:
     ``e1/<label>/<stream>/<scheme>`` (compression ratios, informational),
-    ``e9/<label>/<cache>``, ``e10/<label>/x<shards>``, and
-    ``e11/<label>/x<shards>/<policy>`` (cycle metrics, gated).
+    ``e9/<label>/<cache>``, ``e10/<label>/x<shards>``,
+    ``e11/<label>/x<shards>/<policy>``, and ``e12/<label>/<grid>``
+    (cycle metrics, gated).
     """
     out: dict = {}
     experiments = report.get("experiments", {})
@@ -86,7 +93,58 @@ def extract_metrics(report: dict) -> dict:
                 "wait_cycles": row["wait_cycles"],
                 "dram_bytes": row["dram_bytes"],
             }
+    for entry in experiments.get("e12", []):
+        for row in entry.get("rows", []):
+            key = f"{entry['label']}/{row['grid']}"
+            out[key] = {
+                "grid_cycles": row["grid_cycles"],
+                "fill_cycles": row["fill_cycles"],
+                "gated_mac_share": row["gated_mac_share"],
+                "dram_bytes": row["dram_bytes"],
+            }
     return out
+
+
+def check_invariants(metrics: dict) -> list:
+    """Scenario-internal invariants that hold regardless of any baseline.
+
+    E12 acceptance (the paper's thesis taken into the array): for each
+    (kernel, grid-geometry) that has both a ``none`` cell and compressed
+    cells, at least one kernel×geometry must show a compressed scheme
+    strictly below ``none`` on BOTH ``fill_cycles`` and ``dram_bytes``.
+    Returns failure messages; empty when the invariant holds or no E12
+    cells with a ``none`` counterpart are present.
+    """
+    # e12 keys look like e12/<kernel>/<scheme>/<grid>
+    cells: dict = {}
+    for key, row in metrics.items():
+        parts = key.split("/")
+        if len(parts) != 4 or parts[0] != "e12":
+            continue
+        _, kernel, scheme, grid = parts
+        cells.setdefault((kernel, grid), {})[scheme] = row
+    comparable = {k: v for k, v in cells.items() if "none" in v and len(v) > 1}
+    if not comparable:
+        return []
+    for (kernel, grid), schemes in sorted(comparable.items()):
+        base = schemes["none"]
+        for scheme, row in schemes.items():
+            if scheme == "none":
+                continue
+            if (
+                row["fill_cycles"] < base["fill_cycles"]
+                and row["dram_bytes"] < base["dram_bytes"]
+            ):
+                print(
+                    f"invariant ok: e12/{kernel}/{scheme}/{grid} beats none "
+                    f"(fill {row['fill_cycles']:.0f} < {base['fill_cycles']:.0f}, "
+                    f"dram {row['dram_bytes']:.0f} < {base['dram_bytes']:.0f})"
+                )
+                return []
+    return [
+        "E12 invariant violated: no (kernel, grid) cell has a compressed scheme "
+        "beating `none` on both fill_cycles and dram_bytes"
+    ]
 
 
 def compare(baseline: dict, current_metrics: dict, max_regress: float) -> list:
@@ -139,6 +197,12 @@ def main(argv=None) -> int:
         action="store_true",
         help="overwrite --baseline with this report's metrics instead of gating",
     )
+    ap.add_argument(
+        "--emit-refreshed",
+        default=None,
+        metavar="PATH",
+        help="also write this run's metrics as a ready-to-commit baseline file",
+    )
     args = ap.parse_args(argv)
 
     report = json.loads(Path(args.report).read_text())
@@ -154,6 +218,22 @@ def main(argv=None) -> int:
     Path(args.out).write_text(json.dumps(point, indent=2, sort_keys=True) + "\n")
     print(f"wrote trajectory point {args.out}")
 
+    if args.emit_refreshed:
+        refreshed = dict(point)
+        refreshed["run"] = "baseline"
+        Path(args.emit_refreshed).write_text(
+            json.dumps(refreshed, indent=2, sort_keys=True) + "\n"
+        )
+        print(f"wrote refreshed baseline candidate {args.emit_refreshed}")
+
+    # scenario-internal invariants gate even without a usable baseline
+    invariant_failures = check_invariants(point["metrics"])
+    if invariant_failures:
+        print(f"INVARIANT FAILURES ({len(invariant_failures)}):", file=sys.stderr)
+        for f in invariant_failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+
     baseline_path = Path(args.baseline)
     if not baseline_path.exists():
         print(f"ERROR: baseline {args.baseline} not found", file=sys.stderr)
@@ -161,8 +241,9 @@ def main(argv=None) -> int:
     baseline = json.loads(baseline_path.read_text())
     if not baseline.get("metrics"):
         print(
-            f"baseline {args.baseline} is a bootstrap (empty metrics): "
-            "recording only, nothing gated. Refresh it with --write-baseline."
+            f"baseline {args.baseline} is a bootstrap (empty metrics): invariants "
+            "enforced, absolute cycles recorded only. Refresh with --write-baseline "
+            "(or commit the --emit-refreshed artifact) to turn the absolute gate on."
         )
         return 0
 
@@ -174,7 +255,7 @@ def main(argv=None) -> int:
         for f in failures:
             print(f"  {f}", file=sys.stderr)
         return 1
-    print("no p99/mem-cycle regressions beyond the threshold")
+    print("no cycle regressions beyond the threshold")
     return 0
 
 
