@@ -108,6 +108,41 @@ def report(p99_e10=1000, p99_e11=2000, mem_e9=500, fill_bdi=400, fill_none=900):
     }
 
 
+def selfbench_report(rate_fwd=2.0e9, rate_pool=1.5e9, wall_fwd=80.0, wall_pool=120.0):
+    """A `snnapc selfbench --out` style report (selfbench experiment only)."""
+    return {
+        "schema_version": 1,
+        "config": {"seed": 42},
+        "experiments": {
+            "selfbench": [
+                {
+                    "label": "selfbench/sobel",
+                    "rows": [
+                        {
+                            "workload": "sobel",
+                            "component": "grid_forward",
+                            "iters": 256,
+                            "sim_cycles": 160000,
+                            "wall_ms": wall_fwd,
+                            "sim_cycles_per_wall_sec": rate_fwd,
+                            "fill_cache_hit_share": 0.0,
+                        },
+                        {
+                            "workload": "sobel",
+                            "component": "pool_open",
+                            "iters": 256,
+                            "sim_cycles": 180000,
+                            "wall_ms": wall_pool,
+                            "sim_cycles_per_wall_sec": rate_pool,
+                            "fill_cache_hit_share": 0.0,
+                        },
+                    ],
+                }
+            ]
+        },
+    }
+
+
 def test_extract_flattens_all_trajectory_experiments():
     metrics = bench_trend.extract_metrics(report())
     assert metrics["e1/sobel/weights/bdi"]["ratio"] == 1.9
@@ -233,6 +268,146 @@ def test_main_end_to_end(tmp_path):
         bench_trend.main([str(rep), "--baseline", str(tmp_path / "nope.json"), "--out", str(out)])
         == 2
     )
+
+
+def test_missing_metric_is_a_named_pipeline_error_not_a_keyerror():
+    rep = report()
+    del rep["experiments"]["e10"][0]["rows"][0]["p99_cycles"]
+    with pytest.raises(bench_trend.ReportFormatError) as exc:
+        bench_trend.extract_metrics(rep)
+    msg = str(exc.value)
+    assert "p99_cycles" in msg, "the missing key must be named"
+    assert "e10/sobel/bdi" in msg, "the experiment cell must be named"
+    assert "row keys" in msg, "the row's actual keys help debug schema drift"
+
+
+def test_main_exits_2_on_malformed_report_with_message(tmp_path, capsys):
+    rep_file = tmp_path / "harness-report.json"
+    broken = report()
+    del broken["experiments"]["e12"][0]["rows"][0]["fill_cycles"]
+    rep_file.write_text(json.dumps(broken))
+    rc = bench_trend.main([str(rep_file), "--out", str(tmp_path / "out.json")])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "REPORT FORMAT ERROR" in err
+    assert "fill_cycles" in err and "e12/sobel" in err
+    assert "Traceback" not in err
+
+
+def test_selfbench_extraction_and_sim_cycles_hard_gate():
+    metrics = bench_trend.extract_metrics(selfbench_report())
+    assert metrics["selfbench/sobel/grid_forward"]["sim_cycles"] == 160000
+    assert metrics["selfbench/sobel/pool_open"]["wall_ms"] == 120.0
+    # sim_cycles is deterministic -> regressions gate hard (exit-1 class)
+    base = bench_trend.trajectory_point(selfbench_report(), "base")
+    worse = bench_trend.extract_metrics(selfbench_report())
+    worse["selfbench/sobel/grid_forward"]["sim_cycles"] = 400000
+    failures = bench_trend.compare(base, worse, 0.20)
+    assert any("sim_cycles" in f for f in failures)
+
+
+def test_throughput_gate_direction_and_noise_floor():
+    base = bench_trend.trajectory_point(selfbench_report(), "base")
+    # 40% slower on both well-measured components -> two failures
+    slow = bench_trend.extract_metrics(
+        selfbench_report(rate_fwd=1.2e9, rate_pool=0.9e9)
+    )
+    failures = bench_trend.compare_throughput(base, slow, 0.20)
+    assert len(failures) == 2 and all("sim_cycles_per_wall_sec" in f for f in failures)
+    # faster never fails (lower = worse, not a two-sided band)
+    fast = bench_trend.extract_metrics(
+        selfbench_report(rate_fwd=9e9, rate_pool=9e9)
+    )
+    assert bench_trend.compare_throughput(base, fast, 0.20) == []
+    # a sub-noise-floor wall time on either side disables that cell
+    tiny = bench_trend.extract_metrics(
+        selfbench_report(rate_fwd=1.0e6, wall_fwd=3.0, rate_pool=0.9e9)
+    )
+    failures = bench_trend.compare_throughput(base, tiny, 0.20)
+    assert len(failures) == 1 and "pool_open" in failures[0]
+    base_tiny = bench_trend.trajectory_point(
+        selfbench_report(wall_fwd=3.0, wall_pool=3.0), "base"
+    )
+    assert bench_trend.compare_throughput(base_tiny, slow, 0.20) == []
+
+
+def test_throughput_only_regression_exits_3_mixed_exits_1(tmp_path):
+    sb = tmp_path / "selfbench-report.json"
+    sb.write_text(json.dumps(selfbench_report()))
+    baseline = tmp_path / "BENCH_baseline.json"
+    out = tmp_path / "BENCH_run.json"
+    assert bench_trend.main([str(sb), "--baseline", str(baseline), "--write-baseline"]) == 0
+    # identical run: green
+    assert bench_trend.main([str(sb), "--baseline", str(baseline), "--out", str(out)]) == 0
+    # only throughput down 40% -> exit 3 (retryable wall-clock noise class)
+    sb.write_text(json.dumps(selfbench_report(rate_fwd=1.2e9, rate_pool=0.9e9)))
+    assert bench_trend.main([str(sb), "--baseline", str(baseline), "--out", str(out)]) == 3
+    # sim_cycles regressed too -> deterministic failure dominates: exit 1
+    mixed = selfbench_report(rate_fwd=1.2e9, rate_pool=0.9e9)
+    mixed["experiments"]["selfbench"][0]["rows"][0]["sim_cycles"] = 10**9
+    sb.write_text(json.dumps(mixed))
+    assert bench_trend.main([str(sb), "--baseline", str(baseline), "--out", str(out)]) == 1
+
+
+def test_multiple_reports_merge_into_one_trajectory_point(tmp_path):
+    a = tmp_path / "harness-report.json"
+    a.write_text(json.dumps(report()))
+    b = tmp_path / "selfbench-report.json"
+    b.write_text(json.dumps(selfbench_report()))
+    baseline = tmp_path / "BENCH_baseline.json"
+    out = tmp_path / "BENCH_run.json"
+    assert (
+        bench_trend.main([str(a), str(b), "--baseline", str(baseline), "--write-baseline"])
+        == 0
+    )
+    assert (
+        bench_trend.main([str(a), str(b), "--baseline", str(baseline), "--out", str(out)])
+        == 0
+    )
+    point = json.loads(out.read_text())
+    assert "e12/sobel/bdi/8x8@1B" in point["metrics"]
+    assert "selfbench/sobel/grid_forward" in point["metrics"]
+    assert len(point["metrics"]) == 10  # 8 harness + 2 selfbench cells
+
+
+def test_refresh_summary_names_changed_cells(tmp_path):
+    committed = bench_trend.trajectory_point(selfbench_report(), "baseline")
+    refreshed = bench_trend.trajectory_point(
+        selfbench_report(rate_fwd=1.0e9), "baseline"
+    )
+    md = bench_trend.refresh_summary(committed, refreshed)
+    assert "selfbench/sobel/grid_forward" in md
+    assert "sim_cycles_per_wall_sec" in md
+    assert "BENCH_baseline.refreshed.json" in md, "tells the maintainer what to commit"
+    assert "| cell | metric |" in md
+    # identical metrics -> explicit nothing-to-refresh note, no table
+    same = bench_trend.refresh_summary(committed, committed)
+    assert "nothing to refresh" in same
+    # end-to-end: --refresh-summary-out writes the markdown next to the gate
+    sb = tmp_path / "selfbench-report.json"
+    sb.write_text(json.dumps(selfbench_report(rate_fwd=1.0e9)))
+    baseline = tmp_path / "BENCH_baseline.json"
+    baseline.write_text(json.dumps(committed))
+    summary = tmp_path / "refresh-summary.md"
+    rc = bench_trend.main(
+        [
+            str(sb),
+            "--baseline",
+            str(baseline),
+            "--out",
+            str(tmp_path / "out.json"),
+            "--emit-refreshed",
+            str(tmp_path / "refreshed.json"),
+            "--refresh-summary-out",
+            str(summary),
+            # rate_fwd drop is 50%, but keep the run green so we test the
+            # summary independent of the gate
+            "--max-throughput-regress",
+            "0.60",
+        ]
+    )
+    assert rc == 0
+    assert "grid_forward" in summary.read_text()
 
 
 if __name__ == "__main__":

@@ -20,7 +20,8 @@
 //! interleaving moves wall-clock batch boundaries, though never the
 //! *numerics* — every shard runs the same program).
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -585,8 +586,10 @@ impl PoolSim {
     }
 
     /// Place one request on the least-loaded shard (affinity-aware for
-    /// heterogeneous pools); returns an error on lane overflow.
-    fn place(&mut self, index: usize, arrival: u64, now: u64) -> Result<()> {
+    /// heterogeneous pools); returns the chosen shard so the event
+    /// loop can invalidate its flush-time memo, or an error on lane
+    /// overflow.
+    fn place(&mut self, index: usize, arrival: u64, now: u64) -> Result<usize> {
         let loads: Vec<usize> = self
             .shards
             .iter()
@@ -600,7 +603,7 @@ impl PoolSim {
         if self.shards[shard].batcher.push(index, at).is_err() {
             anyhow::bail!("sim lane overflow: raise queue_cap for this trace");
         }
-        Ok(())
+        Ok(shard)
     }
 
     /// Flush every ready batch and let idle shards steal, until the
@@ -610,6 +613,83 @@ impl PoolSim {
     /// after the last grantee (rotating priority) — the arbitration
     /// order their bursts hit a shared DRAM channel in.
     fn settle(
+        &mut self,
+        now: u64,
+        requests: &[SimRequest],
+        completions: &mut Vec<SimCompletion>,
+        stolen: &mut u64,
+        dirty: &mut [bool],
+    ) -> Result<()> {
+        let n = self.shards.len();
+        loop {
+            let mut progressed = false;
+            let base = match self.channel_policy {
+                ArbiterPolicy::Fifo => 0,
+                ArbiterPolicy::RoundRobin => self.next_grant % n,
+            };
+            for off in 0..n {
+                let s = (base + off) % n;
+                while self.shards[s].free_at <= now
+                    && self.shards[s].batcher.should_flush(self.v(now))
+                {
+                    self.execute(s, now, requests, completions)?;
+                    dirty[s] = true;
+                    if self.channel_policy == ArbiterPolicy::RoundRobin {
+                        self.next_grant = (s + 1) % n;
+                    }
+                    progressed = true;
+                }
+            }
+            // an idle, empty shard adopts the oldest batch of the
+            // deepest *busy* peer (an idle peer can run its own
+            // work); the stolen work then follows the normal
+            // size-or-deadline flush rules, exactly like a threaded
+            // thief that gathered it into its batcher.
+            //
+            // Fast path: a steal needs a busy shard with queued work —
+            // when none exists every `pick_victim` below returns `None`
+            // (all depths are zero), so the whole thief scan (and its
+            // per-thief depth vector) is skipped without changing a
+            // single decision.
+            let stealable =
+                self.shards.iter().any(|sh| sh.free_at > now && !sh.batcher.is_empty());
+            if stealable {
+                for s in 0..n {
+                    if self.shards[s].free_at > now || !self.shards[s].batcher.is_empty() {
+                        continue;
+                    }
+                    let depths: Vec<usize> = self
+                        .shards
+                        .iter()
+                        .map(|sh| if sh.free_at > now { sh.batcher.len() } else { 0 })
+                        .collect();
+                    if let Some(victim) = pick_victim(&depths, s) {
+                        let at = self.v(now);
+                        let moved = self.shards[victim].batcher.take_batch(at);
+                        if moved.is_empty() {
+                            continue;
+                        }
+                        for idx in moved {
+                            let _ = self.shards[s].batcher.push(idx, at);
+                        }
+                        dirty[s] = true;
+                        dirty[victim] = true;
+                        *stolen += 1;
+                        progressed = true;
+                    }
+                }
+            }
+            if !progressed {
+                return Ok(());
+            }
+        }
+    }
+
+    /// The pre-event-engine [`PoolSim::settle`], retained verbatim (no
+    /// flush-memo bookkeeping, no steal fast path) as the oracle that
+    /// [`PoolSim::run_reference`]/[`PoolSim::run_closed_reference`]
+    /// drive in the engine-equivalence property tests.
+    fn settle_reference(
         &mut self,
         now: u64,
         requests: &[SimRequest],
@@ -635,11 +715,6 @@ impl PoolSim {
                     progressed = true;
                 }
             }
-            // an idle, empty shard adopts the oldest batch of the
-            // deepest *busy* peer (an idle peer can run its own
-            // work); the stolen work then follows the normal
-            // size-or-deadline flush rules, exactly like a threaded
-            // thief that gathered it into its batcher
             for s in 0..n {
                 if self.shards[s].free_at > now || !self.shards[s].batcher.is_empty() {
                     continue;
@@ -670,6 +745,18 @@ impl PoolSim {
 
     /// Replay an open-loop trace (arrivals must be nondecreasing).
     /// Deterministic: same devices + policy + trace ⇒ identical report.
+    ///
+    /// Event-driven: virtual time jumps straight to the next arrival or
+    /// flush instant, and per-shard flush times are memoized between
+    /// events. The memo is exact because a quiescent shard's flush time
+    /// is independent of the evaluation instant — the batch deadline
+    /// `first_arrival + max_wait` is a fixed virtual instant and
+    /// `free_at` a fixed cycle, so `next_flush(s, t)` returns the same
+    /// `max(⌈deadline⌉, free_at)` for every `t` up to that value, and
+    /// the loop never advances `now` past the minimum candidate. Shards
+    /// touched by a placement, execution, or steal are marked dirty and
+    /// recomputed. Bit-identical to [`PoolSim::run_reference`] (pinned
+    /// by property tests).
     pub fn run(&mut self, requests: &[SimRequest]) -> Result<SimReport> {
         anyhow::ensure!(
             requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
@@ -680,10 +767,19 @@ impl PoolSim {
         let mut now = 0u64;
         let mut max_depth = 0usize;
         let mut stolen = 0u64;
+        let n = self.shards.len();
+        let mut flush_at: Vec<Option<u64>> = vec![None; n];
+        let mut dirty = vec![true; n];
         loop {
+            for s in 0..n {
+                if dirty[s] {
+                    flush_at[s] = self.next_flush(s, now);
+                    dirty[s] = false;
+                }
+            }
             // next event: an arrival or the earliest possible flush
             let ta = requests.get(next).map(|r| r.arrival);
-            let tf = (0..self.shards.len()).filter_map(|s| self.next_flush(s, now)).min();
+            let tf = flush_at.iter().flatten().copied().min();
             now = match (ta, tf) {
                 (None, None) => break,
                 (Some(a), None) => a.max(now),
@@ -692,12 +788,54 @@ impl PoolSim {
             };
             // deliver due arrivals to the least-loaded shard
             while next < requests.len() && requests[next].arrival <= now {
+                let shard = self.place(next, requests[next].arrival, now)?;
+                dirty[shard] = true;
+                next += 1;
+            }
+            let depth: usize = self.shards.iter().map(|s| s.batcher.len()).sum();
+            max_depth = max_depth.max(depth);
+            self.settle(now, requests, &mut completions, &mut stolen, &mut dirty)?;
+        }
+        anyhow::ensure!(
+            completions.len() == requests.len(),
+            "sim lost work: {} of {} completed",
+            completions.len(),
+            requests.len()
+        );
+        let makespan = completions.iter().map(|c| c.done).max().unwrap_or(0);
+        completions.sort_by_key(|c| c.index);
+        Ok(SimReport { completions, makespan, max_depth, stolen_batches: stolen })
+    }
+
+    /// The pre-event-engine [`PoolSim::run`], retained verbatim (flush
+    /// times recomputed for every shard at every event) as the oracle
+    /// the engine-equivalence property tests pin `run` against.
+    pub fn run_reference(&mut self, requests: &[SimRequest]) -> Result<SimReport> {
+        anyhow::ensure!(
+            requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "open-loop trace must have nondecreasing arrivals"
+        );
+        let mut completions: Vec<SimCompletion> = Vec::with_capacity(requests.len());
+        let mut next = 0usize;
+        let mut now = 0u64;
+        let mut max_depth = 0usize;
+        let mut stolen = 0u64;
+        loop {
+            let ta = requests.get(next).map(|r| r.arrival);
+            let tf = (0..self.shards.len()).filter_map(|s| self.next_flush(s, now)).min();
+            now = match (ta, tf) {
+                (None, None) => break,
+                (Some(a), None) => a.max(now),
+                (None, Some(f)) => f.max(now),
+                (Some(a), Some(f)) => a.min(f).max(now),
+            };
+            while next < requests.len() && requests[next].arrival <= now {
                 self.place(next, requests[next].arrival, now)?;
                 next += 1;
             }
             let depth: usize = self.shards.iter().map(|s| s.batcher.len()).sum();
             max_depth = max_depth.max(depth);
-            self.settle(now, requests, &mut completions, &mut stolen)?;
+            self.settle_reference(now, requests, &mut completions, &mut stolen)?;
         }
         anyhow::ensure!(
             completions.len() == requests.len(),
@@ -723,6 +861,15 @@ impl PoolSim {
     /// so the same seed issues the same inputs under every scheme.
     /// Deterministic: same devices + policy + scripts ⇒ identical
     /// report. Completions are indexed in global issue order.
+    ///
+    /// Event-driven: eligible clients (not in flight, script not
+    /// exhausted) live in a min-heap keyed by fire cycle, so finding
+    /// the next arrival is `O(log clients)` instead of a full scan per
+    /// event — the difference between minutes and seconds at the
+    /// ROADMAP's 1000-client E11 scale. Due clients are popped and
+    /// fired in ascending client order, exactly the reference scan's
+    /// order. Bit-identical to [`PoolSim::run_closed_reference`]
+    /// (pinned by property tests).
     pub fn run_closed(&mut self, clients: &[ClientScript]) -> Result<SimReport> {
         anyhow::ensure!(!clients.is_empty(), "closed loop needs at least one client");
         let total: usize = clients.iter().map(|c| c.inputs.len()).sum();
@@ -749,7 +896,117 @@ impl PoolSim {
                 inflight: false,
             })
             .collect();
+        // a client is in the heap exactly while it is eligible: seeded
+        // here, popped when fired, re-pushed on completion (its fire
+        // cycle never changes while queued, so entries are never stale)
+        let mut eligible: BinaryHeap<Reverse<(u64, usize)>> = states
+            .iter()
+            .enumerate()
+            .filter(|(c, _)| !clients[*c].inputs.is_empty())
+            .map(|(c, st)| Reverse((st.fire, c)))
+            .collect();
         // the request log grows as clients fire; completions index it
+        let mut issued: Vec<SimRequest> = Vec::with_capacity(total);
+        let mut client_of: Vec<usize> = Vec::with_capacity(total);
+        let mut completions: Vec<SimCompletion> = Vec::with_capacity(total);
+        let mut done_seen = 0usize;
+        let mut now = 0u64;
+        let mut max_depth = 0usize;
+        let mut stolen = 0u64;
+        let n = self.shards.len();
+        let mut flush_at: Vec<Option<u64>> = vec![None; n];
+        let mut dirty = vec![true; n];
+        let mut due: Vec<usize> = Vec::new();
+        loop {
+            for s in 0..n {
+                if dirty[s] {
+                    flush_at[s] = self.next_flush(s, now);
+                    dirty[s] = false;
+                }
+            }
+            let ta = eligible.peek().map(|&Reverse((t, _))| t);
+            let tf = flush_at.iter().flatten().copied().min();
+            now = match (ta, tf) {
+                (None, None) => break,
+                (Some(a), None) => a.max(now),
+                (None, Some(f)) => f.max(now),
+                (Some(a), Some(f)) => a.min(f).max(now),
+            };
+            // fire every due client (ascending client order, matching
+            // the reference engine's index scan)
+            due.clear();
+            while let Some(&Reverse((t, c))) = eligible.peek() {
+                if t > now {
+                    break;
+                }
+                eligible.pop();
+                due.push(c);
+            }
+            due.sort_unstable();
+            for &c in &due {
+                let index = issued.len();
+                let arrival = states[c].fire;
+                let input = clients[c].inputs[states[c].next].clone();
+                issued.push(SimRequest { arrival, input });
+                client_of.push(c);
+                let shard = self.place(index, arrival, now)?;
+                dirty[shard] = true;
+                states[c].inflight = true;
+            }
+            let depth: usize = self.shards.iter().map(|s| s.batcher.len()).sum();
+            max_depth = max_depth.max(depth);
+            self.settle(now, &issued, &mut completions, &mut stolen, &mut dirty)?;
+            // completed requests release their clients into think time
+            while done_seen < completions.len() {
+                let comp = &completions[done_seen];
+                done_seen += 1;
+                let c = client_of[comp.index];
+                let st = &mut states[c];
+                st.inflight = false;
+                st.next += 1;
+                if st.next < clients[c].think.len() {
+                    st.fire = comp.done + clients[c].think[st.next];
+                    eligible.push(Reverse((st.fire, c)));
+                }
+            }
+        }
+        anyhow::ensure!(
+            completions.len() == total,
+            "closed loop lost work: {} of {total} completed",
+            completions.len()
+        );
+        let makespan = completions.iter().map(|c| c.done).max().unwrap_or(0);
+        completions.sort_by_key(|c| c.index);
+        Ok(SimReport { completions, makespan, max_depth, stolen_batches: stolen })
+    }
+
+    /// The pre-event-engine [`PoolSim::run_closed`], retained verbatim
+    /// (full client scan per event) as the oracle the engine-equivalence
+    /// property tests pin `run_closed` against.
+    pub fn run_closed_reference(&mut self, clients: &[ClientScript]) -> Result<SimReport> {
+        anyhow::ensure!(!clients.is_empty(), "closed loop needs at least one client");
+        let total: usize = clients.iter().map(|c| c.inputs.len()).sum();
+        for (i, c) in clients.iter().enumerate() {
+            anyhow::ensure!(
+                c.inputs.len() == c.think.len(),
+                "client {i}: {} inputs but {} think times",
+                c.inputs.len(),
+                c.think.len()
+            );
+        }
+        struct CState {
+            next: usize,
+            fire: u64,
+            inflight: bool,
+        }
+        let mut states: Vec<CState> = clients
+            .iter()
+            .map(|c| CState {
+                next: 0,
+                fire: c.think.first().copied().unwrap_or(0),
+                inflight: false,
+            })
+            .collect();
         let mut issued: Vec<SimRequest> = Vec::with_capacity(total);
         let mut client_of: Vec<usize> = Vec::with_capacity(total);
         let mut completions: Vec<SimCompletion> = Vec::with_capacity(total);
@@ -771,7 +1028,6 @@ impl PoolSim {
                 (None, Some(f)) => f.max(now),
                 (Some(a), Some(f)) => a.min(f).max(now),
             };
-            // fire every due client (index order: deterministic)
             for c in 0..clients.len() {
                 let st = &states[c];
                 if st.inflight || st.next >= clients[c].inputs.len() || st.fire > now {
@@ -787,8 +1043,7 @@ impl PoolSim {
             }
             let depth: usize = self.shards.iter().map(|s| s.batcher.len()).sum();
             max_depth = max_depth.max(depth);
-            self.settle(now, &issued, &mut completions, &mut stolen)?;
-            // completed requests release their clients into think time
+            self.settle_reference(now, &issued, &mut completions, &mut stolen)?;
             while done_seen < completions.len() {
                 let comp = &completions[done_seen];
                 done_seen += 1;

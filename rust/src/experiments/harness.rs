@@ -28,7 +28,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::{e10_serving, e11_slo, e12_systolic, e1_compression, e2_speedup, e3_energy};
-use super::{e4_quality, e5_bandwidth, e6_batching, e7_lcp, e8_ablation, e9_cache};
+use super::{e4_quality, e5_bandwidth, e6_batching, e7_lcp, e8_ablation, e9_cache, selfbench};
 
 /// What a job measures: a bench_suite kernel or a synthetic distribution.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -187,8 +187,26 @@ pub static EXPERIMENTS: [ExperimentSpec; 12] = [
     },
 ];
 
-/// Look an experiment up by id.
+/// The simulator self-benchmark (sim-cycles-per-wall-second on pinned
+/// workloads; see [`super::selfbench`]). Deliberately *not* part of
+/// [`EXPERIMENTS`]: its wall-clock columns are runner-dependent, so it
+/// never rides along in the default `--all` sweep whose payload must be
+/// bit-identical across machines. CI runs it as an explicit extra pass
+/// (`--experiment selfbench`, serially) for the throughput gate.
+pub static SELFBENCH: ExperimentSpec = ExperimentSpec {
+    id: "selfbench",
+    title: "simulator throughput (sim-cycles per wall-second)",
+    per_scheme: false, // probes pin their own schemes (cpack / none)
+    synthetics: false,
+    shared_seed_per_kernel: false,
+    sweeps_channel_policies: false,
+};
+
+/// Look an experiment up by id ("e1".."e12", or "selfbench").
 pub fn experiment(id: &str) -> Option<&'static ExperimentSpec> {
+    if id == SELFBENCH.id {
+        return Some(&SELFBENCH);
+    }
     EXPERIMENTS.iter().find(|e| e.id == id)
 }
 
@@ -293,7 +311,7 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
     let mut jobs = Vec::new();
     for id in &cfg.experiments {
         let spec = experiment(id)
-            .with_context(|| format!("unknown experiment {id:?} (expected e1..e12)"))?;
+            .with_context(|| format!("unknown experiment {id:?} (expected e1..e12 or selfbench)"))?;
         let schemes: Vec<&str> = if spec.per_scheme {
             cfg.schemes.iter().map(String::as_str).collect()
         } else {
@@ -535,6 +553,12 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
                 ),
             ])])
         }
+        ("selfbench", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let rows = selfbench::measure_all(w.as_ref(), &p, sc.invocations, seed)?;
+            Ok(rows.iter().map(selfbench::SelfbenchRow::to_json).collect())
+        }
         (id, target) => bail!("experiment {id} has no job for target {:?}", target),
     }
 }
@@ -698,6 +722,28 @@ mod tests {
         assert!(experiment("e11").unwrap().per_scheme);
         assert!(experiment("e12").unwrap().per_scheme);
         assert!(experiment("e13").is_none());
+    }
+
+    #[test]
+    fn selfbench_resolves_but_stays_out_of_the_default_sweep() {
+        let sb = experiment("selfbench").unwrap();
+        assert_eq!(sb.id, "selfbench");
+        assert!(!sb.per_scheme);
+        // wall-clock columns are runner-dependent, so the bit-identical
+        // default report must never include it implicitly
+        assert!(!HarnessConfig::default().experiments.iter().any(|e| e == "selfbench"));
+        assert!(!EXPERIMENTS.iter().any(|e| e.id == "selfbench"));
+
+        let cfg = HarnessConfig {
+            experiments: vec!["selfbench".into()],
+            benchmarks: vec!["sobel".into(), "fft".into()],
+            ..tiny_cfg()
+        };
+        let jobs = build_jobs(&cfg).unwrap();
+        assert_eq!(jobs.len(), 2, "one job per kernel, no scheme fan-out");
+        assert_eq!(jobs[0].label, "selfbench/sobel");
+        assert_eq!(jobs[1].label, "selfbench/fft");
+        assert_ne!(jobs[0].scenario.seed, jobs[1].scenario.seed);
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub mod e7_lcp;
 pub mod e8_ablation;
 pub mod e9_cache;
 pub mod harness;
+pub mod selfbench;
 
 pub use harness::{HarnessConfig, HarnessReport};
 

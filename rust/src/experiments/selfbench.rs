@@ -1,0 +1,291 @@
+//! Selfbench — the simulator measuring its own throughput.
+//!
+//! Every other experiment reports *simulated* cycles, which are
+//! bit-identical across machines; this one reports how many of those
+//! cycles the simulator retires per wall-clock second
+//! (`sim_cycles_per_wall_sec`) on a pinned workload, so throughput
+//! regressions in the simulator itself become a first-class CI metric
+//! alongside p99 (see `scripts/bench_trend.py`). Each component probes
+//! one of the PR-6 hot paths:
+//!
+//! * `grid_build_uncached` — [`GridSim::new_uncached`]: the full
+//!   tile + recompression cost of a grid construction (the baseline the
+//!   fill cache removes),
+//! * `grid_build_memo` — [`GridSim::new`] through the process-global
+//!   [`crate::systolic::fill_cache`] (first build misses, the rest hit),
+//! * `grid_forward` — the batched functional pass,
+//! * `pool_open` — [`PoolSim::run`]'s event engine over a seeded
+//!   open-loop trace,
+//! * `pool_closed` — [`PoolSim::run_closed`]'s client heap.
+//!
+//! Structure (components, iteration counts, `sim_cycles`) is
+//! deterministic per (workload, invocations, seed); only `wall_ms` and
+//! the derived rate vary run to run. The report separates them so the
+//! perf gate can treat `sim_cycles` as exact and apply a noise floor to
+//! the wall-clock rate.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::bench_suite::Workload;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::pool::PoolSim;
+use crate::npu::{NpuConfig, NpuDevice, NpuProgram};
+use crate::systolic::{fill_cache, GridConfig, GridSim};
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Build-probe compression scheme: the heaviest compressor, so the
+/// cache's win is visible.
+const BUILD_SCHEME: &str = "cpack";
+/// Pool probes: shard count and batching knobs (pinned).
+const POOL_SHARDS: usize = 4;
+const POOL_BATCH: usize = 8;
+const POOL_WAIT_CYCLES: u64 = 500;
+const CLOSED_THINK: f64 = 200.0;
+
+/// One measured component.
+#[derive(Debug, Clone)]
+pub struct SelfbenchRow {
+    pub workload: String,
+    pub component: String,
+    /// Repetitions (builds, forward passes, requests) — deterministic.
+    pub iters: u64,
+    /// Simulated cycles covered by the component — deterministic.
+    pub sim_cycles: u64,
+    /// Wall-clock of the component (nondeterministic; runner-dependent).
+    pub wall_ms: f64,
+    /// The headline throughput metric: `sim_cycles / wall_seconds`.
+    pub sim_cycles_per_wall_sec: f64,
+    /// Fill-cache hit share during the component (process-lifetime
+    /// delta; informational).
+    pub fill_cache_hit_share: f64,
+}
+
+impl SelfbenchRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("component", self.component.clone().into()),
+            ("iters", (self.iters as usize).into()),
+            ("sim_cycles", self.sim_cycles.into()),
+            ("wall_ms", self.wall_ms.into()),
+            ("sim_cycles_per_wall_sec", self.sim_cycles_per_wall_sec.into()),
+            ("fill_cache_hit_share", self.fill_cache_hit_share.into()),
+        ])
+    }
+}
+
+fn row(
+    workload: &str,
+    component: &str,
+    iters: u64,
+    sim_cycles: u64,
+    f: impl FnOnce(),
+) -> SelfbenchRow {
+    let cache_before = fill_cache::stats();
+    let t0 = Instant::now();
+    f();
+    let wall = t0.elapsed();
+    let cache_after = fill_cache::stats();
+    let lookups = (cache_after.hits + cache_after.misses)
+        .saturating_sub(cache_before.hits + cache_before.misses);
+    let hit_share = if lookups == 0 {
+        0.0
+    } else {
+        cache_after.hits.saturating_sub(cache_before.hits) as f64 / lookups as f64
+    };
+    let wall_sec = wall.as_secs_f64().max(1e-9);
+    SelfbenchRow {
+        workload: workload.to_string(),
+        component: component.to_string(),
+        iters,
+        sim_cycles,
+        wall_ms: wall.as_secs_f64() * 1e3,
+        sim_cycles_per_wall_sec: sim_cycles as f64 / wall_sec,
+        fill_cache_hit_share: hit_share,
+    }
+}
+
+/// All components for one workload. `invocations` is the repeat/scale
+/// knob (the harness's `--invocations`); structure is deterministic per
+/// (workload, invocations, seed).
+pub fn measure_all(
+    w: &dyn Workload,
+    program: &NpuProgram,
+    invocations: usize,
+    seed: u64,
+) -> Result<Vec<SelfbenchRow>> {
+    let r = invocations.clamp(1, 512) as u64;
+    let name = w.name();
+    let grid_cfg = GridConfig::default();
+    let mut rows = Vec::new();
+
+    // --- grid construction: uncached (recompress everything) vs memo ---
+    let builds = 2 * r;
+    let probe = GridSim::new_uncached(program.clone(), grid_cfg, BUILD_SCHEME)?;
+    let fill = probe.batch_timing(1).fill_cycles;
+    rows.push(row(name, "grid_build_uncached", builds, fill * builds, || {
+        for _ in 0..builds {
+            let g = GridSim::new_uncached(program.clone(), grid_cfg, BUILD_SCHEME)
+                .expect("probed above");
+            std::hint::black_box(&g);
+        }
+    }));
+    rows.push(row(name, "grid_build_memo", builds, fill * builds, || {
+        for _ in 0..builds {
+            let g = GridSim::new(program.clone(), grid_cfg, BUILD_SCHEME).expect("probed above");
+            std::hint::black_box(&g);
+        }
+    }));
+
+    // --- the batched functional pass ---
+    let passes = 32 * r;
+    let mut grid = GridSim::new(program.clone(), grid_cfg, "none")?;
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let inputs: Vec<Vec<f32>> = (0..16).map(|_| w.gen_input(&mut rng)).collect();
+    let forward_cycles = grid.batch_cycles(passes);
+    rows.push(row(name, "grid_forward", passes, forward_cycles, || {
+        for k in 0..passes {
+            let out = grid.forward_f32(&inputs[(k % 16) as usize]);
+            std::hint::black_box(&out);
+        }
+    }));
+
+    // --- the serving engines (schedule-model devices: the pool's own
+    // event loop is what this component times) ---
+    let policy = BatchPolicy {
+        max_batch: POOL_BATCH,
+        max_wait: Duration::from_micros(POOL_WAIT_CYCLES),
+        queue_cap: 1 << 16,
+    };
+    let open_requests = 32 * r;
+    let trace = super::e10_serving::gen_trace(
+        w,
+        program,
+        open_requests as usize,
+        POOL_BATCH,
+        seed,
+    );
+    let devices: Result<Vec<NpuDevice>> = (0..POOL_SHARDS)
+        .map(|_| NpuDevice::new(NpuConfig::default(), program.clone()))
+        .collect();
+    let mut pool = PoolSim::new(devices?, policy)?;
+    let mut open_cycles = 0u64;
+    rows.push(row(name, "pool_open", open_requests, 0, || {
+        let report = pool.run(&trace).expect("selfbench open-loop run");
+        open_cycles = report.makespan;
+    }));
+    if let Some(last) = rows.last_mut() {
+        last.sim_cycles = open_cycles;
+        last.sim_cycles_per_wall_sec =
+            open_cycles as f64 / (last.wall_ms / 1e3).max(1e-9);
+    }
+
+    let clients = (2 * r) as usize;
+    let scripts = super::e11_slo::gen_scripts(w, clients, 8, CLOSED_THINK, seed);
+    let devices: Result<Vec<NpuDevice>> = (0..POOL_SHARDS)
+        .map(|_| NpuDevice::new(NpuConfig::default(), program.clone()))
+        .collect();
+    let mut pool = PoolSim::new(devices?, policy)?;
+    let mut closed_cycles = 0u64;
+    rows.push(row(name, "pool_closed", (clients * 8) as u64, 0, || {
+        let report = pool.run_closed(&scripts).expect("selfbench closed-loop run");
+        closed_cycles = report.makespan;
+    }));
+    if let Some(last) = rows.last_mut() {
+        last.sim_cycles = closed_cycles;
+        last.sim_cycles_per_wall_sec =
+            closed_cycles as f64 / (last.wall_ms / 1e3).max(1e-9);
+    }
+
+    Ok(rows)
+}
+
+pub fn print_table(rows: &[SelfbenchRow]) {
+    let mut t = Table::new(&[
+        "workload",
+        "component",
+        "iters",
+        "sim(cyc)",
+        "wall(ms)",
+        "sim-cyc/s",
+        "fill-hit",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.workload.clone(),
+            r.component.clone(),
+            format!("{}", r.iters),
+            format!("{}", r.sim_cycles),
+            format!("{:.2}", r.wall_ms),
+            format!("{:.3e}", r.sim_cycles_per_wall_sec),
+            format!("{:4.0}%", r.fill_cache_hit_share * 100.0),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::workload;
+    use crate::fixed::Q7_8;
+
+    #[test]
+    fn report_structure_is_deterministic() {
+        let w = workload("sobel").unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+        let a = measure_all(w.as_ref(), &p, 2, 7).unwrap();
+        let b = measure_all(w.as_ref(), &p, 2, 7).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            // everything except wall time and derived rate is pinned
+            assert_eq!(x.workload, y.workload);
+            assert_eq!(x.component, y.component);
+            assert_eq!(x.iters, y.iters);
+            assert_eq!(x.sim_cycles, y.sim_cycles, "{}", x.component);
+        }
+        let components: Vec<&str> = a.iter().map(|r| r.component.as_str()).collect();
+        assert_eq!(
+            components,
+            ["grid_build_uncached", "grid_build_memo", "grid_forward", "pool_open", "pool_closed"]
+        );
+        for r in &a {
+            assert!(r.sim_cycles > 0, "{} covers simulated work", r.component);
+            assert!(r.sim_cycles_per_wall_sec > 0.0);
+            let j = Json::parse(&r.to_json().dump()).unwrap();
+            for field in ["component", "sim_cycles", "wall_ms", "sim_cycles_per_wall_sec"] {
+                assert!(j.get(field).is_some(), "missing {field}");
+            }
+        }
+    }
+
+    // NB: the fill-cache counters (and hence the rows' hit-share
+    // column) are process-global, and other unit tests build grids
+    // concurrently — so assert only on monotone deltas that concurrent
+    // lookups cannot undo, over a program unique to this test.
+    #[test]
+    fn memo_build_hits_the_fill_cache() {
+        let w = workload("fft").unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 2);
+        let before = fill_cache::stats();
+        let rows = measure_all(w.as_ref(), &p, 2, 9).unwrap();
+        let after = fill_cache::stats();
+        // builds = 4 in the memo component: the first populates the
+        // cache for this (program, scheme), the other 3 must hit it
+        assert!(
+            after.hits >= before.hits + 3,
+            "memoized rebuilds must be served by the fill cache ({} -> {})",
+            before.hits,
+            after.hits
+        );
+        let memo = rows.iter().find(|r| r.component == "grid_build_memo").unwrap();
+        assert!(
+            memo.fill_cache_hit_share > 0.0,
+            "the memo component's own hits make its observed share positive"
+        );
+    }
+}

@@ -35,6 +35,7 @@ use snnap_c::mem::{ArbiterPolicy, ChannelHub, DramChannel, SharedChannel};
 use snnap_c::npu::{NpuDevice, NpuProgram};
 use snnap_c::runtime::{Manifest, NpuExecutor};
 use snnap_c::trace::Trace;
+use snnap_c::util::bench::Table;
 use snnap_c::util::rng::Rng;
 
 const HELP: &str = "snnapc — systolic NPU + compressed cache/memory hierarchy (see README.md)
@@ -81,6 +82,15 @@ COMMANDS:
   run-bench                 print experiment tables (serial)
     --experiment e1..e12|all which experiment (default all)
     --invocations N         stream length knob (default 256)
+  selfbench                 simulator throughput self-benchmark (serial):
+                            sim-cycles-per-wall-second per hot path
+                            (grid build uncached/memoized, batched
+                            forward, open/closed-loop pool engines)
+    --benchmarks LIST       kernels to probe (default sobel,fft)
+    --invocations N         scale knob (default 8)
+    --seed N                base RNG seed (default 42)
+    --out FILE              also write the harness-format JSON report
+                            (feed to scripts/bench_trend.py)
   compress-file FILE        per-scheme report for a file
   trace                     dump a benchmark's NPU streams
     --benchmark NAME        workload (default sobel)
@@ -329,6 +339,79 @@ fn cmd_experiments(cfg: &Config, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The simulator benchmarking itself: `ex::selfbench` components run
+/// serially (wall-clock IS the measurement — worker contention would
+/// poison it) through the same harness path CI's throughput gate uses,
+/// so the table here and the JSON the gate reads are one measurement.
+fn cmd_selfbench(cfg: &Config, args: &Args) -> Result<()> {
+    let mut hc = ex::HarnessConfig {
+        experiments: vec!["selfbench".into()],
+        benchmarks: vec!["sobel".into(), "fft".into()],
+        qformat: cfg.qformat,
+        npu: cfg.npu,
+        jobs: 1,
+        invocations: 8,
+        ..Default::default()
+    };
+    if let Some(benchmarks) = args.opt_csv("benchmarks") {
+        hc.benchmarks = benchmarks;
+    }
+    hc.invocations = opt_positive(args, "invocations", hc.invocations)?;
+    hc.seed = args.opt_parse("seed", hc.seed)?;
+
+    let report = ex::harness::run(&hc)?;
+    if report.failed_jobs > 0 {
+        bail!("{} of {} selfbench jobs failed", report.failed_jobs, report.total_jobs);
+    }
+
+    let mut t = Table::new(&[
+        "workload",
+        "component",
+        "iters",
+        "sim(cyc)",
+        "wall(ms)",
+        "sim-cyc/s",
+        "fill-hit",
+    ]);
+    let cells = report
+        .json
+        .get("experiments")
+        .and_then(|e| e.get("selfbench"))
+        .and_then(|s| s.as_arr())
+        .context("selfbench results missing from report")?;
+    for cell in cells {
+        for row in cell.get("rows").and_then(|r| r.as_arr()).into_iter().flatten() {
+            let s = |k: &str| row.get(k).and_then(|v| v.as_str()).unwrap_or("?").to_string();
+            let f = |k: &str| row.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+            t.row(&[
+                s("workload"),
+                s("component"),
+                format!("{}", f("iters") as u64),
+                format!("{}", f("sim_cycles") as u64),
+                format!("{:.2}", f("wall_ms")),
+                format!("{:.3e}", f("sim_cycles_per_wall_sec")),
+                format!("{:4.0}%", f("fill_cache_hit_share") * 100.0),
+            ]);
+        }
+    }
+    t.print();
+    let fc = snnap_c::systolic::fill_cache::stats();
+    println!(
+        "fill cache: {} hits / {} misses ({} entries, {:.0}% hit rate)",
+        fc.hits,
+        fc.misses,
+        snnap_c::systolic::fill_cache::len(),
+        fc.hit_rate() * 100.0
+    );
+
+    if let Some(out) = args.opt("out") {
+        std::fs::write(out, report.json.dump() + "\n")
+            .with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
 fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
     let which = args.opt("experiment").unwrap_or("all");
     let invocations = opt_positive(args, "invocations", 256)?;
@@ -464,6 +547,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&cfg, &args),
         "experiments" => cmd_experiments(&cfg, &args),
         "run-bench" => cmd_run_bench(&cfg, &args),
+        "selfbench" => cmd_selfbench(&cfg, &args),
         "compress-file" => cmd_compress_file(&args),
         "trace" => cmd_trace(&cfg, &args),
         "config" => {

@@ -11,6 +11,8 @@
 //! Compute and transfer overlap through the input/output FIFOs, so batch
 //! wall-clock = sync + max(compute, transfers) with a fill bubble.
 
+use std::collections::HashMap;
+
 use anyhow::{bail, Result};
 
 use crate::compress::LINE_BYTES;
@@ -114,6 +116,11 @@ pub struct NpuDevice {
     /// Lines in the DMA-loaded weight region (cached at attach time so
     /// the per-batch reload loop doesn't re-serialize the weights).
     mem_weight_lines: usize,
+    /// Per-batch-size compute-cycle memo for the grid timing model.
+    /// Grid batch timing is data-independent (a pure function of the
+    /// precomputed plans and `n`), so pricing each batch size once is
+    /// exact; cleared whenever `with_weight_scheme` rebuilds the plans.
+    grid_cycles_memo: HashMap<u64, u64>,
     /// Total invocations served.
     pub invocations: u64,
     /// Total batches served.
@@ -137,6 +144,7 @@ impl NpuDevice {
             acp: Channel::new(cfg.acp),
             mem: None,
             mem_weight_lines: 0,
+            grid_cycles_memo: HashMap::new(),
             invocations: 0,
             batches: 0,
         })
@@ -164,6 +172,7 @@ impl NpuDevice {
         if self.cfg.model == TimingModel::Grid {
             let program = self.program().clone();
             self.grids = Self::build_grids(&program, &self.cfg, scheme)?;
+            self.grid_cycles_memo.clear();
         }
         self.weight_scheme = scheme.to_string();
         Ok(self)
@@ -188,12 +197,28 @@ impl NpuDevice {
     }
 
     /// Compute cycles for `n` invocations on one PU under the active
-    /// timing model.
+    /// timing model (always computed fresh).
     fn pu_batch_cycles(&self, n: u64) -> u64 {
         match self.cfg.model {
             TimingModel::Schedule => self.pus[0].batch_cycles(n),
             TimingModel::Grid => self.grids[0].batch_cycles(n),
         }
+    }
+
+    /// [`NpuDevice::pu_batch_cycles`] through the per-device memo: grid
+    /// timing walks every tile of every layer per call, and a serving
+    /// pool prices the same few batch sizes millions of times. The
+    /// schedule model is closed-form and stays unmemoized.
+    fn pu_batch_cycles_cached(&mut self, n: u64) -> u64 {
+        if self.cfg.model == TimingModel::Grid {
+            if let Some(&c) = self.grid_cycles_memo.get(&n) {
+                return c;
+            }
+            let c = self.grids[0].batch_cycles(n);
+            self.grid_cycles_memo.insert(n, c);
+            return c;
+        }
+        self.pu_batch_cycles(n)
     }
 
     /// Attach a memory hierarchy for the weight + queue traffic
@@ -324,7 +349,7 @@ impl NpuDevice {
 
         // compute makespan: ceil-split of n across PUs
         let per_pu = n.div_ceil(self.cfg.pu_count as u64);
-        let compute_cycles = if n == 0 { 0 } else { self.pu_batch_cycles(per_pu) };
+        let compute_cycles = if n == 0 { 0 } else { self.pu_batch_cycles_cached(per_pu) };
 
         let total = if self.cfg.overlap {
             self.cfg.sync_cycles + compute_cycles.max(transfer_in_npu)
@@ -518,6 +543,26 @@ mod tests {
             .unwrap()
             .with_weight_scheme("zstd")
             .is_err());
+    }
+
+    #[test]
+    fn grid_cycle_memo_is_exact_and_cleared_on_scheme_change() {
+        let mut d = NpuDevice::new(
+            NpuConfig { model: TimingModel::Grid, ..Default::default() },
+            program(),
+        )
+        .unwrap();
+        let inputs = vec![vec![0.1; 9]; 24];
+        let per_pu = 24u64.div_ceil(d.cfg.pu_count as u64);
+        let first = d.execute_batch(&inputs).unwrap().compute_cycles;
+        assert_eq!(first, d.pu_batch_cycles(per_pu), "memo == fresh computation");
+        let again = d.execute_batch(&inputs).unwrap().compute_cycles;
+        assert_eq!(first, again, "memoized batch price is stable");
+        // the memo must not survive a plan rebuild
+        let mut d = d.with_weight_scheme("bdi+fpc").unwrap();
+        let rebuilt = d.execute_batch(&inputs).unwrap().compute_cycles;
+        assert_eq!(rebuilt, d.pu_batch_cycles(per_pu), "memo repriced after rebuild");
+        assert!(rebuilt <= first, "compression never lengthens a decode-bound fill");
     }
 
     #[test]

@@ -10,13 +10,18 @@
 //! turns compression ratios into shorter weight-fill phases instead of
 //! only fewer DRAM bytes.
 
-use crate::compress::{compress_stream, Compressor, NoCompression, LINE_BYTES};
+use std::sync::Arc;
+
+use crate::compress::{Compressor, LINE_BYTES};
+
+use super::fill_cache;
 
 /// Per-line decode schedule for one raw weight stream.
 #[derive(Debug, Clone)]
 pub struct EdgeDecompressor {
-    /// Cumulative compressed bytes after each 64-byte raw line.
-    cum_compressed: Vec<usize>,
+    /// Cumulative compressed bytes after each 64-byte raw line. `Arc`
+    /// so schedules memoized by [`fill_cache`] are shared, not copied.
+    cum_compressed: fill_cache::LineSchedule,
     raw_len: usize,
     rate: usize,
 }
@@ -25,17 +30,33 @@ impl EdgeDecompressor {
     /// Build the decode schedule for `raw` under `scheme` (`None` =
     /// uncompressed lines, 64 bytes each on the wire). `rate` is the
     /// compressed-bytes/cycle decode throughput and must be positive.
+    /// Always recompresses — the uncached oracle path; hot callers use
+    /// [`EdgeDecompressor::new_cached`].
     pub fn new(raw: &[u8], scheme: Option<&dyn Compressor>, rate: usize) -> Self {
         assert!(rate > 0, "decode rate must be positive");
-        let none = NoCompression;
-        let c: &dyn Compressor = scheme.unwrap_or(&none);
-        let mut cum = Vec::with_capacity(raw.len().div_ceil(LINE_BYTES));
-        let mut total = 0usize;
-        for line in compress_stream(c, raw) {
-            total += line.size_bytes();
-            cum.push(total);
+        EdgeDecompressor {
+            cum_compressed: Arc::new(fill_cache::compute_schedule(scheme, raw)),
+            raw_len: raw.len(),
+            rate,
         }
-        EdgeDecompressor { cum_compressed: cum, raw_len: raw.len(), rate }
+    }
+
+    /// [`EdgeDecompressor::new`] through the process-global
+    /// [`fill_cache`]: the schedule for one `(scheme, raw)` pair is
+    /// compressed once and shared thereafter. Bit-identical to the
+    /// uncached constructor by construction (exact-byte keying).
+    pub fn new_cached(
+        raw: &[u8],
+        scheme_name: &str,
+        scheme: Option<&dyn Compressor>,
+        rate: usize,
+    ) -> Self {
+        assert!(rate > 0, "decode rate must be positive");
+        EdgeDecompressor {
+            cum_compressed: fill_cache::line_schedule(scheme_name, scheme, raw),
+            raw_len: raw.len(),
+            rate,
+        }
     }
 
     /// Total compressed bytes on the wire (what a weight fill moves
@@ -127,5 +148,28 @@ mod tests {
         let d = EdgeDecompressor::new(&[], None, 4);
         assert_eq!(d.compressed_bytes(), 0);
         assert_eq!(d.total_cycles(), 0);
+    }
+
+    #[test]
+    fn cached_constructor_is_bit_identical_to_uncached() {
+        let mut raw = Vec::new();
+        for i in 0..400i16 {
+            raw.extend_from_slice(&((i % 31) - 15).to_le_bytes());
+        }
+        let h = Hybrid::default();
+        for (name, scheme) in [("none", None), ("bdi+fpc", Some(&h as &dyn Compressor))] {
+            for rate in [1usize, 2, 8] {
+                let plain = EdgeDecompressor::new(&raw, scheme, rate);
+                let cached = EdgeDecompressor::new_cached(&raw, name, scheme, rate);
+                assert_eq!(plain.compressed_bytes(), cached.compressed_bytes());
+                for n in 0..=raw.len() {
+                    assert_eq!(
+                        plain.cycles_for_raw_prefix(n),
+                        cached.cycles_for_raw_prefix(n),
+                        "{name} rate {rate} prefix {n}"
+                    );
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,140 @@
+//! Process-global memo cache for array-edge weight-fill schedules.
+//!
+//! A weight fill's decode schedule depends only on the compression
+//! scheme and the exact raw bytes of the tile stream — never on the
+//! request, batch, or shard — yet every [`super::GridSim`] construction
+//! (device builds, `with_weight_scheme` rebuilds, pool shards, sweep
+//! cells) used to recompress every tile stream from scratch. This cache
+//! keys the per-line cumulative compressed-byte schedule by
+//! `(scheme name, raw bytes)`. The key is the *exact* input of
+//! [`compress_stream`], so a hit is bit-identical to recomputation by
+//! construction: memoization cannot change an observable number, only
+//! the wall-clock cost of reaching it.
+//!
+//! Hit/miss counters are process-lifetime and monotone (tests and the
+//! selfbench read deltas, since the cache is shared across threads).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::compress::{compress_stream, Compressor, NoCompression, LINE_BYTES};
+
+/// Cumulative compressed bytes after each 64-byte raw line — the whole
+/// timing state of an [`super::EdgeDecompressor`], shared on hits.
+pub type LineSchedule = Arc<Vec<usize>>;
+
+static CACHE: OnceLock<Mutex<HashMap<(String, Vec<u8>), LineSchedule>>> = OnceLock::new();
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Compute a schedule with no caching — the oracle path the equivalence
+/// tests pin [`line_schedule`] against, and the miss path's worker.
+pub fn compute_schedule(scheme: Option<&dyn Compressor>, raw: &[u8]) -> Vec<usize> {
+    let none = NoCompression;
+    let c: &dyn Compressor = scheme.unwrap_or(&none);
+    let mut cum = Vec::with_capacity(raw.len().div_ceil(LINE_BYTES));
+    let mut total = 0usize;
+    for line in compress_stream(c, raw) {
+        total += line.size_bytes();
+        cum.push(total);
+    }
+    cum
+}
+
+/// The memoized schedule for `(scheme_name, raw)`. On a miss the
+/// schedule is computed *outside* the lock (compression is the
+/// expensive part, and serializing it would stall parallel harness
+/// jobs); a racing duplicate computation is benign — both produce
+/// identical bytes and one insert wins.
+pub fn line_schedule(
+    scheme_name: &str,
+    scheme: Option<&dyn Compressor>,
+    raw: &[u8],
+) -> LineSchedule {
+    let cache = CACHE.get_or_init(Mutex::default);
+    let key = (scheme_name.to_string(), raw.to_vec());
+    if let Some(hit) = cache.lock().unwrap().get(&key) {
+        HITS.fetch_add(1, Ordering::Relaxed);
+        return hit.clone();
+    }
+    MISSES.fetch_add(1, Ordering::Relaxed);
+    let schedule: LineSchedule = Arc::new(compute_schedule(scheme, raw));
+    cache.lock().unwrap().entry(key).or_insert(schedule).clone()
+}
+
+/// Lifetime hit/miss counters of the fill cache.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FillCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl FillCacheStats {
+    /// Lookups that were answered without recompressing.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Snapshot of the process-lifetime counters.
+pub fn stats() -> FillCacheStats {
+    FillCacheStats {
+        hits: HITS.load(Ordering::Relaxed),
+        misses: MISSES.load(Ordering::Relaxed),
+    }
+}
+
+/// Cached entries right now (tests; the cache itself is unbounded —
+/// distinct (scheme, tile-stream) pairs number in the low thousands for
+/// a full harness run).
+pub fn len() -> usize {
+    CACHE.get_or_init(Mutex::default).lock().unwrap().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Hybrid;
+
+    // NB: the cache and its counters are process-global and other tests
+    // build grids concurrently, so assertions are delta-based on keys
+    // unique to this module.
+
+    #[test]
+    fn hit_returns_the_identical_schedule_and_counts() {
+        let raw: Vec<u8> = (0..300u32).map(|i| (i % 47) as u8).collect();
+        let h = Hybrid::default();
+        let before = stats();
+        let a = line_schedule("fill-cache-test-hybrid", Some(&h), &raw);
+        let mid = stats();
+        assert!(mid.misses > before.misses, "first lookup must miss");
+        let b = line_schedule("fill-cache-test-hybrid", Some(&h), &raw);
+        let after = stats();
+        assert!(after.hits > mid.hits, "second lookup must hit");
+        assert!(Arc::ptr_eq(&a, &b), "hits share the cached schedule");
+        assert_eq!(*a, compute_schedule(Some(&h), &raw), "cached == recomputed");
+        assert!(after.hit_rate() > 0.0 && after.hit_rate() < 1.0);
+    }
+
+    #[test]
+    fn scheme_name_is_part_of_the_key() {
+        let raw = vec![0x5Au8; 192];
+        let h = Hybrid::default();
+        let none = line_schedule("fill-cache-test-none", None, &raw);
+        let hyb = line_schedule("fill-cache-test-hybrid-2", Some(&h), &raw);
+        assert_eq!(none.len(), hyb.len(), "same line count");
+        assert_ne!(*none, *hyb, "schemes produce distinct schedules for these bytes");
+    }
+
+    #[test]
+    fn empty_stream_is_an_empty_schedule() {
+        assert!(line_schedule("fill-cache-test-empty", None, &[]).is_empty());
+        assert_eq!(FillCacheStats::default().hit_rate(), 0.0);
+    }
+}

@@ -68,6 +68,20 @@ struct LayerPlan {
     col_tile_widths: Vec<usize>,
 }
 
+/// Precomputed per-layer structures for the batched functional pass:
+/// each output column's weights made contiguous, and its zero weights
+/// indexed so gating is counted without touching every PE.
+#[derive(Debug, Clone)]
+struct LayerEval {
+    /// Weights transposed to column-major: `wcol[c * n_in + r]` — one
+    /// contiguous slice per (column, tile) instead of an `n_out`-strided
+    /// walk.
+    wcol: Vec<i32>,
+    /// Per output column, the rows with a zero weight, ascending (so a
+    /// tile's zero-weight count is two binary searches).
+    zero_rows: Vec<Vec<u32>>,
+}
+
 /// Cycle breakdown of one batch through the grid.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct BatchTiming {
@@ -121,13 +135,28 @@ pub struct GridSim {
     scheme_name: String,
     lut: SigmoidLut,
     plans: Vec<LayerPlan>,
+    evals: Vec<LayerEval>,
     counters: GridCounters,
 }
 
 impl GridSim {
     /// Build the grid for `program` with the weight stream compressed
-    /// under `scheme` (`"none"` = raw 64-byte lines at the edge).
+    /// under `scheme` (`"none"` = raw 64-byte lines at the edge). Fill
+    /// schedules go through the process-global
+    /// [`super::fill_cache`] — bit-identical to recompressing, pinned
+    /// by [`GridSim::new_uncached`]-based property tests.
     pub fn new(program: NpuProgram, cfg: GridConfig, scheme: &str) -> Result<Self> {
+        Self::build(program, cfg, scheme, true)
+    }
+
+    /// [`GridSim::new`] bypassing the fill cache — every tile stream is
+    /// recompressed from scratch. The oracle for the memoization
+    /// equivalence tests and the selfbench's compression-cost probe.
+    pub fn new_uncached(program: NpuProgram, cfg: GridConfig, scheme: &str) -> Result<Self> {
+        Self::build(program, cfg, scheme, false)
+    }
+
+    fn build(program: NpuProgram, cfg: GridConfig, scheme: &str, cached: bool) -> Result<Self> {
         ensure!(cfg.rows > 0 && cfg.cols > 0, "grid rows and cols must be positive");
         ensure!(cfg.decode_bytes_per_cycle > 0, "grid decode rate must be positive");
         let compressor = scheme_by_name(scheme)?;
@@ -153,11 +182,20 @@ impl GridSim {
                         }
                     }
                     let stream = fmt.pack_bytes(&raw);
-                    let dec = EdgeDecompressor::new(
-                        &stream,
-                        compressor.as_deref(),
-                        cfg.decode_bytes_per_cycle,
-                    );
+                    let dec = if cached {
+                        EdgeDecompressor::new_cached(
+                            &stream,
+                            scheme,
+                            compressor.as_deref(),
+                            cfg.decode_bytes_per_cycle,
+                        )
+                    } else {
+                        EdgeDecompressor::new(
+                            &stream,
+                            compressor.as_deref(),
+                            cfg.decode_bytes_per_cycle,
+                        )
+                    };
                     let mut end = 0u64;
                     for c in 0..tc {
                         let available = dec.cycles_for_raw_prefix((c + 1) * tr * eb);
@@ -178,6 +216,25 @@ impl GridSim {
             }
             plans.push(LayerPlan { tiles, col_tile_widths });
         }
+        let evals = program
+            .layers
+            .iter()
+            .map(|layer| {
+                let (n_in, n_out) = (layer.n_in, layer.n_out);
+                let mut wcol = vec![0i32; n_in * n_out];
+                let mut zero_rows: Vec<Vec<u32>> = vec![Vec::new(); n_out];
+                for c in 0..n_out {
+                    for r in 0..n_in {
+                        let w = layer.weights[r * n_out + c];
+                        wcol[c * n_in + r] = w;
+                        if w == 0 {
+                            zero_rows[c].push(r as u32);
+                        }
+                    }
+                }
+                LayerEval { wcol, zero_rows }
+            })
+            .collect();
         let lut = SigmoidLut::snnap(fmt);
         Ok(GridSim {
             program,
@@ -185,6 +242,7 @@ impl GridSim {
             scheme_name: scheme.to_string(),
             lut,
             plans,
+            evals,
             counters: GridCounters::default(),
         })
     }
@@ -251,9 +309,66 @@ impl GridSim {
 
     /// Bit-exact fixed-point forward pass — the identical arithmetic to
     /// [`crate::npu::PuSim::forward_fixed`] (64-bit MAC accumulation is
-    /// order-independent, the reduction and activation unit are shared),
-    /// walked tile by tile so the per-PE gating counters are exact.
+    /// order-independent, the reduction and activation unit are shared).
+    ///
+    /// Batched evaluation: each (tile, column) is one pass over a
+    /// contiguous column-major weight slice, skipping zero activations
+    /// (a zero activation contributes an exact `0` product, and i64
+    /// addition is associative and commutative, so dropping those terms
+    /// and accumulating the tile's partial sum separately is bit-exact
+    /// against the scalar reference). Gated-MAC slots come from
+    /// inclusion–exclusion — `|a==0| + |w==0| − |both|` over the tile's
+    /// row range, with the zero weights presorted per column — so the
+    /// counters are exactly [`GridSim::forward_fixed_naive`]'s without
+    /// testing every PE. Pinned by equivalence property tests.
     pub fn forward_fixed(&mut self, input: &[i32]) -> Vec<i32> {
+        assert_eq!(input.len(), self.program.input_dim(), "input arity");
+        let fmt = self.program.fmt;
+        let mut act = input.to_vec();
+        for ((layer, plan), eval) in
+            self.program.layers.iter().zip(&self.plans).zip(&self.evals)
+        {
+            let n_in = layer.n_in;
+            let mut acc: Vec<i64> = layer
+                .biases
+                .iter()
+                .map(|&b| i64::from(b) << fmt.frac_bits)
+                .collect();
+            for tile in &plan.tiles {
+                let rows = &act[tile.row0..tile.row0 + tile.rows];
+                // shared by every column of the tile
+                let zero_act = rows.iter().filter(|&&a| a == 0).count() as u64;
+                for c in tile.col0..tile.col0 + tile.cols {
+                    let base = c * n_in + tile.row0;
+                    let col = &eval.wcol[base..base + tile.rows];
+                    let mut sum = 0i64;
+                    for (&a, &w) in rows.iter().zip(col) {
+                        if a != 0 {
+                            sum += i64::from(a) * i64::from(w);
+                        }
+                    }
+                    acc[c] += sum;
+                    let zr = &eval.zero_rows[c];
+                    let lo = zr.partition_point(|&r| (r as usize) < tile.row0);
+                    let hi = zr.partition_point(|&r| (r as usize) < tile.row0 + tile.rows);
+                    let both =
+                        zr[lo..hi].iter().filter(|&&r| act[r as usize] == 0).count() as u64;
+                    self.counters.total_macs += tile.rows as u64;
+                    self.counters.gated_macs += zero_act + (hi - lo) as u64 - both;
+                }
+            }
+            act = acc
+                .iter()
+                .map(|&a| activate(&self.lut, fmt, fmt.reduce_acc(a), layer.activation))
+                .collect();
+        }
+        act
+    }
+
+    /// The scalar PE-by-PE reference pass (the pre-batching loop),
+    /// retained verbatim as the oracle the equivalence property tests
+    /// pin [`GridSim::forward_fixed`]'s outputs *and* counters against.
+    pub fn forward_fixed_naive(&mut self, input: &[i32]) -> Vec<i32> {
         assert_eq!(input.len(), self.program.input_dim(), "input arity");
         let fmt = self.program.fmt;
         let mut act = input.to_vec();
@@ -421,6 +536,40 @@ mod tests {
                     pu.invocation_cycles()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn batched_pass_matches_naive_outputs_and_counters() {
+        let p = program(
+            &[9, 8, 3],
+            &[Activation::Sigmoid, Activation::Tanh],
+            0.17,
+            Q7_8,
+        );
+        for (rows, cols) in [(8, 8), (3, 5), (16, 1)] {
+            let mut fast = grid(p.clone(), rows, cols, 2, "none");
+            let mut naive = grid(p.clone(), rows, cols, 2, "none");
+            for k in 0..6 {
+                // zeros included so gating inclusion–exclusion is exercised
+                let input: Vec<i32> =
+                    (0..9).map(|i| (((i * 31 + k * 17) % 5) as i32) - 2).collect();
+                assert_eq!(fast.forward_fixed(&input), naive.forward_fixed_naive(&input));
+                assert_eq!(fast.counters(), naive.counters(), "{rows}x{cols} input {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_build_is_bit_identical_to_uncached() {
+        let p = program(&[18, 12, 4], &[Activation::Sigmoid, Activation::Linear], 0.08, Q7_8);
+        for scheme in ["none", "bdi+fpc", "cpack"] {
+            let a = GridSim::new(p.clone(), GridConfig::default(), scheme).unwrap();
+            let b = GridSim::new_uncached(p.clone(), GridConfig::default(), scheme).unwrap();
+            for n in [0u64, 1, 7, 64] {
+                assert_eq!(a.batch_timing(n), b.batch_timing(n), "{scheme} n={n}");
+            }
+            assert_eq!(a.weight_stream_bytes(), b.weight_stream_bytes(), "{scheme}");
         }
     }
 

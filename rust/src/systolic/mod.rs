@@ -27,9 +27,11 @@
 //! config key.
 
 pub mod decompress;
+pub mod fill_cache;
 pub mod grid;
 
 pub use decompress::EdgeDecompressor;
+pub use fill_cache::FillCacheStats;
 pub use grid::{BatchTiming, GridCounters, GridSim};
 
 use anyhow::{bail, Result};

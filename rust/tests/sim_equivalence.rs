@@ -1,0 +1,231 @@
+//! PR-6 "same numbers, faster" enforcement.
+//!
+//! The simulator's hot paths were rearchitected (memoized weight-fill
+//! timing, batched PE-grid evaluation, event-driven `PoolSim` settle
+//! with flush-time memoization + steal guard + client heap) with one
+//! contract: **no observable number changes**. The slow pre-change
+//! engines are kept verbatim as `run_reference` / `run_closed_reference`
+//! and these tests pin the fast engines to them bit-for-bit — across
+//! random traces, client scripts, arbiter policies, shard counts and
+//! batch policies, and on the exact traffic + device stacks the E10/E11
+//! harness cells use (so the harness report JSON cannot drift either).
+
+use std::time::Duration;
+
+use snnap_c::bench_suite::workload;
+use snnap_c::coordinator::{BatchPolicy, ClientScript, PoolSim, SimReport, SimRequest};
+use snnap_c::experiments::e9_cache::{build_hierarchy, build_hierarchy_on, dram_for};
+use snnap_c::experiments::program_from_workload;
+use snnap_c::experiments::{e10_serving, e11_slo, selfbench};
+use snnap_c::fixed::Q7_8;
+use snnap_c::mem::{ArbiterPolicy, ChannelConfig, ChannelHub, DramChannel, SharedChannel};
+use snnap_c::npu::{NpuConfig, NpuDevice, NpuProgram};
+use snnap_c::util::prop;
+use snnap_c::util::rng::Rng;
+
+fn assert_reports_identical(fast: &SimReport, slow: &SimReport, what: &str) {
+    assert_eq!(fast.makespan, slow.makespan, "{what}: makespan");
+    assert_eq!(fast.max_depth, slow.max_depth, "{what}: max_depth");
+    assert_eq!(fast.stolen_batches, slow.stolen_batches, "{what}: stolen_batches");
+    assert_eq!(fast.completions.len(), slow.completions.len(), "{what}: completion count");
+    for (a, b) in fast.completions.iter().zip(&slow.completions) {
+        assert_eq!(a.index, b.index, "{what}: completion order");
+        assert_eq!(a.shard, b.shard, "{what}: request {} shard", a.index);
+        assert_eq!(a.arrival, b.arrival, "{what}: request {} arrival", a.index);
+        assert_eq!(a.done, b.done, "{what}: request {} done cycle", a.index);
+        assert_eq!(a.output, b.output, "{what}: request {} output", a.index);
+    }
+}
+
+fn plain_devices(program: &NpuProgram, shards: usize) -> Vec<NpuDevice> {
+    (0..shards)
+        .map(|_| NpuDevice::new(NpuConfig::default(), program.clone()).unwrap())
+        .collect()
+}
+
+fn policy_of(rng: &mut Rng) -> ArbiterPolicy {
+    if rng.below(2) == 0 {
+        ArbiterPolicy::Fifo
+    } else {
+        ArbiterPolicy::RoundRobin
+    }
+}
+
+/// Random batch policy spanning the interesting regimes: batch-of-1,
+/// deadline-dominant (max_wait 0 flushes every settle), and roomy.
+fn batch_policy_of(rng: &mut Rng) -> BatchPolicy {
+    BatchPolicy {
+        max_batch: rng.range(1, 7),
+        max_wait: Duration::from_micros([0, 1, 50, 200, 500][rng.range(0, 5)]),
+        queue_cap: 1 << 16,
+    }
+}
+
+#[test]
+fn event_driven_open_loop_is_bit_identical_to_reference() {
+    let w = workload("sobel").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 3);
+    prop::check(40, |rng| {
+        let shards = rng.range(1, 5);
+        let pol = batch_policy_of(rng);
+        let arb = policy_of(rng);
+        // bursty nondecreasing arrivals with deliberate same-cycle ties
+        let n = rng.range(1, 40);
+        let mut t = 0u64;
+        let trace: Vec<_> = (0..n)
+            .map(|_| {
+                t += [0, 0, 1, 3, rng.below(400)][rng.range(0, 5)];
+                SimRequest { arrival: t, input: w.gen_input(rng) }
+            })
+            .collect();
+        let fast = PoolSim::new(plain_devices(&program, shards), pol)
+            .unwrap()
+            .with_channel_policy(arb)
+            .run(&trace)
+            .unwrap();
+        let slow = PoolSim::new(plain_devices(&program, shards), pol)
+            .unwrap()
+            .with_channel_policy(arb)
+            .run_reference(&trace)
+            .unwrap();
+        assert_reports_identical(&fast, &slow, &format!("open {shards} shards {arb:?}"));
+    });
+}
+
+#[test]
+fn event_driven_closed_loop_is_bit_identical_to_reference() {
+    let w = workload("fft").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 5);
+    prop::check(30, |rng| {
+        let shards = rng.range(1, 5);
+        let pol = batch_policy_of(rng);
+        let arb = policy_of(rng);
+        let clients = rng.range(1, 6);
+        let per_client = rng.range(1, 5);
+        let think_mean = [0.0, 1.0, 50.0, 300.0][rng.range(0, 4)];
+        let mut scripts =
+            e11_slo::gen_scripts(w.as_ref(), clients, per_client, think_mean, rng.below(1 << 30));
+        // zero-think and empty clients are the tie-heavy edge cases the
+        // heap must replay in exact reference order
+        for s in scripts.iter_mut() {
+            if rng.below(4) == 0 {
+                for th in s.think.iter_mut() {
+                    *th = 0;
+                }
+            }
+        }
+        if rng.below(4) == 0 {
+            scripts.push(ClientScript { inputs: Vec::new(), think: Vec::new() });
+        }
+        let fast = PoolSim::new(plain_devices(&program, shards), pol)
+            .unwrap()
+            .with_channel_policy(arb)
+            .run_closed(&scripts)
+            .unwrap();
+        let slow = PoolSim::new(plain_devices(&program, shards), pol)
+            .unwrap()
+            .with_channel_policy(arb)
+            .run_closed_reference(&scripts)
+            .unwrap();
+        assert_reports_identical(&fast, &slow, &format!("closed {shards} shards {arb:?}"));
+    });
+}
+
+/// The E10 harness cell's exact configuration: per-shard compressed
+/// cache -> LCP-DRAM hierarchies, harness-generated exponential trace.
+/// The event engine must reproduce the pre-change report verbatim, so
+/// archived E10 trajectory JSON stays bit-identical at equal seeds.
+#[test]
+fn e10_harness_traffic_is_bit_identical_to_reference() {
+    let w = workload("sobel").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 11);
+    let trace = e10_serving::gen_trace(w.as_ref(), &program, 64, 16, 41);
+    let pol = BatchPolicy {
+        max_batch: 16,
+        max_wait: Duration::from_micros(2_000),
+        queue_cap: 1 << 16,
+    };
+    for scheme in ["none", "bdi+fpc", "cpack"] {
+        let devices = || -> Vec<NpuDevice> {
+            (0..4)
+                .map(|_| {
+                    NpuDevice::new(NpuConfig::default(), program.clone())
+                        .unwrap()
+                        .with_memory(Box::new(
+                            build_hierarchy(scheme, e10_serving::E10_CACHE).unwrap(),
+                        ))
+                })
+                .collect()
+        };
+        let fast = PoolSim::new(devices(), pol).unwrap().run(&trace).unwrap();
+        let slow = PoolSim::new(devices(), pol).unwrap().run_reference(&trace).unwrap();
+        assert_reports_identical(&fast, &slow, &format!("e10 {scheme}"));
+    }
+}
+
+/// The E11 harness cell's exact configuration: every shard's hierarchy
+/// missing into ONE shared, arbitrated DRAM channel, closed-loop
+/// clients, both grant policies. Grant order is the subtlest thing the
+/// event engine must preserve (same-cycle ready batches), so this is
+/// the E11-JSON-stability witness.
+#[test]
+fn e11_shared_channel_traffic_is_bit_identical_to_reference() {
+    let w = workload("fft").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 13);
+    let scripts = e11_slo::gen_scripts(w.as_ref(), 6, 6, 120.0, 29);
+    let pol = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_cap: 1 << 16,
+    };
+    let shards = 3usize;
+    for arb in [ArbiterPolicy::Fifo, ArbiterPolicy::RoundRobin] {
+        let pool = || -> PoolSim {
+            let hub = ChannelHub::shared(ChannelConfig::zc702_ddr3(), arb, shards);
+            let devices = (0..shards)
+                .map(|s| {
+                    let channel = DramChannel::Shared(SharedChannel::new(hub.clone(), s));
+                    let hierarchy = build_hierarchy_on(
+                        "bdi+fpc",
+                        e11_slo::E11_CACHE,
+                        dram_for("bdi+fpc", channel).unwrap(),
+                    )
+                    .unwrap();
+                    NpuDevice::new(NpuConfig::default(), program.clone())
+                        .unwrap()
+                        .with_weight_scheme("bdi+fpc")
+                        .unwrap()
+                        .with_memory(Box::new(hierarchy))
+                })
+                .collect::<Vec<_>>();
+            PoolSim::new(devices, pol).unwrap().with_channel_policy(arb)
+        };
+        let fast = pool().run_closed(&scripts).unwrap();
+        let slow = pool().run_closed_reference(&scripts).unwrap();
+        assert_reports_identical(&fast, &slow, &format!("e11 shared channel {arb:?}"));
+    }
+}
+
+/// Selfbench is the one experiment whose wall-clock columns may differ
+/// run to run — everything else in its report (components, iteration
+/// counts, simulated cycles, JSON row shape) must be deterministic, or
+/// the CI throughput gate would diff noise.
+#[test]
+fn selfbench_structure_is_deterministic_across_runs() {
+    let w = workload("sobel").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 1);
+    let a = selfbench::measure_all(w.as_ref(), &program, 1, 42).unwrap();
+    let b = selfbench::measure_all(w.as_ref(), &program, 1, 42).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.component, y.component);
+        assert_eq!(x.iters, y.iters, "{}", x.component);
+        assert_eq!(x.sim_cycles, y.sim_cycles, "{}", x.component);
+        let jx = x.to_json();
+        let keys =
+            ["workload", "component", "iters", "sim_cycles", "wall_ms", "sim_cycles_per_wall_sec"];
+        for key in keys {
+            assert!(jx.get(key).is_some(), "{}: row key {key} missing", x.component);
+        }
+    }
+}

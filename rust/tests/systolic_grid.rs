@@ -16,7 +16,7 @@ use snnap_c::experiments as ex;
 use snnap_c::experiments::e12_systolic::{self, GRID_SWEEP};
 use snnap_c::fixed::{Q15_16, Q3_4, Q7_8};
 use snnap_c::npu::{Activation, NpuConfig, NpuDevice, NpuProgram, PuSim};
-use snnap_c::systolic::{GridConfig, GridSim, TimingModel};
+use snnap_c::systolic::{fill_cache, GridConfig, GridSim, TimingModel};
 use snnap_c::util::json::Json;
 use snnap_c::util::prop;
 use snnap_c::util::rng::Rng;
@@ -134,6 +134,112 @@ fn e12_acceptance_some_scheme_cuts_fill_and_dram_on_every_kernel() {
         }
     }
     assert!(winners >= 1, "no kernel showed the compressed-fill win");
+}
+
+/// PR-6 batched evaluation: the vectorized column kernel must be
+/// bit-identical to the retained scalar path — outputs AND the
+/// total/gated MAC counters — across random programs × geometries ×
+/// formats (i64 accumulation is order-insensitive here, but the gated
+/// count uses inclusion–exclusion over presorted zero-weight rows, so
+/// this is the regression net for that arithmetic).
+#[test]
+fn prop_batched_forward_matches_naive_outputs_and_counters() {
+    prop::check(64, |rng| {
+        let fmt = match rng.range(0, 3) {
+            0 => Q3_4,
+            1 => Q7_8,
+            _ => Q15_16,
+        };
+        let program = random_program(rng, fmt);
+        let grid_cfg = GridConfig {
+            rows: rng.range(1, 17),
+            cols: rng.range(1, 17),
+            decode_bytes_per_cycle: rng.range(1, 9),
+        };
+        let scheme = SCHEMES[rng.range(0, SCHEMES.len())];
+        let mut batched = GridSim::new(program.clone(), grid_cfg, scheme).unwrap();
+        let mut naive = GridSim::new(program.clone(), grid_cfg, scheme).unwrap();
+        for _ in 0..4 {
+            // force plenty of exact zeros so the gating inclusion–
+            // exclusion has ties to get wrong
+            let input: Vec<i32> = (0..program.input_dim())
+                .map(|_| {
+                    if rng.below(3) == 0 {
+                        0
+                    } else {
+                        fmt.from_f32(rng.f32_range(-1.5, 1.5))
+                    }
+                })
+                .collect();
+            assert_eq!(
+                batched.forward_fixed(&input),
+                naive.forward_fixed_naive(&input),
+                "outputs diverged: {} scheme {scheme}",
+                grid_cfg.label()
+            );
+            let (b, n) = (batched.counters(), naive.counters());
+            assert_eq!(b.total_macs, n.total_macs, "total_macs {}", grid_cfg.label());
+            assert_eq!(b.gated_macs, n.gated_macs, "gated_macs {}", grid_cfg.label());
+        }
+    });
+}
+
+/// PR-6 memoized fills: a cache-served [`GridSim`] must carry exactly
+/// the timing of a from-scratch build — fill/stream/drain cycles at
+/// several batch sizes and the weight-stream byte accounting — across
+/// random programs × schemes × geometries. Keyed by the full
+/// (scheme, raw-stream) pair, a hit can only be bit-identical; this
+/// guards the plumbing around it.
+#[test]
+fn prop_cached_grid_build_matches_uncached_timing() {
+    prop::check(48, |rng| {
+        let program = random_program(rng, Q7_8);
+        let grid_cfg = GridConfig {
+            rows: rng.range(1, 17),
+            cols: rng.range(1, 17),
+            decode_bytes_per_cycle: rng.range(1, 9),
+        };
+        let scheme = SCHEMES[rng.range(0, SCHEMES.len())];
+        let cached = GridSim::new(program.clone(), grid_cfg, scheme).unwrap();
+        let uncached = GridSim::new_uncached(program.clone(), grid_cfg, scheme).unwrap();
+        for n in [0u64, 1, 3, 17] {
+            assert_eq!(
+                cached.batch_timing(n),
+                uncached.batch_timing(n),
+                "batch {n} timing: {} scheme {scheme}",
+                grid_cfg.label()
+            );
+        }
+        assert_eq!(
+            cached.weight_stream_bytes(),
+            uncached.weight_stream_bytes(),
+            "{} scheme {scheme}",
+            grid_cfg.label()
+        );
+    });
+}
+
+/// Rebuilding the same (program, scheme) must be served from the fill
+/// cache: misses stop growing, hits keep climbing. Uses its own program
+/// so parallel tests hitting the process-global cache can't perturb the
+/// deltas in the wrong direction.
+#[test]
+fn repeat_builds_hit_the_fill_cache() {
+    let w = workload("kmeans").unwrap();
+    let p = ex::program_from_workload(w.as_ref(), Q7_8, 0xF1CC);
+    let cfg = GridConfig::default();
+    let _warm = GridSim::new(p.clone(), cfg, "bdi+fpc").unwrap();
+    let before = fill_cache::stats();
+    for _ in 0..3 {
+        let _ = GridSim::new(p.clone(), cfg, "bdi+fpc").unwrap();
+    }
+    let after = fill_cache::stats();
+    assert!(
+        after.hits >= before.hits + 3,
+        "3 rebuilds must be 3+ cache hits (got {} -> {})",
+        before.hits,
+        after.hits
+    );
 }
 
 #[test]

@@ -1,17 +1,28 @@
 #!/usr/bin/env python3
-"""Perf-trajectory pipeline: harness report -> BENCH_<run>.json + gate.
+"""Perf-trajectory pipeline: harness report(s) -> BENCH_<run>.json + gate.
 
-Converts a ``snnapc experiments`` JSON report into one flat trajectory
-point (``BENCH_<run>.json``) and fails when a cycle metric regressed
-more than ``--max-p99-regress`` against the committed baseline
-(``BENCH_baseline.json``). The harness's cycle numbers are *simulated*
-and bit-identical for a pinned (scenario, seed), so a regression here
-is a real code change, never runner noise — which is what makes a hard
-CI gate honest.
+Converts one or more ``snnapc experiments`` JSON reports into one flat
+trajectory point (``BENCH_<run>.json``) and fails when a gated metric
+regressed against the committed baseline (``BENCH_baseline.json``).
+Two metric classes with different physics:
+
+* **Simulated cycles** (``p99_cycles``, ``mem_cycles``, ``grid_cycles``,
+  ``fill_cycles``, ``sim_cycles``) are bit-identical for a pinned
+  (scenario, seed), so a regression beyond ``--max-p99-regress`` is a
+  real code change, never runner noise — a hard gate (exit 1).
+* **Simulator throughput** (``sim_cycles_per_wall_sec`` from the
+  ``selfbench`` experiment) divides those exact cycles by *wall clock*,
+  which DOES vary with the runner. The gate therefore (a) only compares
+  cells whose wall time is above ``--wall-noise-floor-ms`` on both sides
+  (sub-floor components are timer noise by construction), and (b) exits
+  **3** when throughput is the *only* thing that regressed, so CI can
+  re-run selfbench once and re-gate before failing for real — the
+  documented retry-once policy for wall-clock metrics. Mixed or
+  cycle-metric failures stay exit 1 (retrying cannot fix those).
 
 Usage (what .github/workflows/ci.yml runs):
 
-    python3 scripts/bench_trend.py harness-report.json \
+    python3 scripts/bench_trend.py harness-report.json selfbench-report.json \
         --baseline BENCH_baseline.json --out BENCH_${RUN_ID}.json \
         --run-id ${RUN_ID} --max-p99-regress 0.20
 
@@ -26,12 +37,19 @@ A baseline whose ``metrics`` object is empty is a *bootstrap* baseline
 (seeded in the PR that introduced this pipeline): the absolute gate
 records the trajectory point without comparing until a real baseline is
 committed (``--emit-refreshed`` writes one from the current run, ready
-to commit verbatim). Independently of the baseline, the
-*scenario-internal invariant* gate always enforces: at equal E12 grid
-geometry, at least one compressed scheme must beat ``none`` on both
-weight-fill cycles and DRAM bytes (the E12 acceptance criterion) —
-so the job fails on real regressions even in the bootstrap state.
-Only the standard library is used.
+to commit verbatim; ``--refresh-summary-out`` renders the committed-vs-
+refreshed delta as a markdown table for the CI job summary).
+Independently of the baseline, the *scenario-internal invariant* gate
+always enforces: at equal E12 grid geometry, at least one compressed
+scheme must beat ``none`` on both weight-fill cycles and DRAM bytes
+(the E12 acceptance criterion) — so the job fails on real regressions
+even in the bootstrap state. A report row missing a required metric key
+is a pipeline error named per (experiment, key), exit 2 — never a raw
+``KeyError`` traceback. Only the standard library is used.
+
+Exit codes: 0 ok · 1 regression/invariant failure · 2 pipeline
+misconfiguration (missing baseline, malformed report) · 3 wall-clock
+throughput regression only (retry once, then treat as 1).
 """
 
 from __future__ import annotations
@@ -41,8 +59,29 @@ import json
 import sys
 from pathlib import Path
 
-#: Cycle-denominated metrics the gate compares (higher = worse).
-GATED_METRICS = ("p99_cycles", "mem_cycles", "grid_cycles", "fill_cycles")
+#: Simulated-cycle metrics the hard gate compares (higher = worse).
+GATED_METRICS = ("p99_cycles", "mem_cycles", "grid_cycles", "fill_cycles", "sim_cycles")
+#: Wall-clock throughput metric (lower = worse; noise-floored, retryable).
+THROUGHPUT_METRIC = "sim_cycles_per_wall_sec"
+#: Components whose wall time is below this on either side are timer
+#: noise: a 2x "regression" of a 3 ms measurement is not signal.
+WALL_NOISE_FLOOR_MS = 25.0
+
+
+class ReportFormatError(Exception):
+    """A harness report row is missing a key the pipeline requires."""
+
+
+def require(row: dict, key: str, where: str):
+    """``row[key]`` with a per-metric pipeline error instead of KeyError."""
+    try:
+        return row[key]
+    except (KeyError, TypeError):
+        raise ReportFormatError(
+            f"{where}: required metric {key!r} missing from report row "
+            f"(harness and bench_trend.py disagree on the row schema; "
+            f"row keys: {sorted(row) if isinstance(row, dict) else type(row).__name__})"
+        ) from None
 
 
 def extract_metrics(report: dict) -> dict:
@@ -51,8 +90,10 @@ def extract_metrics(report: dict) -> dict:
     Cell keys are stable across runs of the same pinned scenario:
     ``e1/<label>/<stream>/<scheme>`` (compression ratios, informational),
     ``e9/<label>/<cache>``, ``e10/<label>/x<shards>``,
-    ``e11/<label>/x<shards>/<policy>``, and ``e12/<label>/<grid>``
-    (cycle metrics, gated).
+    ``e11/<label>/x<shards>/<policy>``, ``e12/<label>/<grid>`` (cycle
+    metrics, gated), and ``selfbench/<label>/<component>`` (exact
+    ``sim_cycles`` gated hard; wall-clock throughput gated with the
+    noise floor + retry policy).
     """
     out: dict = {}
     experiments = report.get("experiments", {})
@@ -65,42 +106,51 @@ def extract_metrics(report: dict) -> dict:
             for s in scheme_report.get("schemes", []):
                 key = f"{entry['label']}/{stream}/{s['scheme']}"
                 out[key] = {
-                    "ratio": s["ratio"],
-                    "compressed_bytes": s["compressed_bytes"],
+                    "ratio": require(s, "ratio", key),
+                    "compressed_bytes": require(s, "compressed_bytes", key),
                 }
     for entry in experiments.get("e9", []):
         for row in entry.get("rows", []):
-            key = f"{entry['label']}/{row['cache']}"
+            key = f"{entry['label']}/{require(row, 'cache', entry['label'])}"
             out[key] = {
-                "mem_cycles": row["mem_cycles"],
-                "hit_rate": row["hit_rate"],
-                "dram_bytes": row["dram_bytes"],
+                "mem_cycles": require(row, "mem_cycles", key),
+                "hit_rate": require(row, "hit_rate", key),
+                "dram_bytes": require(row, "dram_bytes", key),
             }
     for entry in experiments.get("e10", []):
         for row in entry.get("rows", []):
-            key = f"{entry['label']}/x{row['shards']}"
+            key = f"{entry['label']}/x{require(row, 'shards', entry['label'])}"
             out[key] = {
-                "p99_cycles": row["p99_cycles"],
-                "throughput": row["throughput"],
-                "dram_bytes": row["dram_bytes"],
+                "p99_cycles": require(row, "p99_cycles", key),
+                "throughput": require(row, "throughput", key),
+                "dram_bytes": require(row, "dram_bytes", key),
             }
     for entry in experiments.get("e11", []):
         for row in entry.get("rows", []):
-            key = f"{entry['label']}/x{row['shards']}/{row['policy']}"
+            shards = require(row, "shards", entry["label"])
+            key = f"{entry['label']}/x{shards}/{require(row, 'policy', entry['label'])}"
             out[key] = {
-                "p99_cycles": row["p99_cycles"],
-                "slo_throughput": row["slo_throughput"],
-                "wait_cycles": row["wait_cycles"],
-                "dram_bytes": row["dram_bytes"],
+                "p99_cycles": require(row, "p99_cycles", key),
+                "slo_throughput": require(row, "slo_throughput", key),
+                "wait_cycles": require(row, "wait_cycles", key),
+                "dram_bytes": require(row, "dram_bytes", key),
             }
     for entry in experiments.get("e12", []):
         for row in entry.get("rows", []):
-            key = f"{entry['label']}/{row['grid']}"
+            key = f"{entry['label']}/{require(row, 'grid', entry['label'])}"
             out[key] = {
-                "grid_cycles": row["grid_cycles"],
-                "fill_cycles": row["fill_cycles"],
-                "gated_mac_share": row["gated_mac_share"],
-                "dram_bytes": row["dram_bytes"],
+                "grid_cycles": require(row, "grid_cycles", key),
+                "fill_cycles": require(row, "fill_cycles", key),
+                "gated_mac_share": require(row, "gated_mac_share", key),
+                "dram_bytes": require(row, "dram_bytes", key),
+            }
+    for entry in experiments.get("selfbench", []):
+        for row in entry.get("rows", []):
+            key = f"{entry['label']}/{require(row, 'component', entry['label'])}"
+            out[key] = {
+                "sim_cycles": require(row, "sim_cycles", key),
+                "wall_ms": require(row, "wall_ms", key),
+                THROUGHPUT_METRIC: require(row, THROUGHPUT_METRIC, key),
             }
     return out
 
@@ -176,6 +226,105 @@ def compare(baseline: dict, current_metrics: dict, max_regress: float) -> list:
     return failures
 
 
+def compare_throughput(
+    baseline: dict,
+    current_metrics: dict,
+    max_regress: float,
+    noise_floor_ms: float = WALL_NOISE_FLOOR_MS,
+) -> list:
+    """Wall-clock throughput regressions (lower = worse), noise-floored.
+
+    A cell gates only when BOTH sides measured at least
+    ``noise_floor_ms`` of wall time — below that, the division is timer
+    noise, not simulator throughput. Callers treat these failures as
+    retryable (exit 3): re-run selfbench once before concluding the
+    simulator actually got slower.
+    """
+    base_metrics = baseline.get("metrics", {})
+    if not base_metrics:
+        return []
+    failures = []
+    for key in sorted(current_metrics):
+        base_row = base_metrics.get(key)
+        if base_row is None:
+            continue
+        base_value = base_row.get(THROUGHPUT_METRIC)
+        value = current_metrics[key].get(THROUGHPUT_METRIC)
+        if base_value is None or value is None or base_value <= 0:
+            continue
+        base_wall = base_row.get("wall_ms", 0.0)
+        wall = current_metrics[key].get("wall_ms", 0.0)
+        if base_wall < noise_floor_ms or wall < noise_floor_ms:
+            continue  # sub-floor on either side: noise, not signal
+        if value < base_value * (1.0 - max_regress):
+            pct = (1.0 - value / base_value) * 100.0
+            failures.append(
+                f"{key}: {THROUGHPUT_METRIC} {base_value:.3e} -> {value:.3e} "
+                f"(-{pct:.1f}% > {max_regress * 100.0:.0f}% allowed; "
+                f"wall {base_wall:.0f}ms -> {wall:.0f}ms)"
+            )
+    return failures
+
+
+def refresh_summary(committed: dict, refreshed: dict) -> str:
+    """Markdown table of committed-baseline vs refreshed-candidate cells.
+
+    Rendered into the CI job summary so a maintainer can eyeball exactly
+    what committing ``BENCH_baseline.refreshed.json`` would change.
+    """
+    old = committed.get("metrics", {})
+    new = refreshed.get("metrics", {})
+    watched = GATED_METRICS + (THROUGHPUT_METRIC,)
+    lines = [
+        "### Baseline refresh: committed vs this run",
+        "",
+        "| cell | metric | committed | refreshed | delta |",
+        "|---|---|---:|---:|---:|",
+    ]
+    changed = 0
+    for key in sorted(set(old) | set(new)):
+        for metric in watched:
+            a = old.get(key, {}).get(metric)
+            b = new.get(key, {}).get(metric)
+            if a is None and b is None:
+                continue
+            if a is not None and b is not None and a == b:
+                continue
+            changed += 1
+            fmt = lambda v: "—" if v is None else f"{v:.4g}"
+            if a not in (None, 0) and b is not None:
+                delta = f"{(b / a - 1.0) * 100.0:+.1f}%"
+            else:
+                delta = "new" if a is None else "gone"
+            lines.append(f"| `{key}` | {metric} | {fmt(a)} | {fmt(b)} | {delta} |")
+    if changed == 0:
+        return (
+            "### Baseline refresh\n\nCommitted `BENCH_baseline.json` already "
+            "matches this run — nothing to refresh.\n"
+        )
+    header = (
+        f"{changed} metric value(s) differ from the committed baseline. "
+        "To accept, commit the `BENCH_baseline.refreshed.json` artifact as "
+        "`BENCH_baseline.json`. Wall-clock rows "
+        f"(`{THROUGHPUT_METRIC}`, runner-dependent) always drift; the "
+        "cycle rows only move on real simulator changes.\n"
+    )
+    return "\n".join(lines[:1] + ["", header] + lines[2:]) + "\n"
+
+
+def merge_reports(paths: list) -> dict:
+    """Merge several harness reports into one (disjoint experiments —
+    e.g. the parallel e1..e12 sweep + the serial selfbench pass)."""
+    merged: dict = {"experiments": {}, "config": {}}
+    for p in paths:
+        report = json.loads(Path(p).read_text())
+        if not merged["config"]:
+            merged["config"] = report.get("config", {})
+        for exp, entries in report.get("experiments", {}).items():
+            merged["experiments"].setdefault(exp, []).extend(entries)
+    return merged
+
+
 def trajectory_point(report: dict, run_id: str) -> dict:
     return {
         "schema_version": 1,
@@ -187,11 +336,30 @@ def trajectory_point(report: dict, run_id: str) -> dict:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("report", help="harness-report.json from `snnapc experiments`")
+    ap.add_argument(
+        "reports",
+        nargs="+",
+        help="harness-report.json file(s) from `snnapc experiments` / "
+        "`snnapc selfbench --out` (experiments are merged)",
+    )
     ap.add_argument("--baseline", default="BENCH_baseline.json")
     ap.add_argument("--out", default="BENCH_local.json")
     ap.add_argument("--run-id", default="local")
     ap.add_argument("--max-p99-regress", type=float, default=0.20)
+    ap.add_argument(
+        "--max-throughput-regress",
+        type=float,
+        default=0.20,
+        help="allowed sim-cycles-per-wall-second drop (wall-clock metric; "
+        "failures here alone exit 3 = retry once)",
+    )
+    ap.add_argument(
+        "--wall-noise-floor-ms",
+        type=float,
+        default=WALL_NOISE_FLOOR_MS,
+        help="skip throughput cells whose wall time is below this on "
+        "either side (timer noise, not simulator throughput)",
+    )
     ap.add_argument(
         "--write-baseline",
         action="store_true",
@@ -203,11 +371,28 @@ def main(argv=None) -> int:
         metavar="PATH",
         help="also write this run's metrics as a ready-to-commit baseline file",
     )
+    ap.add_argument(
+        "--refresh-summary-out",
+        default=None,
+        metavar="PATH",
+        help="write a markdown committed-vs-refreshed baseline diff "
+        "(for $GITHUB_STEP_SUMMARY); requires --emit-refreshed",
+    )
     args = ap.parse_args(argv)
 
-    report = json.loads(Path(args.report).read_text())
-    point = trajectory_point(report, args.run_id)
-    print(f"extracted {len(point['metrics'])} trajectory cells from {args.report}")
+    try:
+        report = merge_reports(args.reports)
+        point = trajectory_point(report, args.run_id)
+    except ReportFormatError as e:
+        print(f"REPORT FORMAT ERROR: {e}", file=sys.stderr)
+        return 2
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"ERROR reading report(s): {e}", file=sys.stderr)
+        return 2
+    print(
+        f"extracted {len(point['metrics'])} trajectory cells "
+        f"from {len(args.reports)} report(s)"
+    )
 
     if args.write_baseline:
         point["run"] = "baseline"
@@ -239,6 +424,15 @@ def main(argv=None) -> int:
         print(f"ERROR: baseline {args.baseline} not found", file=sys.stderr)
         return 2
     baseline = json.loads(baseline_path.read_text())
+
+    if args.refresh_summary_out:
+        refreshed_point = dict(point)
+        refreshed_point["run"] = "baseline"
+        Path(args.refresh_summary_out).write_text(
+            refresh_summary(baseline, refreshed_point)
+        )
+        print(f"wrote baseline-refresh summary {args.refresh_summary_out}")
+
     if not baseline.get("metrics"):
         print(
             f"baseline {args.baseline} is a bootstrap (empty metrics): invariants "
@@ -248,14 +442,28 @@ def main(argv=None) -> int:
         return 0
 
     failures = compare(baseline, point["metrics"], args.max_p99_regress)
+    tp_failures = compare_throughput(
+        baseline,
+        point["metrics"],
+        args.max_throughput_regress,
+        args.wall_noise_floor_ms,
+    )
     compared = sum(1 for k in point["metrics"] if k in baseline["metrics"])
     print(f"compared {compared} cells against {args.baseline}")
-    if failures:
-        print(f"PERF REGRESSION ({len(failures)} cells):", file=sys.stderr)
-        for f in failures:
+    if failures or tp_failures:
+        all_failures = failures + tp_failures
+        print(f"PERF REGRESSION ({len(all_failures)} cells):", file=sys.stderr)
+        for f in all_failures:
             print(f"  {f}", file=sys.stderr)
+        if not failures:
+            print(
+                "only wall-clock throughput regressed: exit 3 (retryable — "
+                "re-run selfbench once before failing the build)",
+                file=sys.stderr,
+            )
+            return 3
         return 1
-    print("no cycle regressions beyond the threshold")
+    print("no cycle or throughput regressions beyond the threshold")
     return 0
 
 
