@@ -1,0 +1,189 @@
+"""Validator for the Chrome trace-event JSON written by `snnapc serve
+--trace` and `snnapc experiments --trace-dir` (the E13 per-cell traces).
+
+Stdlib only. Dual mode:
+
+    python3 python/tests/test_trace_format.py traces/*.trace.json
+        CLI validator: prints a per-file verdict and exits non-zero if
+        any file is invalid. This is what CI runs over the harness-smoke
+        E13 traces before uploading them as an artifact.
+
+    python -m pytest python/tests/test_trace_format.py -q
+        Unit tests of the validator itself against synthetic documents.
+
+Checks mirror what rust/src/obs/tracer.rs::chrome_trace guarantees:
+
+  * the top level is an object with a "traceEvents" array;
+  * every event carries ph, name, pid, tid and a numeric ts;
+  * timestamps are globally sorted (non-decreasing);
+  * per (pid, tid) track, B/E span events match like brackets — same
+    name, never an E without its B, nothing left open at the end;
+  * instant events carry a scope field ("s").
+"""
+
+import json
+import sys
+import unittest
+
+KNOWN_PHASES = {"B", "E", "i", "C"}
+
+
+def validate_trace(doc):
+    """Return a list of problems with a parsed trace document (empty == valid)."""
+    if not isinstance(doc, dict):
+        return ["top level is not a JSON object"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ['"traceEvents" is missing or not an array']
+    problems = []
+    last_ts = None
+    stacks = {}
+    for i, ev in enumerate(events):
+        where = "event %d" % i
+        if not isinstance(ev, dict):
+            problems.append("%s: not an object" % where)
+            continue
+        missing = [k for k in ("ph", "name", "pid", "tid", "ts") if k not in ev]
+        if missing:
+            problems.append("%s: missing %s" % (where, ", ".join(missing)))
+            continue
+        ph, name, ts = ev["ph"], ev["name"], ev["ts"]
+        if isinstance(ts, bool) or not isinstance(ts, (int, float)) or ts < 0:
+            problems.append("%s: ts %r is not a non-negative number" % (where, ts))
+            continue
+        if last_ts is not None and ts < last_ts:
+            problems.append(
+                "%s: ts %s goes backwards (previous %s)" % (where, ts, last_ts)
+            )
+        last_ts = ts if last_ts is None else max(last_ts, ts)
+        if ph not in KNOWN_PHASES:
+            problems.append("%s: unknown phase %r" % (where, ph))
+            continue
+        track = (ev["pid"], ev["tid"])
+        if ph == "B":
+            stacks.setdefault(track, []).append(name)
+        elif ph == "E":
+            stack = stacks.setdefault(track, [])
+            if not stack:
+                problems.append(
+                    "%s: E %r on track %r with no open span" % (where, name, track)
+                )
+            elif stack[-1] != name:
+                problems.append(
+                    "%s: E %r does not close innermost span %r on track %r"
+                    % (where, name, stack[-1], track)
+                )
+            else:
+                stack.pop()
+        elif ph == "i" and "s" not in ev:
+            problems.append("%s: instant without a scope ('s')" % where)
+    for track, stack in sorted(stacks.items()):
+        if stack:
+            problems.append("track %r: unclosed spans %r" % (track, stack))
+    return problems
+
+
+def validate_file(path):
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as exc:
+        return ["unreadable or not JSON: %s" % exc]
+    return validate_trace(doc)
+
+
+def main(argv):
+    if not argv:
+        print(
+            "usage: test_trace_format.py TRACE.json [TRACE.json ...]", file=sys.stderr
+        )
+        return 2
+    bad = 0
+    for path in argv:
+        problems = validate_file(path)
+        if problems:
+            bad += 1
+            print("FAIL %s" % path)
+            for problem in problems:
+                print("  - %s" % problem)
+        else:
+            print("ok   %s" % path)
+    return 1 if bad else 0
+
+
+def _ev(ph, name, ts, tid=0, **extra):
+    event = {"ph": ph, "name": name, "pid": 0, "tid": tid, "ts": ts}
+    event.update(extra)
+    return event
+
+
+class TraceFormatTests(unittest.TestCase):
+    def test_valid_trace_passes(self):
+        doc = {
+            "traceEvents": [
+                _ev("B", "batch", 0),
+                _ev("B", "fill", 1),
+                _ev("C", "cache", 2, tid=200, args={"hits": 3}),
+                _ev("E", "fill", 4),
+                _ev("i", "request", 5, s="t", args={"latency": 5}),
+                _ev("E", "batch", 5),
+            ],
+            "displayTimeUnit": "ms",
+        }
+        self.assertEqual(validate_trace(doc), [])
+
+    def test_top_level_must_be_an_object_with_events(self):
+        self.assertTrue(validate_trace([]))
+        self.assertTrue(validate_trace({"displayTimeUnit": "ms"}))
+        self.assertEqual(validate_trace({"traceEvents": []}), [])
+
+    def test_missing_required_fields_are_reported(self):
+        doc = {"traceEvents": [{"ph": "B", "name": "batch", "ts": 0}]}
+        problems = validate_trace(doc)
+        self.assertEqual(len(problems), 1)
+        self.assertIn("pid", problems[0])
+        self.assertIn("tid", problems[0])
+
+    def test_unsorted_timestamps_are_reported(self):
+        doc = {"traceEvents": [_ev("i", "a", 10, s="t"), _ev("i", "b", 9, s="t")]}
+        self.assertTrue(any("backwards" in p for p in validate_trace(doc)))
+
+    def test_unmatched_end_is_reported(self):
+        doc = {"traceEvents": [_ev("E", "batch", 3)]}
+        self.assertTrue(any("no open span" in p for p in validate_trace(doc)))
+
+    def test_badly_nested_spans_are_reported(self):
+        doc = {
+            "traceEvents": [
+                _ev("B", "batch", 0),
+                _ev("B", "fill", 1),
+                _ev("E", "batch", 2),
+                _ev("E", "fill", 3),
+            ]
+        }
+        self.assertTrue(any("innermost" in p for p in validate_trace(doc)))
+
+    def test_unclosed_span_is_reported(self):
+        doc = {"traceEvents": [_ev("B", "batch", 0)]}
+        self.assertTrue(any("unclosed" in p for p in validate_trace(doc)))
+
+    def test_tracks_are_matched_independently(self):
+        doc = {
+            "traceEvents": [
+                _ev("B", "batch", 0, tid=0),
+                _ev("B", "batch", 1, tid=1),
+                _ev("E", "batch", 2, tid=0),
+                _ev("E", "batch", 3, tid=1),
+            ]
+        }
+        self.assertEqual(validate_trace(doc), [])
+
+    def test_instant_without_scope_is_reported(self):
+        doc = {"traceEvents": [_ev("i", "request", 1)]}
+        self.assertTrue(any("scope" in p for p in validate_trace(doc)))
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1:
+        sys.exit(main(sys.argv[1:]))
+    unittest.main()

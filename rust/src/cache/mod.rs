@@ -150,6 +150,11 @@ pub struct CompressedCache {
     backing: Box<dyn MemoryLevel>,
     lru_clock: u64,
     pub stats: CacheStats,
+    /// Observability hook (disabled by default): hit/miss counters
+    /// sampled once per batch at each `sync_cycle`.
+    tracer: crate::obs::Tracer,
+    trace_track: u32,
+    trace_ts_scale: f64,
 }
 
 impl CompressedCache {
@@ -159,7 +164,17 @@ impl CompressedCache {
         backing: Box<dyn MemoryLevel>,
     ) -> Self {
         let sets = (0..cfg.sets).map(|_| (0..cfg.ways).map(|_| None).collect()).collect();
-        CompressedCache { cfg, comp, sets, backing, lru_clock: 0, stats: CacheStats::default() }
+        CompressedCache {
+            cfg,
+            comp,
+            sets,
+            backing,
+            lru_clock: 0,
+            stats: CacheStats::default(),
+            tracer: crate::obs::Tracer::disabled(),
+            trace_track: 0,
+            trace_ts_scale: 1.0,
+        }
     }
 
     /// The backing level (for oracle checks and end-of-run traffic).
@@ -416,6 +431,19 @@ impl MemoryLevel for CompressedCache {
     }
 
     fn sync_cycle(&mut self, cycle: u64) {
+        if self.tracer.is_enabled() {
+            let ts = (cycle as f64 * self.trace_ts_scale).round() as u64;
+            self.tracer.counter(
+                self.trace_track,
+                "cache",
+                ts,
+                vec![
+                    ("hits", self.stats.hits as f64),
+                    ("misses", self.stats.misses as f64),
+                    ("evictions", self.stats.evictions as f64),
+                ],
+            );
+        }
         // filtering levels have no clock of their own: forward the pool's
         // virtual time down to the terminal (channel-owning) level
         self.backing.sync_cycle(cycle);
@@ -423,6 +451,13 @@ impl MemoryLevel for CompressedCache {
 
     fn wait_cycles(&self) -> u64 {
         self.backing.wait_cycles()
+    }
+
+    fn attach_tracer(&mut self, tracer: &crate::obs::Tracer, shard: u32, ts_scale: f64) {
+        self.tracer = tracer.clone();
+        self.trace_track = crate::obs::track::cache(shard);
+        self.trace_ts_scale = ts_scale;
+        self.backing.attach_tracer(tracer, shard, ts_scale);
     }
 
     fn clock_mhz(&self) -> f64 {

@@ -85,6 +85,11 @@ struct PoolShared {
     /// wall time (1 cycle ≡ 1 µs, `PoolSim`'s convention) before every
     /// batch, so idle gaps don't read as channel queuing.
     epoch: Instant,
+    /// Observability hook (disabled by default): per-batch spans on
+    /// each shard's track, stamped with the virtual (epoch-elapsed µs)
+    /// clock. The tracer clamps per-track timestamps, so the racing
+    /// wall/virtual clocks of the threaded path stay monotone.
+    tracer: crate::obs::Tracer,
 }
 
 /// Handle to a running sharded pool. Share via `Arc`; `submit` takes
@@ -114,6 +119,19 @@ impl NpuPool {
         cfg: ServerConfig,
         affinity: Option<Vec<f64>>,
     ) -> Result<NpuPool> {
+        Self::start_observed(factories, cfg, affinity, crate::obs::Tracer::disabled())
+    }
+
+    /// [`NpuPool::start_affine`] with an observability tracer attached:
+    /// every shard emits per-batch spans on its track (virtual-µs
+    /// timestamps). `serve --trace` uses this; the default constructors
+    /// pass the zero-overhead disabled tracer.
+    pub fn start_observed(
+        factories: Vec<BackendFactory>,
+        cfg: ServerConfig,
+        affinity: Option<Vec<f64>>,
+        tracer: crate::obs::Tracer,
+    ) -> Result<NpuPool> {
         anyhow::ensure!(!factories.is_empty(), "pool needs at least one shard");
         let shards = factories.len();
         if let Some(a) = &affinity {
@@ -135,6 +153,7 @@ impl NpuPool {
             policy: cfg.policy,
             affinity,
             epoch: Instant::now(),
+            tracer,
         });
         let (dim_tx, dim_rx) = mpsc::channel::<Result<usize>>();
         let mut workers = Vec::with_capacity(shards);
@@ -395,10 +414,16 @@ fn execute(shared: &PoolShared, shard: usize, backend: &mut dyn Backend, batch: 
     m.shards[shard].batches.inc();
     m.shards[shard].requests.add(n as u64);
     // forgive idle time on the shared channel before billing this batch
-    backend.sync_virtual_cycle(shared.epoch.elapsed().as_micros() as u64);
+    let vnow = shared.epoch.elapsed().as_micros() as u64;
+    backend.sync_virtual_cycle(vnow);
     let wait_before = backend.mem_wait_cycles().unwrap_or(0);
     match backend.run_batch_timed(&inputs) {
         Ok((outputs, cycles)) => {
+            if shared.tracer.is_enabled() {
+                let track = crate::obs::track::shard(shard);
+                shared.tracer.begin(track, "batch", vnow);
+                shared.tracer.end(track, "batch", vnow + cycles);
+            }
             m.shards[shard].busy_cycles.add(cycles);
             // queuing delay this batch paid on a shared DRAM channel
             let wait_after = backend.mem_wait_cycles().unwrap_or(0);
@@ -477,6 +502,11 @@ pub struct PoolSim {
     next_grant: usize,
     /// Scheme-aware placement for heterogeneous pools.
     affinity: Option<Vec<f64>>,
+    /// Observability hook (disabled by default — zero overhead). All
+    /// instrumentation only *reads* simulator state: reports are
+    /// bit-identical with tracing on or off (pinned by
+    /// `tests/sim_equivalence.rs`).
+    tracer: crate::obs::Tracer,
 }
 
 impl PoolSim {
@@ -500,7 +530,25 @@ impl PoolSim {
             channel_policy: ArbiterPolicy::Fifo,
             next_grant: 0,
             affinity: None,
+            tracer: crate::obs::Tracer::disabled(),
         })
+    }
+
+    /// Attach an observability tracer (builder-style): every shard's
+    /// device hierarchy joins it, and [`PoolSim::execute`] emits
+    /// per-batch stage spans plus one per-request accounting instant
+    /// carrying the exact additive latency decomposition E13 consumes.
+    pub fn with_tracer(mut self, tracer: crate::obs::Tracer) -> Self {
+        for (s, sh) in self.shards.iter_mut().enumerate() {
+            sh.device.attach_tracer(&tracer, s);
+        }
+        self.tracer = tracer;
+        self
+    }
+
+    /// The attached tracer (disabled unless [`PoolSim::with_tracer`]).
+    pub fn tracer(&self) -> &crate::obs::Tracer {
+        &self.tracer
     }
 
     /// Set the grant-priority policy for same-cycle-ready batches.
@@ -570,9 +618,14 @@ impl PoolSim {
             return Ok(());
         }
         let inputs: Vec<Vec<f32>> = idxs.iter().map(|&i| requests[i].input.clone()).collect();
+        let traced = self.tracer.is_enabled();
+        let wait_before = if traced { self.shards[s].device.mem_wait_cycles() } else { 0 };
         let r = self.shards[s].device.execute_batch_at(&inputs, now)?;
         let done = now + r.total_cycles;
         self.shards[s].free_at = done;
+        if traced {
+            self.trace_batch(s, now, done, wait_before, &idxs, requests, &r);
+        }
         for (i, out) in idxs.into_iter().zip(r.outputs) {
             completions.push(SimCompletion {
                 index: i,
@@ -583,6 +636,57 @@ impl PoolSim {
             });
         }
         Ok(())
+    }
+
+    /// Emit one batch's observability record: a `batch` span covering
+    /// `[now, done)` with sequential child stage spans, plus one
+    /// `request` instant per batched request carrying the exact
+    /// additive decomposition of its end-to-end latency
+    /// (`queue + sync + arbiter + memory + fill + compute + drain ==
+    /// done - arrival`) — the records E13 aggregates.
+    #[allow(clippy::too_many_arguments)]
+    fn trace_batch(
+        &self,
+        s: usize,
+        now: u64,
+        done: u64,
+        wait_before: u64,
+        idxs: &[usize],
+        requests: &[SimRequest],
+        r: &crate::npu::BatchResult,
+    ) {
+        let stages = self.shards[s].device.stage_breakdown(r, idxs.len() as u64, wait_before);
+        let t = &self.tracer;
+        let track = crate::obs::track::shard(s);
+        t.begin(track, "batch", now);
+        let mut at = now;
+        for (name, dur) in stages.spans() {
+            if dur > 0 {
+                t.begin(track, name, at);
+                t.end(track, name, at + dur);
+                at += dur;
+            }
+        }
+        t.end(track, "batch", done);
+        for &i in idxs {
+            let arrival = requests[i].arrival;
+            t.instant(
+                track,
+                "request",
+                done,
+                vec![
+                    ("index", i as f64),
+                    ("queue", (now - arrival) as f64),
+                    ("sync", stages.sync as f64),
+                    ("arbiter", stages.arbiter as f64),
+                    ("memory", stages.memory as f64),
+                    ("fill", stages.fill as f64),
+                    ("compute", stages.compute as f64),
+                    ("drain", stages.drain as f64),
+                    ("latency", (done - arrival) as f64),
+                ],
+            );
+        }
     }
 
     /// Place one request on the least-loaded shard (affinity-aware for
@@ -602,6 +706,14 @@ impl PoolSim {
         let at = self.v(arrival);
         if self.shards[shard].batcher.push(index, at).is_err() {
             anyhow::bail!("sim lane overflow: raise queue_cap for this trace");
+        }
+        if self.tracer.is_enabled() {
+            self.tracer.instant(
+                crate::obs::track::POOL,
+                "arrival",
+                arrival,
+                vec![("index", index as f64), ("shard", shard as f64)],
+            );
         }
         Ok(shard)
     }

@@ -1,0 +1,403 @@
+//! E13 — cycle accounting: where does a request's latency actually go?
+//!
+//! E10/E11 report end-to-end latency distributions; this experiment
+//! decomposes them. Every cell replays E10's open-loop trace on a pool
+//! whose shards share one arbitrated DRAM channel (E11's bottleneck
+//! configuration), with the [`crate::obs::Tracer`] attached — the pool
+//! then emits one accounting instant per served request carrying the
+//! **exact additive decomposition** of its latency:
+//!
+//! ```text
+//! queue + sync + arbiter + memory + fill + compute + drain == done - arrival
+//! ```
+//!
+//! The identity is runtime-asserted per request *and* in aggregate
+//! against the pool report, so a stage share can never silently
+//! double-count or leak cycles. Cells force
+//! [`TimingModel::Grid`]: the cycle-level PE grid is what
+//! makes `fill`/`drain` explicit (the schedule model folds the weight
+//! fill into compute, which would report a vacuous zero share for the
+//! very stage compression targets).
+//!
+//! Per (kernel × scheme × shard-count) cell the row reports mean/p99
+//! latency plus each stage's mean cycles and share of total cycles —
+//! the paper's bandwidth argument, restated as "compression shrinks the
+//! memory+fill share". With `--trace-dir` each cell also writes its
+//! full Perfetto-loadable trace next to the report.
+
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::bench_suite::{all_workloads, Workload};
+use crate::coordinator::{BatchPolicy, PoolSim};
+use crate::fixed::QFormat;
+use crate::mem::{ArbiterPolicy, ChannelConfig, ChannelHub, DramChannel, SharedChannel};
+use crate::npu::{NpuConfig, NpuDevice, NpuProgram};
+use crate::obs::{Phase, Tracer};
+use crate::systolic::TimingModel;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+use super::e10_serving::{gen_trace_on, percentile};
+use super::e11_slo::E11_CACHE;
+use super::e9_cache::{build_hierarchy_on, dram_for};
+
+/// The shard sweep (E11's: contention on the shared channel grows the
+/// arbiter share as shards multiply).
+pub const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// The additive latency stages, in pipeline order. `queue` is batch
+/// formation (arrival → flush); the rest partition the batch's device
+/// cycles (see [`crate::npu::StageBreakdown`]).
+pub const STAGES: [&str; 7] = ["queue", "sync", "arbiter", "memory", "fill", "compute", "drain"];
+
+/// Per-shard cache geometry: E11's deliberately small SRAM, so misses
+/// reach the shared channel and the memory/arbiter stages are visible.
+pub const E13_CACHE: (usize, usize, usize) = E11_CACHE;
+
+/// Batch-formation deadline in device cycles (same convention as E10/11).
+const MAX_WAIT_CYCLES: u64 = 2_000;
+
+/// Tracer ring capacity per cell — sized so a full harness-scale cell
+/// fits with an order of magnitude to spare; overflow is a hard error
+/// (dropped events would make the accounting partial).
+const TRACE_CAPACITY: usize = 1 << 18;
+
+/// One (kernel, scheme, shard-count) cell.
+#[derive(Debug, Clone)]
+pub struct E13Row {
+    pub workload: String,
+    pub scheme: String,
+    pub shards: usize,
+    pub requests: u64,
+    /// Mean end-to-end latency (device cycles).
+    pub mean_cycles: f64,
+    pub p99_cycles: u64,
+    /// Mean cycles per stage in [`STAGES`] order; sums to `mean_cycles`.
+    pub stage_mean: Vec<(&'static str, f64)>,
+    /// Each stage's share of total cycles; sums to 1.0 (all zeros only
+    /// for an empty trace).
+    pub stage_share: Vec<(&'static str, f64)>,
+}
+
+impl E13Row {
+    /// Share of one stage by name (0.0 for unknown names).
+    pub fn share(&self, stage: &str) -> f64 {
+        self.stage_share.iter().find(|(s, _)| *s == stage).map_or(0.0, |(_, v)| *v)
+    }
+
+    /// Machine-readable form for the harness report.
+    pub fn to_json(&self) -> Json {
+        let obj = |v: &[(&'static str, f64)]| {
+            Json::obj(v.iter().map(|(k, x)| (*k, Json::from(*x))).collect())
+        };
+        Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("scheme", self.scheme.clone().into()),
+            ("shards", self.shards.into()),
+            ("requests", self.requests.into()),
+            ("mean_cycles", self.mean_cycles.into()),
+            ("p99_cycles", self.p99_cycles.into()),
+            ("stage_mean", obj(&self.stage_mean)),
+            ("stage_share", obj(&self.stage_share)),
+        ])
+    }
+}
+
+/// One cell with the default NPU shape (the timing model is forced to
+/// the grid regardless — see the module docs).
+pub fn measure(
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    shards: usize,
+    n: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<(E13Row, Tracer)> {
+    measure_on(NpuConfig::default(), w, program, scheme, shards, n, batch, seed)
+}
+
+/// One cell: run the traced pool, fold the per-request accounting
+/// instants, and hand back the tracer so callers can export the trace.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_on(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    shards: usize,
+    n: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<(E13Row, Tracer)> {
+    ensure!(shards > 0, "shard count must be positive");
+    let npu = NpuConfig { model: TimingModel::Grid, ..npu };
+    let hub = ChannelHub::shared(ChannelConfig::zc702_ddr3(), ArbiterPolicy::Fifo, shards);
+    let devices = (0..shards)
+        .map(|s| {
+            let channel = DramChannel::Shared(SharedChannel::new(hub.clone(), s));
+            let hierarchy = build_hierarchy_on(scheme, E13_CACHE, dram_for(scheme, channel)?)?;
+            Ok(NpuDevice::new(npu, program.clone())?
+                .with_weight_scheme(scheme)?
+                .with_memory(Box::new(hierarchy)))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let policy = BatchPolicy {
+        max_batch: batch.max(1),
+        max_wait: Duration::from_micros(MAX_WAIT_CYCLES), // cycles, by sim convention
+        queue_cap: 1 << 16,
+    };
+    let mut sim = PoolSim::new(devices, policy)?.with_tracer(Tracer::enabled(TRACE_CAPACITY));
+    let trace = gen_trace_on(npu, w, program, n, batch.max(1), seed);
+    let report = sim.run(&trace)?;
+    ensure!(sim.tracer().dropped() == 0, "trace ring overflowed; accounting would be partial");
+
+    let mut sums = [0u64; STAGES.len()];
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut latency_sum = 0u64;
+    for e in sim.tracer().events() {
+        if e.phase != Phase::Instant || e.name != "request" {
+            continue;
+        }
+        let get = |key: &str| -> Result<u64> {
+            e.args
+                .iter()
+                .find(|(k, _)| *k == key)
+                .map(|(_, v)| *v as u64)
+                .with_context(|| format!("request instant missing arg {key:?}"))
+        };
+        let latency = get("latency")?;
+        let mut acc = 0u64;
+        for (i, stage) in STAGES.iter().enumerate() {
+            let c = get(stage)?;
+            sums[i] += c;
+            acc += c;
+        }
+        ensure!(acc == latency, "stage cycles must sum to latency ({acc} != {latency})");
+        latencies.push(latency);
+        latency_sum += latency;
+    }
+    ensure!(
+        latencies.len() == report.completions.len(),
+        "one accounting instant per completion ({} != {})",
+        latencies.len(),
+        report.completions.len()
+    );
+    let report_sum: u64 = report.completions.iter().map(|c| c.done - c.arrival).sum();
+    ensure!(
+        latency_sum == report_sum,
+        "traced latency must equal the pool report's ({latency_sum} != {report_sum})"
+    );
+
+    latencies.sort_unstable();
+    let requests = latencies.len() as u64;
+    let per_req = |c: u64| if requests == 0 { 0.0 } else { c as f64 / requests as f64 };
+    let share = |c: u64| if latency_sum == 0 { 0.0 } else { c as f64 / latency_sum as f64 };
+    let row = E13Row {
+        workload: w.name().to_string(),
+        scheme: scheme.to_string(),
+        shards,
+        requests,
+        mean_cycles: per_req(latency_sum),
+        p99_cycles: percentile(&latencies, 0.99),
+        stage_mean: STAGES.iter().zip(sums).map(|(s, c)| (*s, per_req(c))).collect(),
+        stage_share: STAGES.iter().zip(sums).map(|(s, c)| (*s, share(c))).collect(),
+    };
+    Ok((row, sim.tracer().clone()))
+}
+
+/// The shard sweep for one (kernel, scheme) — one harness job. With a
+/// `trace_dir` every cell also writes its Perfetto-loadable trace.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_all_on(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    n: usize,
+    batch: usize,
+    seed: u64,
+    trace_dir: Option<&str>,
+) -> Result<Vec<E13Row>> {
+    let mut rows = Vec::with_capacity(SHARD_COUNTS.len());
+    for &shards in &SHARD_COUNTS {
+        let (row, tracer) = measure_on(npu, w, program, scheme, shards, n, batch, seed)?;
+        if let Some(dir) = trace_dir {
+            export_trace(dir, &row, &tracer)?;
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Write one cell's trace to
+/// `{dir}/e13_{workload}_{scheme}_{shards}shards.trace.json`
+/// (chrome://tracing / ui.perfetto.dev both load it directly).
+fn export_trace(dir: &str, row: &E13Row, tracer: &Tracer) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating trace dir {dir:?}"))?;
+    let path = std::path::Path::new(dir).join(format!(
+        "e13_{}_{}_{}shards.trace.json",
+        row.workload, row.scheme, row.shards
+    ));
+    std::fs::write(&path, tracer.chrome_trace().dump())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Full E13 for `run-bench`: every kernel × scheme × shard count.
+pub fn run(fmt: QFormat, invocations: usize, batch: usize) -> Result<Vec<E13Row>> {
+    run_with_traces(fmt, invocations, batch, None)
+}
+
+/// [`run`] with optional per-cell trace export.
+pub fn run_with_traces(
+    fmt: QFormat,
+    invocations: usize,
+    batch: usize,
+    trace_dir: Option<&str>,
+) -> Result<Vec<E13Row>> {
+    let manifest = super::load_manifest().ok();
+    let mut rows = Vec::new();
+    for w in all_workloads() {
+        let program = match &manifest {
+            Some(m) => super::program_from_artifact(m, w.name(), fmt)
+                .unwrap_or_else(|_| super::program_from_workload(w.as_ref(), fmt, 42)),
+            None => super::program_from_workload(w.as_ref(), fmt, 42),
+        };
+        for scheme in super::e5_bandwidth::SCHEMES {
+            rows.extend(measure_all_on(
+                NpuConfig::default(),
+                w.as_ref(),
+                &program,
+                scheme,
+                invocations,
+                batch,
+                61,
+                trace_dir,
+            )?);
+        }
+    }
+    Ok(rows)
+}
+
+pub fn print_table(rows: &[E13Row]) {
+    let mut t = Table::new(&[
+        "workload",
+        "scheme",
+        "shards",
+        "mean(cyc)",
+        "p99(cyc)",
+        "queue",
+        "sync",
+        "arb",
+        "mem",
+        "fill",
+        "comp",
+        "drain",
+    ]);
+    for r in rows {
+        let pct = |s: &str| format!("{:5.1}%", r.share(s) * 100.0);
+        t.row(&[
+            r.workload.clone(),
+            r.scheme.clone(),
+            format!("{}", r.shards),
+            format!("{:.0}", r.mean_cycles),
+            format!("{}", r.p99_cycles),
+            pct("queue"),
+            pct("sync"),
+            pct("arbiter"),
+            pct("memory"),
+            pct("fill"),
+            pct("compute"),
+            pct("drain"),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::workload;
+    use crate::fixed::Q7_8;
+
+    fn setup(name: &str) -> (Box<dyn Workload>, NpuProgram) {
+        let w = workload(name).unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+        (w, p)
+    }
+
+    #[test]
+    fn shares_sum_to_one_and_stages_cover_latency() {
+        let (w, p) = setup("sobel");
+        let (r, _) = measure_on(NpuConfig::default(), w.as_ref(), &p, "bdi", 2, 24, 4, 7).unwrap();
+        assert_eq!(r.shards, 2);
+        assert!(r.requests > 0);
+        let total: f64 = r.stage_share.iter().map(|(_, v)| v).sum();
+        assert!((total - 1.0).abs() < 1e-9, "shares must sum to 1 (got {total})");
+        let mean: f64 = r.stage_mean.iter().map(|(_, v)| v).sum();
+        assert!((mean - r.mean_cycles).abs() < 1e-6, "stage means must sum to the mean");
+        assert!(r.share("compute") > 0.0, "the grid always computes");
+        assert!(r.share("fill") > 0.0, "the grid model makes the weight fill explicit");
+    }
+
+    #[test]
+    fn rows_are_deterministic_and_serialize_stage_share() {
+        let (w, p) = setup("fft");
+        let npu = NpuConfig::default();
+        let a = measure_all_on(npu, w.as_ref(), &p, "fpc", 12, 4, 11, None).unwrap();
+        let b = measure_all_on(npu, w.as_ref(), &p, "fpc", 12, 4, 11, None).unwrap();
+        assert_eq!(a.len(), SHARD_COUNTS.len());
+        let shards: Vec<usize> = a.iter().map(|r| r.shards).collect();
+        assert_eq!(shards, SHARD_COUNTS);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_json().dump(), y.to_json().dump(), "rows must be bit-identical");
+        }
+        let j = Json::parse(&a[0].to_json().dump()).unwrap();
+        for field in [
+            "workload",
+            "scheme",
+            "shards",
+            "mean_cycles",
+            "p99_cycles",
+            "stage_mean",
+            "stage_share",
+        ] {
+            assert!(j.get(field).is_some(), "missing {field}");
+        }
+        let share = j.get("stage_share").unwrap();
+        for stage in STAGES {
+            assert!(share.get(stage).is_some(), "stage_share missing {stage}");
+        }
+    }
+
+    #[test]
+    fn trace_export_writes_perfetto_json() {
+        let (w, p) = setup("sobel");
+        let dir = std::env::temp_dir().join("snnapc-e13-test-traces");
+        let dir_s = dir.to_str().unwrap().to_string();
+        let npu = NpuConfig::default();
+        let rows = measure_all_on(npu, w.as_ref(), &p, "none", 8, 4, 3, Some(&dir_s)).unwrap();
+        for r in &rows {
+            let path = dir.join(format!(
+                "e13_{}_{}_{}shards.trace.json",
+                r.workload, r.scheme, r.shards
+            ));
+            let text = std::fs::read_to_string(&path).unwrap();
+            let j = Json::parse(&text).unwrap();
+            assert!(
+                !j.get("traceEvents").unwrap().as_arr().unwrap().is_empty(),
+                "trace must carry events"
+            );
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn unknown_scheme_is_a_clean_error() {
+        let (w, p) = setup("sobel");
+        assert!(measure(w.as_ref(), &p, "zstd", 1, 4, 4, 1).is_err());
+    }
+}

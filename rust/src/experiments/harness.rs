@@ -1,6 +1,6 @@
 //! Unified, multi-threaded experiment harness.
 //!
-//! One registry ([`EXPERIMENTS`]) describes E1..E12; [`build_jobs`] expands
+//! One registry ([`EXPERIMENTS`]) describes E1..E13; [`build_jobs`] expands
 //! a [`HarnessConfig`] into the full sweep grid (every bench_suite kernel
 //! × every compression scheme where the experiment varies by scheme, plus
 //! the synthetic-distribution jobs); [`run`] fans the jobs out over a
@@ -27,8 +27,10 @@ use crate::trace::Synthetic;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::{e10_serving, e11_slo, e12_systolic, e1_compression, e2_speedup, e3_energy};
-use super::{e4_quality, e5_bandwidth, e6_batching, e7_lcp, e8_ablation, e9_cache, selfbench};
+use super::{e10_serving, e11_slo, e12_systolic, e13_accounting, e1_compression, e2_speedup};
+use super::{
+    e3_energy, e4_quality, e5_bandwidth, e6_batching, e7_lcp, e8_ablation, e9_cache, selfbench,
+};
 
 /// What a job measures: a bench_suite kernel or a synthetic distribution.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -66,12 +68,15 @@ pub struct Scenario {
     /// their devices from (`npu.model = grid` runs the pools on the
     /// cycle-level PE grid).
     pub npu: NpuConfig,
+    /// Directory E13 writes per-cell Perfetto traces into (None = no
+    /// trace export; measurement rows are identical either way).
+    pub trace_dir: Option<String>,
 }
 
 /// A registry entry describing one experiment.
 #[derive(Debug, Clone, Copy)]
 pub struct ExperimentSpec {
-    /// Stable id ("e1".."e11") — the CLI/CI selector and report key.
+    /// Stable id ("e1".."e13") — the CLI/CI selector and report key.
     pub id: &'static str,
     pub title: &'static str,
     /// Whether the sweep fans out one job per compression scheme.
@@ -88,7 +93,7 @@ pub struct ExperimentSpec {
 }
 
 /// All experiments, in report order.
-pub static EXPERIMENTS: [ExperimentSpec; 12] = [
+pub static EXPERIMENTS: [ExperimentSpec; 13] = [
     ExperimentSpec {
         id: "e1",
         title: "compression ratio per workload stream",
@@ -185,6 +190,16 @@ pub static EXPERIMENTS: [ExperimentSpec; 12] = [
         shared_seed_per_kernel: false,
         sweeps_channel_policies: false,
     },
+    ExperimentSpec {
+        id: "e13",
+        title: "cycle accounting: additive latency-stage decomposition",
+        per_scheme: true, // every shard's hierarchy uses the scheme
+        synthetics: false,
+        // stage *shares* are compared across schemes, so scheme cells
+        // of one kernel must replay the identical trace
+        shared_seed_per_kernel: true,
+        sweeps_channel_policies: false,
+    },
 ];
 
 /// The simulator self-benchmark (sim-cycles-per-wall-second on pinned
@@ -202,7 +217,7 @@ pub static SELFBENCH: ExperimentSpec = ExperimentSpec {
     sweeps_channel_policies: false,
 };
 
-/// Look an experiment up by id ("e1".."e12", or "selfbench").
+/// Look an experiment up by id ("e1".."e13", or "selfbench").
 pub fn experiment(id: &str) -> Option<&'static ExperimentSpec> {
     if id == SELFBENCH.id {
         return Some(&SELFBENCH);
@@ -233,6 +248,10 @@ pub struct HarnessConfig {
     /// NPU shape + timing model (`npu.model=grid` runs the
     /// device-driven experiments on the cycle-level PE grid).
     pub npu: NpuConfig,
+    /// Directory E13 writes per-cell Perfetto traces into. Deliberately
+    /// excluded from [`config_json`]: it is a machine-local path and
+    /// must not perturb the bit-identical report payload.
+    pub trace_dir: Option<String>,
 }
 
 /// Sensible worker count for this machine.
@@ -253,6 +272,7 @@ impl Default for HarnessConfig {
             jobs: default_jobs(),
             seed: 42,
             npu: NpuConfig::default(),
+            trace_dir: None,
         }
     }
 }
@@ -311,7 +331,7 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
     let mut jobs = Vec::new();
     for id in &cfg.experiments {
         let spec = experiment(id)
-            .with_context(|| format!("unknown experiment {id:?} (expected e1..e12 or selfbench)"))?;
+            .with_context(|| format!("unknown experiment {id:?} (expected e1..e13 or selfbench)"))?;
         let schemes: Vec<&str> = if spec.per_scheme {
             cfg.schemes.iter().map(String::as_str).collect()
         } else {
@@ -351,6 +371,7 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
                             Vec::new()
                         },
                         npu: cfg.npu,
+                        trace_dir: cfg.trace_dir.clone(),
                     },
                 });
             }
@@ -371,6 +392,7 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
                         seed,
                         channel_policies: Vec::new(),
                         npu: cfg.npu,
+                        trace_dir: cfg.trace_dir.clone(),
                     },
                 });
             }
@@ -527,6 +549,21 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
                 seed,
             )?;
             Ok(rows.iter().map(e12_systolic::E12Row::to_json).collect())
+        }
+        ("e13", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let rows = e13_accounting::measure_all_on(
+                sc.npu,
+                w.as_ref(),
+                &p,
+                &sc.scheme,
+                sc.invocations,
+                sc.batch,
+                seed,
+                sc.trace_dir.as_deref(),
+            )?;
+            Ok(rows.iter().map(e13_accounting::E13Row::to_json).collect())
         }
         ("e8", Target::Bench(b)) => {
             let w = workload(b).unwrap();
@@ -714,14 +751,16 @@ mod tests {
         let ids: Vec<_> = EXPERIMENTS.iter().map(|e| e.id).collect();
         assert_eq!(
             ids,
-            ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12"]
+            ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12", "e13"]
         );
         assert!(experiment("e5").unwrap().per_scheme);
         assert!(experiment("e9").unwrap().per_scheme);
         assert!(experiment("e10").unwrap().per_scheme);
         assert!(experiment("e11").unwrap().per_scheme);
         assert!(experiment("e12").unwrap().per_scheme);
-        assert!(experiment("e13").is_none());
+        assert!(experiment("e13").unwrap().per_scheme);
+        assert!(experiment("e13").unwrap().shared_seed_per_kernel);
+        assert!(experiment("e14").is_none());
     }
 
     #[test]
@@ -761,6 +800,7 @@ mod tests {
         assert_eq!(count("e10"), 7 * 5, "e10 fans out per scheme");
         assert_eq!(count("e11"), 7 * 5, "e11 fans out per scheme");
         assert_eq!(count("e12"), 7 * 5, "e12 fans out per scheme");
+        assert_eq!(count("e13"), 7 * 5, "e13 fans out per scheme");
         // only e11 jobs carry the channel-policy sweep
         for j in &jobs {
             if j.experiment == "e11" {
@@ -820,28 +860,32 @@ mod tests {
         for (a, b) in jobs.iter().zip(&again) {
             assert_eq!(a.scenario.seed, b.scenario.seed, "{}", a.label);
         }
+        let shares_seed = |j: &&Job| j.experiment == "e11" || j.experiment == "e13";
         let mut seeds: Vec<u64> =
-            jobs.iter().filter(|j| j.experiment != "e11").map(|j| j.scenario.seed).collect();
-        let non_e11 = seeds.len();
+            jobs.iter().filter(|j| !shares_seed(j)).map(|j| j.scenario.seed).collect();
+        let independent = seeds.len();
         seeds.sort_unstable();
         seeds.dedup();
-        assert_eq!(seeds.len(), non_e11, "per-job seeds must be distinct");
+        assert_eq!(seeds.len(), independent, "per-job seeds must be distinct");
 
-        // e11 scheme cells share one seed per kernel (the cross-scheme
-        // throughput-at-SLO comparison needs identical programs, scripts
-        // and SLO), but kernels still draw independent streams
-        let e11: Vec<&Job> = jobs.iter().filter(|j| j.experiment == "e11").collect();
-        assert!(!e11.is_empty());
-        for a in &e11 {
-            for b in &e11 {
-                let same_kernel = a.scenario.target == b.scenario.target;
-                assert_eq!(
-                    a.scenario.seed == b.scenario.seed,
-                    same_kernel,
-                    "{} vs {}",
-                    a.label,
-                    b.label
-                );
+        // e11/e13 scheme cells share one seed per kernel (their headline
+        // metrics are compared across schemes, so every cell must replay
+        // identical programs and traffic), but kernels still draw
+        // independent streams
+        for id in ["e11", "e13"] {
+            let group: Vec<&Job> = jobs.iter().filter(|j| j.experiment == id).collect();
+            assert!(!group.is_empty());
+            for a in &group {
+                for b in &group {
+                    let same_kernel = a.scenario.target == b.scenario.target;
+                    assert_eq!(
+                        a.scenario.seed == b.scenario.seed,
+                        same_kernel,
+                        "{} vs {}",
+                        a.label,
+                        b.label
+                    );
+                }
             }
         }
 

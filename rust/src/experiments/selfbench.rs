@@ -62,6 +62,13 @@ pub struct SelfbenchRow {
     /// Fill-cache hit share during the component (process-lifetime
     /// delta; informational).
     pub fill_cache_hit_share: f64,
+    /// Fill-cache hits/misses during the component (deltas of the
+    /// process-global counters) and resident entries after it — report
+    /// cells for the CI perf-trend gate, so memoization regressions
+    /// surface as a number and not just as wall-clock noise.
+    pub fill_cache_hits: u64,
+    pub fill_cache_misses: u64,
+    pub fill_cache_entries: u64,
 }
 
 impl SelfbenchRow {
@@ -74,6 +81,9 @@ impl SelfbenchRow {
             ("wall_ms", self.wall_ms.into()),
             ("sim_cycles_per_wall_sec", self.sim_cycles_per_wall_sec.into()),
             ("fill_cache_hit_share", self.fill_cache_hit_share.into()),
+            ("fill_cache_hits", self.fill_cache_hits.into()),
+            ("fill_cache_misses", self.fill_cache_misses.into()),
+            ("fill_cache_entries", self.fill_cache_entries.into()),
         ])
     }
 }
@@ -106,6 +116,9 @@ fn row(
         wall_ms: wall.as_secs_f64() * 1e3,
         sim_cycles_per_wall_sec: sim_cycles as f64 / wall_sec,
         fill_cache_hit_share: hit_share,
+        fill_cache_hits: cache_after.hits.saturating_sub(cache_before.hits),
+        fill_cache_misses: cache_after.misses.saturating_sub(cache_before.misses),
+        fill_cache_entries: fill_cache::len() as u64,
     }
 }
 
@@ -213,6 +226,8 @@ pub fn print_table(rows: &[SelfbenchRow]) {
         "wall(ms)",
         "sim-cyc/s",
         "fill-hit",
+        "fill-h/m",
+        "entries",
     ]);
     for r in rows {
         t.row(&[
@@ -223,6 +238,8 @@ pub fn print_table(rows: &[SelfbenchRow]) {
             format!("{:.2}", r.wall_ms),
             format!("{:.3e}", r.sim_cycles_per_wall_sec),
             format!("{:4.0}%", r.fill_cache_hit_share * 100.0),
+            format!("{}/{}", r.fill_cache_hits, r.fill_cache_misses),
+            format!("{}", r.fill_cache_entries),
         ]);
     }
     t.print();
@@ -257,7 +274,15 @@ mod tests {
             assert!(r.sim_cycles > 0, "{} covers simulated work", r.component);
             assert!(r.sim_cycles_per_wall_sec > 0.0);
             let j = Json::parse(&r.to_json().dump()).unwrap();
-            for field in ["component", "sim_cycles", "wall_ms", "sim_cycles_per_wall_sec"] {
+            for field in [
+                "component",
+                "sim_cycles",
+                "wall_ms",
+                "sim_cycles_per_wall_sec",
+                "fill_cache_hits",
+                "fill_cache_misses",
+                "fill_cache_entries",
+            ] {
                 assert!(j.get(field).is_some(), "missing {field}");
             }
         }

@@ -15,6 +15,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod mem;
 pub mod npu;
+pub mod obs;
 pub mod runtime;
 pub mod systolic;
 pub mod trace;

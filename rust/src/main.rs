@@ -4,9 +4,9 @@
 //!   info            show artifact manifest + effective config
 //!   serve           start the sharded batching pool and drive it with a
 //!                   synthetic open-loop client (requests/s, duration)
-//!   experiments     run the e1..e12 sweep in parallel and emit one
+//!   experiments     run the e1..e13 sweep in parallel and emit one
 //!                   consolidated JSON report (the harness)
-//!   run-bench       print experiment tables: e1..e12 or all (serial)
+//!   run-bench       print experiment tables: e1..e13 or all (serial)
 //!   compress-file   per-scheme compression report for any file
 //!   trace           dump + compress a benchmark's NPU streams
 //!   config          print the effective configuration (reloadable)
@@ -33,9 +33,11 @@ use snnap_c::coordinator::{
 use snnap_c::experiments as ex;
 use snnap_c::mem::{ArbiterPolicy, ChannelHub, DramChannel, SharedChannel};
 use snnap_c::npu::{NpuDevice, NpuProgram};
+use snnap_c::obs::{self, Tracer};
 use snnap_c::runtime::{Manifest, NpuExecutor};
 use snnap_c::trace::Trace;
 use snnap_c::util::bench::Table;
+use snnap_c::util::json::Json;
 use snnap_c::util::rng::Rng;
 
 const HELP: &str = "snnapc — systolic NPU + compressed cache/memory hierarchy (see README.md)
@@ -54,10 +56,16 @@ COMMANDS:
                             whose DRAM transfers all serialize on ONE
                             arbitrated channel; config keys: compression,
                             pool.schemes, pool.geometries, channel.policy)
-  experiments               parallel e1..e12 sweep + one JSON report
+    --trace FILE            record a Perfetto/chrome-trace JSON of the run
+                            (batch spans per shard, channel grant/burst
+                            spans, cache/DRAM counters, registry snapshot)
+  experiments               parallel e1..e13 sweep + one JSON report
     --all                   run every experiment (default when no
                             --experiment is given)
-    --experiment LIST       subset, e.g. e1 or e1,e9,e10,e11,e12
+    --experiment LIST       subset, e.g. e1 or e1,e9,e10,e11,e13
+    --only LIST             alias for --experiment
+    --trace-dir DIR         E13 also writes one Perfetto trace per cell
+                            (e13_{kernel}_{scheme}_{N}shards.trace.json)
     --benchmarks LIST       kernels to sweep (default: all seven)
     --schemes LIST          schemes for per-scheme experiments
                             (none|bdi|fpc|bdi+fpc|cpack; default: all)
@@ -78,9 +86,12 @@ COMMANDS:
                             e12 sweeps kernels x schemes x PE-grid
                             geometries on the cycle-level systolic grid:
                             weight-fill cycles through the edge
-                            decompressor, gated-MAC share, DRAM bytes)
+                            decompressor, gated-MAC share, DRAM bytes;
+                            e13 decomposes serving latency into additive
+                            queue/sync/arbiter/memory/fill/compute/drain
+                            stage shares on the traced grid pool)
   run-bench                 print experiment tables (serial)
-    --experiment e1..e12|all which experiment (default all)
+    --experiment e1..e13|all which experiment (default all)
     --invocations N         stream length knob (default 256)
   selfbench                 simulator throughput self-benchmark (serial):
                             sim-cycles-per-wall-second per hot path
@@ -174,6 +185,11 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     let backend_kind = args.opt("backend").unwrap_or("sim").to_string();
     workload(&cfg.benchmark)
         .with_context(|| format!("unknown benchmark {:?}", cfg.benchmark))?;
+    // `--trace out.json` records the whole run: per-shard batch spans
+    // from the pool workers, channel grant/burst spans and cache/DRAM
+    // counters from the sim hierarchies (wired below via attach_tracer)
+    let trace_out = args.opt("trace").map(String::from);
+    let tracer = if trace_out.is_some() { Tracer::enabled(1 << 20) } else { Tracer::disabled() };
 
     // one factory per shard; each runs on its shard's worker thread. Sim
     // shards front per-shard cache -> LCP-DRAM hierarchies (scheme and
@@ -189,6 +205,7 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
         let cfg2 = cfg.clone();
         let kind = backend_kind.clone();
         let hub = hub.clone();
+        let tracer = tracer.clone();
         factories.push(Box::new(move || match kind.as_str() {
             "pjrt" => {
                 let manifest = Manifest::load(Path::new(&cfg2.artifacts))?;
@@ -205,11 +222,11 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
                     geometry,
                     ex::e9_cache::dram_for(&scheme, channel)?,
                 )?;
-                Ok(Box::new(DeviceBackend {
-                    device: NpuDevice::new(cfg2.npu, program)?
-                        .with_weight_scheme(&scheme)?
-                        .with_memory(Box::new(hierarchy)),
-                }) as Box<dyn Backend>)
+                let mut device = NpuDevice::new(cfg2.npu, program)?
+                    .with_weight_scheme(&scheme)?
+                    .with_memory(Box::new(hierarchy));
+                device.attach_tracer(&tracer, shard);
+                Ok(Box::new(DeviceBackend { device }) as Box<dyn Backend>)
             }
             other => bail!("unknown backend {other:?} (sim|pjrt)"),
         }));
@@ -223,7 +240,12 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     } else {
         None
     };
-    let pool = NpuPool::start_affine(factories, ServerConfig { policy: cfg.policy }, affinity)?;
+    let pool = NpuPool::start_observed(
+        factories,
+        ServerConfig { policy: cfg.policy },
+        affinity,
+        tracer.clone(),
+    )?;
     let pool = std::sync::Arc::new(pool);
 
     println!(
@@ -256,6 +278,7 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     let dt = t0.elapsed();
     println!("== results ==");
     println!("{}", pool.metrics().report());
+    println!("metrics-json: {}", pool.metrics().to_json().dump());
     // only the sim shards bill the shared channel; pjrt never attaches
     // to it, so printing its (empty) stats would imply a modeled channel
     if backend_kind == "sim" {
@@ -275,6 +298,25 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
         dt,
         (requests as f64 / dt.as_secs_f64())
     );
+    if let Some(out) = &trace_out {
+        // fold everything the run measured into the process registry, so
+        // the trace file carries one unified snapshot next to the events
+        let reg = obs::global();
+        pool.metrics().publish(reg);
+        obs::registry::publish_fill_cache(reg);
+        if backend_kind == "sim" {
+            let h = hub.lock().unwrap();
+            for r in 0..h.requesters() {
+                obs::registry::publish_requester_stats(reg, r, &h.requester_stats(r));
+            }
+        }
+        let mut trace = tracer.chrome_trace();
+        if let Json::Obj(map) = &mut trace {
+            map.insert("registry".to_string(), reg.snapshot());
+        }
+        std::fs::write(out, trace.dump() + "\n").with_context(|| format!("writing {out}"))?;
+        println!("wrote trace {out} ({} events)", tracer.len());
+    }
     Ok(())
 }
 
@@ -286,7 +328,8 @@ fn cmd_experiments(cfg: &Config, args: &Args) -> Result<()> {
         ..Default::default()
     };
     if !args.flag("all") {
-        if let Some(list) = args.opt_csv("experiment") {
+        // `--only` is an alias for `--experiment` (reads better in CI)
+        if let Some(list) = args.opt_csv("experiment").or_else(|| args.opt_csv("only")) {
             hc.experiments = list;
         }
     }
@@ -299,6 +342,7 @@ fn cmd_experiments(cfg: &Config, args: &Args) -> Result<()> {
     if let Some(policies) = args.opt_csv("channel-policy") {
         hc.channel_policies = policies;
     }
+    hc.trace_dir = args.opt("trace-dir").map(String::from);
     hc.invocations = opt_positive(args, "invocations", hc.invocations)?;
     hc.batch = opt_positive(args, "batch", hc.batch)?;
     hc.jobs = opt_positive(args, "jobs", hc.jobs)?;
@@ -372,6 +416,8 @@ fn cmd_selfbench(cfg: &Config, args: &Args) -> Result<()> {
         "wall(ms)",
         "sim-cyc/s",
         "fill-hit",
+        "fill-h/m",
+        "entries",
     ]);
     let cells = report
         .json
@@ -391,6 +437,8 @@ fn cmd_selfbench(cfg: &Config, args: &Args) -> Result<()> {
                 format!("{:.2}", f("wall_ms")),
                 format!("{:.3e}", f("sim_cycles_per_wall_sec")),
                 format!("{:4.0}%", f("fill_cache_hit_share") * 100.0),
+                format!("{}/{}", f("fill_cache_hits") as u64, f("fill_cache_misses") as u64),
+                format!("{}", f("fill_cache_entries") as u64),
             ]);
         }
     }
@@ -487,6 +535,14 @@ fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
     if run_all || which == "e12" {
         println!("\n== E12: cycle-level PE grid (compressed weight streaming + gating) ==");
         ex::e12_systolic::print_table(&ex::e12_systolic::run(cfg.qformat, invocations)?);
+    }
+    if run_all || which == "e13" {
+        println!("\n== E13: cycle accounting (additive latency-stage decomposition) ==");
+        ex::e13_accounting::print_table(&ex::e13_accounting::run(
+            cfg.qformat,
+            invocations,
+            cfg.policy.max_batch,
+        )?);
     }
     Ok(())
 }

@@ -184,12 +184,32 @@ pub struct ChannelHub {
     /// Cycle the channel next frees up (channel clock).
     busy_until: u64,
     per: Vec<RequesterStats>,
+    /// Observability hook (disabled by default; zero-overhead).
+    tracer: crate::obs::Tracer,
+    /// Channel-cycle → trace-µs conversion (device cycles per channel
+    /// cycle), so hub spans share the pool's 1 cycle ≡ 1 µs timeline.
+    ts_scale: f64,
 }
 
 impl ChannelHub {
     pub fn new(cfg: ChannelConfig, policy: ArbiterPolicy, requesters: usize) -> ChannelHub {
         assert!(requesters > 0, "hub needs at least one requester");
-        ChannelHub { cfg, policy, busy_until: 0, per: vec![RequesterStats::default(); requesters] }
+        ChannelHub {
+            cfg,
+            policy,
+            busy_until: 0,
+            per: vec![RequesterStats::default(); requesters],
+            tracer: crate::obs::Tracer::disabled(),
+            ts_scale: 1.0,
+        }
+    }
+
+    /// Attach a tracer; `ts_scale` converts this hub's channel cycles
+    /// into the trace's virtual-µs timeline (`npu_clock / channel_clock`
+    /// for the pool's device tracks).
+    pub fn set_tracer(&mut self, tracer: &crate::obs::Tracer, ts_scale: f64) {
+        self.tracer = tracer.clone();
+        self.ts_scale = if ts_scale.is_finite() && ts_scale > 0.0 { ts_scale } else { 1.0 };
     }
 
     /// Convenience: a hub ready to hand out [`SharedChannel`] handles.
@@ -218,6 +238,16 @@ impl ChannelHub {
         s.payload_bytes += bytes as u64;
         s.busy_cycles += service;
         s.wait_cycles += wait;
+        if self.tracer.is_enabled() {
+            let track = crate::obs::track::channel(r);
+            let us = |c: u64| (c as f64 * self.ts_scale).round() as u64;
+            if wait > 0 {
+                self.tracer.begin(track, "grant_wait", us(req_time));
+                self.tracer.end(track, "grant_wait", us(start));
+            }
+            self.tracer.begin(track, "burst", us(start));
+            self.tracer.end(track, "burst", us(start + service));
+        }
         (wait, service)
     }
 
@@ -306,6 +336,12 @@ impl SharedChannel {
     /// This requester's local clock (channel cycles).
     pub fn local_time(&self) -> u64 {
         self.local_time
+    }
+
+    /// Attach a tracer to the hub behind this handle (idempotent across
+    /// shards sharing one hub). See [`ChannelHub::set_tracer`].
+    pub fn set_hub_tracer(&self, tracer: &crate::obs::Tracer, ts_scale: f64) {
+        self.hub.lock().unwrap().set_tracer(tracer, ts_scale);
     }
 
     /// This requester's cumulative queuing delay.

@@ -77,6 +77,11 @@ pub struct CompressedDram {
     /// LCP overflow counters (aggregated over all pages).
     pub type1_overflows: u64,
     pub type2_overflows: u64,
+    /// Observability hook (disabled by default): per-batch traffic
+    /// counters sampled at each `sync_cycle`.
+    pub(crate) tracer: crate::obs::Tracer,
+    pub(crate) trace_track: u32,
+    pub(crate) trace_ts_scale: f64,
 }
 
 impl CompressedDram {
@@ -99,6 +104,9 @@ impl CompressedDram {
             physical_bytes: 0,
             type1_overflows: 0,
             type2_overflows: 0,
+            tracer: crate::obs::Tracer::disabled(),
+            trace_track: 0,
+            trace_ts_scale: 1.0,
         }
     }
 

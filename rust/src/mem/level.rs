@@ -67,6 +67,13 @@ pub trait MemoryLevel: Send {
         0
     }
 
+    /// Attach an observability tracer to this level (and the levels
+    /// behind it). `shard` selects the counter track; `ts_scale`
+    /// converts this level's cycles into the trace's virtual-µs
+    /// timeline (device cycles per local cycle). Default: no-op, so
+    /// timing-only levels stay untouched.
+    fn attach_tracer(&mut self, _tracer: &crate::obs::Tracer, _shard: u32, _ts_scale: f64) {}
+
     /// Clock of the cycles this level reports, in MHz.
     fn clock_mhz(&self) -> f64;
 }
@@ -93,11 +100,33 @@ impl MemoryLevel for CompressedDram {
     }
 
     fn sync_cycle(&mut self, cycle: u64) {
+        if self.tracer.is_enabled() {
+            let ts = (cycle as f64 * self.trace_ts_scale).round() as u64;
+            self.tracer.counter(
+                self.trace_track,
+                "dram",
+                ts,
+                vec![
+                    ("logical_bytes", self.logical_bytes as f64),
+                    ("physical_bytes", self.physical_bytes as f64),
+                    ("wait_cycles", self.channel.wait_cycles() as f64),
+                ],
+            );
+        }
         self.channel.sync_to(cycle);
     }
 
     fn wait_cycles(&self) -> u64 {
         self.channel.wait_cycles()
+    }
+
+    fn attach_tracer(&mut self, tracer: &crate::obs::Tracer, shard: u32, ts_scale: f64) {
+        self.tracer = tracer.clone();
+        self.trace_track = crate::obs::track::dram(shard);
+        self.trace_ts_scale = ts_scale;
+        if let super::dram::DramChannel::Shared(s) = &self.channel {
+            s.set_hub_tracer(tracer, ts_scale);
+        }
     }
 
     fn clock_mhz(&self) -> f64 {

@@ -1,7 +1,16 @@
 //! Counters and latency histograms for the coordinator's serving loop.
+//!
+//! Each bundle keeps its lock-free in-situ counters and offers two
+//! read-out surfaces: the legacy hand-formatted `report()` strings
+//! (kept verbatim for log compatibility) and the PR-7 structured forms
+//! — `to_json()` via [`crate::util::json`] and `publish()` into an
+//! [`crate::obs::Registry`] namespace.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+use crate::obs::Registry;
+use crate::util::json::Json;
 
 /// A monotone counter (shared across threads).
 #[derive(Debug, Default)]
@@ -174,6 +183,36 @@ impl ServerMetrics {
             self.latency.quantile(0.99),
         )
     }
+
+    /// Structured form of [`ServerMetrics::report`] (same numbers,
+    /// machine-readable; latencies in µs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", self.requests.get().into()),
+            ("batches", self.batches.get().into()),
+            ("rejected", self.rejected.get().into()),
+            ("queue_full_events", self.queue_full_events.get().into()),
+            ("mean_latency_us", (self.latency.mean().as_micros() as u64).into()),
+            ("p50_latency_us", (self.latency.quantile(0.5).as_micros() as u64).into()),
+            ("p99_latency_us", (self.latency.quantile(0.99).as_micros() as u64).into()),
+        ])
+    }
+
+    /// Publish into a registry under `prefix.*`.
+    pub fn publish(&self, reg: &Registry, prefix: &str) {
+        reg.counter_set(&format!("{prefix}.requests"), self.requests.get());
+        reg.counter_set(&format!("{prefix}.batches"), self.batches.get());
+        reg.counter_set(&format!("{prefix}.rejected"), self.rejected.get());
+        reg.counter_set(&format!("{prefix}.queue_full_events"), self.queue_full_events.get());
+        reg.gauge_set(
+            &format!("{prefix}.mean_latency_us"),
+            self.latency.mean().as_micros() as f64,
+        );
+        reg.gauge_set(
+            &format!("{prefix}.p99_latency_us"),
+            self.latency.quantile(0.99).as_micros() as f64,
+        );
+    }
 }
 
 /// Per-shard slice of a pool's accounting.
@@ -231,6 +270,49 @@ impl PoolMetrics {
             self.cycle_latency.quantile(0.99),
             self.total_wait_cycles(),
         )
+    }
+
+    /// Structured form of [`PoolMetrics::report`]: the server bundle,
+    /// pool-level gauges, and one object per shard.
+    pub fn to_json(&self) -> Json {
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("requests", s.requests.get().into()),
+                    ("batches", s.batches.get().into()),
+                    ("busy_cycles", s.busy_cycles.get().into()),
+                    ("wait_cycles", s.wait_cycles.get().into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("server", self.server.to_json()),
+            ("stolen_batches", self.stolen_batches.get().into()),
+            ("max_queue_depth", self.max_queue_depth.get().into()),
+            ("cycles_p50", self.cycle_latency.quantile(0.5).into()),
+            ("cycles_p99", self.cycle_latency.quantile(0.99).into()),
+            ("wait_cycles", self.total_wait_cycles().into()),
+            ("shards", Json::Arr(shards)),
+        ])
+    }
+
+    /// Publish into a registry: server bundle under `pool.server.*`,
+    /// pool gauges under `pool.*`, shard slices under `pool.shard.N.*`.
+    pub fn publish(&self, reg: &Registry) {
+        self.server.publish(reg, "pool.server");
+        reg.counter_set("pool.stolen_batches", self.stolen_batches.get());
+        reg.gauge_set("pool.max_queue_depth", self.max_queue_depth.get() as f64);
+        reg.gauge_set("pool.cycles_p99", self.cycle_latency.quantile(0.99) as f64);
+        reg.counter_set("pool.wait_cycles", self.total_wait_cycles());
+        for (i, s) in self.shards.iter().enumerate() {
+            let p = format!("pool.shard.{i}");
+            reg.counter_set(&format!("{p}.requests"), s.requests.get());
+            reg.counter_set(&format!("{p}.batches"), s.batches.get());
+            reg.counter_set(&format!("{p}.busy_cycles"), s.busy_cycles.get());
+            reg.counter_set(&format!("{p}.wait_cycles"), s.wait_cycles.get());
+        }
     }
 }
 
@@ -329,5 +411,45 @@ mod tests {
         assert!(r.contains("stolen_batches=1"), "{r}");
         assert!(r.contains("max_queue_depth=9"), "{r}");
         assert!(r.contains("wait_cycles=12"), "{r}");
+    }
+
+    #[test]
+    fn json_forms_carry_the_report_numbers() {
+        let m = PoolMetrics::new(2);
+        m.server.requests.add(5);
+        m.server.batches.add(2);
+        m.stolen_batches.inc();
+        m.max_queue_depth.observe(9);
+        m.shards[1].wait_cycles.add(12);
+        let j = Json::parse(&m.to_json().dump()).unwrap();
+        assert_eq!(
+            j.get("server").and_then(|s| s.get("requests")).and_then(Json::as_usize),
+            Some(5)
+        );
+        assert_eq!(j.get("stolen_batches").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("max_queue_depth").and_then(Json::as_usize), Some(9));
+        assert_eq!(j.get("wait_cycles").and_then(Json::as_usize), Some(12));
+        let shards = j.get("shards").and_then(Json::as_arr).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[1].get("wait_cycles").and_then(Json::as_usize), Some(12));
+        // the string form stays for log compatibility
+        assert!(m.report().contains("requests=5"));
+    }
+
+    #[test]
+    fn publish_lands_in_the_registry_namespace() {
+        let m = PoolMetrics::new(1);
+        m.server.requests.add(4);
+        m.shards[0].busy_cycles.add(100);
+        let reg = Registry::new();
+        m.publish(&reg);
+        let snap = reg.snapshot();
+        for key in ["pool.server.requests", "pool.stolen_batches", "pool.shard.0.busy_cycles"] {
+            assert!(snap.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(
+            snap.get("pool.server.requests").and_then(|v| v.get("value")).and_then(Json::as_usize),
+            Some(4)
+        );
     }
 }

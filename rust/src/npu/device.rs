@@ -17,7 +17,7 @@ use anyhow::{bail, Result};
 
 use crate::compress::LINE_BYTES;
 use crate::mem::{Channel, ChannelConfig, MemoryLevel};
-use crate::systolic::{GridConfig, GridCounters, GridSim, TimingModel};
+use crate::systolic::{BatchTiming, GridConfig, GridCounters, GridSim, TimingModel};
 use crate::trace::Trace;
 
 use super::program::NpuProgram;
@@ -92,6 +92,46 @@ impl BatchResult {
     /// Wall-clock seconds at the device clock.
     pub fn seconds(&self, clock_mhz: f64) -> f64 {
         self.total_cycles as f64 / (clock_mhz * 1e6)
+    }
+}
+
+/// Additive decomposition of one batch's `total_cycles` (device clock),
+/// the unit of the E13 cycle-accounting experiment and the per-batch
+/// trace spans. Invariant, by construction (no rounding leaks):
+/// `sync + arbiter + memory + fill + compute + drain == total_cycles`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageBreakdown {
+    /// Fixed per-batch enqueue/wait sync cost.
+    pub sync: u64,
+    /// Shared-DRAM-channel queuing visible in this batch, converted to
+    /// device cycles and capped at the non-overlapped memory stage.
+    pub arbiter: u64,
+    /// Non-overlapped memory-hierarchy (or ACP) cycles net of arbiter
+    /// queuing — what the batch actually stalled on memory.
+    pub memory: u64,
+    /// Grid weight-fill share of compute (0 under the schedule model).
+    pub fill: u64,
+    /// Compute/streaming share.
+    pub compute: u64,
+    /// Grid LUT-drain share (0 under the schedule model).
+    pub drain: u64,
+}
+
+impl StageBreakdown {
+    pub fn total(&self) -> u64 {
+        self.sync + self.arbiter + self.memory + self.fill + self.compute + self.drain
+    }
+
+    /// The stages in execution order, for sequential trace spans.
+    pub fn spans(&self) -> [(&'static str, u64); 6] {
+        [
+            ("sync", self.sync),
+            ("arbiter", self.arbiter),
+            ("memory", self.memory),
+            ("fill", self.fill),
+            ("compute", self.compute),
+            ("drain", self.drain),
+        ]
     }
 }
 
@@ -367,6 +407,62 @@ impl NpuDevice {
             total_cycles: total,
             io_bytes: (in_bytes + out_bytes) as u64,
         })
+    }
+
+    /// The grid timing model's fill/stream/drain split for a batch of
+    /// `n` invocations (per-PU share, like the compute makespan). `None`
+    /// under the schedule model or for empty batches.
+    pub fn grid_stage_timing(&self, n: u64) -> Option<BatchTiming> {
+        if self.grids.is_empty() || n == 0 {
+            return None;
+        }
+        let per_pu = n.div_ceil(self.cfg.pu_count as u64);
+        Some(self.grids[0].batch_timing(per_pu))
+    }
+
+    /// Decompose one batch's `total_cycles` into additive stages.
+    /// `n` is the batch size and `wait_before` this device's
+    /// [`NpuDevice::mem_wait_cycles`] sampled just before the batch ran
+    /// (the delta is the arbiter queuing the batch itself paid).
+    ///
+    /// The split is exact: `sync` is the configured per-batch cost, the
+    /// remaining body is `max(compute, transfer)` under overlap (or
+    /// their sum), so `body - compute` is precisely the non-overlapped
+    /// memory stall; the arbiter share is carved out of it (converted
+    /// from hierarchy to device clock, capped so the sum stays exact),
+    /// and the grid model further splits compute into fill/stream/drain.
+    pub fn stage_breakdown(&self, r: &BatchResult, n: u64, wait_before: u64) -> StageBreakdown {
+        let sync = self.cfg.sync_cycles.min(r.total_cycles);
+        let body = r.total_cycles - sync;
+        let compute_total = r.compute_cycles.min(body);
+        let mem_stage = body - compute_total;
+        let wait_delta = self.mem_wait_cycles().saturating_sub(wait_before);
+        let arbiter = if mem_stage == 0 || wait_delta == 0 {
+            0
+        } else {
+            let mem_clock = self.memory().map_or(self.cfg.clock_mhz, |m| m.clock_mhz());
+            let in_npu = (wait_delta as f64 * self.cfg.clock_mhz / mem_clock).ceil() as u64;
+            in_npu.min(mem_stage)
+        };
+        let memory = mem_stage - arbiter;
+        let (fill, compute, drain) = match self.grid_stage_timing(n) {
+            Some(t) if t.total() == compute_total => {
+                (t.fill_cycles, t.stream_cycles, t.drain_cycles)
+            }
+            _ => (0, compute_total, 0),
+        };
+        StageBreakdown { sync, arbiter, memory, fill, compute, drain }
+    }
+
+    /// Attach an observability tracer: the hierarchy's cache/DRAM levels
+    /// sample their counters on this shard's tracks, and a shared DRAM
+    /// channel emits grant-wait/burst spans (all converted to the
+    /// device-cycle ≡ µs timeline). No-op without a hierarchy.
+    pub fn attach_tracer(&mut self, tracer: &crate::obs::Tracer, shard: usize) {
+        if let Some(mem) = &mut self.mem {
+            let ts_scale = self.cfg.clock_mhz / mem.clock_mhz();
+            mem.attach_tracer(tracer, shard as u32, ts_scale);
+        }
     }
 
     /// Latency of a single invocation (batch of 1) in NPU cycles — the

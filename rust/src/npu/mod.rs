@@ -21,7 +21,7 @@ pub mod program;
 pub mod pu;
 pub mod sigmoid;
 
-pub use device::{BatchResult, NpuConfig, NpuDevice};
+pub use device::{BatchResult, NpuConfig, NpuDevice, StageBreakdown};
 pub use program::{Activation, NpuProgram};
 pub use pu::PuSim;
 pub use sigmoid::SigmoidLut;

@@ -1,0 +1,70 @@
+//! Observability: deterministic virtual-time tracing + a unified
+//! metrics registry (PR 7).
+//!
+//! The simulators in this repo are cycle-accurate and deterministic;
+//! end-point numbers (p99, dram_bytes, fill_cycles) come out of every
+//! experiment, but nothing showed *where cycles go* inside a request as
+//! it crosses the pool queue, the batcher, the shared-channel arbiter,
+//! the compressed cache/DRAM hierarchy and the PE-grid
+//! fill/stream/drain phases. This module is that substrate:
+//!
+//! * [`Tracer`] — a ring-buffered, cycle-stamped span/event recorder.
+//!   Cheap to clone (`Arc` inside), thread-safe, and **zero-overhead
+//!   when disabled**: every emission site guards on one relaxed atomic
+//!   load. Timestamps reuse the `PoolSim` convention of
+//!   1 device cycle ≡ 1 virtual µs, so exports land directly on
+//!   Chrome-trace-event µs timestamps and open in `ui.perfetto.dev`.
+//! * [`Registry`] — process-wide named counters / gauges / histograms
+//!   unifying the scattered per-subsystem stats
+//!   (`fill_cache::stats()`, `PoolMetrics`, `ShardMetrics`,
+//!   `RequesterStats`, cache hit/miss) behind one deterministic JSON
+//!   snapshot.
+//! * [`track`] — the fixed track-id layout used by every
+//!   instrumentation hook, so traces from any experiment line up the
+//!   same way in the viewer.
+//!
+//! Instrumentation hooks live in `PoolSim::execute` (per-batch stage
+//! spans + per-request accounting instants), `ChannelHub::grant`
+//! (arbiter queue-wait + burst spans), `CompressedCache::sync_cycle` /
+//! `CompressedDram::sync_cycle` (per-batch counter samples) and the
+//! threaded `NpuPool` drive loop. All hooks only *read* simulator
+//! state; with tracing enabled or disabled every experiment number is
+//! bit-identical (pinned by `tests/sim_equivalence.rs`).
+
+pub mod registry;
+pub mod tracer;
+
+pub use registry::{global, Registry};
+pub use tracer::{Phase, TraceEvent, Tracer};
+
+/// Fixed trace-track layout (`tid` in the Chrome export; `pid` is
+/// always 0). Keeping the mapping in one place means every experiment's
+/// trace reads the same way in Perfetto.
+pub mod track {
+    /// Pool-level events (request arrivals, run boundaries).
+    pub const POOL: u32 = 50;
+
+    /// Execution track of one pool shard: batch + stage spans.
+    pub fn shard(s: usize) -> u32 {
+        s as u32
+    }
+
+    /// Shared-DRAM-channel track of one requester: grant-wait + burst
+    /// spans emitted by the arbiter (timestamps converted from channel
+    /// cycles to virtual µs by the hub's `ts_scale`).
+    pub fn channel(requester: usize) -> u32 {
+        100 + requester as u32
+    }
+
+    /// Compressed-cache counter track of one shard (hits/misses,
+    /// sampled once per batch at the post-batch sync).
+    pub fn cache(shard: u32) -> u32 {
+        200 + shard
+    }
+
+    /// Compressed-DRAM counter track of one shard (traffic bytes,
+    /// sampled once per batch at the post-batch sync).
+    pub fn dram(shard: u32) -> u32 {
+        300 + shard
+    }
+}

@@ -1,0 +1,256 @@
+//! Unified metrics registry: named counter/gauge/histogram handles
+//! with one deterministic JSON snapshot.
+//!
+//! The repo grew one ad-hoc stats struct per subsystem
+//! (`fill_cache::stats()`, `PoolMetrics`, `ShardMetrics`,
+//! `RequesterStats`, `CacheStats`). The registry doesn't replace their
+//! in-situ types — simulators keep their exact counters — it gives
+//! them one publication surface: `serve` and the trace exporter call
+//! the subsystems' `publish(...)` methods and dump a single
+//! `snapshot()` object, so dashboards and trace files carry every
+//! counter under one stable, sorted namespace
+//! (`pool.requests`, `cache.hits`, `fill_cache.misses`, ...).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Hist(Hist),
+}
+
+#[derive(Debug, Clone, Default)]
+struct Hist {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+#[derive(Debug, Default)]
+struct RegistryCore {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+/// Cloneable handle to one metric namespace (`Arc` inside).
+#[derive(Debug, Clone, Default)]
+pub struct Registry(Arc<RegistryCore>);
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Named monotone counter handle.
+    pub fn counter(&self, name: &str) -> CounterHandle {
+        CounterHandle { core: self.0.clone(), name: name.to_string() }
+    }
+
+    /// Named last-value gauge handle.
+    pub fn gauge(&self, name: &str) -> GaugeHandle {
+        GaugeHandle { core: self.0.clone(), name: name.to_string() }
+    }
+
+    /// Named histogram handle (count/sum/min/max summary).
+    pub fn histogram(&self, name: &str) -> HistogramHandle {
+        HistogramHandle { core: self.0.clone(), name: name.to_string() }
+    }
+
+    /// Add to a counter without keeping a handle around.
+    pub fn counter_add(&self, name: &str, delta: u64) {
+        let mut m = self.0.metrics.lock().expect("registry poisoned");
+        match m.entry(name.to_string()).or_insert(Metric::Counter(0)) {
+            Metric::Counter(v) => *v += delta,
+            other => *other = Metric::Counter(delta),
+        }
+    }
+
+    /// Set a counter to an absolute cumulative value (for subsystems
+    /// that already keep their own totals).
+    pub fn counter_set(&self, name: &str, value: u64) {
+        let mut m = self.0.metrics.lock().expect("registry poisoned");
+        m.insert(name.to_string(), Metric::Counter(value));
+    }
+
+    pub fn gauge_set(&self, name: &str, value: f64) {
+        let mut m = self.0.metrics.lock().expect("registry poisoned");
+        m.insert(name.to_string(), Metric::Gauge(value));
+    }
+
+    pub fn observe(&self, name: &str, value: f64) {
+        let mut m = self.0.metrics.lock().expect("registry poisoned");
+        match m.entry(name.to_string()).or_insert_with(|| Metric::Hist(Hist::default())) {
+            Metric::Hist(h) => {
+                if h.count == 0 {
+                    h.min = value;
+                    h.max = value;
+                } else {
+                    h.min = h.min.min(value);
+                    h.max = h.max.max(value);
+                }
+                h.count += 1;
+                h.sum += value;
+            }
+            other => {
+                *other = Metric::Hist(Hist { count: 1, sum: value, min: value, max: value });
+            }
+        }
+    }
+
+    /// Remove every metric (tests; the global registry is process-wide).
+    pub fn reset(&self) {
+        self.0.metrics.lock().expect("registry poisoned").clear();
+    }
+
+    /// Deterministic snapshot: one object, keys sorted, each metric
+    /// `{"type": "counter"|"gauge"|"histogram", ...}`.
+    pub fn snapshot(&self) -> Json {
+        let m = self.0.metrics.lock().expect("registry poisoned");
+        let mut out: Vec<(String, Json)> = Vec::with_capacity(m.len());
+        for (name, metric) in m.iter() {
+            let j = match metric {
+                Metric::Counter(v) => Json::obj(vec![
+                    ("type", "counter".into()),
+                    ("value", (*v).into()),
+                ]),
+                Metric::Gauge(v) => {
+                    Json::obj(vec![("type", "gauge".into()), ("value", (*v).into())])
+                }
+                Metric::Hist(h) => Json::obj(vec![
+                    ("type", "histogram".into()),
+                    ("count", h.count.into()),
+                    ("sum", h.sum.into()),
+                    ("min", h.min.into()),
+                    ("max", h.max.into()),
+                    ("mean", if h.count == 0 { 0.0 } else { h.sum / h.count as f64 }.into()),
+                ]),
+            };
+            out.push((name.clone(), j));
+        }
+        Json::obj(out)
+    }
+}
+
+/// The process-wide registry (`serve` publishes here; experiments use
+/// local ones to stay independent of worker interleaving).
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[derive(Debug, Clone)]
+pub struct CounterHandle {
+    core: Arc<RegistryCore>,
+    name: String,
+}
+
+impl CounterHandle {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, delta: u64) {
+        Registry(self.core.clone()).counter_add(&self.name, delta);
+    }
+    pub fn set(&self, value: u64) {
+        Registry(self.core.clone()).counter_set(&self.name, value);
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GaugeHandle {
+    core: Arc<RegistryCore>,
+    name: String,
+}
+
+impl GaugeHandle {
+    pub fn set(&self, value: f64) {
+        Registry(self.core.clone()).gauge_set(&self.name, value);
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HistogramHandle {
+    core: Arc<RegistryCore>,
+    name: String,
+}
+
+impl HistogramHandle {
+    pub fn observe(&self, value: f64) {
+        Registry(self.core.clone()).observe(&self.name, value);
+    }
+}
+
+/// Publish the process-global systolic fill-cache counters.
+pub fn publish_fill_cache(reg: &Registry) {
+    let s = crate::systolic::fill_cache::stats();
+    reg.counter_set("fill_cache.hits", s.hits);
+    reg.counter_set("fill_cache.misses", s.misses);
+    reg.counter_set("fill_cache.entries", crate::systolic::fill_cache::len() as u64);
+}
+
+/// Publish one shared-channel requester's arbiter stats under
+/// `channel.<r>.*`.
+pub fn publish_requester_stats(reg: &Registry, r: usize, s: &crate::mem::RequesterStats) {
+    let p = format!("channel.{r}");
+    reg.counter_set(&format!("{p}.transfers"), s.transfers);
+    reg.counter_set(&format!("{p}.payload_bytes"), s.payload_bytes);
+    reg.counter_set(&format!("{p}.busy_cycles"), s.busy_cycles);
+    reg.counter_set(&format!("{p}.wait_cycles"), s.wait_cycles);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_is_sorted_and_deterministic() {
+        let reg = Registry::new();
+        reg.counter("z.last").add(3);
+        reg.counter("a.first").add(1);
+        reg.gauge("m.depth").set(4.5);
+        reg.observe("lat", 10.0);
+        reg.observe("lat", 30.0);
+        let j = reg.snapshot();
+        let keys: Vec<&String> = match &j {
+            Json::Obj(m) => m.keys().collect(),
+            _ => panic!("snapshot is an object"),
+        };
+        assert_eq!(keys, ["a.first", "lat", "m.depth", "z.last"]);
+        let lat = j.get("lat").unwrap();
+        assert_eq!(lat.get("count").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(lat.get("mean").and_then(Json::as_f64), Some(20.0));
+        assert_eq!(lat.get("min").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(lat.get("max").and_then(Json::as_f64), Some(30.0));
+        assert_eq!(reg.snapshot().dump(), reg.snapshot().dump());
+    }
+
+    #[test]
+    fn handles_share_the_registry() {
+        let reg = Registry::new();
+        let c = reg.counter("hits");
+        c.inc();
+        c.add(2);
+        assert_eq!(
+            reg.snapshot().get("hits").and_then(|h| h.get("value")).and_then(Json::as_f64),
+            Some(3.0)
+        );
+        reg.counter_set("hits", 10);
+        assert_eq!(
+            reg.snapshot().get("hits").and_then(|h| h.get("value")).and_then(Json::as_f64),
+            Some(10.0)
+        );
+    }
+
+    #[test]
+    fn fill_cache_publishes_under_stable_names() {
+        let reg = Registry::new();
+        publish_fill_cache(&reg);
+        for key in ["fill_cache.hits", "fill_cache.misses", "fill_cache.entries"] {
+            assert!(reg.snapshot().get(key).is_some(), "missing {key}");
+        }
+    }
+}

@@ -97,6 +97,16 @@ impl BatchTiming {
     pub fn total(&self) -> u64 {
         self.fill_cycles + self.stream_cycles + self.drain_cycles
     }
+
+    /// The named stages in execution order, for trace spans and the E13
+    /// accounting decomposition. Sums to [`BatchTiming::total`].
+    pub fn spans(&self) -> [(&'static str, u64); 3] {
+        [
+            ("fill", self.fill_cycles),
+            ("stream", self.stream_cycles),
+            ("drain", self.drain_cycles),
+        ]
+    }
 }
 
 /// Per-PE activity counters accumulated by the functional pass.

@@ -10,6 +10,7 @@
 //! batch policies, and on the exact traffic + device stacks the E10/E11
 //! harness cells use (so the harness report JSON cannot drift either).
 
+use std::collections::HashMap;
 use std::time::Duration;
 
 use snnap_c::bench_suite::workload;
@@ -20,6 +21,7 @@ use snnap_c::experiments::{e10_serving, e11_slo, selfbench};
 use snnap_c::fixed::Q7_8;
 use snnap_c::mem::{ArbiterPolicy, ChannelConfig, ChannelHub, DramChannel, SharedChannel};
 use snnap_c::npu::{NpuConfig, NpuDevice, NpuProgram};
+use snnap_c::obs::{Phase, Tracer};
 use snnap_c::util::prop;
 use snnap_c::util::rng::Rng;
 
@@ -210,6 +212,149 @@ fn e11_shared_channel_traffic_is_bit_identical_to_reference() {
 /// run to run — everything else in its report (components, iteration
 /// counts, simulated cycles, JSON row shape) must be deterministic, or
 /// the CI throughput gate would diff noise.
+/// PR-7 observability contract, half 1: attaching the tracer must not
+/// change a single observable number — the instrumentation only reads
+/// simulation state, so traced and untraced runs of the same seed must
+/// produce bit-identical reports on both engines.
+#[test]
+fn tracing_on_or_off_leaves_reports_bit_identical() {
+    let w = workload("sobel").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 11);
+    let trace = e10_serving::gen_trace(w.as_ref(), &program, 48, 8, 17);
+    let pol = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_cap: 1 << 16,
+    };
+    let plain = PoolSim::new(plain_devices(&program, 3), pol).unwrap().run(&trace).unwrap();
+    let traced = PoolSim::new(plain_devices(&program, 3), pol)
+        .unwrap()
+        .with_tracer(Tracer::enabled(1 << 18))
+        .run(&trace)
+        .unwrap();
+    assert_reports_identical(&traced, &plain, "tracing open loop");
+
+    let scripts = e11_slo::gen_scripts(w.as_ref(), 4, 4, 80.0, 23);
+    let plain =
+        PoolSim::new(plain_devices(&program, 2), pol).unwrap().run_closed(&scripts).unwrap();
+    let traced = PoolSim::new(plain_devices(&program, 2), pol)
+        .unwrap()
+        .with_tracer(Tracer::enabled(1 << 18))
+        .run_closed(&scripts)
+        .unwrap();
+    assert_reports_identical(&traced, &plain, "tracing closed loop");
+}
+
+/// PR-7 observability contract, half 2: the trace itself is internally
+/// consistent — per track, time never goes backwards, spans nest and
+/// close (stack discipline), top-level spans never overlap, and every
+/// request's accounting instant carries stage cycles that sum exactly
+/// to its end-to-end latency. Runs the full E11-style stack (shared
+/// channel, compressed hierarchies) so channel/cache/DRAM tracks are
+/// exercised too.
+#[test]
+fn traced_spans_nest_and_stage_cycles_sum_to_latency() {
+    let w = workload("fft").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 13);
+    let trace = e10_serving::gen_trace(w.as_ref(), &program, 40, 8, 31);
+    let pol = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_cap: 1 << 16,
+    };
+    let shards = 3usize;
+    let hub = ChannelHub::shared(ChannelConfig::zc702_ddr3(), ArbiterPolicy::Fifo, shards);
+    let devices = (0..shards)
+        .map(|s| {
+            let channel = DramChannel::Shared(SharedChannel::new(hub.clone(), s));
+            let hierarchy =
+                build_hierarchy_on("bdi", e11_slo::E11_CACHE, dram_for("bdi", channel).unwrap())
+                    .unwrap();
+            NpuDevice::new(NpuConfig::default(), program.clone())
+                .unwrap()
+                .with_weight_scheme("bdi")
+                .unwrap()
+                .with_memory(Box::new(hierarchy))
+        })
+        .collect::<Vec<_>>();
+    let mut sim = PoolSim::new(devices, pol).unwrap().with_tracer(Tracer::enabled(1 << 18));
+    let report = sim.run(&trace).unwrap();
+    assert_eq!(report.completions.len(), trace.len());
+    assert_eq!(sim.tracer().dropped(), 0);
+
+    let mut stacks: HashMap<u32, Vec<(&str, u64)>> = HashMap::new();
+    let mut last_cycle: HashMap<u32, u64> = HashMap::new();
+    let mut last_top_end: HashMap<u32, u64> = HashMap::new();
+    let mut requests = 0usize;
+    for e in sim.tracer().events() {
+        let t = e.track;
+        let prev = last_cycle.entry(t).or_insert(0);
+        assert!(e.cycle >= *prev, "track {t}: time went backwards");
+        *prev = e.cycle;
+        match e.phase {
+            Phase::Begin => {
+                let stack = stacks.entry(t).or_default();
+                if stack.is_empty() {
+                    let le = last_top_end.entry(t).or_insert(0);
+                    assert!(e.cycle >= *le, "track {t}: top-level spans overlap");
+                }
+                stack.push((e.name, e.cycle));
+            }
+            Phase::End => {
+                let stack = stacks.entry(t).or_default();
+                let (name, begin) = stack.pop().expect("span end without a begin");
+                assert_eq!(name, e.name, "track {t}: spans must nest");
+                assert!(e.cycle >= begin, "track {t}: span ends before it begins");
+                if stack.is_empty() {
+                    last_top_end.insert(t, e.cycle);
+                }
+            }
+            Phase::Instant if e.name == "request" => {
+                requests += 1;
+                let arg = |k: &str| {
+                    e.args.iter().find(|(n, _)| *n == k).map(|(_, v)| *v as u64).unwrap()
+                };
+                let mut stages = 0u64;
+                for s in ["queue", "sync", "arbiter", "memory", "fill", "compute", "drain"] {
+                    stages += arg(s);
+                }
+                assert_eq!(stages, arg("latency"), "stage cycles must sum to latency");
+            }
+            _ => {}
+        }
+    }
+    for (t, stack) in &stacks {
+        assert!(stack.is_empty(), "track {t}: unclosed spans {stack:?}");
+    }
+    assert_eq!(requests, report.completions.len(), "one accounting instant per request");
+}
+
+/// PR-7 observability contract, half 3: the exported trace is
+/// deterministic — two same-seed traced runs serialize to byte-identical
+/// Perfetto JSON (the property the CI trace artifact relies on).
+#[test]
+fn same_seed_traced_runs_emit_byte_identical_trace_json() {
+    let w = workload("sobel").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 7);
+    let trace = e10_serving::gen_trace(w.as_ref(), &program, 32, 8, 19);
+    let pol = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_cap: 1 << 16,
+    };
+    let dump = || {
+        let mut sim = PoolSim::new(plain_devices(&program, 2), pol)
+            .unwrap()
+            .with_tracer(Tracer::enabled(1 << 18));
+        sim.run(&trace).unwrap();
+        sim.tracer().chrome_trace().dump()
+    };
+    let a = dump();
+    let b = dump();
+    assert_eq!(a, b, "same-seed traces must serialize byte-identically");
+    assert!(a.contains("\"traceEvents\""));
+}
+
 #[test]
 fn selfbench_structure_is_deterministic_across_runs() {
     let w = workload("sobel").unwrap();
