@@ -199,6 +199,65 @@ def test_e12_invariant_gate():
     assert bench_trend.check_invariants(only_none) == []
 
 
+def e14_report(leak_none=1000.0, leak_part=0.0, p99_none=3000, p99_part=3600):
+    rows = [
+        ("none", leak_none, p99_none),
+        ("partition", leak_part, p99_part),
+        ("randomize", 500.0, p99_none),
+        ("quota", leak_none, p99_none),
+    ]
+    return {
+        "schema_version": 1,
+        "config": {"seed": 42},
+        "experiments": {
+            "e14": [
+                {
+                    "label": "e14/sobel/bdi",
+                    "rows": [
+                        {
+                            "workload": "sobel",
+                            "scheme": "bdi",
+                            "mitigation": m,
+                            "policy": "fifo",
+                            "trials": 32,
+                            "correct": 32,
+                            "accuracy": 1.0,
+                            "leak_rate": leak,
+                            "e10_throughput": 9.0,
+                            "e10_p99_cycles": p99,
+                            "e11_slo_throughput": 5.0,
+                            "e11_p99_cycles": 4000,
+                        }
+                        for m, leak, p99 in rows
+                    ],
+                }
+            ]
+        },
+    }
+
+
+def test_e14_extraction_and_partition_invariant():
+    metrics = bench_trend.extract_metrics(e14_report())
+    assert metrics["e14/sobel/bdi/none"]["leak_rate"] == 1000.0
+    assert metrics["e14/sobel/bdi/partition"]["p99_cycles"] == 3600
+    assert bench_trend.check_invariants(metrics) == []
+    # partition leaking more than a tenth of the unmitigated rate fails
+    weak = bench_trend.extract_metrics(e14_report(leak_part=200.0))
+    failures = bench_trend.check_invariants(weak)
+    assert len(failures) == 1 and "10x" in failures[0]
+    # partition p99 beyond the documented cost bound fails
+    costly = bench_trend.extract_metrics(e14_report(p99_part=7000))
+    failures = bench_trend.check_invariants(costly)
+    assert len(failures) == 1 and "exceeds" in failures[0]
+    # a scheme with no occupancy channel (leak 0 unmitigated) is exempt
+    quiet = bench_trend.extract_metrics(e14_report(leak_none=0.0))
+    assert bench_trend.check_invariants(quiet) == []
+    # the priced e10 p99 joins the hard simulated-cycle gate
+    base = bench_trend.trajectory_point(e14_report(), "base")
+    worse = bench_trend.extract_metrics(e14_report(p99_none=4000))
+    assert any("p99_cycles" in f for f in bench_trend.compare(base, worse, 0.20))
+
+
 def test_fill_and_grid_cycles_are_gated():
     base = bench_trend.trajectory_point(report(), "base")
     worse = bench_trend.extract_metrics(report(fill_bdi=600))  # +50%

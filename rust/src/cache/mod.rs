@@ -18,6 +18,8 @@
 //! writes are write-back + write-allocate; every hit, miss, eviction and
 //! writeback is accounted in cycles and bytes ([`CacheStats`]).
 
+use std::collections::BTreeMap;
+
 use crate::compress::{Compressed, Compressor, LINE_BYTES};
 use crate::mem::MemoryLevel;
 
@@ -126,6 +128,9 @@ impl Block {
 struct WayEntry {
     sb_tag: u64,
     lru: u64,
+    /// Tenant that allocated this entry (0 in single-tenant use). Under
+    /// way partitioning, packing into an entry requires a tenant match.
+    tenant: u32,
     blocks: Vec<Option<Block>>,
 }
 
@@ -150,6 +155,22 @@ pub struct CompressedCache {
     backing: Box<dyn MemoryLevel>,
     lru_clock: u64,
     pub stats: CacheStats,
+    /// Tenant issuing the current accesses (0 = default single tenant).
+    tenant: u32,
+    /// Way-partitioning mitigation: number of tenants the ways of every
+    /// set are sliced across. 0 or 1 = off (all tenants share all ways —
+    /// the leaky default the E14 attacker exploits).
+    partition_tenants: u32,
+    /// Randomized-packing mitigation: when nonzero, every insert draws a
+    /// deterministic pseudo-random pad that the superblock-packing fit
+    /// check must also accommodate, decorrelating observable packing
+    /// success from the co-tenant's compressibility. 0 = off.
+    randomize_seed: u64,
+    /// Monotone insert counter feeding the randomized-packing hash.
+    pack_nonce: u64,
+    /// Per-tenant access accounting (only per-access fields are
+    /// populated: reads/writes/hits/misses/cycles).
+    per_tenant: BTreeMap<u32, CacheStats>,
     /// Observability hook (disabled by default): hit/miss counters
     /// sampled once per batch at each `sync_cycle`.
     tracer: crate::obs::Tracer,
@@ -171,15 +192,72 @@ impl CompressedCache {
             backing,
             lru_clock: 0,
             stats: CacheStats::default(),
+            tenant: 0,
+            partition_tenants: 0,
+            randomize_seed: 0,
+            pack_nonce: 0,
+            per_tenant: BTreeMap::new(),
             tracer: crate::obs::Tracer::disabled(),
             trace_track: 0,
             trace_ts_scale: 1.0,
         }
     }
 
+    /// Enable per-tenant way partitioning: each of `tenants` tenants gets
+    /// a disjoint slice of every set's ways, and superblock packing only
+    /// joins entries of the same tenant — the strongest (and most
+    /// capacity-hungry) of the E14 mitigations.
+    pub fn with_tenant_partition(mut self, tenants: u32) -> Self {
+        self.partition_tenants = tenants;
+        self
+    }
+
+    /// Enable seeded randomized superblock packing (see
+    /// `randomize_seed`). The seed keeps runs deterministic.
+    pub fn with_randomized_packing(mut self, seed: u64) -> Self {
+        self.randomize_seed = seed;
+        self
+    }
+
+    /// Per-tenant access accounting (tenant id → per-access stats),
+    /// sorted by tenant id.
+    pub fn tenant_stats(&self) -> Vec<(u32, CacheStats)> {
+        self.per_tenant.iter().map(|(&t, &s)| (t, s)).collect()
+    }
+
     /// The backing level (for oracle checks and end-of-run traffic).
     pub fn backing(&self) -> &dyn MemoryLevel {
         self.backing.as_ref()
+    }
+
+    /// The ways of a set the current tenant may allocate in: the full
+    /// range unless partitioning is on, then its disjoint slice (a
+    /// tenant beyond the configured count hashes onto a single way).
+    fn way_range(&self) -> std::ops::Range<usize> {
+        let w = self.cfg.ways;
+        let t = self.partition_tenants as usize;
+        if t <= 1 {
+            return 0..w;
+        }
+        if t > w {
+            let i = self.tenant as usize % w;
+            return i..i + 1;
+        }
+        let i = (self.tenant as usize).min(t - 1);
+        (i * w / t)..((i + 1) * w / t)
+    }
+
+    /// FNV-1a over the packing seed, superblock tag and insert nonce:
+    /// the deterministic pad the randomized-packing fit check adds.
+    fn pack_pad(&self, sb: u64) -> usize {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for v in [self.randomize_seed, sb, self.pack_nonce] {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        (h % LINE_BYTES as u64) as usize
     }
 
     /// addr -> (superblock tag, block index within it, set index).
@@ -285,14 +363,30 @@ impl CompressedCache {
     /// the superblock when the compressed bytes fit its data way (the
     /// YACC capacity win), else claim a free way, else evict the LRU
     /// entry. Returns cycles spent on eviction writebacks.
+    ///
+    /// With way partitioning on, every step is confined to the current
+    /// tenant's way slice and packing requires a tenant match; with
+    /// randomized packing on, the fit check must also leave room for a
+    /// seeded pseudo-random pad.
     fn insert(&mut self, set: usize, sb: u64, blk: usize, block: Block) -> u64 {
         // a block lives in at most one entry: drop any stale copy first
         // (the caller's `block` supersedes it)
         let _ = self.remove_block(set, sb, blk);
+        self.pack_nonce += 1;
+        let range = self.way_range();
         // (1) an entry of this superblock with room in its data way
-        let need = block.way_bytes();
-        if let Some(wi) = self.sets[set].iter().position(|w| {
-            w.as_ref().is_some_and(|e| e.sb_tag == sb && e.used_bytes() + need <= LINE_BYTES)
+        let mut need = block.way_bytes();
+        if self.randomize_seed != 0 {
+            need += self.pack_pad(sb);
+        }
+        let tenant = self.tenant;
+        let partitioned = self.partition_tenants > 1;
+        if let Some(wi) = range.clone().find(|&wi| {
+            self.sets[set][wi].as_ref().is_some_and(|e| {
+                e.sb_tag == sb
+                    && (!partitioned || e.tenant == tenant)
+                    && e.used_bytes() + need <= LINE_BYTES
+            })
         }) {
             self.sets[set][wi].as_mut().unwrap().blocks[blk] = Some(block);
             self.touch(set, wi);
@@ -300,13 +394,23 @@ impl CompressedCache {
         }
         // (2) a free way
         let mut cycles = 0;
-        let wi = match self.sets[set].iter().position(Option::is_none) {
+        let wi = match range.clone().find(|&wi| self.sets[set][wi].is_none()) {
             Some(wi) => wi,
             None => {
-                // (3) evict the LRU entry
-                let lru_of = |w: &Option<WayEntry>| w.as_ref().map_or(0, |e| e.lru);
-                let ways = &self.sets[set];
-                let wi = (0..ways.len()).min_by_key(|&i| lru_of(&ways[i])).expect("ways > 0");
+                // (3) evict the LRU entry — chosen over *occupied* ways
+                // only: an empty way has no age, and the old map_or(0)
+                // default would have "evicted" a None way had this step
+                // ever been reached with one (it can't be, per (2) —
+                // which is exactly what the assert pins down)
+                debug_assert!(
+                    range.clone().all(|wi| self.sets[set][wi].is_some()),
+                    "LRU eviction reached with a free way in the candidate range"
+                );
+                let wi = range
+                    .clone()
+                    .filter(|&wi| self.sets[set][wi].is_some())
+                    .min_by_key(|&wi| self.sets[set][wi].as_ref().map_or(u64::MAX, |e| e.lru))
+                    .expect("ways > 0");
                 let victims = self.evict_entry(set, wi);
                 cycles += self.write_back(victims);
                 wi
@@ -314,7 +418,7 @@ impl CompressedCache {
         };
         let mut blocks: Vec<Option<Block>> = (0..self.cfg.degree).map(|_| None).collect();
         blocks[blk] = Some(block);
-        self.sets[set][wi] = Some(WayEntry { sb_tag: sb, lru: 0, blocks });
+        self.sets[set][wi] = Some(WayEntry { sb_tag: sb, lru: 0, tenant, blocks });
         self.touch(set, wi);
         cycles
     }
@@ -351,6 +455,10 @@ impl MemoryLevel for CompressedCache {
             let data = Self::decode(&self.comp, b);
             self.stats.hits += 1;
             self.stats.cycles += cycles;
+            let t = self.per_tenant.entry(self.tenant).or_default();
+            t.reads += 1;
+            t.hits += 1;
+            t.cycles += cycles;
             self.touch(set, wi);
             return (data, cycles);
         }
@@ -362,6 +470,10 @@ impl MemoryLevel for CompressedCache {
         let wb = self.insert(set, sb, blk, block);
         let cycles = self.cfg.hit_cycles + fill + wb;
         self.stats.cycles += cycles;
+        let t = self.per_tenant.entry(self.tenant).or_default();
+        t.reads += 1;
+        t.misses += 1;
+        t.cycles += cycles;
         (data, cycles)
     }
 
@@ -370,16 +482,21 @@ impl MemoryLevel for CompressedCache {
         let (sb, blk, set) = self.decompose(addr);
         self.stats.writes += 1;
         let hit = self.find_block(set, sb, blk).is_some();
+        let t = self.per_tenant.entry(self.tenant).or_default();
+        t.writes += 1;
         if hit {
             self.stats.hits += 1;
+            t.hits += 1;
         } else {
             // write-allocate: a full-line write needs no fill read
             self.stats.misses += 1;
+            t.misses += 1;
         }
         let block = self.encode(line, true);
         let wb = self.insert(set, sb, blk, block);
         let cycles = self.cfg.hit_cycles + wb;
         self.stats.cycles += cycles;
+        self.per_tenant.entry(self.tenant).or_default().cycles += cycles;
         cycles
     }
 
@@ -458,6 +575,11 @@ impl MemoryLevel for CompressedCache {
         self.trace_track = crate::obs::track::cache(shard);
         self.trace_ts_scale = ts_scale;
         self.backing.attach_tracer(tracer, shard, ts_scale);
+    }
+
+    fn set_tenant(&mut self, tenant: u32) {
+        self.tenant = tenant;
+        self.backing.set_tenant(tenant);
     }
 
     fn clock_mhz(&self) -> f64 {
@@ -629,5 +751,122 @@ mod tests {
             c.read_line(7);
         }));
         assert!(r.is_err());
+    }
+
+    // -- multi-tenant isolation ------------------------------------------
+
+    /// The E14 probe in miniature: attacker (tenant 0) primes the set,
+    /// victim (tenant 1) installs one superblock whose occupancy depends
+    /// on its compressibility, attacker re-probes and counts survivors.
+    fn attack_hits(partition: bool, compressible_victim: bool) -> u64 {
+        let mut c = cache(1, 4, 4, Some(Box::new(Hybrid::default())));
+        if partition {
+            c = c.with_tenant_partition(2);
+        }
+        let mut rng = crate::util::rng::Rng::new(7);
+        // prime only the slice the attacker actually owns
+        let n_prime = if partition { 2 } else { 4 };
+        let prime_addrs: Vec<u64> =
+            (0..n_prime).map(|i| (i * 4 * LINE_BYTES) as u64).collect();
+        let prime_lines: Vec<Vec<u8>> =
+            prime_addrs.iter().map(|_| rng.bytes(LINE_BYTES)).collect();
+        c.set_tenant(0);
+        for (a, l) in prime_addrs.iter().zip(&prime_lines) {
+            c.write_line(*a, l);
+        }
+        // victim writes one 4-line superblock: compressible -> 1 way,
+        // incompressible -> 4 ways
+        c.set_tenant(1);
+        let vbase = 1000 * 4 * LINE_BYTES as u64;
+        for b in 0..4 {
+            let line =
+                if compressible_victim { tiny_line(b) } else { rng.bytes(LINE_BYTES) };
+            c.write_line(vbase + (b * LINE_BYTES) as u64, &line);
+        }
+        c.set_tenant(0);
+        let before = c.stats.hits;
+        // probe in reverse prime order: a probe miss refills the set and
+        // would otherwise evict the next (older) probe target, cascading
+        // to zero hits regardless of the secret
+        for a in prime_addrs.iter().rev() {
+            c.read_line(*a);
+        }
+        c.stats.hits - before
+    }
+
+    #[test]
+    fn victim_compressibility_leaks_through_attacker_occupancy() {
+        // unmitigated: how many primed lines survive the victim's insert
+        // depends on the victim's data — the side channel E14 quantifies
+        let compressible = attack_hits(false, true);
+        let incompressible = attack_hits(false, false);
+        assert!(
+            compressible > incompressible,
+            "a compressible victim must evict fewer attacker lines \
+             ({compressible} vs {incompressible} surviving hits)"
+        );
+    }
+
+    #[test]
+    fn way_partitioning_closes_the_occupancy_channel() {
+        let compressible = attack_hits(true, true);
+        let incompressible = attack_hits(true, false);
+        assert_eq!(
+            compressible, incompressible,
+            "partitioned ways: attacker survivors must not depend on victim data"
+        );
+    }
+
+    #[test]
+    fn partition_confines_each_tenant_to_its_way_slice() {
+        let mut c = cache(1, 4, 4, Some(Box::new(Hybrid::default()))).with_tenant_partition(2);
+        c.set_tenant(0);
+        c.write_line(0, &tiny_line(0));
+        c.set_tenant(1);
+        // tenant 1 thrashes far more superblocks than its slice holds
+        for i in 1..10 {
+            c.write_line((i * 4 * LINE_BYTES) as u64, &tiny_line(i));
+        }
+        c.set_tenant(0);
+        let before = c.stats.hits;
+        c.read_line(0);
+        assert_eq!(c.stats.hits, before + 1, "tenant 0's line must survive tenant 1's storm");
+    }
+
+    #[test]
+    fn randomized_packing_is_seeded_deterministic_and_perturbs_occupancy() {
+        let run = |seed: u64| {
+            let mut c = cache(4, 2, 4, Some(Box::new(Hybrid::default())));
+            if seed != 0 {
+                c = c.with_randomized_packing(seed);
+            }
+            for i in 0..32 {
+                c.write_line((i * LINE_BYTES) as u64, &tiny_line(i));
+            }
+            (c.resident_lines(), c.stats.evictions)
+        };
+        assert_eq!(run(0).0, 32, "unrandomized: all 8 tiny superblocks pack fully");
+        assert_eq!(run(9), run(9), "same seed -> bit-identical packing");
+        assert!(
+            run(9).0 < 32,
+            "randomized pads must deny some packs (got {} resident)",
+            run(9).0
+        );
+    }
+
+    #[test]
+    fn per_tenant_stats_split_accesses() {
+        let mut c = cache(4, 2, 4, Some(Box::new(Hybrid::default())));
+        c.set_tenant(0);
+        c.write_line(0, &tiny_line(0));
+        c.set_tenant(3);
+        c.read_line(0);
+        c.read_line(64);
+        let ts = c.tenant_stats();
+        assert_eq!(ts.len(), 2);
+        assert_eq!((ts[0].0, ts[0].1.writes, ts[0].1.reads), (0, 1, 0));
+        assert_eq!((ts[1].0, ts[1].1.reads, ts[1].1.hits, ts[1].1.misses), (3, 2, 1, 1));
+        let total: u64 = ts.iter().map(|(_, s)| s.hits + s.misses).sum();
+        assert_eq!(total, c.stats.accesses());
     }
 }

@@ -42,12 +42,24 @@ pub struct Config {
     /// shards (`pool.geometries = 8x2x4,32x8x4`); empty = the serve
     /// default geometry.
     pub pool_geometries: Vec<(usize, usize, usize)>,
-    /// Shared DRAM channel arbiter policy (`channel.policy = fifo|rr`).
-    /// Grant priority takes effect in the deterministic virtual-time
-    /// pool (`PoolSim` / E11, which orders same-cycle grants by it);
-    /// the threaded `serve` pool grants in arrival (lock) order, so
-    /// there the key is reported as channel metadata only.
+    /// Shared DRAM channel arbiter policy (`channel.policy =
+    /// fifo|rr|quota`). Grant priority takes effect in the deterministic
+    /// virtual-time pool (`PoolSim` / E11, which orders same-cycle
+    /// grants by it) and — for `quota` — inside the shared hub itself
+    /// (windowed per-tenant service budgets); the threaded `serve` pool
+    /// grants in arrival (lock) order, so there fifo/rr are reported as
+    /// channel metadata only.
     pub channel_policy: String,
+    /// Tenants sharing the serve pool (`tenant.count`); clients are
+    /// assigned round-robin. 1 = the single-tenant default.
+    pub tenant_count: u32,
+    /// Way-partition each shard's cache across `tenant.count`
+    /// (`tenant.partition = true`) — the isolation mitigation E14
+    /// prices.
+    pub tenant_partition: bool,
+    /// Nonzero: seed for randomized superblock packing in each shard's
+    /// cache (`tenant.randomize = SEED`) — the noise mitigation.
+    pub tenant_randomize: u64,
 }
 
 /// Is `name` a registered compression scheme? Resolved against
@@ -71,6 +83,9 @@ impl Default for Config {
             pool_schemes: Vec::new(),
             pool_geometries: Vec::new(),
             channel_policy: "fifo".into(),
+            tenant_count: 1,
+            tenant_partition: false,
+            tenant_randomize: 0,
         }
     }
 }
@@ -154,6 +169,22 @@ impl Config {
             "channel.policy" => {
                 self.channel_policy =
                     crate::mem::channel::ArbiterPolicy::parse(v)?.name().to_string();
+            }
+            "tenant.count" => {
+                self.tenant_count = v.parse().context("tenant.count")?;
+                if self.tenant_count == 0 {
+                    bail!("tenant.count must be positive");
+                }
+            }
+            "tenant.partition" => {
+                self.tenant_partition = match v {
+                    "true" | "1" => true,
+                    "false" | "0" => false,
+                    other => bail!("tenant.partition must be true|false (got {other:?})"),
+                }
+            }
+            "tenant.randomize" => {
+                self.tenant_randomize = v.parse().context("tenant.randomize")?
             }
             "qformat" => self.qformat = parse_qformat(v)?,
             "npu.pu_count" => self.npu.pu_count = v.parse().context("npu.pu_count")?,
@@ -296,6 +327,9 @@ impl Config {
             out.push_str(&format!("pool.geometries = {}\n", geos.join(",")));
         }
         out.push_str(&format!("channel.policy = {}\n", self.channel_policy));
+        out.push_str(&format!("tenant.count = {}\n", self.tenant_count));
+        out.push_str(&format!("tenant.partition = {}\n", self.tenant_partition));
+        out.push_str(&format!("tenant.randomize = {}\n", self.tenant_randomize));
         out
     }
 
@@ -356,6 +390,34 @@ mod tests {
         assert!(cfg.set("npu.grid_rows", "0").is_err());
         assert!(cfg.set("npu.grid_cols", "0").is_err());
         assert!(cfg.set("npu.decode_rate", "0").is_err());
+        assert!(cfg.set("tenant.count", "0").is_err());
+        assert!(cfg.set("tenant.partition", "maybe").is_err());
+        assert!(cfg.set("tenant.randomize", "banana").is_err());
+    }
+
+    #[test]
+    fn tenant_keys_apply_and_roundtrip() {
+        let mut cfg = Config::default();
+        assert_eq!((cfg.tenant_count, cfg.tenant_partition, cfg.tenant_randomize), (1, false, 0));
+        cfg.apply_overrides(&[
+            "tenant.count=2".into(),
+            "tenant.partition=true".into(),
+            "tenant.randomize=99".into(),
+            "channel.policy=quota".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.tenant_count, 2);
+        assert!(cfg.tenant_partition);
+        assert_eq!(cfg.tenant_randomize, 99);
+        assert_eq!(cfg.channel_policy, "quota");
+        let text = cfg.to_string_pretty();
+        let dir = std::env::temp_dir().join("snnapc_cfg_test6");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.conf");
+        std::fs::write(&p, &text).unwrap();
+        let mut cfg2 = Config::default();
+        cfg2.load_file(&p).unwrap();
+        assert_eq!(cfg, cfg2);
     }
 
     #[test]

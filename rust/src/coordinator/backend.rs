@@ -54,6 +54,11 @@ pub trait Backend {
     /// between batches don't register as channel queuing. No-op for
     /// backends without a shared hierarchy.
     fn sync_virtual_cycle(&mut self, _now: u64) {}
+
+    /// Tag subsequent batches with a tenant id, forwarded down the
+    /// backend's memory hierarchy (per-tenant accounting, isolation
+    /// mitigations). No-op for backends without a hierarchy.
+    fn set_tenant(&mut self, _tenant: u32) {}
 }
 
 /// The cycle-accurate fixed-point simulator as a backend.
@@ -97,6 +102,10 @@ impl Backend for DeviceBackend {
 
     fn sync_virtual_cycle(&mut self, now: u64) {
         self.device.sync_mem_cycle(now);
+    }
+
+    fn set_tenant(&mut self, tenant: u32) {
+        self.device.set_tenant(tenant);
     }
 }
 

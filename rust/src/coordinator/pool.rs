@@ -45,6 +45,8 @@ pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
 
 struct Invocation {
     input: Vec<f32>,
+    /// Tenant the request bills to (isolation + per-tenant accounting).
+    tenant: u32,
     submitted: Instant,
     reply: Sender<Result<Vec<f32>>>,
 }
@@ -224,6 +226,14 @@ impl NpuPool {
     /// resolves the returned [`Pending`] with a queue-full error; a shut
     /// down pool fails the submit itself.
     pub fn submit(&self, input: Vec<f32>) -> Result<Pending> {
+        self.submit_as(0, input)
+    }
+
+    /// [`NpuPool::submit`] on behalf of a tenant: the id rides with the
+    /// invocation and tags the shard's memory hierarchy for the batch
+    /// that carries it (`serve` assigns clients round-robin across
+    /// `tenant.count`).
+    pub fn submit_as(&self, tenant: u32, input: Vec<f32>) -> Result<Pending> {
         anyhow::ensure!(
             input.len() == self.input_dim,
             "input arity {} != {}",
@@ -231,7 +241,7 @@ impl NpuPool {
             self.input_dim
         );
         let (reply, rx) = mpsc::channel();
-        let inv = Invocation { input, submitted: Instant::now(), reply };
+        let inv = Invocation { input, tenant, submitted: Instant::now(), reply };
         {
             let mut lanes = self.shared.lanes.lock().unwrap();
             // checked under the lock: shutdown flips `open` under the
@@ -416,6 +426,10 @@ fn execute(shared: &PoolShared, shard: usize, backend: &mut dyn Backend, batch: 
     // forgive idle time on the shared channel before billing this batch
     let vnow = shared.epoch.elapsed().as_micros() as u64;
     backend.sync_virtual_cycle(vnow);
+    // a batch bills to its oldest invocation's tenant: batches are
+    // flushed per-shard, and `serve` keys placement-relevant traffic by
+    // tenant coarsely enough that the head request is representative
+    backend.set_tenant(batch[0].tenant);
     let wait_before = backend.mem_wait_cycles().unwrap_or(0);
     match backend.run_batch_timed(&inputs) {
         Ok((outputs, cycles)) => {
@@ -454,6 +468,9 @@ fn execute(shared: &PoolShared, shard: usize, backend: &mut dyn Backend, batch: 
 pub struct SimRequest {
     pub arrival: u64,
     pub input: Vec<f32>,
+    /// Tenant the request bills to; 0 (the default single tenant)
+    /// leaves every pinned single-tenant number unchanged.
+    pub tenant: u32,
 }
 
 /// One served request: where and when it ran, and what it produced.
@@ -620,6 +637,9 @@ impl PoolSim {
         let inputs: Vec<Vec<f32>> = idxs.iter().map(|&i| requests[i].input.clone()).collect();
         let traced = self.tracer.is_enabled();
         let wait_before = if traced { self.shards[s].device.mem_wait_cycles() } else { 0 };
+        // the batch bills to its oldest request's tenant (head of the
+        // flush order) — same convention as the threaded pool
+        self.shards[s].device.set_tenant(requests[idxs[0]].tenant);
         let r = self.shards[s].device.execute_batch_at(&inputs, now)?;
         let done = now + r.total_cycles;
         self.shards[s].free_at = done;
@@ -676,6 +696,7 @@ impl PoolSim {
                 done,
                 vec![
                     ("index", i as f64),
+                    ("tenant", requests[i].tenant as f64),
                     ("queue", (now - arrival) as f64),
                     ("sync", stages.sync as f64),
                     ("arbiter", stages.arbiter as f64),
@@ -737,7 +758,10 @@ impl PoolSim {
             let mut progressed = false;
             let base = match self.channel_policy {
                 ArbiterPolicy::Fifo => 0,
-                ArbiterPolicy::RoundRobin => self.next_grant % n,
+                // the quota policy arbitrates *bursts* inside the hub;
+                // shard scan order rotates like round-robin so no shard
+                // holds fixed flush priority
+                ArbiterPolicy::RoundRobin | ArbiterPolicy::TenantQuota => self.next_grant % n,
             };
             for off in 0..n {
                 let s = (base + off) % n;
@@ -746,7 +770,7 @@ impl PoolSim {
                 {
                     self.execute(s, now, requests, completions)?;
                     dirty[s] = true;
-                    if self.channel_policy == ArbiterPolicy::RoundRobin {
+                    if self.channel_policy != ArbiterPolicy::Fifo {
                         self.next_grant = (s + 1) % n;
                     }
                     progressed = true;
@@ -813,7 +837,10 @@ impl PoolSim {
             let mut progressed = false;
             let base = match self.channel_policy {
                 ArbiterPolicy::Fifo => 0,
-                ArbiterPolicy::RoundRobin => self.next_grant % n,
+                // the quota policy arbitrates *bursts* inside the hub;
+                // shard scan order rotates like round-robin so no shard
+                // holds fixed flush priority
+                ArbiterPolicy::RoundRobin | ArbiterPolicy::TenantQuota => self.next_grant % n,
             };
             for off in 0..n {
                 let s = (base + off) % n;
@@ -821,7 +848,7 @@ impl PoolSim {
                     && self.shards[s].batcher.should_flush(self.v(now))
                 {
                     self.execute(s, now, requests, completions)?;
-                    if self.channel_policy == ArbiterPolicy::RoundRobin {
+                    if self.channel_policy != ArbiterPolicy::Fifo {
                         self.next_grant = (s + 1) % n;
                     }
                     progressed = true;
@@ -1059,7 +1086,7 @@ impl PoolSim {
                 let index = issued.len();
                 let arrival = states[c].fire;
                 let input = clients[c].inputs[states[c].next].clone();
-                issued.push(SimRequest { arrival, input });
+                issued.push(SimRequest { arrival, input, tenant: clients[c].tenant });
                 client_of.push(c);
                 let shard = self.place(index, arrival, now)?;
                 dirty[shard] = true;
@@ -1148,7 +1175,7 @@ impl PoolSim {
                 let index = issued.len();
                 let arrival = states[c].fire;
                 let input = clients[c].inputs[states[c].next].clone();
-                issued.push(SimRequest { arrival, input });
+                issued.push(SimRequest { arrival, input, tenant: clients[c].tenant });
                 client_of.push(c);
                 self.place(index, arrival, now)?;
                 states[c].inflight = true;
@@ -1186,6 +1213,9 @@ impl PoolSim {
 pub struct ClientScript {
     pub inputs: Vec<Vec<f32>>,
     pub think: Vec<u64>,
+    /// Tenant every request of this session bills to (0 = the default
+    /// single tenant; E14 assigns clients round-robin across tenants).
+    pub tenant: u32,
 }
 
 #[cfg(test)]
@@ -1281,6 +1311,7 @@ mod tests {
             .map(|i| SimRequest {
                 arrival: i as u64 * gap,
                 input: vec![(i as f32) / n as f32, 0.5],
+                tenant: 0,
             })
             .collect()
     }
@@ -1330,8 +1361,8 @@ mod tests {
     fn sim_rejects_unsorted_trace() {
         let mut s = sim(1);
         let t = vec![
-            SimRequest { arrival: 10, input: vec![0.1, 0.2] },
-            SimRequest { arrival: 5, input: vec![0.1, 0.2] },
+            SimRequest { arrival: 10, input: vec![0.1, 0.2], tenant: 0 },
+            SimRequest { arrival: 5, input: vec![0.1, 0.2], tenant: 0 },
         ];
         assert!(s.run(&t).is_err());
     }
@@ -1345,6 +1376,7 @@ mod tests {
                     .map(|j| vec![c as f32 / 10.0, (j as f32) / (per as f32)])
                     .collect(),
                 think: vec![think; per],
+                tenant: 0,
             })
             .collect()
     }
@@ -1401,10 +1433,38 @@ mod tests {
     }
 
     #[test]
+    fn tenant_tags_never_change_completions_without_a_hierarchy() {
+        // tenancy is pure metadata until a memory hierarchy consumes it:
+        // tagging clients must leave every completion bit-identical
+        let plain = scripts(4, 3, 120);
+        let mut tagged = plain.clone();
+        for (c, s) in tagged.iter_mut().enumerate() {
+            s.tenant = (c % 2) as u32;
+        }
+        let a = sim(2).run_closed(&plain).unwrap();
+        let b = sim(2).run_closed(&tagged).unwrap();
+        assert_eq!(a.completions.len(), b.completions.len());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!((x.index, x.shard, x.arrival, x.done), (y.index, y.shard, y.arrival, y.done));
+            assert_eq!(x.output, y.output);
+        }
+    }
+
+    #[test]
+    fn submit_as_tags_without_changing_results() {
+        let pool = NpuPool::start(factories(2), ServerConfig::default()).unwrap();
+        let pu = PuSim::new(program(), 8);
+        let x = vec![0.25, 0.75];
+        let got = pool.submit_as(3, x.clone()).unwrap().wait().unwrap();
+        assert_eq!(got, pu.forward_f32(&x));
+        pool.shutdown();
+    }
+
+    #[test]
     fn closed_loop_validates_scripts() {
         let mut s = sim(1);
         assert!(s.run_closed(&[]).is_err(), "no clients");
-        let bad = ClientScript { inputs: vec![vec![0.1, 0.2]], think: vec![] };
+        let bad = ClientScript { inputs: vec![vec![0.1, 0.2]], think: vec![], tenant: 0 };
         assert!(s.run_closed(&[bad]).is_err(), "inputs/think length mismatch");
     }
 

@@ -46,6 +46,38 @@ const OVERLOAD: f64 = 6.0;
 /// `max_wait`).
 const MAX_WAIT_CYCLES: u64 = 2_000;
 
+/// Multi-tenant isolation configuration threaded through the serving
+/// sweeps, so E14 prices each mitigation with the *same* measurements
+/// the single-tenant rows use. [`Tenancy::SINGLE`] (the default
+/// everywhere) leaves every pinned number bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tenancy {
+    /// Tenants sharing the pool; requests/clients are assigned
+    /// round-robin across them. 1 = the single-tenant default.
+    pub tenants: u32,
+    /// Way-partition each shard's cache across `tenants`.
+    pub partition: bool,
+    /// Nonzero: seed for randomized superblock packing in each cache.
+    pub randomize_seed: u64,
+}
+
+impl Tenancy {
+    /// The default single tenant: every tag is 0, no mitigation.
+    pub const SINGLE: Tenancy = Tenancy { tenants: 1, partition: false, randomize_seed: 0 };
+
+    /// Apply the cache-side mitigations to one shard's hierarchy.
+    pub fn apply(&self, cache: crate::cache::CompressedCache) -> crate::cache::CompressedCache {
+        let mut c = cache;
+        if self.partition && self.tenants > 1 {
+            c = c.with_tenant_partition(self.tenants);
+        }
+        if self.randomize_seed != 0 {
+            c = c.with_randomized_packing(self.randomize_seed);
+        }
+        c
+    }
+}
+
 /// One (kernel, scheme, shard-count) cell of the serving sweep.
 #[derive(Debug, Clone)]
 pub struct E10Row {
@@ -149,7 +181,7 @@ pub fn gen_trace_on(
     (0..n.max(1))
         .map(|_| {
             t += -(1.0 - rng.f64()).ln() * mean;
-            SimRequest { arrival: t as u64, input: w.gen_input(&mut rng) }
+            SimRequest { arrival: t as u64, input: w.gen_input(&mut rng), tenant: 0 }
         })
         .collect()
 }
@@ -192,12 +224,28 @@ fn measure_trace(
     batch: usize,
     trace: &[SimRequest],
 ) -> Result<E10Row> {
+    measure_trace_tenancy(npu, w, program, scheme, shards, batch, trace, Tenancy::SINGLE)
+}
+
+/// [`measure_trace`] under an isolation configuration: each shard's
+/// cache gets the mitigation knobs (the trace carries the tenant tags).
+#[allow(clippy::too_many_arguments)]
+fn measure_trace_tenancy(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    shards: usize,
+    batch: usize,
+    trace: &[SimRequest],
+    ten: Tenancy,
+) -> Result<E10Row> {
     anyhow::ensure!(shards > 0, "shard count must be positive");
     let devices = (0..shards)
         .map(|_| {
             Ok(NpuDevice::new(npu, program.clone())?
                 .with_weight_scheme(scheme)?
-                .with_memory(Box::new(build_hierarchy(scheme, E10_CACHE)?)))
+                .with_memory(Box::new(ten.apply(build_hierarchy(scheme, E10_CACHE)?))))
         })
         .collect::<Result<Vec<_>>>()?;
     let policy = BatchPolicy {
@@ -306,10 +354,34 @@ pub fn measure_all_shards_on(
     batch: usize,
     seed: u64,
 ) -> Result<Vec<E10Row>> {
-    let trace = gen_trace_on(npu, w, program, n, batch, seed);
+    measure_all_shards_tenancy(npu, w, program, scheme, n, batch, seed, Tenancy::SINGLE)
+}
+
+/// [`measure_all_shards_on`] under an isolation configuration — E14's
+/// pricing entry. The identical seeded trace is tagged round-robin
+/// across `ten.tenants` and replayed at every shard count with the
+/// cache-side mitigations applied, so the cost of a mitigation is the
+/// row-for-row delta against the [`Tenancy::SINGLE`] sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_all_shards_tenancy(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    n: usize,
+    batch: usize,
+    seed: u64,
+    ten: Tenancy,
+) -> Result<Vec<E10Row>> {
+    let mut trace = gen_trace_on(npu, w, program, n, batch, seed);
+    if ten.tenants > 1 {
+        for (i, r) in trace.iter_mut().enumerate() {
+            r.tenant = i as u32 % ten.tenants;
+        }
+    }
     SHARD_COUNTS
         .iter()
-        .map(|&shards| measure_trace(npu, w, program, scheme, shards, batch, &trace))
+        .map(|&shards| measure_trace_tenancy(npu, w, program, scheme, shards, batch, &trace, ten))
         .collect()
 }
 

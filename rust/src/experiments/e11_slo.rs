@@ -28,13 +28,13 @@ use anyhow::Result;
 use crate::bench_suite::{all_workloads, Workload};
 use crate::coordinator::{BatchPolicy, ClientScript, PoolSim};
 use crate::fixed::QFormat;
-use crate::mem::{ArbiterPolicy, ChannelConfig, ChannelHub, DramChannel, SharedChannel};
+use crate::mem::{lock_hub, ArbiterPolicy, ChannelConfig, ChannelHub, DramChannel, SharedChannel};
 use crate::npu::{NpuConfig, NpuDevice, NpuProgram};
 use crate::util::bench::Table;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::e10_serving::{percentile, E10_CACHE};
+use super::e10_serving::{percentile, Tenancy, E10_CACHE};
 use super::e9_cache::{build_hierarchy_on, dram_for};
 
 /// The shard sweep (smaller than E10's: every extra shard multiplies
@@ -175,7 +175,7 @@ pub fn gen_scripts(
             let think = (0..per_client)
                 .map(|_| (-(1.0 - r.f64()).ln() * think_mean).max(0.0) as u64)
                 .collect();
-            ClientScript { inputs, think }
+            ClientScript { inputs, think, tenant: 0 }
         })
         .collect()
 }
@@ -195,6 +195,7 @@ fn measure_point(
     batch: usize,
     think_mean: f64,
     seed: u64,
+    ten: Tenancy,
 ) -> Result<(E11Point, PointDetail)> {
     let hub = ChannelHub::shared(ChannelConfig::zc702_ddr3(), policy, shards);
     let devices = (0..shards)
@@ -203,7 +204,7 @@ fn measure_point(
             let hierarchy = build_hierarchy_on(scheme, E11_CACHE, dram_for(scheme, channel)?)?;
             Ok(NpuDevice::new(npu, program.clone())?
                 .with_weight_scheme(scheme)?
-                .with_memory(Box::new(hierarchy)))
+                .with_memory(Box::new(ten.apply(hierarchy))))
         })
         .collect::<Result<Vec<_>>>()?;
     let batch_policy = BatchPolicy {
@@ -213,7 +214,12 @@ fn measure_point(
     };
     let mut sim =
         PoolSim::new(devices, batch_policy)?.with_channel_policy(policy);
-    let scripts = gen_scripts(w, clients, per_client, think_mean, seed);
+    let mut scripts = gen_scripts(w, clients, per_client, think_mean, seed);
+    if ten.tenants > 1 {
+        for (c, s) in scripts.iter_mut().enumerate() {
+            s.tenant = c as u32 % ten.tenants;
+        }
+    }
     let report = sim.run_closed(&scripts)?;
 
     let mut lat: Vec<u64> = report.completions.iter().map(|c| c.done - c.arrival).collect();
@@ -236,7 +242,7 @@ fn measure_point(
         logical += l;
         physical += p;
     }
-    let totals = hub.lock().unwrap().totals();
+    let totals = lock_hub(&hub).totals();
 
     let point = E11Point {
         clients,
@@ -300,6 +306,7 @@ pub fn slo_for_on(
         batch,
         think_mean,
         seed,
+        Tenancy::SINGLE,
     )?;
     Ok(SLO_MULT * base.p99_cycles.max(1))
 }
@@ -347,6 +354,40 @@ pub fn measure_on(
     batch: usize,
     seed: u64,
 ) -> Result<E11Row> {
+    measure_on_tenancy(
+        npu,
+        w,
+        program,
+        scheme,
+        shards,
+        policy_name,
+        slo_cycles,
+        n,
+        batch,
+        seed,
+        Tenancy::SINGLE,
+    )
+}
+
+/// [`measure_on`] under an isolation configuration — E14's pricing
+/// cell: clients are assigned round-robin across `ten.tenants`, each
+/// shard's cache gets the mitigation knobs, and the arbiter policy
+/// (`"quota"` for per-tenant channel quotas) prices the channel-side
+/// mitigation against the same SLO.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_on_tenancy(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    shards: usize,
+    policy_name: &str,
+    slo_cycles: u64,
+    n: usize,
+    batch: usize,
+    seed: u64,
+    ten: Tenancy,
+) -> Result<E11Row> {
     anyhow::ensure!(shards > 0, "shard count must be positive");
     let policy = ArbiterPolicy::parse(policy_name)?;
     let think_mean = per_item_cycles(npu, program, batch) * THINK_FACTOR;
@@ -356,7 +397,7 @@ pub fn measure_on(
         let per_client = (n / clients).max(1);
         let (mut point, detail) = measure_point(
             npu, w, program, scheme, shards, policy, clients, per_client, batch, think_mean,
-            seed,
+            seed, ten,
         )?;
         point.met_slo = point.p99_cycles <= slo_cycles;
         sweep.push(point);

@@ -1,6 +1,6 @@
 //! Unified, multi-threaded experiment harness.
 //!
-//! One registry ([`EXPERIMENTS`]) describes E1..E13; [`build_jobs`] expands
+//! One registry ([`EXPERIMENTS`]) describes E1..E14; [`build_jobs`] expands
 //! a [`HarnessConfig`] into the full sweep grid (every bench_suite kernel
 //! × every compression scheme where the experiment varies by scheme, plus
 //! the synthetic-distribution jobs); [`run`] fans the jobs out over a
@@ -27,8 +27,8 @@ use crate::trace::Synthetic;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::{e10_serving, e11_slo, e12_systolic, e13_accounting, e1_compression, e2_speedup};
 use super::{
+    e10_serving, e11_slo, e12_systolic, e13_accounting, e14_tenancy, e1_compression, e2_speedup,
     e3_energy, e4_quality, e5_bandwidth, e6_batching, e7_lcp, e8_ablation, e9_cache, selfbench,
 };
 
@@ -76,7 +76,7 @@ pub struct Scenario {
 /// A registry entry describing one experiment.
 #[derive(Debug, Clone, Copy)]
 pub struct ExperimentSpec {
-    /// Stable id ("e1".."e13") — the CLI/CI selector and report key.
+    /// Stable id ("e1".."e14") — the CLI/CI selector and report key.
     pub id: &'static str,
     pub title: &'static str,
     /// Whether the sweep fans out one job per compression scheme.
@@ -93,7 +93,7 @@ pub struct ExperimentSpec {
 }
 
 /// All experiments, in report order.
-pub static EXPERIMENTS: [ExperimentSpec; 13] = [
+pub static EXPERIMENTS: [ExperimentSpec; 14] = [
     ExperimentSpec {
         id: "e1",
         title: "compression ratio per workload stream",
@@ -200,6 +200,14 @@ pub static EXPERIMENTS: [ExperimentSpec; 13] = [
         shared_seed_per_kernel: true,
         sweeps_channel_policies: false,
     },
+    ExperimentSpec {
+        id: "e14",
+        title: "cross-tenant compression side channel + priced mitigations",
+        per_scheme: true, // the occupancy channel exists per scheme
+        synthetics: false,
+        shared_seed_per_kernel: false,
+        sweeps_channel_policies: false, // pins fifo/quota per mitigation
+    },
 ];
 
 /// The simulator self-benchmark (sim-cycles-per-wall-second on pinned
@@ -217,7 +225,7 @@ pub static SELFBENCH: ExperimentSpec = ExperimentSpec {
     sweeps_channel_policies: false,
 };
 
-/// Look an experiment up by id ("e1".."e13", or "selfbench").
+/// Look an experiment up by id ("e1".."e14", or "selfbench").
 pub fn experiment(id: &str) -> Option<&'static ExperimentSpec> {
     if id == SELFBENCH.id {
         return Some(&SELFBENCH);
@@ -225,10 +233,10 @@ pub fn experiment(id: &str) -> Option<&'static ExperimentSpec> {
     EXPERIMENTS.iter().find(|e| e.id == id)
 }
 
-/// Sweep configuration (defaults = the full e1–e12 grid).
+/// Sweep configuration (defaults = the full e1–e14 grid).
 #[derive(Debug, Clone)]
 pub struct HarnessConfig {
-    /// Experiment ids to run (subset of "e1".."e12").
+    /// Experiment ids to run (subset of "e1".."e14").
     pub experiments: Vec<String>,
     /// Kernels to sweep (subset of the bench_suite names).
     pub benchmarks: Vec<String>,
@@ -331,7 +339,7 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
     let mut jobs = Vec::new();
     for id in &cfg.experiments {
         let spec = experiment(id)
-            .with_context(|| format!("unknown experiment {id:?} (expected e1..e13 or selfbench)"))?;
+            .with_context(|| format!("unknown experiment {id:?} (expected e1..e14 or selfbench)"))?;
         let schemes: Vec<&str> = if spec.per_scheme {
             cfg.schemes.iter().map(String::as_str).collect()
         } else {
@@ -565,6 +573,20 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
             )?;
             Ok(rows.iter().map(e13_accounting::E13Row::to_json).collect())
         }
+        ("e14", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let rows = e14_tenancy::measure_all_on(
+                sc.npu,
+                w.as_ref(),
+                &p,
+                &sc.scheme,
+                sc.invocations,
+                sc.batch,
+                seed,
+            )?;
+            Ok(rows.iter().map(e14_tenancy::E14Row::to_json).collect())
+        }
         ("e8", Target::Bench(b)) => {
             let w = workload(b).unwrap();
             let p = program_for(b, sc.qformat, seed)?;
@@ -751,7 +773,10 @@ mod tests {
         let ids: Vec<_> = EXPERIMENTS.iter().map(|e| e.id).collect();
         assert_eq!(
             ids,
-            ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12", "e13"]
+            [
+                "e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12",
+                "e13", "e14"
+            ]
         );
         assert!(experiment("e5").unwrap().per_scheme);
         assert!(experiment("e9").unwrap().per_scheme);
@@ -760,7 +785,9 @@ mod tests {
         assert!(experiment("e12").unwrap().per_scheme);
         assert!(experiment("e13").unwrap().per_scheme);
         assert!(experiment("e13").unwrap().shared_seed_per_kernel);
-        assert!(experiment("e14").is_none());
+        assert!(experiment("e14").unwrap().per_scheme);
+        assert!(!experiment("e14").unwrap().sweeps_channel_policies);
+        assert!(experiment("e15").is_none());
     }
 
     #[test]
@@ -801,6 +828,7 @@ mod tests {
         assert_eq!(count("e11"), 7 * 5, "e11 fans out per scheme");
         assert_eq!(count("e12"), 7 * 5, "e12 fans out per scheme");
         assert_eq!(count("e13"), 7 * 5, "e13 fans out per scheme");
+        assert_eq!(count("e14"), 7 * 5, "e14 fans out per scheme");
         // only e11 jobs carry the channel-policy sweep
         for j in &jobs {
             if j.experiment == "e11" {

@@ -1,4 +1,4 @@
-//! Experiment implementations E1..E13 (see DESIGN.md §2).
+//! Experiment implementations E1..E14 (see DESIGN.md §2).
 //!
 //! Each experiment is a pure function from configuration to printable
 //! rows, so the CLI (`snnapc run-bench`), the criterion-style bench
@@ -6,7 +6,7 @@
 //! one implementation and EXPERIMENTS.md quotes a single source of truth.
 //!
 //! [`harness`] layers a registry + worker pool on top: one command runs
-//! the whole e1–e13 sweep (kernels × schemes) in parallel and emits a
+//! the whole e1–e14 sweep (kernels × schemes) in parallel and emits a
 //! single machine-readable JSON report (`snnapc experiments --all`).
 
 pub mod e1_compression;
@@ -14,6 +14,7 @@ pub mod e10_serving;
 pub mod e11_slo;
 pub mod e12_systolic;
 pub mod e13_accounting;
+pub mod e14_tenancy;
 pub mod e2_speedup;
 pub mod e3_energy;
 pub mod e4_quality;

@@ -4,9 +4,9 @@
 //!   info            show artifact manifest + effective config
 //!   serve           start the sharded batching pool and drive it with a
 //!                   synthetic open-loop client (requests/s, duration)
-//!   experiments     run the e1..e13 sweep in parallel and emit one
+//!   experiments     run the e1..e14 sweep in parallel and emit one
 //!                   consolidated JSON report (the harness)
-//!   run-bench       print experiment tables: e1..e13 or all (serial)
+//!   run-bench       print experiment tables: e1..e14 or all (serial)
 //!   compress-file   per-scheme compression report for any file
 //!   trace           dump + compress a benchmark's NPU streams
 //!   config          print the effective configuration (reloadable)
@@ -31,7 +31,7 @@ use snnap_c::coordinator::{
     Backend, BackendFactory, DeviceBackend, NpuPool, PjrtBackend, ServerConfig,
 };
 use snnap_c::experiments as ex;
-use snnap_c::mem::{ArbiterPolicy, ChannelHub, DramChannel, SharedChannel};
+use snnap_c::mem::{lock_hub, ArbiterPolicy, ChannelHub, DramChannel, SharedChannel};
 use snnap_c::npu::{NpuDevice, NpuProgram};
 use snnap_c::obs::{self, Tracer};
 use snnap_c::runtime::{Manifest, NpuExecutor};
@@ -55,14 +55,18 @@ COMMANDS:
                             front per-shard cache -> LCP-DRAM hierarchies
                             whose DRAM transfers all serialize on ONE
                             arbitrated channel; config keys: compression,
-                            pool.schemes, pool.geometries, channel.policy)
+                            pool.schemes, pool.geometries, channel.policy,
+                            tenant.count/tenant.partition/tenant.randomize
+                            — clients are assigned round-robin across
+                            tenants; partition/randomize harden the
+                            shard caches against cross-tenant probing)
     --trace FILE            record a Perfetto/chrome-trace JSON of the run
                             (batch spans per shard, channel grant/burst
                             spans, cache/DRAM counters, registry snapshot)
-  experiments               parallel e1..e13 sweep + one JSON report
+  experiments               parallel e1..e14 sweep + one JSON report
     --all                   run every experiment (default when no
                             --experiment is given)
-    --experiment LIST       subset, e.g. e1 or e1,e9,e10,e11,e13
+    --experiment LIST       subset, e.g. e1 or e1,e9,e10,e11,e14
     --only LIST             alias for --experiment
     --trace-dir DIR         E13 also writes one Perfetto trace per cell
                             (e13_{kernel}_{scheme}_{N}shards.trace.json)
@@ -70,7 +74,7 @@ COMMANDS:
     --schemes LIST          schemes for per-scheme experiments
                             (none|bdi|fpc|bdi+fpc|cpack; default: all)
     --channel-policy LIST   shared-channel arbiters E11 sweeps
-                            (fifo|rr; default: both)
+                            (fifo|rr|quota; default: fifo,rr)
     --jobs N                worker threads (default: CPU count)
     --invocations N         stream length knob (default 256)
     --batch N               batch size (default batch.max)
@@ -89,9 +93,14 @@ COMMANDS:
                             decompressor, gated-MAC share, DRAM bytes;
                             e13 decomposes serving latency into additive
                             queue/sync/arbiter/memory/fill/compute/drain
-                            stage shares on the traced grid pool)
+                            stage shares on the traced grid pool;
+                            e14 quantifies the cross-tenant occupancy
+                            side channel of the shared compressed cache
+                            — leak rate in bits/1k probes — and prices
+                            the partition/randomize/quota mitigations
+                            with the same E10/E11 sweeps)
   run-bench                 print experiment tables (serial)
-    --experiment e1..e13|all which experiment (default all)
+    --experiment e1..e14|all which experiment (default all)
     --invocations N         stream length knob (default 256)
   selfbench                 simulator throughput self-benchmark (serial):
                             sim-cycles-per-wall-second per hot path
@@ -168,7 +177,11 @@ fn resolve_sim_program(cfg: &Config) -> Result<NpuProgram> {
         Ok(m) => ex::program_from_artifact(&m, &cfg.benchmark, cfg.qformat),
         Err(e) if dir.join("manifest.json").exists() => Err(e),
         Err(_) => {
-            let w = workload(&cfg.benchmark).unwrap();
+            // a typo'd benchmark used to panic here (and poison the pool
+            // when it happened on a shard worker thread); unknown names
+            // are a hard error with the offending name in the message
+            let w = workload(&cfg.benchmark)
+                .with_context(|| format!("unknown benchmark {:?}", cfg.benchmark))?;
             Ok(ex::program_from_workload(w.as_ref(), cfg.qformat, 42))
         }
     }
@@ -217,11 +230,18 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
                 let scheme = cfg2.shard_scheme(shard).to_string();
                 let geometry = cfg2.shard_geometry(shard, ex::e9_cache::CACHE_CONFIGS[2]);
                 let channel = DramChannel::Shared(SharedChannel::new(hub, shard));
-                let hierarchy = ex::e9_cache::build_hierarchy_on(
+                let mut hierarchy = ex::e9_cache::build_hierarchy_on(
                     &scheme,
                     geometry,
                     ex::e9_cache::dram_for(&scheme, channel)?,
                 )?;
+                // multi-tenant isolation mitigations (tenant.* keys)
+                if cfg2.tenant_partition && cfg2.tenant_count > 1 {
+                    hierarchy = hierarchy.with_tenant_partition(cfg2.tenant_count);
+                }
+                if cfg2.tenant_randomize != 0 {
+                    hierarchy = hierarchy.with_randomized_packing(cfg2.tenant_randomize);
+                }
                 let mut device = NpuDevice::new(cfg2.npu, program)?
                     .with_weight_scheme(&scheme)?
                     .with_memory(Box::new(hierarchy));
@@ -260,14 +280,18 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     let mut handles = Vec::new();
     for c in 0..clients {
         let pool = pool.clone();
-        let w: Box<dyn Workload> = workload(&cfg.benchmark).unwrap();
+        let w: Box<dyn Workload> = workload(&cfg.benchmark)
+            .with_context(|| format!("unknown benchmark {:?}", cfg.benchmark))?;
+        // clients are assigned round-robin across `tenant.count`; the
+        // tag rides each invocation into the shard's memory hierarchy
+        let tenant = c as u32 % cfg.tenant_count;
         // remainder-aware split: all `requests` are actually served
         let per_client = requests / clients + usize::from(c < requests % clients);
         handles.push(std::thread::spawn(move || -> Result<()> {
             let mut rng = Rng::new(c as u64 + 100);
             for _ in 0..per_client {
                 let x = w.gen_input(&mut rng);
-                let _ = pool.submit(x)?.wait()?;
+                let _ = pool.submit_as(tenant, x)?.wait()?;
             }
             Ok(())
         }));
@@ -282,7 +306,7 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     // only the sim shards bill the shared channel; pjrt never attaches
     // to it, so printing its (empty) stats would imply a modeled channel
     if backend_kind == "sim" {
-        let h = hub.lock().unwrap();
+        let h = lock_hub(&hub);
         let t = h.totals();
         println!(
             "channel: policy={} transfers={} busy={}cyc wait={}cyc wait-share={:.1}%",
@@ -292,6 +316,14 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
             t.wait_cycles,
             h.wait_share() * 100.0,
         );
+        if cfg.tenant_count > 1 {
+            for (tenant, s) in h.tenant_stats() {
+                println!(
+                    "tenant {tenant}: transfers={} bytes={} busy={}cyc wait={}cyc",
+                    s.transfers, s.payload_bytes, s.busy_cycles, s.wait_cycles,
+                );
+            }
+        }
     }
     println!(
         "wall time {:?}  throughput {:.0} req/s",
@@ -305,9 +337,12 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
         pool.metrics().publish(reg);
         obs::registry::publish_fill_cache(reg);
         if backend_kind == "sim" {
-            let h = hub.lock().unwrap();
+            let h = lock_hub(&hub);
             for r in 0..h.requesters() {
                 obs::registry::publish_requester_stats(reg, r, &h.requester_stats(r));
+            }
+            for (tenant, s) in h.tenant_stats() {
+                obs::registry::publish_tenant_stats(reg, tenant, &s);
             }
         }
         let mut trace = tracer.chrome_trace();
@@ -544,6 +579,14 @@ fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
             cfg.policy.max_batch,
         )?);
     }
+    if run_all || which == "e14" {
+        println!("\n== E14: cross-tenant occupancy side channel + priced mitigations ==");
+        ex::e14_tenancy::print_table(&ex::e14_tenancy::run(
+            cfg.qformat,
+            invocations,
+            cfg.policy.max_batch,
+        )?);
+    }
     Ok(())
 }
 
@@ -656,6 +699,28 @@ mod tests {
             let err = cmd_serve(&cfg, &args(bad)).unwrap_err().to_string();
             assert!(err.contains("positive"), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn serve_rejects_unknown_benchmark_with_a_clean_error() {
+        // the panic-hardening bugfix: `serve --benchmark typo` used to
+        // hit `workload(..).unwrap()` and abort; now it's a hard Err
+        // naming the benchmark
+        let mut cfg = Config::default();
+        cfg.benchmark = "sobel2".into();
+        let err = cmd_serve(&cfg, &args("serve --requests 4")).unwrap_err().to_string();
+        assert!(err.contains("unknown benchmark"), "{err}");
+        assert!(err.contains("sobel2"), "{err}");
+    }
+
+    #[test]
+    fn resolve_sim_program_reports_unknown_benchmark() {
+        let mut cfg = Config::default();
+        cfg.benchmark = "nope".into();
+        cfg.artifacts = "definitely-not-a-dir".into();
+        let err = resolve_sim_program(&cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown benchmark"), "{err}");
+        assert!(err.contains("nope"), "{err}");
     }
 
     #[test]

@@ -19,7 +19,8 @@
 //!   round-robin: rotating priority), which the virtual-time pool
 //!   ([`crate::coordinator::PoolSim`]) applies to its flush scan.
 
-use std::sync::{Arc, Mutex};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use anyhow::{bail, Result};
 
@@ -130,15 +131,23 @@ pub enum ArbiterPolicy {
     /// Rotating priority: the requester after the last grantee wins
     /// same-cycle ties, so no shard can monopolize the channel head.
     RoundRobin,
+    /// Round-robin tie-breaking plus per-tenant bandwidth quotas: the
+    /// window [`ChannelHub::quota_window`] is split evenly across the
+    /// tenants the hub has seen, and a tenant that has exhausted its
+    /// share is deferred to the next window boundary — so one tenant's
+    /// burstiness stops modulating another tenant's grant waits (the
+    /// channel-contention side channel E14 measures).
+    TenantQuota,
 }
 
 impl ArbiterPolicy {
-    /// Parse a CLI/config name (`fifo` | `rr`).
+    /// Parse a CLI/config name (`fifo` | `rr` | `quota`).
     pub fn parse(s: &str) -> Result<ArbiterPolicy> {
         Ok(match s {
             "fifo" => ArbiterPolicy::Fifo,
             "rr" | "round-robin" => ArbiterPolicy::RoundRobin,
-            other => bail!("unknown channel policy {other:?} (fifo|rr)"),
+            "quota" | "tenant-quota" => ArbiterPolicy::TenantQuota,
+            other => bail!("unknown channel policy {other:?} (fifo|rr|quota)"),
         })
     }
 
@@ -146,6 +155,7 @@ impl ArbiterPolicy {
         match self {
             ArbiterPolicy::Fifo => "fifo",
             ArbiterPolicy::RoundRobin => "rr",
+            ArbiterPolicy::TenantQuota => "quota",
         }
     }
 }
@@ -184,12 +194,29 @@ pub struct ChannelHub {
     /// Cycle the channel next frees up (channel clock).
     busy_until: u64,
     per: Vec<RequesterStats>,
+    /// Tenant currently driving each requester (default: tenant 0).
+    tenant_of: Vec<u32>,
+    /// Every tenant ever assigned — the denominator of the quota share.
+    tenants_seen: BTreeSet<u32>,
+    /// Per-tenant accounting, keyed by the tenant assigned at grant time.
+    per_tenant: BTreeMap<u32, RequesterStats>,
+    /// Quota window length in channel cycles ([`ArbiterPolicy::TenantQuota`]).
+    quota_window: u64,
+    /// Window index the quota ledger currently covers.
+    quota_epoch: u64,
+    /// Service cycles each tenant consumed inside the current window.
+    quota_used: BTreeMap<u32, u64>,
     /// Observability hook (disabled by default; zero-overhead).
     tracer: crate::obs::Tracer,
     /// Channel-cycle → trace-µs conversion (device cycles per channel
     /// cycle), so hub spans share the pool's 1 cycle ≡ 1 µs timeline.
     ts_scale: f64,
 }
+
+/// Default [`ArbiterPolicy::TenantQuota`] window: long enough to fit
+/// several line bursts per tenant on the ZC702 DDR3 numbers, short
+/// enough that deferrals stay within one batch's memory phase.
+pub const DEFAULT_QUOTA_WINDOW: u64 = 2048;
 
 impl ChannelHub {
     pub fn new(cfg: ChannelConfig, policy: ArbiterPolicy, requesters: usize) -> ChannelHub {
@@ -199,6 +226,12 @@ impl ChannelHub {
             policy,
             busy_until: 0,
             per: vec![RequesterStats::default(); requesters],
+            tenant_of: vec![0; requesters],
+            tenants_seen: BTreeSet::from([0]),
+            per_tenant: BTreeMap::new(),
+            quota_window: DEFAULT_QUOTA_WINDOW,
+            quota_epoch: 0,
+            quota_used: BTreeMap::new(),
             tracer: crate::obs::Tracer::disabled(),
             ts_scale: 1.0,
         }
@@ -225,14 +258,55 @@ impl ChannelHub {
         self.per.len()
     }
 
+    /// Assign the tenant whose traffic requester `r` carries from now
+    /// on. Tenants are remembered for the quota-share denominator even
+    /// after a requester moves on to another tenant.
+    pub fn set_requester_tenant(&mut self, r: usize, tenant: u32) {
+        self.tenant_of[r] = tenant;
+        self.tenants_seen.insert(tenant);
+    }
+
+    /// Override the [`ArbiterPolicy::TenantQuota`] window length.
+    pub fn set_quota_window(&mut self, cycles: u64) {
+        self.quota_window = cycles.max(1);
+    }
+
     /// Grant one burst to requester `r` requested at `req_time`;
     /// returns (wait, service) in channel cycles. The grant is final:
     /// the burst occupies `[max(req_time, busy_until), ..+service)`.
+    /// Under [`ArbiterPolicy::TenantQuota`] a tenant that already spent
+    /// its window share is deferred to the next window boundary (the bus
+    /// idles — that idle IS the isolation cost the policy pays).
     fn grant(&mut self, r: usize, bytes: usize, req_time: u64) -> (u64, u64) {
         let service = self.cfg.latency_cycles + (bytes.div_ceil(self.cfg.bytes_per_cycle)) as u64;
-        let start = req_time.max(self.busy_until);
+        let tenant = self.tenant_of[r];
+        let mut start = req_time.max(self.busy_until);
+        if self.policy == ArbiterPolicy::TenantQuota {
+            let window = self.quota_window;
+            let share = (window / self.tenants_seen.len().max(1) as u64).max(1);
+            loop {
+                let epoch = start / window;
+                if epoch != self.quota_epoch {
+                    self.quota_epoch = epoch;
+                    self.quota_used.clear();
+                }
+                let used = self.quota_used.get(&tenant).copied().unwrap_or(0);
+                // a burst larger than the whole share still goes through
+                // once per window — quotas throttle, they must not starve
+                if used == 0 || used + service <= share {
+                    break;
+                }
+                start = (epoch + 1) * window;
+            }
+            *self.quota_used.entry(tenant).or_insert(0) += service;
+        }
         let wait = start - req_time;
         self.busy_until = start + service;
+        let t = self.per_tenant.entry(tenant).or_default();
+        t.transfers += 1;
+        t.payload_bytes += bytes as u64;
+        t.busy_cycles += service;
+        t.wait_cycles += wait;
         let s = &mut self.per[r];
         s.transfers += 1;
         s.payload_bytes += bytes as u64;
@@ -253,6 +327,12 @@ impl ChannelHub {
 
     pub fn requester_stats(&self, r: usize) -> RequesterStats {
         self.per[r]
+    }
+
+    /// Per-tenant accounting (tenant id → stats), sorted by tenant id.
+    /// Tenants that never transferred are absent.
+    pub fn tenant_stats(&self) -> Vec<(u32, RequesterStats)> {
+        self.per_tenant.iter().map(|(&t, &s)| (t, s)).collect()
     }
 
     /// Aggregate stats across all requesters.
@@ -297,10 +377,19 @@ pub struct SharedChannel {
     cfg: ChannelConfig,
 }
 
+/// Lock a hub, recovering from poisoning: the hub's cycle ledger is
+/// updated in place (no tearable invariants across statements), so if a
+/// shard thread panicked mid-grant the remaining shards keep arbitrating
+/// on the last consistent state instead of cascading `lock().unwrap()`
+/// panics through the whole pool.
+pub fn lock_hub(hub: &Mutex<ChannelHub>) -> MutexGuard<'_, ChannelHub> {
+    hub.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 impl SharedChannel {
     pub fn new(hub: Arc<Mutex<ChannelHub>>, requester: usize) -> SharedChannel {
         let cfg = {
-            let h = hub.lock().unwrap();
+            let h = lock_hub(&hub);
             assert!(requester < h.requesters(), "requester id out of range");
             h.cfg
         };
@@ -320,10 +409,15 @@ impl SharedChannel {
     /// requester this equals [`Channel::transfer`] exactly — the
     /// regression oracle the arbiter tests pin.
     pub fn transfer(&mut self, bytes: usize) -> u64 {
-        let (wait, service) =
-            self.hub.lock().unwrap().grant(self.requester, bytes, self.local_time);
+        let (wait, service) = lock_hub(&self.hub).grant(self.requester, bytes, self.local_time);
         self.local_time += wait + service;
         wait + service
+    }
+
+    /// Tag this requester's subsequent traffic with `tenant` (per-tenant
+    /// hub accounting + the quota arbiter's ledger key).
+    pub fn set_tenant(&mut self, tenant: u32) {
+        lock_hub(&self.hub).set_requester_tenant(self.requester, tenant);
     }
 
     /// Join the pool's virtual clock: the requester's next transfer is
@@ -341,17 +435,17 @@ impl SharedChannel {
     /// Attach a tracer to the hub behind this handle (idempotent across
     /// shards sharing one hub). See [`ChannelHub::set_tracer`].
     pub fn set_hub_tracer(&self, tracer: &crate::obs::Tracer, ts_scale: f64) {
-        self.hub.lock().unwrap().set_tracer(tracer, ts_scale);
+        lock_hub(&self.hub).set_tracer(tracer, ts_scale);
     }
 
     /// This requester's cumulative queuing delay.
     pub fn wait_cycles(&self) -> u64 {
-        self.hub.lock().unwrap().requester_stats(self.requester).wait_cycles
+        lock_hub(&self.hub).requester_stats(self.requester).wait_cycles
     }
 
     /// This requester's cumulative stats.
     pub fn stats(&self) -> RequesterStats {
-        self.hub.lock().unwrap().requester_stats(self.requester)
+        lock_hub(&self.hub).requester_stats(self.requester)
     }
 }
 
@@ -415,8 +509,10 @@ mod tests {
         assert_eq!(ArbiterPolicy::parse("fifo").unwrap(), ArbiterPolicy::Fifo);
         assert_eq!(ArbiterPolicy::parse("rr").unwrap(), ArbiterPolicy::RoundRobin);
         assert_eq!(ArbiterPolicy::parse("round-robin").unwrap(), ArbiterPolicy::RoundRobin);
+        assert_eq!(ArbiterPolicy::parse("quota").unwrap(), ArbiterPolicy::TenantQuota);
+        assert_eq!(ArbiterPolicy::parse("tenant-quota").unwrap(), ArbiterPolicy::TenantQuota);
         assert!(ArbiterPolicy::parse("lottery").is_err());
-        for p in [ArbiterPolicy::Fifo, ArbiterPolicy::RoundRobin] {
+        for p in [ArbiterPolicy::Fifo, ArbiterPolicy::RoundRobin, ArbiterPolicy::TenantQuota] {
             assert_eq!(ArbiterPolicy::parse(p.name()).unwrap(), p);
         }
     }
@@ -524,6 +620,90 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn tenant_stats_split_one_requesters_traffic() {
+        // E14's shape: one hierarchy, two tenants taking turns
+        let hub = ChannelHub::shared(ChannelConfig::zc702_ddr3(), ArbiterPolicy::Fifo, 1);
+        let mut ch = SharedChannel::new(hub.clone(), 0);
+        ch.set_tenant(0);
+        ch.transfer(64);
+        ch.set_tenant(1);
+        ch.transfer(64);
+        ch.transfer(64);
+        let stats = lock_hub(&hub).tenant_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].0, 0);
+        assert_eq!(stats[0].1.transfers, 1);
+        assert_eq!(stats[1].0, 1);
+        assert_eq!(stats[1].1.transfers, 2);
+        let sum = stats.iter().map(|(_, s)| s.busy_cycles).sum::<u64>();
+        assert_eq!(sum, lock_hub(&hub).totals().busy_cycles);
+    }
+
+    #[test]
+    fn quota_defers_over_budget_tenant_to_the_next_window() {
+        let hub = ChannelHub::shared(ChannelConfig::zc702_ddr3(), ArbiterPolicy::TenantQuota, 2);
+        let mut greedy = SharedChannel::new(hub.clone(), 0);
+        let mut victim = SharedChannel::new(hub.clone(), 1);
+        greedy.set_tenant(0);
+        victim.set_tenant(1);
+        let window = DEFAULT_QUOTA_WINDOW;
+        let service = Channel::new(ChannelConfig::zc702_ddr3()).transfer(64); // 28 + 16
+        let share = window / 2;
+        let fits = (share / service) as usize;
+        // the greedy tenant burns through its share...
+        for _ in 0..fits {
+            greedy.transfer(64);
+        }
+        let before = greedy.local_time();
+        assert!(before <= share, "within-budget bursts are not deferred");
+        // the victim tenant requesting now is served inside the first
+        // window: its own budget is untouched
+        victim.sync_to(before);
+        victim.transfer(64);
+        assert!(victim.local_time() < window, "quota protects the other tenant's latency");
+        // ...while the greedy tenant's next burst is pushed to the next
+        // window boundary
+        greedy.transfer(64);
+        assert!(
+            greedy.local_time() >= window,
+            "over-budget burst must wait for the next window (t={})",
+            greedy.local_time()
+        );
+    }
+
+    #[test]
+    fn quota_with_a_single_tenant_never_defers_small_bursts() {
+        // default tenant-0-only traffic gets the whole window: the
+        // policy must not tax a pool that never opted into multi-tenancy
+        let hub = ChannelHub::shared(ChannelConfig::zc702_ddr3(), ArbiterPolicy::TenantQuota, 1);
+        let mut ch = SharedChannel::new(hub.clone(), 0);
+        let mut private = Channel::new(ChannelConfig::zc702_ddr3());
+        for _ in 0..20 {
+            assert_eq!(ch.transfer(64), private.transfer(64));
+        }
+        assert_eq!(ch.wait_cycles(), 0);
+    }
+
+    #[test]
+    fn poisoned_hub_degrades_gracefully() {
+        // a shard thread panicking mid-transfer must not take down the
+        // other shards' channel handles (satellite bugfix)
+        let hub = ChannelHub::shared(ChannelConfig::zynq_acp(), ArbiterPolicy::Fifo, 2);
+        let poisoner = hub.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("shard dies while holding the hub");
+        })
+        .join();
+        assert!(hub.is_poisoned(), "precondition: the mutex really is poisoned");
+        let mut survivor = SharedChannel::new(hub.clone(), 1);
+        let service = Channel::new(ChannelConfig::zynq_acp()).transfer(64);
+        assert_eq!(survivor.transfer(64), service, "survivor still gets granted");
+        assert_eq!(survivor.stats().transfers, 1);
+        assert_eq!(lock_hub(&hub).totals().transfers, 1);
     }
 
     #[test]

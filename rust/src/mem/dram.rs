@@ -58,6 +58,14 @@ impl DramChannel {
             s.sync_to(cycle);
         }
     }
+
+    /// Tag subsequent transfers with a tenant id (no-op on a private
+    /// bus — nobody to account against).
+    pub fn set_tenant(&mut self, tenant: u32) {
+        if let DramChannel::Shared(s) = self {
+            s.set_tenant(tenant);
+        }
+    }
 }
 
 enum PageStore {

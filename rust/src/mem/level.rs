@@ -74,6 +74,11 @@ pub trait MemoryLevel: Send {
     /// timing-only levels stay untouched.
     fn attach_tracer(&mut self, _tracer: &crate::obs::Tracer, _shard: u32, _ts_scale: f64) {}
 
+    /// Tag subsequent accesses with a tenant id, forwarded down the
+    /// hierarchy (cache partition/packing mitigations, per-tenant hub
+    /// accounting). Default: no-op — single-tenant levels ignore it.
+    fn set_tenant(&mut self, _tenant: u32) {}
+
     /// Clock of the cycles this level reports, in MHz.
     fn clock_mhz(&self) -> f64;
 }
@@ -127,6 +132,10 @@ impl MemoryLevel for CompressedDram {
         if let super::dram::DramChannel::Shared(s) = &self.channel {
             s.set_hub_tracer(tracer, ts_scale);
         }
+    }
+
+    fn set_tenant(&mut self, tenant: u32) {
+        self.channel.set_tenant(tenant);
     }
 
     fn clock_mhz(&self) -> f64 {

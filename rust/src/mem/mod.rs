@@ -24,8 +24,8 @@ pub mod dram;
 pub mod level;
 
 pub use channel::{
-    ArbiterPolicy, Channel, ChannelConfig, ChannelHub, RequesterStats, SharedChannel,
-    TransferStats,
+    lock_hub, ArbiterPolicy, Channel, ChannelConfig, ChannelHub, RequesterStats, SharedChannel,
+    TransferStats, DEFAULT_QUOTA_WINDOW,
 };
 pub use dram::{CompressedDram, DramChannel, DramMode};
 pub use level::MemoryLevel;

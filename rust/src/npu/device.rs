@@ -278,6 +278,15 @@ impl NpuDevice {
         self.mem.as_deref()
     }
 
+    /// Tag the attached hierarchy's subsequent accesses with a tenant id
+    /// (cache partitioning/accounting + channel-hub quotas). No-op for
+    /// bare devices.
+    pub fn set_tenant(&mut self, tenant: u32) {
+        if let Some(mem) = &mut self.mem {
+            mem.set_tenant(tenant);
+        }
+    }
+
     /// Cumulative (hits, accesses) of the attached hierarchy's filtering
     /// level — the serving pool's per-shard hit-rate metric. `None`
     /// without a hierarchy or when the hierarchy has no cache level.

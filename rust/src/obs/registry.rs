@@ -202,6 +202,17 @@ pub fn publish_requester_stats(reg: &Registry, r: usize, s: &crate::mem::Request
     reg.counter_set(&format!("{p}.wait_cycles"), s.wait_cycles);
 }
 
+/// Publish one tenant's shared-channel accounting under
+/// `tenant.<t>.channel.*` — the registry half of the per-tenant trace
+/// tagging: who moved how many bytes and who absorbed the queuing.
+pub fn publish_tenant_stats(reg: &Registry, tenant: u32, s: &crate::mem::RequesterStats) {
+    let p = format!("tenant.{tenant}.channel");
+    reg.counter_set(&format!("{p}.transfers"), s.transfers);
+    reg.counter_set(&format!("{p}.payload_bytes"), s.payload_bytes);
+    reg.counter_set(&format!("{p}.busy_cycles"), s.busy_cycles);
+    reg.counter_set(&format!("{p}.wait_cycles"), s.wait_cycles);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

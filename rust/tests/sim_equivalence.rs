@@ -17,7 +17,7 @@ use snnap_c::bench_suite::workload;
 use snnap_c::coordinator::{BatchPolicy, ClientScript, PoolSim, SimReport, SimRequest};
 use snnap_c::experiments::e9_cache::{build_hierarchy, build_hierarchy_on, dram_for};
 use snnap_c::experiments::program_from_workload;
-use snnap_c::experiments::{e10_serving, e11_slo, selfbench};
+use snnap_c::experiments::{e10_serving, e11_slo, e14_tenancy, selfbench};
 use snnap_c::fixed::Q7_8;
 use snnap_c::mem::{ArbiterPolicy, ChannelConfig, ChannelHub, DramChannel, SharedChannel};
 use snnap_c::npu::{NpuConfig, NpuDevice, NpuProgram};
@@ -77,7 +77,7 @@ fn event_driven_open_loop_is_bit_identical_to_reference() {
         let trace: Vec<_> = (0..n)
             .map(|_| {
                 t += [0, 0, 1, 3, rng.below(400)][rng.range(0, 5)];
-                SimRequest { arrival: t, input: w.gen_input(rng) }
+                SimRequest { arrival: t, input: w.gen_input(rng), tenant: 0 }
             })
             .collect();
         let fast = PoolSim::new(plain_devices(&program, shards), pol)
@@ -117,7 +117,7 @@ fn event_driven_closed_loop_is_bit_identical_to_reference() {
             }
         }
         if rng.below(4) == 0 {
-            scripts.push(ClientScript { inputs: Vec::new(), think: Vec::new() });
+            scripts.push(ClientScript { inputs: Vec::new(), think: Vec::new(), tenant: 0 });
         }
         let fast = PoolSim::new(plain_devices(&program, shards), pol)
             .unwrap()
@@ -353,6 +353,90 @@ fn same_seed_traced_runs_emit_byte_identical_trace_json() {
     let b = dump();
     assert_eq!(a, b, "same-seed traces must serialize byte-identically");
     assert!(a.contains("\"traceEvents\""));
+}
+
+/// PR-8 multi-tenancy contract, half 1: tagging every request/client
+/// with a tenant must not perturb a traced or untraced run — tenant ids
+/// only steer accounting and (when enabled) mitigations, and tracing
+/// stays an observer even when it records the tags.
+#[test]
+fn tracing_on_or_off_is_bit_identical_for_tenant_tagged_runs() {
+    let w = workload("sobel").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 11);
+    let mut trace = e10_serving::gen_trace(w.as_ref(), &program, 48, 8, 17);
+    for (i, r) in trace.iter_mut().enumerate() {
+        r.tenant = i as u32 % 2;
+    }
+    let pol = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_cap: 1 << 16,
+    };
+    let plain = PoolSim::new(plain_devices(&program, 3), pol).unwrap().run(&trace).unwrap();
+    let traced = PoolSim::new(plain_devices(&program, 3), pol)
+        .unwrap()
+        .with_tracer(Tracer::enabled(1 << 18))
+        .run(&trace)
+        .unwrap();
+    assert_reports_identical(&traced, &plain, "tracing tenant-tagged open loop");
+
+    let mut scripts = e11_slo::gen_scripts(w.as_ref(), 4, 4, 80.0, 23);
+    for (c, s) in scripts.iter_mut().enumerate() {
+        s.tenant = c as u32 % 2;
+    }
+    let plain =
+        PoolSim::new(plain_devices(&program, 2), pol).unwrap().run_closed(&scripts).unwrap();
+    let traced = PoolSim::new(plain_devices(&program, 2), pol)
+        .unwrap()
+        .with_tracer(Tracer::enabled(1 << 18))
+        .run_closed(&scripts)
+        .unwrap();
+    assert_reports_identical(&traced, &plain, "tracing tenant-tagged closed loop");
+}
+
+/// PR-8 multi-tenancy contract, half 2: the E14 report is seeded — two
+/// same-seed runs serialize bit-identically — and its headline holds:
+/// the unmitigated occupancy channel leaks, and way partitioning cuts
+/// the leak by at least the 10× acceptance bar.
+#[test]
+fn e14_report_is_deterministic_and_partition_closes_the_leak() {
+    let w = workload("sobel").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 9);
+    let run = || {
+        e14_tenancy::measure_all_on(
+            NpuConfig::default(),
+            w.as_ref(),
+            &program,
+            "bdi+fpc",
+            8,
+            4,
+            33,
+        )
+        .unwrap()
+    };
+    let rows = run();
+    let again = run();
+    let dump = |rs: &[e14_tenancy::E14Row]| {
+        rs.iter().map(|r| r.to_json().dump()).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(dump(&rows), dump(&again), "same-seed E14 reports must be bit-identical");
+
+    let leak = |mit: &str| {
+        rows.iter().find(|r| r.mitigation == mit).map(|r| r.leak_rate).unwrap()
+    };
+    assert!(leak("none") > 0.0, "the unmitigated occupancy channel must leak");
+    assert!(
+        leak("partition") * 10.0 <= leak("none"),
+        "partitioning must reduce the leak at least tenfold: none={} partition={}",
+        leak("none"),
+        leak("partition")
+    );
+    // every row prices its mitigation against the same serving load
+    for r in &rows {
+        assert_eq!(r.workload, "sobel");
+        assert!(r.trials >= 32 && r.correct <= r.trials, "trial accounting");
+        assert!(r.e10_throughput > 0.0, "{}: E10 pricing must run", r.mitigation);
+    }
 }
 
 #[test]

@@ -91,9 +91,11 @@ def extract_metrics(report: dict) -> dict:
     ``e1/<label>/<stream>/<scheme>`` (compression ratios, informational),
     ``e9/<label>/<cache>``, ``e10/<label>/x<shards>``,
     ``e11/<label>/x<shards>/<policy>``, ``e12/<label>/<grid>`` (cycle
-    metrics, gated), and ``selfbench/<label>/<component>`` (exact
-    ``sim_cycles`` gated hard; wall-clock throughput gated with the
-    noise floor + retry policy).
+    metrics, gated), ``e14/<label>/<mitigation>`` (leak rate is
+    informational; the priced ``p99_cycles`` joins the hard cycle gate),
+    and ``selfbench/<label>/<component>`` (exact ``sim_cycles`` gated
+    hard; wall-clock throughput gated with the noise floor + retry
+    policy).
     """
     out: dict = {}
     experiments = report.get("experiments", {})
@@ -144,6 +146,16 @@ def extract_metrics(report: dict) -> dict:
                 "gated_mac_share": require(row, "gated_mac_share", key),
                 "dram_bytes": require(row, "dram_bytes", key),
             }
+    for entry in experiments.get("e14", []):
+        for row in entry.get("rows", []):
+            key = f"{entry['label']}/{require(row, 'mitigation', entry['label'])}"
+            out[key] = {
+                "leak_rate": require(row, "leak_rate", key),
+                "accuracy": require(row, "accuracy", key),
+                "p99_cycles": require(row, "e10_p99_cycles", key),
+                "throughput": require(row, "e10_throughput", key),
+                "slo_throughput": require(row, "e11_slo_throughput", key),
+            }
     for entry in experiments.get("selfbench", []):
         for row in entry.get("rows", []):
             key = f"{entry['label']}/{require(row, 'component', entry['label'])}"
@@ -155,16 +167,33 @@ def extract_metrics(report: dict) -> dict:
     return out
 
 
+#: E14 invariant bound: the way-partitioning mitigation may cost serving
+#: latency (each tenant sees half the cache ways), but its priced E10
+#: p99 must stay within this factor of the unmitigated (`none`) row —
+#: the cache is second-order next to NPU compute, so a blowout here
+#: means the mitigation plumbing broke, not that isolation is expensive.
+PARTITION_P99_BOUND = 2.0
+
+
 def check_invariants(metrics: dict) -> list:
     """Scenario-internal invariants that hold regardless of any baseline.
 
-    E12 acceptance (the paper's thesis taken into the array): for each
-    (kernel, grid-geometry) that has both a ``none`` cell and compressed
-    cells, at least one kernel×geometry must show a compressed scheme
-    strictly below ``none`` on BOTH ``fill_cycles`` and ``dram_bytes``.
-    Returns failure messages; empty when the invariant holds or no E12
-    cells with a ``none`` counterpart are present.
+    * E12 acceptance (the paper's thesis taken into the array): at least
+      one (kernel, grid-geometry) must show a compressed scheme strictly
+      below ``none`` on BOTH ``fill_cycles`` and ``dram_bytes``.
+    * E14 mitigation pricing: wherever the occupancy channel leaks
+      unmitigated (``leak_rate > 0`` on the ``none`` mitigation row),
+      way partitioning must cut the leak at least 10x AND its priced
+      p99 must stay within ``PARTITION_P99_BOUND`` of the unmitigated
+      row. Both are no-ops when the report carries no E14 cells.
+
+    Returns failure messages; empty when the invariants hold or the
+    relevant cells are absent.
     """
+    return check_e12_invariant(metrics) + check_e14_invariant(metrics)
+
+
+def check_e12_invariant(metrics: dict) -> list:
     # e12 keys look like e12/<kernel>/<scheme>/<grid>
     cells: dict = {}
     for key, row in metrics.items():
@@ -195,6 +224,44 @@ def check_invariants(metrics: dict) -> list:
         "E12 invariant violated: no (kernel, grid) cell has a compressed scheme "
         "beating `none` on both fill_cycles and dram_bytes"
     ]
+
+
+def check_e14_invariant(metrics: dict) -> list:
+    # e14 keys look like e14/<kernel>/<scheme>/<mitigation>
+    cells: dict = {}
+    for key, row in metrics.items():
+        parts = key.split("/")
+        if len(parts) != 4 or parts[0] != "e14":
+            continue
+        _, kernel, scheme, mitigation = parts
+        cells.setdefault((kernel, scheme), {})[mitigation] = row
+    failures = []
+    for (kernel, scheme), mits in sorted(cells.items()):
+        base = mits.get("none")
+        part = mits.get("partition")
+        if base is None or part is None:
+            continue
+        cell = f"e14/{kernel}/{scheme}"
+        if base["leak_rate"] <= 0.0:
+            continue  # no channel to close (e.g. uncompressed scheme)
+        before = len(failures)
+        if part["leak_rate"] * 10.0 > base["leak_rate"]:
+            failures.append(
+                f"{cell}: partitioning leaves {part['leak_rate']:.1f} b/1k "
+                f"vs {base['leak_rate']:.1f} unmitigated (< 10x reduction)"
+            )
+        if base["p99_cycles"] > 0 and part["p99_cycles"] > base["p99_cycles"] * PARTITION_P99_BOUND:
+            failures.append(
+                f"{cell}: partitioning p99 {part['p99_cycles']:.0f} exceeds "
+                f"{PARTITION_P99_BOUND:.1f}x the unmitigated {base['p99_cycles']:.0f}"
+            )
+        if len(failures) == before:
+            print(
+                f"invariant ok: {cell} partition leak {part['leak_rate']:.1f} "
+                f"(was {base['leak_rate']:.1f}) at p99 {part['p99_cycles']:.0f} "
+                f"vs {base['p99_cycles']:.0f}"
+            )
+    return failures
 
 
 def compare(baseline: dict, current_metrics: dict, max_regress: float) -> list:
