@@ -258,6 +258,71 @@ def test_e14_extraction_and_partition_invariant():
     assert any("p99_cycles" in f for f in bench_trend.compare(base, worse, 0.20))
 
 
+def e15_report(shard_none=100000, shard_bdi=80000, met_none=False, met_bdi=True, p99_bdi=5000):
+    """An E15 fleet sweep: one kernel, two schemes, one fleet size. Both
+    scheme cells saw identical traffic/failures/SLO by construction."""
+
+    def row(scheme, shard_cycles, met, p99):
+        return {
+            "workload": "sobel",
+            "scheme": scheme,
+            "pools": 2,
+            "requests": 600,
+            "responses": 598,
+            "rejected": 2,
+            "reroutes": 3,
+            "scale_ups": 2,
+            "scale_downs": 1,
+            "shard_cycles": shard_cycles,
+            "p99_cycles": p99,
+            "slo_cycles": 6000,
+            "met_slo": met,
+            "cost_per_qps": shard_cycles / 598.0,
+        }
+
+    return {
+        "schema_version": 1,
+        "config": {"seed": 42},
+        "experiments": {
+            "e15": [
+                {
+                    "label": "e15/sobel/none",
+                    "rows": [row("none", shard_none, met_none, 7000)],
+                },
+                {
+                    "label": "e15/sobel/bdi",
+                    "rows": [row("bdi", shard_bdi, met_bdi, p99_bdi)],
+                },
+            ]
+        },
+    }
+
+
+def test_e15_extraction_and_capacity_invariant():
+    metrics = bench_trend.extract_metrics(e15_report())
+    assert metrics["e15/sobel/bdi/x2"]["shard_cycles"] == 80000
+    assert metrics["e15/sobel/bdi/x2"]["reroutes"] == 3
+    assert metrics["e15/sobel/none/x2"]["met_slo"] is False
+    # the shipped fixture satisfies the capacity invariant: bdi meets the
+    # SLO with strictly fewer provisioned shard-cycles than none
+    assert bench_trend.check_invariants(metrics) == []
+    # compressed missing the SLO -> no capacity win -> invariant failure
+    missed = bench_trend.extract_metrics(e15_report(met_bdi=False))
+    failures = bench_trend.check_invariants(missed)
+    assert len(failures) == 1 and "E15 invariant" in failures[0]
+    # meeting the SLO while burning >= the shard-cycles of none fails too
+    pricey = bench_trend.extract_metrics(e15_report(shard_bdi=100000))
+    failures = bench_trend.check_invariants(pricey)
+    assert len(failures) == 1 and "shard-cycles" in failures[0]
+    # no `none` counterpart -> nothing to enforce
+    only_bdi = {k: v for k, v in metrics.items() if "/none/" not in k}
+    assert bench_trend.check_invariants(only_bdi) == []
+    # the fleet p99 joins the hard simulated-cycle gate
+    base = bench_trend.trajectory_point(e15_report(), "base")
+    worse = bench_trend.extract_metrics(e15_report(p99_bdi=9000))
+    assert any("p99_cycles" in f for f in bench_trend.compare(base, worse, 0.20))
+
+
 def test_fill_and_grid_cycles_are_gated():
     base = bench_trend.trajectory_point(report(), "base")
     worse = bench_trend.extract_metrics(report(fill_bdi=600))  # +50%

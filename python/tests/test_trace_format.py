@@ -1,5 +1,8 @@
 """Validator for the Chrome trace-event JSON written by `snnapc serve
---trace` and `snnapc experiments --trace-dir` (the E13 per-cell traces).
+--trace` and `snnapc experiments --trace-dir` (the E13 per-cell traces
+and the E15 per-pool traces, which are exported from on-disk spill
+files via `chrome_trace_from_spill` and carry a `meta.spilled_events`
+count instead of `meta.dropped_events`).
 
 Stdlib only. Dual mode:
 
@@ -181,6 +184,22 @@ class TraceFormatTests(unittest.TestCase):
     def test_instant_without_scope_is_reported(self):
         doc = {"traceEvents": [_ev("i", "request", 1)]}
         self.assertTrue(any("scope" in p for p in validate_trace(doc)))
+
+    def test_spill_exported_trace_shape_passes(self):
+        # the E15 per-pool traces come from chrome_trace_from_spill: same
+        # event schema, plus a `meta` block with `spilled_events` and a
+        # synthesized horizon E for any span left open at the cut
+        doc = {
+            "traceEvents": [
+                _ev("B", "epoch0", 0, tid=410),
+                _ev("i", "reroute", 3, tid=400, s="t", args={"pool": 1}),
+                _ev("C", "autoscaler", 5, tid=410, args={"shards": 3}),
+                _ev("E", "epoch0", 9, tid=410),  # synthesized at the horizon
+            ],
+            "displayTimeUnit": "ms",
+            "meta": {"cycles_per_us": 1, "spilled_events": 4},
+        }
+        self.assertEqual(validate_trace(doc), [])
 
 
 if __name__ == "__main__":

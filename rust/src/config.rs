@@ -4,6 +4,13 @@
 //! File format is simple `key = value` lines with `#` comments (the
 //! vendored dependency set has no TOML parser; this subset is all the
 //! launcher needs and round-trips through `to_string`).
+//!
+//! Since PR 9 the accepted keys live in one typed registry ([`KEYS`]):
+//! each entry names the key, documents it, and carries the parse/apply
+//! function. `Config::set`, the file loader, `--set` overrides and the
+//! CLI help all resolve against that single table, and an unknown key
+//! is a hard error that lists every valid key — a typo'd override can
+//! never be silently ignored.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -60,6 +67,19 @@ pub struct Config {
     /// Nonzero: seed for randomized superblock packing in each shard's
     /// cache (`tenant.randomize = SEED`) — the noise mitigation.
     pub tenant_randomize: u64,
+    /// Pools in the E15 fleet sweep (`fleet.pools`); 0 = sweep the
+    /// default fleet sizes.
+    pub fleet_pools: usize,
+    /// Autoscaler ceiling per pool (`fleet.max_shards`).
+    pub fleet_max_shards: usize,
+    /// E15 traffic horizon in epochs (`fleet.epochs`).
+    pub fleet_epochs: usize,
+    /// Fill/warm-up cycles a pool pays on every topology rebuild
+    /// (`fleet.warmup_cycles`); 0 = auto (a quarter epoch).
+    pub fleet_warmup_cycles: u64,
+    /// Inject E15's scheduled shard-death/degrade failures
+    /// (`fleet.failures = true|false`).
+    pub fleet_failures: bool,
 }
 
 /// Is `name` a registered compression scheme? Resolved against
@@ -86,6 +106,11 @@ impl Default for Config {
             tenant_count: 1,
             tenant_partition: false,
             tenant_randomize: 0,
+            fleet_pools: 0,
+            fleet_max_shards: 6,
+            fleet_epochs: 10,
+            fleet_warmup_cycles: 0,
+            fleet_failures: true,
         }
     }
 }
@@ -116,116 +141,335 @@ fn parse_qformat(s: &str) -> Result<QFormat> {
     })
 }
 
+fn parse_flag(key: &str, v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" => Ok(true),
+        "false" | "0" => Ok(false),
+        other => bail!("{key} must be true|false (got {other:?})"),
+    }
+}
+
+/// One registered configuration key: the name `Config::set` matches,
+/// a one-line help string, and the typed parse/apply function.
+#[derive(Clone, Copy)]
+pub struct KeyDef {
+    pub name: &'static str,
+    pub help: &'static str,
+    apply: fn(&mut Config, &str) -> Result<()>,
+}
+
+/// Every key the configuration accepts, in help order — the single
+/// source of truth behind `Config::set`, config files, `--set`
+/// overrides and the CLI's key listing.
+pub static KEYS: [KeyDef; 31] = [
+    KeyDef {
+        name: "benchmark",
+        help: "benchmark to serve (manifest key)",
+        apply: |c, v| {
+            c.benchmark = v.into();
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "artifacts",
+        help: "artifact directory",
+        apply: |c, v| {
+            c.artifacts = v.into();
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "compression",
+        help: "NPU<->DRAM compression scheme (none|bdi|fpc|bdi+fpc|cpack)",
+        apply: |c, v| {
+            if !is_known_scheme(v) {
+                bail!("unknown compression {v:?}");
+            }
+            c.compression = v.into();
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "qformat",
+        help: "datapath fixed-point format (q3.4|q7.8|q15.16)",
+        apply: |c, v| {
+            c.qformat = parse_qformat(v)?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "pool.shards",
+        help: "device shards in the serving pool",
+        apply: |c, v| {
+            c.pool_shards = v.parse().context("pool.shards")?;
+            if c.pool_shards == 0 {
+                bail!("pool.shards must be positive");
+            }
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "pool.schemes",
+        help: "per-shard schemes for heterogeneous pools, cycled (bdi,none,...)",
+        apply: |c, v| {
+            // unknown names are a hard error here, at parse time —
+            // never a silent per-shard fallback at pool construction
+            let schemes: Vec<String> =
+                v.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+            if schemes.is_empty() {
+                bail!("pool.schemes needs at least one scheme");
+            }
+            for s in &schemes {
+                if !is_known_scheme(s) {
+                    bail!("unknown compression {s:?} in pool.schemes");
+                }
+            }
+            c.pool_schemes = schemes;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "pool.geometries",
+        help: "per-shard cache geometries SETSxWAYSxDEGREE, cycled",
+        apply: |c, v| {
+            let geos: Vec<(usize, usize, usize)> = v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(parse_geometry)
+                .collect::<Result<_>>()?;
+            if geos.is_empty() {
+                bail!("pool.geometries needs at least one geometry");
+            }
+            c.pool_geometries = geos;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "channel.policy",
+        help: "shared DRAM channel arbiter (fifo|rr|quota)",
+        apply: |c, v| {
+            c.channel_policy = crate::mem::channel::ArbiterPolicy::parse(v)?.name().to_string();
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "tenant.count",
+        help: "tenants sharing the serve pool (round-robin clients)",
+        apply: |c, v| {
+            c.tenant_count = v.parse().context("tenant.count")?;
+            if c.tenant_count == 0 {
+                bail!("tenant.count must be positive");
+            }
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "tenant.partition",
+        help: "way-partition shard caches across tenants (true|false)",
+        apply: |c, v| {
+            c.tenant_partition = parse_flag("tenant.partition", v)?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "tenant.randomize",
+        help: "nonzero seed enables randomized superblock packing",
+        apply: |c, v| {
+            c.tenant_randomize = v.parse().context("tenant.randomize")?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "npu.pu_count",
+        help: "processing units in the NPU",
+        apply: |c, v| {
+            c.npu.pu_count = v.parse().context("npu.pu_count")?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "npu.array_width",
+        help: "MAC lanes per processing unit",
+        apply: |c, v| {
+            c.npu.array_width = v.parse().context("npu.array_width")?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "npu.clock_mhz",
+        help: "NPU clock (MHz)",
+        apply: |c, v| {
+            c.npu.clock_mhz = v.parse().context("npu.clock_mhz")?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "npu.sync_cycles",
+        help: "CPU<->NPU synchronization cost per batch (cycles)",
+        apply: |c, v| {
+            c.npu.sync_cycles = v.parse().context("npu.sync_cycles")?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "npu.overlap",
+        help: "overlap memory traffic with compute (true|false)",
+        apply: |c, v| {
+            c.npu.overlap = v.parse().context("npu.overlap")?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "npu.model",
+        help: "timing model (schedule|grid)",
+        apply: |c, v| {
+            c.npu.model = crate::systolic::TimingModel::parse(v)?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "npu.grid_rows",
+        help: "PE grid rows (grid model)",
+        apply: |c, v| {
+            c.npu.grid.rows = v.parse().context("npu.grid_rows")?;
+            if c.npu.grid.rows == 0 {
+                bail!("npu.grid_rows must be positive");
+            }
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "npu.grid_cols",
+        help: "PE grid columns (grid model)",
+        apply: |c, v| {
+            c.npu.grid.cols = v.parse().context("npu.grid_cols")?;
+            if c.npu.grid.cols == 0 {
+                bail!("npu.grid_cols must be positive");
+            }
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "npu.decode_rate",
+        help: "edge decompressor throughput (bytes/cycle, grid model)",
+        apply: |c, v| {
+            c.npu.grid.decode_bytes_per_cycle = v.parse().context("npu.decode_rate")?;
+            if c.npu.grid.decode_bytes_per_cycle == 0 {
+                bail!("npu.decode_rate must be positive");
+            }
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "acp.bytes_per_cycle",
+        help: "ACP port width (bytes/cycle)",
+        apply: |c, v| {
+            c.npu.acp.bytes_per_cycle = v.parse().context("acp.bytes_per_cycle")?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "acp.latency_cycles",
+        help: "ACP port latency (cycles)",
+        apply: |c, v| {
+            c.npu.acp.latency_cycles = v.parse().context("acp.latency_cycles")?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "acp.clock_mhz",
+        help: "ACP clock (MHz)",
+        apply: |c, v| {
+            c.npu.acp.clock_mhz = v.parse().context("acp.clock_mhz")?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "batch.max",
+        help: "flush a batch at this many invocations",
+        apply: |c, v| {
+            c.policy.max_batch = v.parse().context("batch.max")?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "batch.wait_us",
+        help: "flush a batch this long after its first invocation (us)",
+        apply: |c, v| {
+            c.policy.max_wait = Duration::from_micros(v.parse().context("batch.wait_us")?);
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "batch.queue_cap",
+        help: "reject new work past this queue depth (backpressure)",
+        apply: |c, v| {
+            c.policy.queue_cap = v.parse().context("batch.queue_cap")?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "fleet.pools",
+        help: "pools in the E15 fleet (0 = sweep the default sizes)",
+        apply: |c, v| {
+            c.fleet_pools = v.parse().context("fleet.pools")?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "fleet.max_shards",
+        help: "autoscaler ceiling per fleet pool",
+        apply: |c, v| {
+            c.fleet_max_shards = v.parse().context("fleet.max_shards")?;
+            if c.fleet_max_shards < 2 {
+                bail!("fleet.max_shards must be at least 2 (pools start with 2 shards)");
+            }
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "fleet.epochs",
+        help: "E15 traffic horizon in epochs",
+        apply: |c, v| {
+            c.fleet_epochs = v.parse().context("fleet.epochs")?;
+            if c.fleet_epochs == 0 {
+                bail!("fleet.epochs must be positive");
+            }
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "fleet.warmup_cycles",
+        help: "warm-up cycles per pool rebuild (0 = auto, a quarter epoch)",
+        apply: |c, v| {
+            c.fleet_warmup_cycles = v.parse().context("fleet.warmup_cycles")?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "fleet.failures",
+        help: "inject E15's scheduled shard failures (true|false)",
+        apply: |c, v| {
+            c.fleet_failures = parse_flag("fleet.failures", v)?;
+            Ok(())
+        },
+    },
+];
+
 impl Config {
-    /// Apply one `key = value` assignment.
+    /// Apply one `key = value` assignment by registry lookup. An
+    /// unknown key is a hard error that lists every valid key.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let key = key.trim();
         let v = value.trim();
-        match key.trim() {
-            "benchmark" => self.benchmark = v.into(),
-            "artifacts" => self.artifacts = v.into(),
-            "compression" => {
-                if !is_known_scheme(v) {
-                    bail!("unknown compression {v:?}");
-                }
-                self.compression = v.into();
+        match KEYS.iter().find(|k| k.name == key) {
+            Some(k) => (k.apply)(self, v),
+            None => {
+                let names: Vec<&str> = KEYS.iter().map(|k| k.name).collect();
+                bail!("unknown config key {key:?} (valid keys: {})", names.join(", "));
             }
-            "pool.shards" => {
-                self.pool_shards = v.parse().context("pool.shards")?;
-                if self.pool_shards == 0 {
-                    bail!("pool.shards must be positive");
-                }
-            }
-            "pool.schemes" => {
-                // unknown names are a hard error here, at parse time —
-                // never a silent per-shard fallback at pool construction
-                let schemes: Vec<String> = v
-                    .split(',')
-                    .map(str::trim)
-                    .filter(|s| !s.is_empty())
-                    .map(String::from)
-                    .collect();
-                if schemes.is_empty() {
-                    bail!("pool.schemes needs at least one scheme");
-                }
-                for s in &schemes {
-                    if !is_known_scheme(s) {
-                        bail!("unknown compression {s:?} in pool.schemes");
-                    }
-                }
-                self.pool_schemes = schemes;
-            }
-            "pool.geometries" => {
-                let geos: Vec<(usize, usize, usize)> = v
-                    .split(',')
-                    .map(str::trim)
-                    .filter(|s| !s.is_empty())
-                    .map(parse_geometry)
-                    .collect::<Result<_>>()?;
-                if geos.is_empty() {
-                    bail!("pool.geometries needs at least one geometry");
-                }
-                self.pool_geometries = geos;
-            }
-            "channel.policy" => {
-                self.channel_policy =
-                    crate::mem::channel::ArbiterPolicy::parse(v)?.name().to_string();
-            }
-            "tenant.count" => {
-                self.tenant_count = v.parse().context("tenant.count")?;
-                if self.tenant_count == 0 {
-                    bail!("tenant.count must be positive");
-                }
-            }
-            "tenant.partition" => {
-                self.tenant_partition = match v {
-                    "true" | "1" => true,
-                    "false" | "0" => false,
-                    other => bail!("tenant.partition must be true|false (got {other:?})"),
-                }
-            }
-            "tenant.randomize" => {
-                self.tenant_randomize = v.parse().context("tenant.randomize")?
-            }
-            "qformat" => self.qformat = parse_qformat(v)?,
-            "npu.pu_count" => self.npu.pu_count = v.parse().context("npu.pu_count")?,
-            "npu.array_width" => self.npu.array_width = v.parse().context("npu.array_width")?,
-            "npu.clock_mhz" => self.npu.clock_mhz = v.parse().context("npu.clock_mhz")?,
-            "npu.sync_cycles" => self.npu.sync_cycles = v.parse().context("npu.sync_cycles")?,
-            "npu.overlap" => self.npu.overlap = v.parse().context("npu.overlap")?,
-            "npu.model" => self.npu.model = crate::systolic::TimingModel::parse(v)?,
-            "npu.grid_rows" => {
-                self.npu.grid.rows = v.parse().context("npu.grid_rows")?;
-                if self.npu.grid.rows == 0 {
-                    bail!("npu.grid_rows must be positive");
-                }
-            }
-            "npu.grid_cols" => {
-                self.npu.grid.cols = v.parse().context("npu.grid_cols")?;
-                if self.npu.grid.cols == 0 {
-                    bail!("npu.grid_cols must be positive");
-                }
-            }
-            "npu.decode_rate" => {
-                self.npu.grid.decode_bytes_per_cycle = v.parse().context("npu.decode_rate")?;
-                if self.npu.grid.decode_bytes_per_cycle == 0 {
-                    bail!("npu.decode_rate must be positive");
-                }
-            }
-            "acp.bytes_per_cycle" => {
-                self.npu.acp.bytes_per_cycle = v.parse().context("acp.bytes_per_cycle")?
-            }
-            "acp.latency_cycles" => {
-                self.npu.acp.latency_cycles = v.parse().context("acp.latency_cycles")?
-            }
-            "acp.clock_mhz" => self.npu.acp.clock_mhz = v.parse().context("acp.clock_mhz")?,
-            "batch.max" => self.policy.max_batch = v.parse().context("batch.max")?,
-            "batch.wait_us" => {
-                self.policy.max_wait = Duration::from_micros(v.parse().context("batch.wait_us")?)
-            }
-            "batch.queue_cap" => self.policy.queue_cap = v.parse().context("batch.queue_cap")?,
-            other => bail!("unknown config key {other:?}"),
         }
-        Ok(())
     }
 
     /// Parse a config file (`key = value`, `#` comments, blank lines).
@@ -330,6 +574,11 @@ impl Config {
         out.push_str(&format!("tenant.count = {}\n", self.tenant_count));
         out.push_str(&format!("tenant.partition = {}\n", self.tenant_partition));
         out.push_str(&format!("tenant.randomize = {}\n", self.tenant_randomize));
+        out.push_str(&format!("fleet.pools = {}\n", self.fleet_pools));
+        out.push_str(&format!("fleet.max_shards = {}\n", self.fleet_max_shards));
+        out.push_str(&format!("fleet.epochs = {}\n", self.fleet_epochs));
+        out.push_str(&format!("fleet.warmup_cycles = {}\n", self.fleet_warmup_cycles));
+        out.push_str(&format!("fleet.failures = {}\n", self.fleet_failures));
         out
     }
 
@@ -393,6 +642,60 @@ mod tests {
         assert!(cfg.set("tenant.count", "0").is_err());
         assert!(cfg.set("tenant.partition", "maybe").is_err());
         assert!(cfg.set("tenant.randomize", "banana").is_err());
+        assert!(cfg.set("fleet.epochs", "0").is_err());
+        assert!(cfg.set("fleet.max_shards", "1").is_err());
+        assert!(cfg.set("fleet.failures", "maybe").is_err());
+    }
+
+    #[test]
+    fn unknown_key_error_lists_the_registry() {
+        // the PR-9 typo guard: a misspelled `--set` must fail loudly AND
+        // tell the operator what the valid keys are
+        let mut cfg = Config::default();
+        let err = cfg.set("fleet.poools", "2").unwrap_err().to_string();
+        assert!(err.contains("unknown config key"), "{err}");
+        assert!(err.contains("\"fleet.poools\""), "{err}");
+        for k in &KEYS {
+            assert!(err.contains(k.name), "error must list {:?}: {err}", k.name);
+        }
+        // registry sanity: names unique, every entry documented
+        let mut names: Vec<&str> = KEYS.iter().map(|k| k.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), KEYS.len(), "registry names must be unique");
+        assert!(KEYS.iter().all(|k| !k.help.is_empty()));
+    }
+
+    #[test]
+    fn fleet_keys_apply_and_roundtrip() {
+        let mut cfg = Config::default();
+        assert_eq!(
+            (cfg.fleet_pools, cfg.fleet_max_shards, cfg.fleet_epochs),
+            (0, 6, 10),
+            "0 pools = sweep the default fleet sizes"
+        );
+        assert_eq!((cfg.fleet_warmup_cycles, cfg.fleet_failures), (0, true));
+        cfg.apply_overrides(&[
+            "fleet.pools=4".into(),
+            "fleet.max_shards=8".into(),
+            "fleet.epochs=6".into(),
+            "fleet.warmup_cycles=500".into(),
+            "fleet.failures=false".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.fleet_pools, 4);
+        assert_eq!(cfg.fleet_max_shards, 8);
+        assert_eq!(cfg.fleet_epochs, 6);
+        assert_eq!(cfg.fleet_warmup_cycles, 500);
+        assert!(!cfg.fleet_failures);
+        let text = cfg.to_string_pretty();
+        let dir = std::env::temp_dir().join("snnapc_cfg_test7");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.conf");
+        std::fs::write(&p, &text).unwrap();
+        let mut cfg2 = Config::default();
+        cfg2.load_file(&p).unwrap();
+        assert_eq!(cfg, cfg2);
     }
 
     #[test]

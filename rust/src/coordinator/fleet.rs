@@ -1,0 +1,608 @@
+//! Fleet-scale serving: a deterministic virtual-time simulator
+//! composing a front-end router over many [`PoolSim`] pools (PR 9).
+//!
+//! One pool is what E10/E11 model — N device shards behind a batcher,
+//! possibly contending on one shared DRAM channel. A *fleet* is the
+//! datacenter view: many such pools behind a router, driven by
+//! open-loop traffic classes, with an autoscaler adjusting each pool's
+//! shard count against its backlog and failures (shard death, degraded
+//! -slow shards) injected mid-flight. The paper's capacity/bandwidth
+//! headroom claim should cash out here as *fewer provisioned
+//! shard-cycles at the same p99 SLO* for compressed schemes — E15
+//! (`experiments::e15_fleet`) measures exactly that.
+//!
+//! Mechanics, all deterministic (no wall clock, no RNG inside the
+//! fleet — traffic randomness lives in the caller's request stream):
+//!
+//! * **Epochs.** Virtual time is cut into fixed `epoch_cycles` windows.
+//!   Per epoch the router assigns that window's arrivals (plus retries
+//!   from failures) to pools, every pool's `PoolSim` drains its slice
+//!   in absolute fleet cycles (shard `free_at` state persists across
+//!   epochs — one persistent sim per pool), and then failures and the
+//!   autoscaler act on the epoch boundary.
+//! * **Routing.** Least-estimated-backlog: each request goes to the
+//!   pool minimizing `backlog + assigned × route_cost / shards`, ties
+//!   to the lowest pool id. `route_cost` is a scheme-independent
+//!   per-request cycle estimate, so routing never leaks scheme
+//!   differences into arrival order.
+//! * **Topology changes** (autoscale, death, degrade) rebuild that
+//!   pool's `PoolSim` through the caller-supplied [`PoolTopology`] →
+//!   `PoolSim` factory. A rebuild forfeits warm state: the pool
+//!   re-opens at `ready_at = epoch_end + carried_backlog +
+//!   warmup_cycles` (the fill/warm-up price of provisioning), and
+//!   later arrivals are clamped to `ready_at` on submission while
+//!   fleet latency is always charged from the *original* arrival.
+//! * **Failure injection.** A scheduled `Death` kills the pool's
+//!   highest shard at the epoch's midpoint: completions it produced
+//!   after that instant are voided and rerouted next epoch (up to
+//!   `max_retries`, then rejected — never silently dropped); the pool
+//!   rebuilds one shard smaller. A `Degrade` marks shard 0 slow from
+//!   that epoch on (the factory prices it, e.g. via an inflated sync
+//!   cost), and least-loaded placement inside the pool routes around
+//!   it.
+//! * **Conservation.** `requests == responses + rejected` is enforced
+//!   at the end of every run.
+//!
+//! Accounting: `shard_cycles` integrates provisioned capacity —
+//! Σ (live shards × epoch_cycles) over the run plus each pool's drain
+//! tail past the horizon — so over-provisioning is visible even when
+//! every scheme eventually serves all traffic. `cost_per_qps` in E15
+//! is this integral divided by responses.
+
+use anyhow::{ensure, Result};
+
+use crate::obs::{track, Tracer};
+
+use super::pool::{PoolSim, SimRequest};
+
+/// What breaks, and how.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// The pool's highest-index shard dies at the epoch midpoint;
+    /// completions after the death instant are voided and rerouted.
+    Death,
+    /// Shard 0 of the pool turns degraded-slow from this epoch on.
+    Degrade,
+}
+
+/// One scheduled failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Failure {
+    pub epoch: usize,
+    pub pool: usize,
+    pub kind: FailureKind,
+}
+
+/// One request entering the fleet's front end. `class` is the traffic
+/// class (steady/diurnal/bursty aggregate) it came from; it rides the
+/// pool's tenant tag as pure metadata.
+#[derive(Debug, Clone)]
+pub struct FleetRequest {
+    pub arrival: u64,
+    pub input: Vec<f32>,
+    pub class: u32,
+}
+
+/// The shape one pool should be (re)built to — what the fleet hands
+/// the caller's factory. Keeping construction in a factory closure
+/// keeps this module free of scheme/hierarchy knowledge (experiments
+/// own that via `StackSpec`).
+#[derive(Debug, Clone)]
+pub struct PoolTopology {
+    pub pool: usize,
+    pub shards: usize,
+    /// Per-shard degraded-slow flags, `len() == shards`.
+    pub degraded: Vec<bool>,
+}
+
+/// Fleet-wide configuration.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub pools: usize,
+    /// Shards each pool starts with.
+    pub start_shards: usize,
+    /// Autoscaler ceiling per pool.
+    pub max_shards: usize,
+    /// Traffic horizon in epochs; the run extends past it only to
+    /// drain retries.
+    pub epochs: usize,
+    pub epoch_cycles: u64,
+    /// Fill/warm-up cost a pool pays on every topology rebuild.
+    pub warmup_cycles: u64,
+    /// Reroute attempts before a failed request is rejected.
+    pub max_retries: u32,
+    /// Scheme-independent per-request cycle estimate the router uses
+    /// to balance same-epoch assignments.
+    pub route_cost: u64,
+    pub failures: Vec<Failure>,
+}
+
+/// Outcome of one [`FleetSim::run`].
+#[derive(Debug)]
+pub struct FleetReport {
+    pub requests: u64,
+    pub responses: u64,
+    pub rejected: u64,
+    /// Voided completions that were retried (a request can reroute more
+    /// than once).
+    pub reroutes: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Provisioned capacity integral (shards × cycles, incl. drain).
+    pub shard_cycles: u64,
+    /// Cycle the last pool went idle.
+    pub makespan: u64,
+    /// Per-response latency from *original* arrival, sorted ascending.
+    pub latencies: Vec<u64>,
+    /// Shard count per pool at the end of the run.
+    pub final_shards: Vec<usize>,
+}
+
+/// One request in flight at the fleet level.
+#[derive(Debug, Clone)]
+struct Pending {
+    input: Vec<f32>,
+    class: u32,
+    /// First arrival at the front end — latency is charged from here.
+    orig_arrival: u64,
+    /// Current submission cycle (later than `orig_arrival` for retries).
+    arrival: u64,
+    retries: u32,
+}
+
+struct PoolState {
+    sim: PoolSim,
+    shards: usize,
+    degraded: Vec<bool>,
+    /// Cycle this pool's last known work completes (router's backlog
+    /// estimate and the autoscaler's signal).
+    busy_until: u64,
+    /// Pool accepts work from this cycle (rebuild warm-up gate).
+    ready_at: u64,
+}
+
+/// The fleet simulator. `factory` builds a `PoolSim` for a requested
+/// topology; it is re-invoked on every autoscale/failure rebuild.
+pub struct FleetSim<F: FnMut(&PoolTopology) -> Result<PoolSim>> {
+    spec: FleetSpec,
+    factory: F,
+    /// Per-pool tracers (empty = tracing off). Re-attached on every
+    /// rebuild, so one pool's events stay on one ring/spill across
+    /// topology changes.
+    tracers: Vec<Tracer>,
+}
+
+impl<F: FnMut(&PoolTopology) -> Result<PoolSim>> FleetSim<F> {
+    pub fn new(spec: FleetSpec, factory: F) -> Result<FleetSim<F>> {
+        ensure!(spec.pools > 0, "fleet needs at least one pool");
+        ensure!(spec.start_shards > 0, "pools need at least one shard");
+        ensure!(spec.max_shards >= spec.start_shards, "max_shards below start_shards");
+        ensure!(spec.epochs > 0 && spec.epoch_cycles > 0, "fleet needs a traffic horizon");
+        Ok(FleetSim { spec, factory, tracers: Vec::new() })
+    }
+
+    /// Attach one tracer per pool (pool events, including the fleet
+    /// router/autoscaler tracks, land on that pool's tracer — with
+    /// spill tracers that means one file per pool, no track collisions).
+    pub fn with_tracers(mut self, tracers: Vec<Tracer>) -> Result<Self> {
+        ensure!(tracers.len() == self.spec.pools, "one tracer per pool");
+        self.tracers = tracers;
+        Ok(self)
+    }
+
+    fn tracer(&self, pool: usize) -> Tracer {
+        self.tracers.get(pool).cloned().unwrap_or_default()
+    }
+
+    /// (Re)build pool `p`'s sim for its current `shards`/`degraded`,
+    /// re-opening at `epoch_end` plus carried backlog plus `warmup`.
+    fn rebuild(&mut self, states: &mut [PoolState], p: usize, epoch_end: u64, warmup: u64) -> Result<()> {
+        let st = &mut states[p];
+        let carry = st.busy_until.saturating_sub(epoch_end);
+        let topo = PoolTopology { pool: p, shards: st.shards, degraded: st.degraded.clone() };
+        let mut sim = (self.factory)(&topo)?;
+        let t = self.tracer(p);
+        if t.is_enabled() {
+            sim = sim.with_tracer(t);
+        }
+        let st = &mut states[p];
+        st.sim = sim;
+        st.ready_at = epoch_end + carry + warmup;
+        st.busy_until = st.ready_at;
+        Ok(())
+    }
+
+    /// Run the fleet over an open-loop request stream (nondecreasing
+    /// arrivals, all inside the `epochs × epoch_cycles` horizon).
+    pub fn run(mut self, requests: &[FleetRequest]) -> Result<FleetReport> {
+        ensure!(
+            requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "fleet trace must have nondecreasing arrivals"
+        );
+        let spec = self.spec.clone();
+        let horizon = spec.epochs as u64 * spec.epoch_cycles;
+        ensure!(
+            requests.last().map_or(0, |r| r.arrival) < horizon,
+            "arrivals must fall inside the {} epoch horizon",
+            spec.epochs
+        );
+
+        let mut states: Vec<PoolState> = Vec::with_capacity(spec.pools);
+        for p in 0..spec.pools {
+            let topo = PoolTopology {
+                pool: p,
+                shards: spec.start_shards,
+                degraded: vec![false; spec.start_shards],
+            };
+            let mut sim = (self.factory)(&topo)?;
+            let t = self.tracer(p);
+            if t.is_enabled() {
+                sim = sim.with_tracer(t);
+            }
+            states.push(PoolState {
+                sim,
+                shards: spec.start_shards,
+                degraded: vec![false; spec.start_shards],
+                busy_until: 0,
+                ready_at: 0,
+            });
+        }
+
+        let mut next_req = 0usize;
+        let mut retry: Vec<Pending> = Vec::new();
+        let mut responses = 0u64;
+        let mut rejected = 0u64;
+        let mut reroutes = 0u64;
+        let mut scale_ups = 0u64;
+        let mut scale_downs = 0u64;
+        let mut shard_cycles = 0u64;
+        let mut latencies: Vec<u64> = Vec::new();
+
+        // The traffic horizon plus enough slack to drain every retry
+        // chain (each epoch retries land in the next one).
+        let epoch_cap = spec.epochs + spec.max_retries as usize + 2;
+        let mut epoch = 0usize;
+        while epoch < spec.epochs || !retry.is_empty() || next_req < requests.len() {
+            ensure!(epoch < epoch_cap, "fleet failed to drain retries in {epoch_cap} epochs");
+            let epoch_start = epoch as u64 * spec.epoch_cycles;
+            let epoch_end = epoch_start + spec.epoch_cycles;
+
+            // Degrades take effect before the epoch runs.
+            for f in spec.failures.clone() {
+                if f.epoch == epoch && f.kind == FailureKind::Degrade {
+                    ensure!(f.pool < spec.pools, "failure targets pool {} of {}", f.pool, spec.pools);
+                    states[f.pool].degraded[0] = true;
+                    // no warm-up: the shard slows down, nothing restarts
+                    self.rebuild(&mut states, f.pool, epoch_start, 0)?;
+                }
+            }
+
+            // Provisioned capacity for this epoch, at pre-epoch counts.
+            for st in &states {
+                shard_cycles += st.shards as u64 * spec.epoch_cycles;
+            }
+
+            // Collect this epoch's work: retries first (they re-enter
+            // at the epoch boundary), then fresh arrivals in order.
+            let mut work: Vec<Pending> = std::mem::take(&mut retry);
+            while next_req < requests.len() && requests[next_req].arrival < epoch_end {
+                let r = &requests[next_req];
+                work.push(Pending {
+                    input: r.input.clone(),
+                    class: r.class,
+                    orig_arrival: r.arrival,
+                    arrival: r.arrival,
+                    retries: 0,
+                });
+                next_req += 1;
+            }
+
+            // Route: least estimated backlog, balanced by same-epoch
+            // assignment counts, ties to the lowest pool id.
+            let mut routed: Vec<Vec<Pending>> = (0..spec.pools).map(|_| Vec::new()).collect();
+            for pend in work {
+                let mut best = 0usize;
+                let mut best_score = u64::MAX;
+                for (p, st) in states.iter().enumerate() {
+                    let backlog = st.busy_until.saturating_sub(epoch_start);
+                    let score =
+                        backlog + routed[p].len() as u64 * spec.route_cost / st.shards as u64;
+                    if score < best_score {
+                        best = p;
+                        best_score = score;
+                    }
+                }
+                routed[best].push(pend);
+            }
+
+            // Run every pool's slice in absolute fleet cycles.
+            for (p, slice) in routed.into_iter().enumerate() {
+                if slice.is_empty() {
+                    continue;
+                }
+                let st = &mut states[p];
+                // Submission clamps to the rebuild gate; latency is
+                // still charged from the original arrival.
+                let mut pairs: Vec<(u64, Pending)> =
+                    slice.into_iter().map(|q| (q.arrival.max(st.ready_at), q)).collect();
+                pairs.sort_by_key(|(sub, _)| *sub);
+                let reqs: Vec<SimRequest> = pairs
+                    .iter()
+                    .map(|(sub, q)| SimRequest {
+                        arrival: *sub,
+                        input: q.input.clone(),
+                        tenant: q.class,
+                    })
+                    .collect();
+                let report = st.sim.run(&reqs)?;
+                st.busy_until = st.busy_until.max(report.makespan);
+
+                // A death scheduled this epoch voids the dead shard's
+                // post-midpoint completions.
+                let death = spec
+                    .failures
+                    .iter()
+                    .any(|f| f.epoch == epoch && f.pool == p && f.kind == FailureKind::Death);
+                let dead_shard = st.shards - 1;
+                let death_at = epoch_start + spec.epoch_cycles / 2;
+                for c in &report.completions {
+                    let q = &pairs[c.index].1;
+                    if death && c.shard == dead_shard && c.done > death_at {
+                        let t = self.tracer(p);
+                        if q.retries < spec.max_retries {
+                            reroutes += 1;
+                            t.instant(
+                                track::FLEET_ROUTER,
+                                "reroute",
+                                death_at,
+                                vec![("pool", p as f64), ("retry", (q.retries + 1) as f64)],
+                            );
+                            retry.push(Pending {
+                                input: q.input.clone(),
+                                class: q.class,
+                                orig_arrival: q.orig_arrival,
+                                arrival: epoch_end,
+                                retries: q.retries + 1,
+                            });
+                        } else {
+                            rejected += 1;
+                            t.instant(
+                                track::FLEET_ROUTER,
+                                "reject",
+                                death_at,
+                                vec![("pool", p as f64)],
+                            );
+                        }
+                    } else {
+                        responses += 1;
+                        latencies.push(c.done - q.orig_arrival);
+                    }
+                }
+            }
+
+            // Deaths rebuild one shard smaller (warm-up paid) even on
+            // pools that saw no traffic this epoch.
+            for f in spec.failures.clone() {
+                if f.epoch == epoch && f.kind == FailureKind::Death {
+                    ensure!(f.pool < spec.pools, "failure targets pool {} of {}", f.pool, spec.pools);
+                    let st = &mut states[f.pool];
+                    st.shards = (st.shards - 1).max(1);
+                    st.degraded.truncate(st.shards);
+                    self.rebuild(&mut states, f.pool, epoch_end, spec.warmup_cycles)?;
+                }
+            }
+
+            // Autoscale on the epoch-boundary backlog.
+            for p in 0..spec.pools {
+                let backlog = states[p].busy_until.saturating_sub(epoch_end);
+                if backlog > spec.epoch_cycles / 4 && states[p].shards < spec.max_shards {
+                    states[p].shards += 1;
+                    states[p].degraded.push(false);
+                    self.rebuild(&mut states, p, epoch_end, spec.warmup_cycles)?;
+                    scale_ups += 1;
+                } else if backlog == 0 && states[p].shards > 1 {
+                    states[p].shards -= 1;
+                    states[p].degraded.truncate(states[p].shards);
+                    // scaling in restarts nothing the traffic waits on
+                    self.rebuild(&mut states, p, epoch_end, 0)?;
+                    scale_downs += 1;
+                }
+                let t = self.tracer(p);
+                t.counter(
+                    track::fleet_pool(p),
+                    "autoscaler",
+                    epoch_end,
+                    vec![("shards", states[p].shards as f64)],
+                );
+            }
+
+            epoch += 1;
+        }
+
+        // Drain tails: capacity stays provisioned until the last batch
+        // lands, which is where scheme differences keep accruing cost.
+        let run_horizon = epoch as u64 * spec.epoch_cycles;
+        let mut makespan = 0u64;
+        for st in &states {
+            shard_cycles += st.shards as u64 * st.busy_until.saturating_sub(run_horizon);
+            makespan = makespan.max(st.busy_until);
+        }
+
+        let requests_in = requests.len() as u64;
+        ensure!(
+            responses + rejected == requests_in,
+            "conservation violated: {requests_in} requests != {responses} responses + {rejected} rejected"
+        );
+        latencies.sort_unstable();
+        Ok(FleetReport {
+            requests: requests_in,
+            responses,
+            rejected,
+            reroutes,
+            scale_ups,
+            scale_downs,
+            shard_cycles,
+            makespan,
+            latencies,
+            final_shards: states.iter().map(|s| s.shards).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::workload;
+    use crate::coordinator::BatchPolicy;
+    use crate::experiments::program_from_workload;
+    use crate::fixed::Q7_8;
+    use crate::npu::{NpuConfig, NpuDevice, NpuProgram};
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    /// Bare devices (no hierarchy): fleet mechanics don't need memory.
+    fn factory(program: NpuProgram) -> impl FnMut(&PoolTopology) -> Result<PoolSim> {
+        move |topo: &PoolTopology| {
+            let devices = (0..topo.shards)
+                .map(|_| NpuDevice::new(NpuConfig::default(), program.clone()))
+                .collect::<Result<Vec<_>>>()?;
+            let policy = BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(200),
+                queue_cap: 1 << 12,
+            };
+            PoolSim::new(devices, policy)
+        }
+    }
+
+    fn per_item(program: &NpuProgram) -> u64 {
+        let mut probe = NpuDevice::new(NpuConfig::default(), program.clone()).unwrap();
+        let inputs = vec![vec![0.25f32; program.input_dim()]; 4];
+        (probe.execute_batch(&inputs).unwrap().total_cycles / 4).max(1)
+    }
+
+    fn trace(program: &NpuProgram, n: usize, spread: u64, seed: u64) -> Vec<FleetRequest> {
+        let mut rng = Rng::new(seed);
+        let dim = program.input_dim();
+        (0..n)
+            .map(|i| FleetRequest {
+                arrival: i as u64 * spread / n as u64,
+                input: (0..dim).map(|_| rng.f32() - 0.5).collect(),
+                class: (i % 3) as u32,
+            })
+            .collect()
+    }
+
+    fn spec(per_item: u64, epochs: usize, failures: Vec<Failure>) -> FleetSpec {
+        FleetSpec {
+            pools: 2,
+            start_shards: 2,
+            max_shards: 4,
+            epochs,
+            epoch_cycles: per_item * 8,
+            warmup_cycles: per_item,
+            max_retries: 2,
+            route_cost: per_item,
+            failures,
+        }
+    }
+
+    #[test]
+    fn conservation_holds_and_all_latencies_are_recorded() {
+        let w = workload("sobel").unwrap();
+        let p = program_from_workload(w.as_ref(), Q7_8, 1);
+        let c = per_item(&p);
+        let s = spec(c, 4, Vec::new());
+        let reqs = trace(&p, 48, s.epoch_cycles * 4, 7);
+        let report = FleetSim::new(s, factory(p)).unwrap().run(&reqs).unwrap();
+        assert_eq!(report.requests, 48);
+        assert_eq!(report.responses + report.rejected, 48);
+        assert_eq!(report.latencies.len(), report.responses as usize);
+        assert!(report.makespan > 0);
+        assert!(report.shard_cycles > 0);
+    }
+
+    #[test]
+    fn shard_death_reroutes_without_losing_requests() {
+        let w = workload("sobel").unwrap();
+        let p = program_from_workload(w.as_ref(), Q7_8, 1);
+        let c = per_item(&p);
+        // Single pool so the flood lands on the dying shard for sure.
+        let mut s = spec(c, 4, vec![Failure { epoch: 0, pool: 0, kind: FailureKind::Death }]);
+        s.pools = 1;
+        // Everything arrives up front: 64 items over 2 shards at ~c
+        // cycles each runs far past the epoch-0 midpoint (4c).
+        let reqs = trace(&p, 64, 1, 3);
+        let report = FleetSim::new(s, factory(p)).unwrap().run(&reqs).unwrap();
+        assert_eq!(report.responses + report.rejected, 64);
+        assert!(report.reroutes > 0, "death at the midpoint must void completions");
+        assert_eq!(report.final_shards, vec![1]);
+    }
+
+    #[test]
+    fn zero_retries_turns_voided_work_into_rejects() {
+        let w = workload("sobel").unwrap();
+        let p = program_from_workload(w.as_ref(), Q7_8, 1);
+        let c = per_item(&p);
+        let mut s = spec(c, 4, vec![Failure { epoch: 0, pool: 0, kind: FailureKind::Death }]);
+        s.pools = 1;
+        s.max_retries = 0;
+        let reqs = trace(&p, 64, 1, 3);
+        let report = FleetSim::new(s, factory(p)).unwrap().run(&reqs).unwrap();
+        assert_eq!(report.reroutes, 0);
+        assert!(report.rejected > 0);
+        assert_eq!(report.responses + report.rejected, 64);
+    }
+
+    #[test]
+    fn autoscaler_grows_under_load_and_shrinks_when_idle() {
+        let w = workload("sobel").unwrap();
+        let p = program_from_workload(w.as_ref(), Q7_8, 1);
+        let c = per_item(&p);
+        let s = spec(c, 6, Vec::new());
+        // A front-loaded burst: deep backlog early, silence after.
+        let reqs = trace(&p, 96, 1, 11);
+        let report = FleetSim::new(s, factory(p)).unwrap().run(&reqs).unwrap();
+        assert!(report.scale_ups > 0, "backlog must trigger scale-up");
+        assert!(report.scale_downs > 0, "idle epochs must trigger scale-down");
+        assert_eq!(report.responses, 96);
+    }
+
+    #[test]
+    fn same_seed_runs_are_identical() {
+        let w = workload("sobel").unwrap();
+        let p = program_from_workload(w.as_ref(), Q7_8, 1);
+        let c = per_item(&p);
+        let run = || {
+            let s = spec(
+                c,
+                4,
+                vec![
+                    Failure { epoch: 1, pool: 0, kind: FailureKind::Death },
+                    Failure { epoch: 2, pool: 1, kind: FailureKind::Degrade },
+                ],
+            );
+            let reqs = trace(&p, 48, s.epoch_cycles * 3, 13);
+            FleetSim::new(s, factory(p.clone())).unwrap().run(&reqs).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.responses, b.responses);
+        assert_eq!(a.rejected, b.rejected);
+        assert_eq!(a.reroutes, b.reroutes);
+        assert_eq!(a.shard_cycles, b.shard_cycles);
+        assert_eq!(a.latencies, b.latencies);
+        assert_eq!(a.final_shards, b.final_shards);
+    }
+
+    #[test]
+    fn degrade_keeps_the_fleet_serving() {
+        let w = workload("sobel").unwrap();
+        let p = program_from_workload(w.as_ref(), Q7_8, 1);
+        let c = per_item(&p);
+        let s = spec(c, 4, vec![Failure { epoch: 0, pool: 0, kind: FailureKind::Degrade }]);
+        let reqs = trace(&p, 32, s.epoch_cycles * 3, 5);
+        let report = FleetSim::new(s, factory(p)).unwrap().run(&reqs).unwrap();
+        assert_eq!(report.responses, 32);
+        assert_eq!(report.rejected, 0);
+    }
+}

@@ -26,14 +26,21 @@
 //! [`router::pick_shard_affine`]), and [`PoolSim::run_closed`] drives
 //! the pool with closed-loop clients for the E11 SLO experiment.
 
+//! Since PR 9 a *fleet* of pools can be composed behind a front-end
+//! router: [`FleetSim`] adds epoch-based routing, an autoscaler and
+//! failure injection (shard death / degraded-slow) on top of
+//! per-pool `PoolSim`s, for the E15 fleet-scale experiment.
+
 pub mod backend;
 pub mod batcher;
+pub mod fleet;
 pub mod pool;
 pub mod router;
 pub mod server;
 
 pub use backend::{Backend, DeviceBackend, PairedBackend, PjrtBackend};
 pub use batcher::{BatchPolicy, Batcher};
+pub use fleet::{Failure, FailureKind, FleetReport, FleetRequest, FleetSim, FleetSpec, PoolTopology};
 pub use pool::{
     BackendFactory, ClientScript, NpuPool, Pending, PoolSim, SimCompletion, SimReport, SimRequest,
 };

@@ -20,14 +20,14 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::bench_suite::{all_workloads, workload, Workload};
-use crate::coordinator::{BatchPolicy, PoolSim, SimRequest};
+use crate::coordinator::{BatchPolicy, SimRequest};
 use crate::fixed::QFormat;
 use crate::npu::{NpuConfig, NpuDevice, NpuProgram};
 use crate::util::bench::Table;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::e9_cache::build_hierarchy;
+use super::stack::StackSpec;
 
 /// The shard-count sweep.
 pub const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
@@ -241,19 +241,17 @@ fn measure_trace_tenancy(
     ten: Tenancy,
 ) -> Result<E10Row> {
     anyhow::ensure!(shards > 0, "shard count must be positive");
-    let devices = (0..shards)
-        .map(|_| {
-            Ok(NpuDevice::new(npu, program.clone())?
-                .with_weight_scheme(scheme)?
-                .with_memory(Box::new(ten.apply(build_hierarchy(scheme, E10_CACHE)?))))
-        })
-        .collect::<Result<Vec<_>>>()?;
+    let stack = StackSpec::new(npu, scheme)
+        .geometry(E10_CACHE)
+        .tenancy(ten)
+        .shards(shards)
+        .build(program)?;
     let policy = BatchPolicy {
         max_batch: batch.max(1),
         max_wait: Duration::from_micros(MAX_WAIT_CYCLES), // cycles, by sim convention
         queue_cap: trace.len().max(batch.max(1)),
     };
-    let mut sim = PoolSim::new(devices, policy)?;
+    let mut sim = stack.into_pool(policy)?;
     let report = sim.run(trace)?;
 
     let mut lat: Vec<u64> = report.completions.iter().map(|c| c.done - c.arrival).collect();

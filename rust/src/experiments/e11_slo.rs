@@ -26,16 +26,16 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::bench_suite::{all_workloads, Workload};
-use crate::coordinator::{BatchPolicy, ClientScript, PoolSim};
+use crate::coordinator::{BatchPolicy, ClientScript};
 use crate::fixed::QFormat;
-use crate::mem::{lock_hub, ArbiterPolicy, ChannelConfig, ChannelHub, DramChannel, SharedChannel};
+use crate::mem::{lock_hub, ArbiterPolicy};
 use crate::npu::{NpuConfig, NpuDevice, NpuProgram};
 use crate::util::bench::Table;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::e10_serving::{percentile, Tenancy, E10_CACHE};
-use super::e9_cache::{build_hierarchy_on, dram_for};
+use super::stack::StackSpec;
 
 /// The shard sweep (smaller than E10's: every extra shard multiplies
 /// the client sweep below).
@@ -197,23 +197,19 @@ fn measure_point(
     seed: u64,
     ten: Tenancy,
 ) -> Result<(E11Point, PointDetail)> {
-    let hub = ChannelHub::shared(ChannelConfig::zc702_ddr3(), policy, shards);
-    let devices = (0..shards)
-        .map(|s| {
-            let channel = DramChannel::Shared(SharedChannel::new(hub.clone(), s));
-            let hierarchy = build_hierarchy_on(scheme, E11_CACHE, dram_for(scheme, channel)?)?;
-            Ok(NpuDevice::new(npu, program.clone())?
-                .with_weight_scheme(scheme)?
-                .with_memory(Box::new(ten.apply(hierarchy))))
-        })
-        .collect::<Result<Vec<_>>>()?;
+    let stack = StackSpec::new(npu, scheme)
+        .geometry(E11_CACHE)
+        .shared_channel(policy)
+        .tenancy(ten)
+        .shards(shards)
+        .build(program)?;
+    let hub = stack.hub.clone().expect("shared stack carries its hub");
     let batch_policy = BatchPolicy {
         max_batch: batch.max(1),
         max_wait: Duration::from_micros(MAX_WAIT_CYCLES), // cycles, by sim convention
         queue_cap: 1 << 16,
     };
-    let mut sim =
-        PoolSim::new(devices, batch_policy)?.with_channel_policy(policy);
+    let mut sim = stack.into_pool(batch_policy)?;
     let mut scripts = gen_scripts(w, clients, per_client, think_mean, seed);
     if ten.tenants > 1 {
         for (c, s) in scripts.iter_mut().enumerate() {

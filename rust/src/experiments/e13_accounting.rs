@@ -30,10 +30,10 @@ use std::time::Duration;
 use anyhow::{ensure, Context, Result};
 
 use crate::bench_suite::{all_workloads, Workload};
-use crate::coordinator::{BatchPolicy, PoolSim};
+use crate::coordinator::BatchPolicy;
 use crate::fixed::QFormat;
-use crate::mem::{ArbiterPolicy, ChannelConfig, ChannelHub, DramChannel, SharedChannel};
-use crate::npu::{NpuConfig, NpuDevice, NpuProgram};
+use crate::mem::ArbiterPolicy;
+use crate::npu::{NpuConfig, NpuProgram};
 use crate::obs::{Phase, Tracer};
 use crate::systolic::TimingModel;
 use crate::util::bench::Table;
@@ -41,7 +41,7 @@ use crate::util::json::Json;
 
 use super::e10_serving::{gen_trace_on, percentile};
 use super::e11_slo::E11_CACHE;
-use super::e9_cache::{build_hierarchy_on, dram_for};
+use super::stack::StackSpec;
 
 /// The shard sweep (E11's: contention on the shared channel grows the
 /// arbiter share as shards multiply).
@@ -134,22 +134,17 @@ pub fn measure_on(
 ) -> Result<(E13Row, Tracer)> {
     ensure!(shards > 0, "shard count must be positive");
     let npu = NpuConfig { model: TimingModel::Grid, ..npu };
-    let hub = ChannelHub::shared(ChannelConfig::zc702_ddr3(), ArbiterPolicy::Fifo, shards);
-    let devices = (0..shards)
-        .map(|s| {
-            let channel = DramChannel::Shared(SharedChannel::new(hub.clone(), s));
-            let hierarchy = build_hierarchy_on(scheme, E13_CACHE, dram_for(scheme, channel)?)?;
-            Ok(NpuDevice::new(npu, program.clone())?
-                .with_weight_scheme(scheme)?
-                .with_memory(Box::new(hierarchy)))
-        })
-        .collect::<Result<Vec<_>>>()?;
+    let stack = StackSpec::new(npu, scheme)
+        .geometry(E13_CACHE)
+        .shared_channel(ArbiterPolicy::Fifo)
+        .shards(shards)
+        .build(program)?;
     let policy = BatchPolicy {
         max_batch: batch.max(1),
         max_wait: Duration::from_micros(MAX_WAIT_CYCLES), // cycles, by sim convention
         queue_cap: 1 << 16,
     };
-    let mut sim = PoolSim::new(devices, policy)?.with_tracer(Tracer::enabled(TRACE_CAPACITY));
+    let mut sim = stack.into_pool(policy)?.with_tracer(Tracer::enabled(TRACE_CAPACITY));
     let trace = gen_trace_on(npu, w, program, n, batch.max(1), seed);
     let report = sim.run(&trace)?;
     ensure!(sim.tracer().dropped() == 0, "trace ring overflowed; accounting would be partial");

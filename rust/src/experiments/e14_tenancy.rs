@@ -35,10 +35,7 @@ use crate::bench_suite::{all_workloads, Workload};
 use crate::cache::{CacheConfig, CompressedCache};
 use crate::compress::LINE_BYTES;
 use crate::fixed::QFormat;
-use crate::mem::{
-    ArbiterPolicy, ChannelConfig, ChannelHub, CompressedDram, DramChannel, DramMode, MemoryLevel,
-    SharedChannel,
-};
+use crate::mem::{ArbiterPolicy, ChannelConfig, CompressedDram, DramMode, MemoryLevel};
 use crate::npu::{NpuConfig, NpuProgram};
 use crate::util::bench::Table;
 use crate::util::json::Json;
@@ -47,7 +44,7 @@ use crate::util::rng::Rng;
 use super::e10_serving::{measure_all_shards_tenancy, Tenancy, SHARD_COUNTS};
 use super::e11_slo::{measure_on_tenancy, slo_for_on, CLIENT_SWEEP};
 use super::e5_bandwidth::scheme_by_name;
-use super::e9_cache::dram_for;
+use super::stack::StackSpec;
 
 /// The isolation configurations swept, in report order.
 pub const MITIGATIONS: [&str; 4] = ["none", "partition", "randomize", "quota"];
@@ -163,18 +160,18 @@ fn probe_trial(
 ) -> Result<bool> {
     let policy =
         if mitigation == "quota" { ArbiterPolicy::TenantQuota } else { ArbiterPolicy::Fifo };
-    let hub = ChannelHub::shared(ChannelConfig::zc702_ddr3(), policy, 1);
-    let channel = DramChannel::Shared(SharedChannel::new(hub, 0));
-    let mut c = CompressedCache::new(
-        CacheConfig::new(1, ATTACK_WAYS, ATTACK_DEGREE),
-        scheme_by_name(scheme)?,
-        Box::new(dram_for(scheme, channel)?),
-    );
-    match mitigation {
-        "partition" => c = c.with_tenant_partition(2),
-        "randomize" => c = c.with_randomized_packing(randomize_seed),
-        _ => {}
-    }
+    let ten = Tenancy {
+        tenants: 2,
+        partition: mitigation == "partition",
+        // every caller derives a nonzero seed (RANDOMIZE_SEED_BASE + t),
+        // so gating on it matches the old unconditional apply
+        randomize_seed: if mitigation == "randomize" { randomize_seed } else { 0 },
+    };
+    let mut c = StackSpec::new(NpuConfig::default(), scheme)
+        .geometry((1, ATTACK_WAYS, ATTACK_DEGREE))
+        .shared_channel(policy)
+        .tenancy(ten)
+        .build_cache()?;
 
     // prime only the ways the attacker can actually allocate in (its
     // slice when partitioned, the whole set otherwise), with

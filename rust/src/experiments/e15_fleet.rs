@@ -1,0 +1,506 @@
+//! E15 — fleet-scale serving: does compression buy *capacity*, not
+//! just latency?
+//!
+//! E10/E11 measure one pool. This experiment composes many pools behind
+//! the [`FleetSim`](crate::coordinator::FleetSim) front-end router and
+//! drives them with open-loop traffic aggregated from three client
+//! classes (steady, a rising diurnal ramp, and a bursty class with
+//! seed-chosen ×6 spike epochs), while the autoscaler adjusts each
+//! pool's shard count against its backlog and scheduled failures (a
+//! shard death, a degraded-slow shard) force rerouting mid-flight.
+//!
+//! All scheme-independent knobs — the per-item cycle estimate, the
+//! epoch length, the router's `route_cost`, the SLO — come from a probe
+//! of the *bare* device (no memory hierarchy), so every scheme sees the
+//! **identical** request stream, routing and failure schedule; the only
+//! thing that differs across cells is how fast each pool's compressed
+//! hierarchy drains its slice. The paper's bandwidth-headroom claim
+//! then cashes out as the report's `cost_per_qps`: provisioned
+//! shard-cycles per served request, which a compressed scheme should
+//! push below `none` at the same p99 SLO (`bench_trend.py` enforces
+//! exactly that, and `requests == responses + rejected` conservation is
+//! asserted inside the fleet simulator).
+//!
+//! With `--trace-dir` every pool writes its full virtual-time trace
+//! through the tracer's disk spill (fleet sweeps outlive any ring
+//! buffer), converted to Perfetto-loadable JSON per pool.
+
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::bench_suite::{all_workloads, Workload};
+use crate::coordinator::{
+    BatchPolicy, Failure, FailureKind, FleetRequest, FleetSim, FleetSpec, PoolSim, PoolTopology,
+};
+use crate::fixed::QFormat;
+use crate::mem::ArbiterPolicy;
+use crate::npu::{NpuConfig, NpuDevice, NpuProgram};
+use crate::obs::Tracer;
+use crate::systolic::TimingModel;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::e10_serving::percentile;
+use super::e11_slo::E11_CACHE;
+use super::stack::StackSpec;
+
+/// Fleet sizes (pool counts) swept per (kernel, scheme) cell.
+pub const FLEET_SIZES: [usize; 2] = [2, 4];
+
+/// Shards every pool starts with (the autoscaler moves it from there).
+pub const START_SHARDS: usize = 2;
+
+/// Reroute attempts before a failed request is rejected.
+pub const MAX_RETRIES: u32 = 3;
+
+/// Per-shard cache geometry: E11's deliberately small SRAM, so the
+/// shared channel stays the bottleneck the schemes differentiate on.
+pub const E15_CACHE: (usize, usize, usize) = E11_CACHE;
+
+/// Batch-formation deadline in device cycles (same convention as E10/11).
+const MAX_WAIT_CYCLES: u64 = 2_000;
+
+/// Per-pool tracer ring capacity. Deliberately smaller than E13's: the
+/// point of the fleet export is the disk spill, which keeps every event
+/// regardless of ring evictions.
+const TRACE_CAPACITY: usize = 1 << 16;
+
+/// The harness/CLI knobs that shape a fleet run without touching the
+/// per-cell measurement interface (`fleet.*` config keys map here).
+#[derive(Debug, Clone)]
+pub struct FleetTuning {
+    /// Run only this fleet size instead of sweeping [`FLEET_SIZES`].
+    pub pools: Option<usize>,
+    /// Autoscaler ceiling per pool.
+    pub max_shards: usize,
+    /// Traffic horizon in epochs.
+    pub epochs: usize,
+    /// Fill/warm-up cycles paid on every pool rebuild; 0 = auto
+    /// (a quarter epoch).
+    pub warmup_cycles: u64,
+    /// Inject the scheduled shard-death/degrade failures.
+    pub failures: bool,
+}
+
+impl Default for FleetTuning {
+    fn default() -> FleetTuning {
+        FleetTuning { pools: None, max_shards: 6, epochs: 10, warmup_cycles: 0, failures: true }
+    }
+}
+
+/// One (kernel, scheme, fleet-size) cell.
+#[derive(Debug, Clone)]
+pub struct E15Row {
+    pub workload: String,
+    pub scheme: String,
+    pub pools: usize,
+    pub requests: u64,
+    pub responses: u64,
+    pub rejected: u64,
+    pub reroutes: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Provisioned capacity integral (shards × cycles, incl. drain).
+    pub shard_cycles: u64,
+    /// p99 latency from original arrival (device cycles).
+    pub p99_cycles: u64,
+    /// The scheme-independent SLO this cell was judged against.
+    pub slo_cycles: u64,
+    /// No rejects and p99 within the SLO.
+    pub met_slo: bool,
+    /// Provisioned shard-cycles per served request — the capacity cost
+    /// the compressed schemes should undercut at the same SLO.
+    pub cost_per_qps: f64,
+}
+
+impl E15Row {
+    /// Machine-readable form for the harness report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("scheme", self.scheme.clone().into()),
+            ("pools", self.pools.into()),
+            ("requests", self.requests.into()),
+            ("responses", self.responses.into()),
+            ("rejected", self.rejected.into()),
+            ("reroutes", self.reroutes.into()),
+            ("scale_ups", self.scale_ups.into()),
+            ("scale_downs", self.scale_downs.into()),
+            ("shard_cycles", self.shard_cycles.into()),
+            ("p99_cycles", self.p99_cycles.into()),
+            ("slo_cycles", self.slo_cycles.into()),
+            ("met_slo", self.met_slo.into()),
+            ("cost_per_qps", self.cost_per_qps.into()),
+        ])
+    }
+}
+
+/// Scheme-independent per-item cycle estimate: one batch on a bare
+/// device (no hierarchy), so every scheme shares the same traffic
+/// shape, routing costs and SLO.
+fn per_item_cycles(npu: NpuConfig, program: &NpuProgram, batch: usize) -> Result<u64> {
+    let mut probe = NpuDevice::new(npu, program.clone())?;
+    let inputs = vec![vec![0.25f32; program.input_dim()]; batch];
+    Ok((probe.execute_batch(&inputs)?.total_cycles / batch as u64).max(1))
+}
+
+/// Deterministic open-loop fleet trace: three client classes with
+/// exponential inter-arrival gaps, aggregated and sorted by arrival.
+/// `cap` (the fleet's nominal per-epoch capacity, `pools × chunk`)
+/// anchors the rates: steady sits at 0.55·cap, the diurnal class ramps
+/// from 0.105·cap to 1.855·cap across the horizon, and the bursty
+/// class idles at 0.10·cap except on two seed-chosen ×6 spike epochs.
+fn gen_fleet_trace(
+    program: &NpuProgram,
+    pools: usize,
+    epochs: usize,
+    epoch_cycles: u64,
+    chunk: usize,
+    seed: u64,
+) -> Vec<FleetRequest> {
+    let dim = program.input_dim();
+    let mut rng = Rng::new(seed);
+    let spikes = [rng.below(epochs as u64) as usize, rng.below(epochs as u64) as usize];
+    let cap = (pools * chunk) as f64;
+    let mut reqs: Vec<FleetRequest> = Vec::new();
+    for class in 0..3u32 {
+        let mut crng = rng.fork(class as u64 + 1);
+        for e in 0..epochs {
+            let frac = if epochs > 1 { e as f64 / (epochs - 1) as f64 } else { 0.0 };
+            let rate = match class {
+                0 => 0.55 * cap,
+                1 => 0.35 * cap * (0.3 + 5.0 * frac),
+                _ => 0.10 * cap * if spikes.contains(&e) { 6.0 } else { 1.0 },
+            };
+            let mean_gap = epoch_cycles as f64 / rate;
+            let epoch_start = e as u64 * epoch_cycles;
+            let mut t = epoch_start as f64;
+            loop {
+                t += -(1.0 - crng.f64()).ln() * mean_gap;
+                if t >= (epoch_start + epoch_cycles) as f64 {
+                    break;
+                }
+                reqs.push(FleetRequest {
+                    arrival: t as u64,
+                    input: (0..dim).map(|_| crng.f32() - 0.5).collect(),
+                    class,
+                });
+            }
+        }
+    }
+    // stable sort: within one arrival cycle, class order is the
+    // deterministic tiebreak
+    reqs.sort_by_key(|r| (r.arrival, r.class));
+    reqs
+}
+
+/// The scheduled failures: one shard death mid-horizon, one
+/// degraded-slow shard later, pools picked from the seed — identical
+/// across schemes (the schedule depends only on seed and fleet shape).
+fn failure_schedule(seed: u64, pools: usize, epochs: usize) -> Vec<Failure> {
+    let mut failures = Vec::new();
+    if epochs > 2 {
+        let pool = (seed % pools as u64) as usize;
+        failures.push(Failure { epoch: 2, pool, kind: FailureKind::Death });
+    }
+    if epochs > 4 {
+        let pool = ((seed >> 3) % pools as u64) as usize;
+        failures.push(Failure { epoch: 4, pool, kind: FailureKind::Degrade });
+    }
+    failures
+}
+
+/// One cell: build the fleet over `StackSpec` pools, run the aggregate
+/// trace, and fold the fleet report into a row. With a `trace_dir`,
+/// every pool records through a disk-spill tracer and exports
+/// `{dir}/e15_{workload}_{scheme}_{pools}pools_pool{j}.trace.json`.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_on(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    pools: usize,
+    n: usize,
+    batch: usize,
+    seed: u64,
+    trace_dir: Option<&str>,
+    tuning: &FleetTuning,
+) -> Result<E15Row> {
+    ensure!(pools > 0, "fleet needs at least one pool");
+    // the grid model keeps the weight-fill (what warm-up prices) explicit
+    let npu = NpuConfig { model: TimingModel::Grid, ..npu };
+    let batch = batch.max(1);
+    let per_item = per_item_cycles(npu, program, batch)?;
+    // epoch sized to a fixed per-pool work chunk so harness-scale and
+    // smoke runs shape the same way
+    let chunk = n.clamp(8, 64);
+    let epoch_cycles = per_item * chunk as u64;
+    let warmup =
+        if tuning.warmup_cycles == 0 { epoch_cycles / 4 } else { tuning.warmup_cycles };
+    let slo_cycles = 8 * per_item * batch as u64 + 2 * epoch_cycles;
+    // a degraded shard pays half a batch's compute again at every sync
+    let degrade_sync = (per_item * batch as u64) / 2;
+
+    let spec = FleetSpec {
+        pools,
+        start_shards: START_SHARDS,
+        max_shards: tuning.max_shards,
+        epochs: tuning.epochs,
+        epoch_cycles,
+        warmup_cycles: warmup,
+        max_retries: MAX_RETRIES,
+        route_cost: per_item,
+        failures: if tuning.failures {
+            failure_schedule(seed, pools, tuning.epochs)
+        } else {
+            Vec::new()
+        },
+    };
+    let trace = gen_fleet_trace(program, pools, tuning.epochs, epoch_cycles, chunk, seed);
+
+    let base =
+        StackSpec::new(npu, scheme).geometry(E15_CACHE).shared_channel(ArbiterPolicy::Fifo);
+    let policy = BatchPolicy {
+        max_batch: batch,
+        max_wait: Duration::from_micros(MAX_WAIT_CYCLES), // cycles, by sim convention
+        queue_cap: 1 << 16,
+    };
+    let factory = |topo: &PoolTopology| -> Result<PoolSim> {
+        let mut stack = base.clone().shards(topo.shards);
+        for (s, degraded) in topo.degraded.iter().enumerate() {
+            if *degraded {
+                stack = stack.slow_shard(s, degrade_sync);
+            }
+        }
+        stack.build(program)?.into_pool(policy)
+    };
+
+    // One spill tracer per pool: the fleet pins each pool's events
+    // (including its router/autoscaler instants) to its own file.
+    let mut spills: Vec<(Tracer, std::path::PathBuf)> = Vec::new();
+    if let Some(dir) = trace_dir {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating trace dir {dir:?}"))?;
+        for j in 0..pools {
+            let stem = format!("e15_{}_{}_{}pools_pool{}", w.name(), scheme, pools, j);
+            let path = std::path::Path::new(dir).join(format!("{stem}.spill"));
+            spills.push((Tracer::enabled_spill(TRACE_CAPACITY, &path)?, path));
+        }
+    }
+
+    let mut fleet = FleetSim::new(spec, factory)?;
+    if !spills.is_empty() {
+        fleet = fleet.with_tracers(spills.iter().map(|(t, _)| t.clone()).collect())?;
+    }
+    let report = fleet.run(&trace)?;
+
+    for (tracer, spill_path) in &spills {
+        tracer.flush_spill()?;
+        let json = crate::obs::chrome_trace_from_spill(spill_path)?;
+        let out = spill_path.with_extension("trace.json");
+        std::fs::write(&out, json).with_context(|| format!("writing {}", out.display()))?;
+        std::fs::remove_file(spill_path).ok();
+    }
+
+    let p99_cycles = percentile(&report.latencies, 0.99);
+    Ok(E15Row {
+        workload: w.name().to_string(),
+        scheme: scheme.to_string(),
+        pools,
+        requests: report.requests,
+        responses: report.responses,
+        rejected: report.rejected,
+        reroutes: report.reroutes,
+        scale_ups: report.scale_ups,
+        scale_downs: report.scale_downs,
+        shard_cycles: report.shard_cycles,
+        p99_cycles,
+        slo_cycles,
+        met_slo: report.rejected == 0 && p99_cycles <= slo_cycles,
+        cost_per_qps: report.shard_cycles as f64 / report.responses.max(1) as f64,
+    })
+}
+
+/// The fleet-size sweep for one (kernel, scheme) — one harness job.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_all_on(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    n: usize,
+    batch: usize,
+    seed: u64,
+    trace_dir: Option<&str>,
+    tuning: &FleetTuning,
+) -> Result<Vec<E15Row>> {
+    let sizes: Vec<usize> = match tuning.pools {
+        Some(p) => vec![p],
+        None => FLEET_SIZES.to_vec(),
+    };
+    let mut rows = Vec::with_capacity(sizes.len());
+    for pools in sizes {
+        rows.push(measure_on(npu, w, program, scheme, pools, n, batch, seed, trace_dir, tuning)?);
+    }
+    Ok(rows)
+}
+
+/// Full E15 for `run-bench`: every kernel × scheme × fleet size.
+pub fn run(
+    fmt: QFormat,
+    invocations: usize,
+    batch: usize,
+    tuning: &FleetTuning,
+) -> Result<Vec<E15Row>> {
+    run_with_traces(fmt, invocations, batch, None, tuning)
+}
+
+/// [`run`] with optional per-pool trace export.
+pub fn run_with_traces(
+    fmt: QFormat,
+    invocations: usize,
+    batch: usize,
+    trace_dir: Option<&str>,
+    tuning: &FleetTuning,
+) -> Result<Vec<E15Row>> {
+    let manifest = super::load_manifest().ok();
+    let mut rows = Vec::new();
+    for w in all_workloads() {
+        let program = match &manifest {
+            Some(m) => super::program_from_artifact(m, w.name(), fmt)
+                .unwrap_or_else(|_| super::program_from_workload(w.as_ref(), fmt, 42)),
+            None => super::program_from_workload(w.as_ref(), fmt, 42),
+        };
+        for scheme in super::e5_bandwidth::SCHEMES {
+            rows.extend(measure_all_on(
+                NpuConfig::default(),
+                w.as_ref(),
+                &program,
+                scheme,
+                invocations,
+                batch,
+                71,
+                trace_dir,
+                tuning,
+            )?);
+        }
+    }
+    Ok(rows)
+}
+
+pub fn print_table(rows: &[E15Row]) {
+    let mut t = Table::new(&[
+        "workload",
+        "scheme",
+        "pools",
+        "req",
+        "rej",
+        "reroute",
+        "up/down",
+        "p99(cyc)",
+        "slo",
+        "shard-cyc",
+        "cost/qps",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.workload.clone(),
+            r.scheme.clone(),
+            format!("{}", r.pools),
+            format!("{}", r.requests),
+            format!("{}", r.rejected),
+            format!("{}", r.reroutes),
+            format!("{}/{}", r.scale_ups, r.scale_downs),
+            format!("{}", r.p99_cycles),
+            if r.met_slo { "met".to_string() } else { "MISS".to_string() },
+            format!("{}", r.shard_cycles),
+            format!("{:.0}", r.cost_per_qps),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::workload;
+    use crate::fixed::Q7_8;
+
+    fn setup(name: &str) -> (Box<dyn Workload>, NpuProgram) {
+        let w = workload(name).unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+        (w, p)
+    }
+
+    /// A fleet small enough for unit tests: one size, short horizon,
+    /// failures on (epoch 4 death only fires when epochs > 4).
+    fn tuning() -> FleetTuning {
+        FleetTuning { pools: Some(2), max_shards: 3, epochs: 4, warmup_cycles: 0, failures: true }
+    }
+
+    #[test]
+    fn conservation_reaches_the_row() {
+        let (w, p) = setup("sobel");
+        let (npu, t) = (NpuConfig::default(), tuning());
+        let r = measure_on(npu, w.as_ref(), &p, "bdi", 2, 8, 4, 7, None, &t).unwrap();
+        assert!(r.requests > 0, "the traffic classes must generate load");
+        assert_eq!(r.responses + r.rejected, r.requests);
+        assert!(r.shard_cycles > 0);
+        assert!(r.cost_per_qps > 0.0);
+        assert!(r.slo_cycles > 0);
+    }
+
+    #[test]
+    fn rows_are_deterministic_across_runs() {
+        let (w, p) = setup("fft");
+        let npu = NpuConfig::default();
+        let t = tuning();
+        let a = measure_all_on(npu, w.as_ref(), &p, "fpc", 8, 4, 11, None, &t).unwrap();
+        let b = measure_all_on(npu, w.as_ref(), &p, "fpc", 8, 4, 11, None, &t).unwrap();
+        assert_eq!(a.len(), 1, "tuning pinned one fleet size");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_json().dump(), y.to_json().dump(), "rows must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn tuning_sweeps_fleet_sizes_by_default() {
+        let (w, p) = setup("sobel");
+        let npu = NpuConfig::default();
+        let t = FleetTuning { epochs: 3, ..FleetTuning::default() };
+        let rows = measure_all_on(npu, w.as_ref(), &p, "none", 8, 4, 5, None, &t).unwrap();
+        let pools: Vec<usize> = rows.iter().map(|r| r.pools).collect();
+        assert_eq!(pools, FLEET_SIZES.to_vec());
+    }
+
+    #[test]
+    fn trace_export_writes_one_perfetto_file_per_pool() {
+        let (w, p) = setup("sobel");
+        let dir = std::env::temp_dir().join("snnapc-e15-test-traces");
+        let dir_s = dir.to_str().unwrap().to_string();
+        let (npu, t) = (NpuConfig::default(), tuning());
+        let r = measure_on(npu, w.as_ref(), &p, "none", 2, 8, 4, 3, Some(&dir_s), &t).unwrap();
+        for j in 0..r.pools {
+            let stem = format!("e15_{}_{}_{}pools_pool{}", r.workload, r.scheme, r.pools, j);
+            let path = dir.join(format!("{stem}.trace.json"));
+            let text = std::fs::read_to_string(&path).unwrap();
+            let json = Json::parse(&text).unwrap();
+            assert!(
+                !json.get("traceEvents").unwrap().as_arr().unwrap().is_empty(),
+                "pool trace must carry events"
+            );
+            assert!(json.get("meta").unwrap().get("spilled_events").is_some());
+            assert!(!dir.join(format!("{stem}.spill")).exists(), "spill file must be cleaned up");
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn unknown_scheme_is_a_clean_error() {
+        let (w, p) = setup("sobel");
+        let (npu, t) = (NpuConfig::default(), tuning());
+        assert!(measure_on(npu, w.as_ref(), &p, "zstd", 2, 8, 4, 1, None, &t).is_err());
+    }
+}

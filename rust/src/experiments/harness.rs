@@ -1,6 +1,6 @@
 //! Unified, multi-threaded experiment harness.
 //!
-//! One registry ([`EXPERIMENTS`]) describes E1..E14; [`build_jobs`] expands
+//! One registry ([`EXPERIMENTS`]) describes E1..E15; [`build_jobs`] expands
 //! a [`HarnessConfig`] into the full sweep grid (every bench_suite kernel
 //! × every compression scheme where the experiment varies by scheme, plus
 //! the synthetic-distribution jobs); [`run`] fans the jobs out over a
@@ -28,8 +28,9 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::{
-    e10_serving, e11_slo, e12_systolic, e13_accounting, e14_tenancy, e1_compression, e2_speedup,
-    e3_energy, e4_quality, e5_bandwidth, e6_batching, e7_lcp, e8_ablation, e9_cache, selfbench,
+    e10_serving, e11_slo, e12_systolic, e13_accounting, e14_tenancy, e15_fleet, e1_compression,
+    e2_speedup, e3_energy, e4_quality, e5_bandwidth, e6_batching, e7_lcp, e8_ablation, e9_cache,
+    selfbench,
 };
 
 /// What a job measures: a bench_suite kernel or a synthetic distribution.
@@ -68,7 +69,7 @@ pub struct Scenario {
     /// their devices from (`npu.model = grid` runs the pools on the
     /// cycle-level PE grid).
     pub npu: NpuConfig,
-    /// Directory E13 writes per-cell Perfetto traces into (None = no
+    /// Directory E13/E15 write per-cell Perfetto traces into (None = no
     /// trace export; measurement rows are identical either way).
     pub trace_dir: Option<String>,
 }
@@ -76,7 +77,7 @@ pub struct Scenario {
 /// A registry entry describing one experiment.
 #[derive(Debug, Clone, Copy)]
 pub struct ExperimentSpec {
-    /// Stable id ("e1".."e14") — the CLI/CI selector and report key.
+    /// Stable id ("e1".."e15") — the CLI/CI selector and report key.
     pub id: &'static str,
     pub title: &'static str,
     /// Whether the sweep fans out one job per compression scheme.
@@ -93,7 +94,7 @@ pub struct ExperimentSpec {
 }
 
 /// All experiments, in report order.
-pub static EXPERIMENTS: [ExperimentSpec; 14] = [
+pub static EXPERIMENTS: [ExperimentSpec; 15] = [
     ExperimentSpec {
         id: "e1",
         title: "compression ratio per workload stream",
@@ -208,6 +209,16 @@ pub static EXPERIMENTS: [ExperimentSpec; 14] = [
         shared_seed_per_kernel: false,
         sweeps_channel_policies: false, // pins fifo/quota per mitigation
     },
+    ExperimentSpec {
+        id: "e15",
+        title: "fleet-scale serving: routing, autoscaling, failure injection",
+        per_scheme: true, // every pool's hierarchies use the scheme
+        synthetics: false,
+        // cost-per-QPS-at-SLO is compared across schemes, so scheme
+        // cells of one kernel must see identical traffic and failures
+        shared_seed_per_kernel: true,
+        sweeps_channel_policies: false,
+    },
 ];
 
 /// The simulator self-benchmark (sim-cycles-per-wall-second on pinned
@@ -225,7 +236,7 @@ pub static SELFBENCH: ExperimentSpec = ExperimentSpec {
     sweeps_channel_policies: false,
 };
 
-/// Look an experiment up by id ("e1".."e14", or "selfbench").
+/// Look an experiment up by id ("e1".."e15", or "selfbench").
 pub fn experiment(id: &str) -> Option<&'static ExperimentSpec> {
     if id == SELFBENCH.id {
         return Some(&SELFBENCH);
@@ -233,10 +244,10 @@ pub fn experiment(id: &str) -> Option<&'static ExperimentSpec> {
     EXPERIMENTS.iter().find(|e| e.id == id)
 }
 
-/// Sweep configuration (defaults = the full e1–e14 grid).
+/// Sweep configuration (defaults = the full e1–e15 grid).
 #[derive(Debug, Clone)]
 pub struct HarnessConfig {
-    /// Experiment ids to run (subset of "e1".."e14").
+    /// Experiment ids to run (subset of "e1".."e15").
     pub experiments: Vec<String>,
     /// Kernels to sweep (subset of the bench_suite names).
     pub benchmarks: Vec<String>,
@@ -339,7 +350,7 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
     let mut jobs = Vec::new();
     for id in &cfg.experiments {
         let spec = experiment(id)
-            .with_context(|| format!("unknown experiment {id:?} (expected e1..e14 or selfbench)"))?;
+            .with_context(|| format!("unknown experiment {id:?} (expected e1..e15 or selfbench)"))?;
         let schemes: Vec<&str> = if spec.per_scheme {
             cfg.schemes.iter().map(String::as_str).collect()
         } else {
@@ -587,6 +598,22 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
             )?;
             Ok(rows.iter().map(e14_tenancy::E14Row::to_json).collect())
         }
+        ("e15", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let rows = e15_fleet::measure_all_on(
+                sc.npu,
+                w.as_ref(),
+                &p,
+                &sc.scheme,
+                sc.invocations,
+                sc.batch,
+                seed,
+                sc.trace_dir.as_deref(),
+                &e15_fleet::FleetTuning::default(),
+            )?;
+            Ok(rows.iter().map(e15_fleet::E15Row::to_json).collect())
+        }
         ("e8", Target::Bench(b)) => {
             let w = workload(b).unwrap();
             let p = program_for(b, sc.qformat, seed)?;
@@ -775,7 +802,7 @@ mod tests {
             ids,
             [
                 "e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12",
-                "e13", "e14"
+                "e13", "e14", "e15"
             ]
         );
         assert!(experiment("e5").unwrap().per_scheme);
@@ -787,7 +814,10 @@ mod tests {
         assert!(experiment("e13").unwrap().shared_seed_per_kernel);
         assert!(experiment("e14").unwrap().per_scheme);
         assert!(!experiment("e14").unwrap().sweeps_channel_policies);
-        assert!(experiment("e15").is_none());
+        assert!(experiment("e15").unwrap().per_scheme);
+        assert!(experiment("e15").unwrap().shared_seed_per_kernel);
+        assert!(!experiment("e15").unwrap().sweeps_channel_policies);
+        assert!(experiment("e16").is_none());
     }
 
     #[test]
@@ -829,6 +859,7 @@ mod tests {
         assert_eq!(count("e12"), 7 * 5, "e12 fans out per scheme");
         assert_eq!(count("e13"), 7 * 5, "e13 fans out per scheme");
         assert_eq!(count("e14"), 7 * 5, "e14 fans out per scheme");
+        assert_eq!(count("e15"), 7 * 5, "e15 fans out per scheme");
         // only e11 jobs carry the channel-policy sweep
         for j in &jobs {
             if j.experiment == "e11" {
@@ -888,7 +919,8 @@ mod tests {
         for (a, b) in jobs.iter().zip(&again) {
             assert_eq!(a.scenario.seed, b.scenario.seed, "{}", a.label);
         }
-        let shares_seed = |j: &&Job| j.experiment == "e11" || j.experiment == "e13";
+        let shares_seed =
+            |j: &&Job| j.experiment == "e11" || j.experiment == "e13" || j.experiment == "e15";
         let mut seeds: Vec<u64> =
             jobs.iter().filter(|j| !shares_seed(j)).map(|j| j.scenario.seed).collect();
         let independent = seeds.len();
@@ -896,11 +928,11 @@ mod tests {
         seeds.dedup();
         assert_eq!(seeds.len(), independent, "per-job seeds must be distinct");
 
-        // e11/e13 scheme cells share one seed per kernel (their headline
-        // metrics are compared across schemes, so every cell must replay
-        // identical programs and traffic), but kernels still draw
-        // independent streams
-        for id in ["e11", "e13"] {
+        // e11/e13/e15 scheme cells share one seed per kernel (their
+        // headline metrics are compared across schemes, so every cell
+        // must replay identical programs and traffic), but kernels
+        // still draw independent streams
+        for id in ["e11", "e13", "e15"] {
             let group: Vec<&Job> = jobs.iter().filter(|j| j.experiment == id).collect();
             assert!(!group.is_empty());
             for a in &group {

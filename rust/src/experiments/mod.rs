@@ -1,12 +1,17 @@
-//! Experiment implementations E1..E14 (see DESIGN.md §2).
+//! Experiment implementations E1..E15 (see DESIGN.md §2).
 //!
 //! Each experiment is a pure function from configuration to printable
 //! rows, so the CLI (`snnapc run-bench`), the criterion-style bench
 //! binaries (`rust/benches/e*.rs`) and the end-to-end example all share
 //! one implementation and EXPERIMENTS.md quotes a single source of truth.
 //!
+//! Serving experiments assemble their device pools through the
+//! [`stack`] builder ([`stack::StackSpec`]) rather than hand-wiring
+//! hubs and hierarchies — that builder is the extension point for new
+//! serving-shaped experiments.
+//!
 //! [`harness`] layers a registry + worker pool on top: one command runs
-//! the whole e1–e14 sweep (kernels × schemes) in parallel and emits a
+//! the whole e1–e15 sweep (kernels × schemes) in parallel and emits a
 //! single machine-readable JSON report (`snnapc experiments --all`).
 
 pub mod e1_compression;
@@ -15,6 +20,7 @@ pub mod e11_slo;
 pub mod e12_systolic;
 pub mod e13_accounting;
 pub mod e14_tenancy;
+pub mod e15_fleet;
 pub mod e2_speedup;
 pub mod e3_energy;
 pub mod e4_quality;
@@ -25,6 +31,7 @@ pub mod e8_ablation;
 pub mod e9_cache;
 pub mod harness;
 pub mod selfbench;
+pub mod stack;
 
 pub use harness::{HarnessConfig, HarnessReport};
 

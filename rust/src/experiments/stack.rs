@@ -1,0 +1,264 @@
+//! The experiment-stack builder: one typed description of a simulated
+//! serving stack (PR 9's API redesign).
+//!
+//! Before this module, every serving experiment hand-assembled its pool
+//! the same way — probe the scheme, build a `cache → LCP-DRAM`
+//! hierarchy per shard (private channel or a shared arbitrated
+//! [`ChannelHub`]), apply the tenancy mitigations, wrap an
+//! [`NpuDevice`] around each — and the copies in `e10_serving`,
+//! `e11_slo`, `e13_accounting` and `e14_tenancy` had drifted into four
+//! near-identical clones whose positional `*_on(npu, w, program,
+//! scheme, shards, n, batch, seed, …)` signatures could not grow a
+//! fleet's worth of new knobs. [`StackSpec`] is the replacement: a
+//! builder that names every choice (NPU config, scheme, cache geometry,
+//! channel wiring, tenancy, shard count, per-shard degradation) and
+//! produces a [`SimStack`] ready to drop into a
+//! [`PoolSim`](crate::coordinator::PoolSim).
+//!
+//! **Bit-identity contract:** `build` performs *exactly* the
+//! construction sequence the four experiments used to inline — hub
+//! first (when shared), then shards in index order, each as
+//! `NpuDevice::new(npu, program.clone())` → `with_weight_scheme` →
+//! `with_memory(ten.apply(hierarchy))` — so refactoring an experiment
+//! onto the builder moves no number anywhere
+//! (pinned by `rust/tests/sim_equivalence.rs`).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::cache::CompressedCache;
+use crate::coordinator::{BatchPolicy, PoolSim};
+use crate::mem::{ArbiterPolicy, ChannelConfig, ChannelHub, DramChannel, SharedChannel};
+use crate::npu::{NpuConfig, NpuDevice, NpuProgram};
+
+use super::e10_serving::{Tenancy, E10_CACHE};
+use super::e9_cache::{build_hierarchy, build_hierarchy_on, dram_for};
+
+/// How the shards' DRAM traffic reaches memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChannelMode {
+    /// Every shard owns a private channel (E10's idealization).
+    Private,
+    /// All shards' misses/writebacks serialize on one arbitrated
+    /// [`ChannelHub`] under this grant policy (E11/E13/E14's
+    /// bottleneck configuration).
+    Shared(ArbiterPolicy),
+}
+
+/// A typed description of one simulated serving stack.
+#[derive(Debug, Clone)]
+pub struct StackSpec {
+    npu: NpuConfig,
+    scheme: String,
+    geometry: (usize, usize, usize),
+    channel: ChannelMode,
+    tenancy: Tenancy,
+    shards: usize,
+    /// Per-shard `sync_cycles` overrides — the fleet simulator's
+    /// "degraded-slow shard" knob (`(shard, cycles)` pairs).
+    slow: Vec<(usize, u64)>,
+}
+
+impl StackSpec {
+    /// A single-shard private-channel stack of `scheme` at the E10
+    /// default cache geometry; chain the other builders to change it.
+    pub fn new(npu: NpuConfig, scheme: &str) -> StackSpec {
+        StackSpec {
+            npu,
+            scheme: scheme.to_string(),
+            geometry: E10_CACHE,
+            channel: ChannelMode::Private,
+            tenancy: Tenancy::SINGLE,
+            shards: 1,
+            slow: Vec::new(),
+        }
+    }
+
+    /// Per-shard cache geometry `(sets, ways, degree)`.
+    pub fn geometry(mut self, geometry: (usize, usize, usize)) -> Self {
+        self.geometry = geometry;
+        self
+    }
+
+    /// Put every shard's DRAM traffic on one shared, arbitrated channel.
+    pub fn shared_channel(mut self, policy: ArbiterPolicy) -> Self {
+        self.channel = ChannelMode::Shared(policy);
+        self
+    }
+
+    /// Multi-tenant isolation knobs applied to every shard's cache.
+    pub fn tenancy(mut self, ten: Tenancy) -> Self {
+        self.tenancy = ten;
+        self
+    }
+
+    /// Device shards in the pool.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Mark shard `s` degraded: its device pays `sync_cycles` per batch
+    /// sync instead of the pool-wide value (FleetSim's slow-shard
+    /// failure mode; least-loaded placement then routes around it).
+    pub fn slow_shard(mut self, s: usize, sync_cycles: u64) -> Self {
+        self.slow.push((s, sync_cycles));
+        self
+    }
+
+    /// The scheme this stack runs.
+    pub fn scheme(&self) -> &str {
+        &self.scheme
+    }
+
+    /// The shard count this stack builds.
+    pub fn shard_count(&self) -> usize {
+        self.shards
+    }
+
+    /// NPU configuration for shard `s` (degradation overrides applied).
+    fn npu_for(&self, s: usize) -> NpuConfig {
+        match self.slow.iter().rev().find(|(slow, _)| *slow == s) {
+            Some((_, sync)) => NpuConfig { sync_cycles: *sync, ..self.npu },
+            None => self.npu,
+        }
+    }
+
+    /// Build shard `s`'s memory hierarchy (the one construction
+    /// sequence all experiments share).
+    fn hierarchy_for(
+        &self,
+        s: usize,
+        hub: Option<&Arc<Mutex<ChannelHub>>>,
+    ) -> Result<CompressedCache> {
+        let cache = match (self.channel, hub) {
+            (ChannelMode::Private, _) => build_hierarchy(&self.scheme, self.geometry)?,
+            (ChannelMode::Shared(_), Some(hub)) => {
+                let channel = DramChannel::Shared(SharedChannel::new(hub.clone(), s));
+                build_hierarchy_on(&self.scheme, self.geometry, dram_for(&self.scheme, channel)?)?
+            }
+            (ChannelMode::Shared(_), None) => unreachable!("shared stack builds its hub first"),
+        };
+        Ok(self.tenancy.apply(cache))
+    }
+
+    /// Build the stack: the hub (when shared) and one device per shard,
+    /// in index order.
+    pub fn build(&self, program: &NpuProgram) -> Result<SimStack> {
+        anyhow::ensure!(self.shards > 0, "stack needs at least one shard");
+        let hub = match self.channel {
+            ChannelMode::Private => None,
+            ChannelMode::Shared(policy) => {
+                Some(ChannelHub::shared(ChannelConfig::zc702_ddr3(), policy, self.shards))
+            }
+        };
+        let devices = (0..self.shards)
+            .map(|s| {
+                Ok(NpuDevice::new(self.npu_for(s), program.clone())?
+                    .with_weight_scheme(&self.scheme)?
+                    .with_memory(Box::new(self.hierarchy_for(s, hub.as_ref())?)))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SimStack { devices, hub, channel: self.channel })
+    }
+
+    /// Build just the (single-shard) memory hierarchy, no device — the
+    /// seam E14's prime+probe attack drives directly.
+    pub fn build_cache(&self) -> Result<CompressedCache> {
+        anyhow::ensure!(self.shards == 1, "build_cache is single-shard by definition");
+        let hub = match self.channel {
+            ChannelMode::Private => None,
+            ChannelMode::Shared(policy) => {
+                Some(ChannelHub::shared(ChannelConfig::zc702_ddr3(), policy, 1))
+            }
+        };
+        self.hierarchy_for(0, hub.as_ref())
+    }
+}
+
+/// A built stack: the per-shard devices plus the shared hub handle (for
+/// post-run `lock_hub(...).totals()`), ready for a virtual-time pool.
+pub struct SimStack {
+    pub devices: Vec<NpuDevice>,
+    /// `Some` iff the spec used [`StackSpec::shared_channel`].
+    pub hub: Option<Arc<Mutex<ChannelHub>>>,
+    channel: ChannelMode,
+}
+
+impl SimStack {
+    /// Wrap the devices in a [`PoolSim`], carrying the shared-channel
+    /// grant policy over as the pool's same-cycle flush order (a no-op
+    /// for private stacks: the pool default is FIFO).
+    pub fn into_pool(self, policy: BatchPolicy) -> Result<PoolSim> {
+        let sim = PoolSim::new(self.devices, policy)?;
+        Ok(match self.channel {
+            ChannelMode::Shared(p) => sim.with_channel_policy(p),
+            ChannelMode::Private => sim,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::workload;
+    use crate::fixed::Q7_8;
+    use crate::mem::lock_hub;
+
+    fn setup() -> (Box<dyn crate::bench_suite::Workload>, NpuProgram) {
+        let w = workload("sobel").unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+        (w, p)
+    }
+
+    #[test]
+    fn private_stack_builds_shards_without_a_hub() {
+        let (_, p) = setup();
+        let stack =
+            StackSpec::new(NpuConfig::default(), "bdi").shards(3).build(&p).unwrap();
+        assert_eq!(stack.devices.len(), 3);
+        assert!(stack.hub.is_none());
+    }
+
+    #[test]
+    fn shared_stack_sizes_the_hub_to_the_shard_count() {
+        let (_, p) = setup();
+        let stack = StackSpec::new(NpuConfig::default(), "bdi+fpc")
+            .shared_channel(ArbiterPolicy::RoundRobin)
+            .shards(4)
+            .build(&p)
+            .unwrap();
+        assert_eq!(stack.devices.len(), 4);
+        let hub = stack.hub.as_ref().expect("shared stack carries its hub");
+        assert_eq!(lock_hub(hub).requesters(), 4);
+    }
+
+    #[test]
+    fn unknown_scheme_is_a_clean_error() {
+        let (_, p) = setup();
+        assert!(StackSpec::new(NpuConfig::default(), "zstd").build(&p).is_err());
+        assert!(StackSpec::new(NpuConfig::default(), "zstd").build_cache().is_err());
+    }
+
+    #[test]
+    fn build_cache_is_single_shard_only() {
+        assert!(StackSpec::new(NpuConfig::default(), "bdi")
+            .shards(2)
+            .build_cache()
+            .is_err());
+    }
+
+    #[test]
+    fn slow_shard_overrides_only_that_shards_sync() {
+        let (_, p) = setup();
+        let npu = NpuConfig::default();
+        let stack = StackSpec::new(npu, "none")
+            .shards(2)
+            .slow_shard(1, 9_999)
+            .build(&p)
+            .unwrap();
+        assert_eq!(stack.devices[0].cfg.sync_cycles, npu.sync_cycles);
+        assert_eq!(stack.devices[1].cfg.sync_cycles, 9_999);
+    }
+}

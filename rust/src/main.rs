@@ -4,12 +4,13 @@
 //!   info            show artifact manifest + effective config
 //!   serve           start the sharded batching pool and drive it with a
 //!                   synthetic open-loop client (requests/s, duration)
-//!   experiments     run the e1..e14 sweep in parallel and emit one
+//!   experiments     run the e1..e15 sweep in parallel and emit one
 //!                   consolidated JSON report (the harness)
-//!   run-bench       print experiment tables: e1..e14 or all (serial)
+//!   run-bench       print experiment tables: e1..e15 or all (serial)
 //!   compress-file   per-scheme compression report for any file
 //!   trace           dump + compress a benchmark's NPU streams
 //!   config          print the effective configuration (reloadable)
+//!   config-keys     list every config key with its one-line help
 //!
 //! Examples:
 //!   snnapc info
@@ -63,13 +64,16 @@ COMMANDS:
     --trace FILE            record a Perfetto/chrome-trace JSON of the run
                             (batch spans per shard, channel grant/burst
                             spans, cache/DRAM counters, registry snapshot)
-  experiments               parallel e1..e14 sweep + one JSON report
+  experiments               parallel e1..e15 sweep + one JSON report
     --all                   run every experiment (default when no
                             --experiment is given)
     --experiment LIST       subset, e.g. e1 or e1,e9,e10,e11,e14
     --only LIST             alias for --experiment
-    --trace-dir DIR         E13 also writes one Perfetto trace per cell
-                            (e13_{kernel}_{scheme}_{N}shards.trace.json)
+    --trace-dir DIR         E13/E15 also write one Perfetto trace per
+                            cell (e13_{kernel}_{scheme}_{N}shards /
+                            e15_{kernel}_{scheme}_{N}pools_pool{J}; E15
+                            spills events to disk past the ring cap, so
+                            fleet sweeps trace completely)
     --benchmarks LIST       kernels to sweep (default: all seven)
     --schemes LIST          schemes for per-scheme experiments
                             (none|bdi|fpc|bdi+fpc|cpack; default: all)
@@ -98,9 +102,16 @@ COMMANDS:
                             side channel of the shared compressed cache
                             — leak rate in bits/1k probes — and prices
                             the partition/randomize/quota mitigations
-                            with the same E10/E11 sweeps)
+                            with the same E10/E11 sweeps;
+                            e15 composes pools into a fleet behind a
+                            front-end router — bursty/diurnal open-loop
+                            traffic, queue-depth autoscaling with a
+                            warm-up cost, injected shard death/degrade
+                            — and reports p99, reroutes, shard-cycles
+                            and cost-per-QPS-at-SLO; fleet.* keys shape
+                            the run)
   run-bench                 print experiment tables (serial)
-    --experiment e1..e14|all which experiment (default all)
+    --experiment e1..e15|all which experiment (default all)
     --invocations N         stream length knob (default 256)
   selfbench                 simulator throughput self-benchmark (serial):
                             sim-cycles-per-wall-second per hot path
@@ -116,12 +127,17 @@ COMMANDS:
     --benchmark NAME        workload (default sobel)
     --out DIR               write streams as .bin files
   config                    print effective config
+  config-keys               list every config key with its help line
 GLOBAL:
   --config FILE             load key=value config file
   --set key=value           override any config key (repeatable;
                             npu.model=schedule|grid picks the timing
                             backend, npu.grid_rows/npu.grid_cols/
-                            npu.decode_rate shape the PE grid)
+                            npu.decode_rate shape the PE grid;
+                            fleet.pools/fleet.max_shards/fleet.epochs/
+                            fleet.warmup_cycles/fleet.failures shape
+                            E15; an unknown key is a hard error that
+                            lists every valid key)
 ";
 
 fn build_config(args: &Args) -> Result<Config> {
@@ -495,6 +511,17 @@ fn cmd_selfbench(cfg: &Config, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// E15 fleet knobs from the `fleet.*` config keys.
+fn fleet_tuning(cfg: &Config) -> ex::e15_fleet::FleetTuning {
+    ex::e15_fleet::FleetTuning {
+        pools: if cfg.fleet_pools == 0 { None } else { Some(cfg.fleet_pools) },
+        max_shards: cfg.fleet_max_shards,
+        epochs: cfg.fleet_epochs,
+        warmup_cycles: cfg.fleet_warmup_cycles,
+        failures: cfg.fleet_failures,
+    }
+}
+
 fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
     let which = args.opt("experiment").unwrap_or("all");
     let invocations = opt_positive(args, "invocations", 256)?;
@@ -587,6 +614,15 @@ fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
             cfg.policy.max_batch,
         )?);
     }
+    if run_all || which == "e15" {
+        println!("\n== E15: fleet-scale serving (routing, autoscaling, failure injection) ==");
+        ex::e15_fleet::print_table(&ex::e15_fleet::run(
+            cfg.qformat,
+            invocations,
+            cfg.policy.max_batch,
+            &fleet_tuning(cfg),
+        )?);
+    }
     Ok(())
 }
 
@@ -651,6 +687,12 @@ fn main() -> Result<()> {
         "trace" => cmd_trace(&cfg, &args),
         "config" => {
             print!("{}", cfg.to_string_pretty());
+            Ok(())
+        }
+        "config-keys" => {
+            for k in &snnap_c::config::KEYS {
+                println!("{:<20} {}", k.name, k.help);
+            }
             Ok(())
         }
         other => {
@@ -745,6 +787,17 @@ mod tests {
             let err = cmd_experiments(&cfg, &args(bad)).unwrap_err().to_string();
             assert!(err.contains("positive"), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn fleet_tuning_maps_the_fleet_config_keys() {
+        let mut cfg = Config::default();
+        assert_eq!(fleet_tuning(&cfg).pools, None, "0 = sweep the default fleet sizes");
+        cfg.apply_overrides(&["fleet.pools=3".into(), "fleet.failures=false".into()]).unwrap();
+        let t = fleet_tuning(&cfg);
+        assert_eq!(t.pools, Some(3));
+        assert!(!t.failures);
+        assert_eq!((t.max_shards, t.epochs, t.warmup_cycles), (6, 10, 0));
     }
 
     #[test]

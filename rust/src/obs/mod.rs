@@ -35,7 +35,7 @@ pub mod registry;
 pub mod tracer;
 
 pub use registry::{global, Registry};
-pub use tracer::{Phase, TraceEvent, Tracer};
+pub use tracer::{chrome_trace_from_spill, Phase, TraceEvent, Tracer};
 
 /// Fixed trace-track layout (`tid` in the Chrome export; `pid` is
 /// always 0). Keeping the mapping in one place means every experiment's
@@ -66,5 +66,15 @@ pub mod track {
     /// sampled once per batch at the post-batch sync).
     pub fn dram(shard: u32) -> u32 {
         300 + shard
+    }
+
+    /// Fleet-router track: routing/reroute/reject instants emitted by
+    /// the fleet simulator (one fleet, cross-pool).
+    pub const FLEET_ROUTER: u32 = 400;
+
+    /// Fleet autoscaler counter track of one pool: shard-count samples
+    /// at every epoch boundary.
+    pub fn fleet_pool(pool: usize) -> u32 {
+        410 + pool as u32
     }
 }

@@ -20,11 +20,22 @@
 //! counted, and the export sanitizes the surviving stream (unmatched
 //! `E` heads dropped, unclosed `B` spans closed at the trace horizon)
 //! so a truncated ring still round-trips the Perfetto validator.
+//!
+//! For runs whose streams outgrow any reasonable ring (the fleet
+//! simulator's E15 sweeps), [`Tracer::enabled_spill`] additionally
+//! appends every event to a disk file as it is recorded; the in-memory
+//! ring still evicts as usual, but [`chrome_trace_from_spill`] rebuilds
+//! a complete, validator-clean Chrome trace from the spill afterwards.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::fmt;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
@@ -70,6 +81,23 @@ pub struct TraceEvent {
     pub args: Vec<(&'static str, f64)>,
 }
 
+/// Append-only on-disk event stream: one line per event, written at
+/// record time (after the monotone clamp), so the file never loses
+/// events to ring eviction. Line format — sortable/repairable without a
+/// JSON parser (event names are `&'static str` literals, never tabbed):
+///
+/// ```text
+/// {cycle}\t{ph}\t{track}\t{name}\t{event_json}
+/// ```
+#[derive(Debug)]
+struct Spill {
+    writer: BufWriter<File>,
+    count: u64,
+    /// First write error, surfaced by [`Tracer::flush_spill`]; once set,
+    /// further writes are skipped.
+    error: Option<String>,
+}
+
 #[derive(Debug, Default)]
 struct Ring {
     events: VecDeque<TraceEvent>,
@@ -77,6 +105,7 @@ struct Ring {
     dropped: u64,
     /// Per-track monotonicity clamp: last emitted cycle.
     last: HashMap<u32, u64>,
+    spill: Option<Spill>,
 }
 
 impl Ring {
@@ -86,6 +115,22 @@ impl Ring {
             ev.cycle = *last;
         } else {
             *last = ev.cycle;
+        }
+        if let Some(spill) = &mut self.spill {
+            if spill.error.is_none() {
+                let line = format!(
+                    "{}\t{}\t{}\t{}\t{}\n",
+                    ev.cycle,
+                    ev.phase.ph(),
+                    ev.track,
+                    ev.name,
+                    event_json(&ev).dump()
+                );
+                match spill.writer.write_all(line.as_bytes()) {
+                    Ok(()) => spill.count += 1,
+                    Err(e) => spill.error = Some(e.to_string()),
+                }
+            }
         }
         if self.events.len() >= self.capacity {
             self.events.pop_front();
@@ -134,6 +179,24 @@ impl Tracer {
             enabled: AtomicBool::new(true),
             inner: Mutex::new(Ring { capacity: capacity.max(1), ..Ring::default() }),
         }))
+    }
+
+    /// A recording tracer that *also* appends every event to `path` as
+    /// it is recorded, so runs longer than the ring still export in
+    /// full via [`chrome_trace_from_spill`]. The ring keeps its bounded
+    /// semantics ([`Tracer::dropped`] counts ring evictions only —
+    /// spilled events are never lost).
+    pub fn enabled_spill(capacity: usize, path: &Path) -> Result<Tracer> {
+        let file = File::create(path)
+            .with_context(|| format!("creating trace spill file {}", path.display()))?;
+        Ok(Tracer(Arc::new(TracerCore {
+            enabled: AtomicBool::new(true),
+            inner: Mutex::new(Ring {
+                capacity: capacity.max(1),
+                spill: Some(Spill { writer: BufWriter::new(file), count: 0, error: None }),
+                ..Ring::default()
+            }),
+        })))
     }
 
     /// The one check every instrumentation site makes first.
@@ -189,6 +252,24 @@ impl Tracer {
     /// Events evicted by the bounded ring.
     pub fn dropped(&self) -> u64 {
         self.0.inner.lock().expect("tracer ring poisoned").dropped
+    }
+
+    /// Events written to the spill file so far (0 without a spill).
+    pub fn spilled(&self) -> u64 {
+        self.0.inner.lock().expect("tracer ring poisoned").spill.as_ref().map_or(0, |s| s.count)
+    }
+
+    /// Flush the spill file and surface any write error. Call before
+    /// [`chrome_trace_from_spill`]; a no-op for ring-only tracers.
+    pub fn flush_spill(&self) -> Result<()> {
+        let mut ring = self.0.inner.lock().expect("tracer ring poisoned");
+        if let Some(spill) = &mut ring.spill {
+            if let Some(e) = &spill.error {
+                anyhow::bail!("trace spill write failed: {e}");
+            }
+            spill.writer.flush().context("flushing trace spill file")?;
+        }
+        Ok(())
     }
 
     /// Number of currently buffered events.
@@ -275,6 +356,83 @@ impl Tracer {
             ),
         ])
     }
+}
+
+/// Rebuild a complete Chrome trace from a spill file written by
+/// [`Tracer::enabled_spill`] — the fleet-scale export path, applying
+/// the same sanitization as [`Tracer::chrome_trace`] (stable sort by
+/// cycle, unmatched `E` lines dropped, unclosed `B` spans closed at the
+/// horizon) without ever materializing the events as a JSON document
+/// first. The `meta` block reports `spilled_events` instead of
+/// `dropped_events`: a spill loses nothing to ring eviction.
+pub fn chrome_trace_from_spill(path: &Path) -> Result<String> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace spill file {}", path.display()))?;
+    // (cycle, ph, track, name, event_json) per line.
+    let mut lines: Vec<(u64, &str, u32, &str, &str)> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let mut f = line.splitn(5, '\t');
+        let parse = || format!("spill line {} is malformed: {line:?}", i + 1);
+        let cycle: u64 =
+            f.next().and_then(|s| s.parse().ok()).with_context(parse)?;
+        let ph = f.next().with_context(parse)?;
+        let track: u32 = f.next().and_then(|s| s.parse().ok()).with_context(parse)?;
+        let name = f.next().with_context(parse)?;
+        let json = f.next().with_context(parse)?;
+        lines.push((cycle, ph, track, name, json));
+    }
+    lines.sort_by_key(|l| l.0);
+    let horizon = lines.iter().map(|l| l.0).max().unwrap_or(0);
+    let spilled = lines.len();
+
+    // The same per-track span-stack repair as the in-memory export.
+    let mut stacks: BTreeMap<u32, Vec<&str>> = BTreeMap::new();
+    let mut out: Vec<&str> = Vec::with_capacity(lines.len());
+    let mut synthesized: Vec<String> = Vec::new();
+    for &(_, ph, track, name, json) in &lines {
+        match ph {
+            "B" => {
+                stacks.entry(track).or_default().push(name);
+                out.push(json);
+            }
+            "E" => {
+                let stack = stacks.entry(track).or_default();
+                match stack.last() {
+                    Some(&top) if top == name => {
+                        stack.pop();
+                        out.push(json);
+                    }
+                    _ => {} // E with no matching B: drop it
+                }
+            }
+            _ => out.push(json),
+        }
+    }
+    for (track, stack) in &stacks {
+        for name in stack.iter().rev() {
+            // Byte-identical to `event_json(...).dump()` for an E event:
+            // compact, keys in BTreeMap (alphabetical) order.
+            synthesized.push(format!(
+                "{{\"name\":\"{name}\",\"ph\":\"E\",\"pid\":0,\"tid\":{track},\"ts\":{horizon}}}"
+            ));
+        }
+    }
+
+    let mut s = String::with_capacity(text.len());
+    s.push_str("{\"displayTimeUnit\":\"ms\",\"meta\":{\"cycles_per_us\":1,\"spilled_events\":");
+    s.push_str(&spilled.to_string());
+    s.push_str("},\"traceEvents\":[");
+    for (i, e) in out.into_iter().chain(synthesized.iter().map(String::as_str)).enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(e);
+    }
+    s.push_str("]}");
+    Ok(s)
 }
 
 fn event_json(e: &TraceEvent) -> Json {
@@ -376,6 +534,64 @@ mod tests {
         let last = evs.last().unwrap();
         assert_eq!(last.get("ph").and_then(Json::as_str), Some("E"));
         assert_eq!(last.get("ts").and_then(Json::as_f64), Some(40.0));
+    }
+
+    fn spill_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("snnap_tracer_spill_{}_{tag}.log", std::process::id()))
+    }
+
+    #[test]
+    fn spill_keeps_every_event_past_the_ring_cap() {
+        let path = spill_path("cap");
+        let t = Tracer::enabled_spill(2, &path).unwrap();
+        for i in 0..4u64 {
+            t.begin(0, "batch", i * 10);
+            t.end(0, "batch", i * 10 + 5);
+        }
+        assert!(t.dropped() > 0, "ring should have evicted");
+        t.flush_spill().unwrap();
+        assert_eq!(t.spilled(), 8);
+        let trace = chrome_trace_from_spill(&path).unwrap();
+        let j = Json::parse(&trace).unwrap();
+        assert_eq!(j.get("traceEvents").and_then(Json::as_arr).unwrap().len(), 8);
+        assert_eq!(
+            j.get("meta").and_then(|m| m.get("spilled_events")).and_then(Json::as_usize),
+            Some(8)
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn spill_export_matches_the_in_memory_export() {
+        let path = spill_path("match");
+        let t = Tracer::enabled_spill(64, &path).unwrap();
+        t.begin(1, "b", 100);
+        t.begin(0, "a", 10);
+        t.counter(200, "cache", 20, vec![("hits", 2.0)]);
+        t.instant(0, "request", 30, vec![("index", 0.0), ("latency", 20.0)]);
+        t.end(0, "a", 50);
+        t.begin(0, "open", 60); // left unclosed: both exports synthesize its E
+        t.end(1, "b", 120);
+        t.flush_spill().unwrap();
+        let from_spill = Json::parse(&chrome_trace_from_spill(&path).unwrap()).unwrap();
+        let in_memory = t.chrome_trace();
+        assert_eq!(from_spill.get("traceEvents"), in_memory.get("traceEvents"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn spill_export_drops_unmatched_ends() {
+        let path = spill_path("repair");
+        let t = Tracer::enabled_spill(64, &path).unwrap();
+        t.end(0, "phantom", 5); // no matching B anywhere in the stream
+        t.begin(0, "real", 10);
+        t.end(0, "real", 20);
+        t.flush_spill().unwrap();
+        let j = Json::parse(&chrome_trace_from_spill(&path).unwrap()).unwrap();
+        let evs = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(evs.len(), 2);
+        assert!(evs.iter().all(|e| e.get("name").and_then(Json::as_str) == Some("real")));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

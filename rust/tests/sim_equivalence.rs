@@ -17,11 +17,13 @@ use snnap_c::bench_suite::workload;
 use snnap_c::coordinator::{BatchPolicy, ClientScript, PoolSim, SimReport, SimRequest};
 use snnap_c::experiments::e9_cache::{build_hierarchy, build_hierarchy_on, dram_for};
 use snnap_c::experiments::program_from_workload;
-use snnap_c::experiments::{e10_serving, e11_slo, e14_tenancy, selfbench};
+use snnap_c::experiments::stack::StackSpec;
+use snnap_c::experiments::{e10_serving, e11_slo, e14_tenancy, e15_fleet, selfbench};
 use snnap_c::fixed::Q7_8;
-use snnap_c::mem::{ArbiterPolicy, ChannelConfig, ChannelHub, DramChannel, SharedChannel};
+use snnap_c::mem::{lock_hub, ArbiterPolicy, ChannelConfig, ChannelHub, DramChannel, SharedChannel};
 use snnap_c::npu::{NpuConfig, NpuDevice, NpuProgram};
 use snnap_c::obs::{Phase, Tracer};
+use snnap_c::systolic::TimingModel;
 use snnap_c::util::prop;
 use snnap_c::util::rng::Rng;
 
@@ -436,6 +438,166 @@ fn e14_report_is_deterministic_and_partition_closes_the_leak() {
         assert_eq!(r.workload, "sobel");
         assert!(r.trials >= 32 && r.correct <= r.trials, "trial accounting");
         assert!(r.e10_throughput > 0.0, "{}: E10 pricing must run", r.mitigation);
+    }
+}
+
+/// PR-9 builder contract, half 1: `StackSpec::build` performs exactly
+/// the construction sequence E10/E14 inlined before the refactor —
+/// private per-shard hierarchies, weight scheme, tenancy mitigations —
+/// so moving those experiments onto the builder moved no number.
+#[test]
+fn stack_builder_matches_the_handwritten_private_stack() {
+    let w = workload("sobel").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 11);
+    let mut trace = e10_serving::gen_trace(w.as_ref(), &program, 48, 8, 41);
+    for (i, r) in trace.iter_mut().enumerate() {
+        r.tenant = i as u32 % 2;
+    }
+    let pol = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_cap: 1 << 16,
+    };
+    let tenancies = [
+        e10_serving::Tenancy::SINGLE,
+        e10_serving::Tenancy { tenants: 2, partition: true, randomize_seed: 5 },
+    ];
+    for scheme in ["none", "bdi+fpc"] {
+        for ten in tenancies {
+            // the pre-refactor construction, verbatim
+            let devices = (0..3)
+                .map(|_| {
+                    NpuDevice::new(NpuConfig::default(), program.clone())
+                        .unwrap()
+                        .with_weight_scheme(scheme)
+                        .unwrap()
+                        .with_memory(Box::new(
+                            ten.apply(build_hierarchy(scheme, e10_serving::E10_CACHE).unwrap()),
+                        ))
+                })
+                .collect::<Vec<_>>();
+            let by_hand = PoolSim::new(devices, pol).unwrap().run(&trace).unwrap();
+            let built = StackSpec::new(NpuConfig::default(), scheme)
+                .geometry(e10_serving::E10_CACHE)
+                .tenancy(ten)
+                .shards(3)
+                .build(&program)
+                .unwrap()
+                .into_pool(pol)
+                .unwrap()
+                .run(&trace)
+                .unwrap();
+            assert_reports_identical(
+                &built,
+                &by_hand,
+                &format!("builder vs hand {scheme} tenants={}", ten.tenants),
+            );
+        }
+    }
+}
+
+/// PR-9 builder contract, half 2: the shared-channel wiring (E11/E13's
+/// bottleneck configuration) is reproduced exactly too — hub first,
+/// shards in index order, grant policy carried into the pool — down to
+/// the hub's own transfer/busy/wait accounting, on both the schedule
+/// and cycle-level grid timing models.
+#[test]
+fn stack_builder_matches_the_handwritten_shared_channel_stack() {
+    let w = workload("fft").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 13);
+    let scripts = e11_slo::gen_scripts(w.as_ref(), 5, 4, 100.0, 29);
+    let pol = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_cap: 1 << 16,
+    };
+    let shards = 3usize;
+    let grid = NpuConfig { model: TimingModel::Grid, ..NpuConfig::default() };
+    for (npu, arb) in [
+        (NpuConfig::default(), ArbiterPolicy::Fifo),
+        (NpuConfig::default(), ArbiterPolicy::RoundRobin),
+        (grid, ArbiterPolicy::Fifo),
+    ] {
+        let hub = ChannelHub::shared(ChannelConfig::zc702_ddr3(), arb, shards);
+        let devices = (0..shards)
+            .map(|s| {
+                let channel = DramChannel::Shared(SharedChannel::new(hub.clone(), s));
+                let hierarchy = build_hierarchy_on(
+                    "bdi+fpc",
+                    e11_slo::E11_CACHE,
+                    dram_for("bdi+fpc", channel).unwrap(),
+                )
+                .unwrap();
+                NpuDevice::new(npu, program.clone())
+                    .unwrap()
+                    .with_weight_scheme("bdi+fpc")
+                    .unwrap()
+                    .with_memory(Box::new(hierarchy))
+            })
+            .collect::<Vec<_>>();
+        let by_hand = PoolSim::new(devices, pol)
+            .unwrap()
+            .with_channel_policy(arb)
+            .run_closed(&scripts)
+            .unwrap();
+        let stack = StackSpec::new(npu, "bdi+fpc")
+            .geometry(e11_slo::E11_CACHE)
+            .shared_channel(arb)
+            .shards(shards)
+            .build(&program)
+            .unwrap();
+        let built_hub = stack.hub.clone().expect("shared stack exposes its hub");
+        let built = stack.into_pool(pol).unwrap().run_closed(&scripts).unwrap();
+        assert_reports_identical(&built, &by_hand, &format!("shared builder {arb:?}"));
+        let (a, b) = (lock_hub(&hub).totals(), lock_hub(&built_hub).totals());
+        assert_eq!(a.transfers, b.transfers, "{arb:?}: hub transfers");
+        assert_eq!(a.busy_cycles, b.busy_cycles, "{arb:?}: hub busy cycles");
+        assert_eq!(a.wait_cycles, b.wait_cycles, "{arb:?}: hub wait cycles");
+    }
+}
+
+/// PR-9 fleet contract: the E15 sweep is seeded end to end — two
+/// same-seed sweeps serialize bit-identically — and the front-end
+/// router's conservation invariant (`requests == responses + rejected`,
+/// no silent drops) survives the injected mid-epoch shard death.
+#[test]
+fn e15_fleet_rows_are_deterministic_and_conserve_requests_under_failures() {
+    let w = workload("sobel").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 9);
+    let tuning = e15_fleet::FleetTuning {
+        pools: Some(2),
+        max_shards: 3,
+        epochs: 4,
+        warmup_cycles: 0,
+        failures: true,
+    };
+    let run = || {
+        e15_fleet::measure_all_on(
+            NpuConfig::default(),
+            w.as_ref(),
+            &program,
+            "bdi",
+            24,
+            4,
+            33,
+            None,
+            &tuning,
+        )
+        .unwrap()
+    };
+    let rows = run();
+    let dump = |rs: &[e15_fleet::E15Row]| {
+        rs.iter().map(|r| r.to_json().dump()).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(dump(&rows), dump(&run()), "same-seed E15 reports must be bit-identical");
+    for r in &rows {
+        assert_eq!(
+            r.responses + r.rejected,
+            r.requests,
+            "{} pools: conservation must survive the injected shard death",
+            r.pools
+        );
+        assert!(r.requests > 0 && r.shard_cycles > 0, "the fleet must actually serve");
     }
 }
 

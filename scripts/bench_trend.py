@@ -42,8 +42,11 @@ refreshed delta as a markdown table for the CI job summary).
 Independently of the baseline, the *scenario-internal invariant* gate
 always enforces: at equal E12 grid geometry, at least one compressed
 scheme must beat ``none`` on both weight-fill cycles and DRAM bytes
-(the E12 acceptance criterion) — so the job fails on real regressions
-even in the bootstrap state. A report row missing a required metric key
+(the E12 acceptance criterion); and when the report carries E15 fleet
+cells, at least one compressed scheme must meet the serving SLO with
+strictly fewer provisioned shard-cycles than ``none`` (compression buys
+fleet capacity, not just latency) — so the job fails on real
+regressions even in the bootstrap state. A report row missing a required metric key
 is a pipeline error named per (experiment, key), exit 2 — never a raw
 ``KeyError`` traceback. Only the standard library is used.
 
@@ -93,9 +96,11 @@ def extract_metrics(report: dict) -> dict:
     ``e11/<label>/x<shards>/<policy>``, ``e12/<label>/<grid>`` (cycle
     metrics, gated), ``e14/<label>/<mitigation>`` (leak rate is
     informational; the priced ``p99_cycles`` joins the hard cycle gate),
-    and ``selfbench/<label>/<component>`` (exact ``sim_cycles`` gated
-    hard; wall-clock throughput gated with the noise floor + retry
-    policy).
+    ``e15/<label>/x<pools>`` (fleet p99 joins the hard cycle gate;
+    shard-cycles / cost-per-QPS / reroutes feed the E15 capacity
+    invariant), and ``selfbench/<label>/<component>`` (exact
+    ``sim_cycles`` gated hard; wall-clock throughput gated with the
+    noise floor + retry policy).
     """
     out: dict = {}
     experiments = report.get("experiments", {})
@@ -156,6 +161,17 @@ def extract_metrics(report: dict) -> dict:
                 "throughput": require(row, "e10_throughput", key),
                 "slo_throughput": require(row, "e11_slo_throughput", key),
             }
+    for entry in experiments.get("e15", []):
+        for row in entry.get("rows", []):
+            key = f"{entry['label']}/x{require(row, 'pools', entry['label'])}"
+            out[key] = {
+                "p99_cycles": require(row, "p99_cycles", key),
+                "shard_cycles": require(row, "shard_cycles", key),
+                "cost_per_qps": require(row, "cost_per_qps", key),
+                "reroutes": require(row, "reroutes", key),
+                "rejected": require(row, "rejected", key),
+                "met_slo": require(row, "met_slo", key),
+            }
     for entry in experiments.get("selfbench", []):
         for row in entry.get("rows", []):
             key = f"{entry['label']}/{require(row, 'component', entry['label'])}"
@@ -186,11 +202,20 @@ def check_invariants(metrics: dict) -> list:
       way partitioning must cut the leak at least 10x AND its priced
       p99 must stay within ``PARTITION_P99_BOUND`` of the unmitigated
       row. Both are no-ops when the report carries no E14 cells.
+    * E15 fleet capacity (the PR-9 acceptance criterion): at equal
+      (kernel, fleet size) — identical traffic, failures and SLO by
+      construction — at least one compressed scheme must meet the SLO
+      using strictly fewer provisioned shard-cycles than ``none``.
+      A no-op when the report carries no comparable E15 cells.
 
     Returns failure messages; empty when the invariants hold or the
     relevant cells are absent.
     """
-    return check_e12_invariant(metrics) + check_e14_invariant(metrics)
+    return (
+        check_e12_invariant(metrics)
+        + check_e14_invariant(metrics)
+        + check_e15_invariant(metrics)
+    )
 
 
 def check_e12_invariant(metrics: dict) -> list:
@@ -262,6 +287,41 @@ def check_e14_invariant(metrics: dict) -> list:
                 f"vs {base['p99_cycles']:.0f}"
             )
     return failures
+
+
+def check_e15_invariant(metrics: dict) -> list:
+    # e15 keys look like e15/<kernel>/<scheme>/x<pools>; every scheme
+    # cell of one (kernel, pools) saw identical traffic, failures and
+    # SLO, so shard-cycles (the provisioned-capacity integral) compare
+    # apples-to-apples
+    cells: dict = {}
+    for key, row in metrics.items():
+        parts = key.split("/")
+        if len(parts) != 4 or parts[0] != "e15":
+            continue
+        _, kernel, scheme, pools = parts
+        cells.setdefault((kernel, pools), {})[scheme] = row
+    comparable = {k: v for k, v in cells.items() if "none" in v and len(v) > 1}
+    if not comparable:
+        return []
+    for (kernel, pools), schemes in sorted(comparable.items()):
+        base = schemes["none"]
+        for scheme, row in sorted(schemes.items()):
+            if scheme == "none":
+                continue
+            if row["met_slo"] and row["shard_cycles"] < base["shard_cycles"]:
+                print(
+                    f"invariant ok: e15/{kernel}/{scheme}/{pools} meets the SLO "
+                    f"with {row['shard_cycles']:.0f} shard-cycles vs "
+                    f"{base['shard_cycles']:.0f} for none (cost/qps "
+                    f"{row['cost_per_qps']:.1f} vs {base['cost_per_qps']:.1f})"
+                )
+                return []
+    return [
+        "E15 invariant violated: no (kernel, pools) cell has a compressed scheme "
+        "meeting the SLO with strictly fewer shard-cycles than `none` "
+        "(compression should buy fleet capacity, not just latency)"
+    ]
 
 
 def compare(baseline: dict, current_metrics: dict, max_regress: float) -> list:
