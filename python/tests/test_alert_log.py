@@ -1,0 +1,282 @@
+"""Validator for the E16 alert logs embedded in the harness report
+(`snnapc experiments --only e16 --out harness-report.json`).
+
+Stdlib only. Dual mode:
+
+    python3 python/tests/test_alert_log.py harness-report.json
+        CLI validator: checks every e16 row's alert log and exits
+        non-zero on any problem (or if the report carries no e16 rows
+        at all). This is what CI runs on the harness-smoke report.
+
+    python -m pytest python/tests/test_alert_log.py -q
+        Unit tests of the validator itself against synthetic documents.
+
+Checks mirror what rust/src/obs/monitor.rs guarantees:
+
+  * every alert carries rule (string), pool (int or null), epoch
+    (non-negative int), edge ("fire" | "clear"), numeric value and
+    threshold;
+  * the log is emitted in evaluation order, so epochs never decrease;
+  * per (rule, pool) the edges latch: fire and clear strictly
+    alternate, a clear never appears without a preceding fire, and at
+    most one fire is left open at the horizon;
+  * the row's scalar summary agrees with its own log: `alerts_fired`
+    equals the number of fire edges, and `false_positives` equals the
+    fires that happened while the fleet was provably healthy (all of
+    them on a clean row, the pre-injection ones on a fault row).
+"""
+
+import json
+import sys
+import unittest
+
+EDGES = {"fire", "clear"}
+
+
+def validate_alert_log(alerts):
+    """Return a list of problems with one row's alert log (empty == valid)."""
+    if not isinstance(alerts, list):
+        return ['"alerts" is not an array']
+    problems = []
+    last_epoch = None
+    open_fires = {}
+    for i, a in enumerate(alerts):
+        where = "alert %d" % i
+        if not isinstance(a, dict):
+            problems.append("%s: not an object" % where)
+            continue
+        missing = [
+            k for k in ("rule", "pool", "epoch", "edge", "value", "threshold") if k not in a
+        ]
+        if missing:
+            problems.append("%s: missing %s" % (where, ", ".join(missing)))
+            continue
+        rule, pool, epoch, edge = a["rule"], a["pool"], a["epoch"], a["edge"]
+        if not isinstance(rule, str) or not rule:
+            problems.append("%s: rule %r is not a non-empty string" % (where, rule))
+            continue
+        if pool is not None and (isinstance(pool, bool) or not isinstance(pool, int)):
+            problems.append("%s: pool %r is neither null nor an int" % (where, pool))
+            continue
+        if isinstance(epoch, bool) or not isinstance(epoch, (int, float)) or epoch < 0:
+            problems.append("%s: epoch %r is not a non-negative number" % (where, epoch))
+            continue
+        if edge not in EDGES:
+            problems.append("%s: edge %r is not fire|clear" % (where, edge))
+            continue
+        for k in ("value", "threshold"):
+            if isinstance(a[k], bool) or not isinstance(a[k], (int, float)):
+                problems.append("%s: %s %r is not a number" % (where, k, a[k]))
+        if last_epoch is not None and epoch < last_epoch:
+            problems.append(
+                "%s: epoch %s goes backwards (previous %s)" % (where, epoch, last_epoch)
+            )
+        last_epoch = epoch if last_epoch is None else max(last_epoch, epoch)
+        key = (rule, pool)
+        if edge == "fire":
+            if open_fires.get(key):
+                problems.append(
+                    "%s: %r fires again without clearing (latching broken)" % (where, key)
+                )
+            open_fires[key] = True
+        else:
+            if not open_fires.get(key):
+                problems.append("%s: %r clears without a preceding fire" % (where, key))
+            open_fires[key] = False
+    return problems
+
+
+def validate_e16_row(row):
+    """Validate one e16 row: its alert log plus log/summary agreement."""
+    if not isinstance(row, dict):
+        return ["row is not an object"]
+    problems = validate_alert_log(row.get("alerts"))
+    if problems:
+        return problems
+    alerts = row["alerts"]
+    fires = [a for a in alerts if a["edge"] == "fire"]
+    if "alerts_fired" in row and row["alerts_fired"] != len(fires):
+        problems.append(
+            "alerts_fired %r disagrees with the log's %d fire edges"
+            % (row["alerts_fired"], len(fires))
+        )
+    injected = row.get("injected_epoch", -1)
+    if "false_positives" in row:
+        if injected < 0:
+            healthy = len(fires)
+        else:
+            healthy = sum(1 for a in fires if a["epoch"] < injected)
+        if row["false_positives"] != healthy:
+            problems.append(
+                "false_positives %r disagrees with %d healthy-fleet fires"
+                % (row["false_positives"], healthy)
+            )
+    return problems
+
+
+def iter_e16_rows(doc):
+    """Yield (label, row_index, row) for every e16 row in a harness report."""
+    experiments = doc.get("experiments") if isinstance(doc, dict) else None
+    cells = experiments.get("e16") if isinstance(experiments, dict) else None
+    for cell in cells if isinstance(cells, list) else []:
+        if not isinstance(cell, dict):
+            continue
+        label = cell.get("label", "?")
+        for i, row in enumerate(cell.get("rows") or []):
+            yield label, i, row
+
+
+def validate_file(path):
+    """Return (rows_checked, problems) for one harness report file."""
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as exc:
+        return 0, ["unreadable or not JSON: %s" % exc]
+    checked = 0
+    problems = []
+    for label, i, row in iter_e16_rows(doc):
+        checked += 1
+        for p in validate_e16_row(row):
+            problems.append("%s row %d: %s" % (label, i, p))
+    return checked, problems
+
+
+def main(argv):
+    if not argv:
+        print("usage: test_alert_log.py REPORT.json [REPORT.json ...]", file=sys.stderr)
+        return 2
+    bad = 0
+    for path in argv:
+        checked, problems = validate_file(path)
+        if not checked:
+            problems.append("no e16 rows found — nothing validated")
+        if problems:
+            bad += 1
+            print("FAIL %s" % path)
+            for problem in problems:
+                print("  - %s" % problem)
+        else:
+            print("ok   %s (%d e16 rows)" % (path, checked))
+    return 1 if bad else 0
+
+
+def _alert(rule, pool, epoch, edge, value=1.0, threshold=1.0):
+    return {
+        "rule": rule,
+        "pool": pool,
+        "epoch": epoch,
+        "edge": edge,
+        "value": value,
+        "threshold": threshold,
+    }
+
+
+def _row(alerts, injected=-1):
+    fires = [a for a in alerts if a.get("edge") == "fire"]
+    if injected < 0:
+        healthy = len(fires)
+    else:
+        healthy = sum(1 for a in fires if a.get("epoch", 0) < injected)
+    return {
+        "alerts": alerts,
+        "alerts_fired": len(fires),
+        "injected_epoch": injected,
+        "false_positives": healthy,
+    }
+
+
+class AlertLogTests(unittest.TestCase):
+    def test_valid_log_passes(self):
+        alerts = [
+            _alert("shard_death", 0, 2, "fire", value=14),
+            _alert("slo_fast_burn", None, 2, "fire", value=9.1, threshold=8.0),
+            _alert("slo_fast_burn", None, 3, "clear", value=0.0, threshold=8.0),
+            _alert("shard_death", 0, 4, "clear", value=0.0),
+        ]
+        self.assertEqual(validate_alert_log(alerts), [])
+
+    def test_empty_log_passes(self):
+        self.assertEqual(validate_alert_log([]), [])
+
+    def test_missing_fields_are_reported(self):
+        problems = validate_alert_log([{"rule": "shard_death", "epoch": 1}])
+        self.assertEqual(len(problems), 1)
+        self.assertIn("pool", problems[0])
+        self.assertIn("edge", problems[0])
+
+    def test_backwards_epochs_are_reported(self):
+        alerts = [
+            _alert("shard_death", 0, 3, "fire"),
+            _alert("shard_degrade", 0, 2, "fire"),
+        ]
+        self.assertTrue(any("backwards" in p for p in validate_alert_log(alerts)))
+
+    def test_clear_without_fire_is_reported(self):
+        alerts = [_alert("shard_death", 0, 2, "clear")]
+        self.assertTrue(any("preceding fire" in p for p in validate_alert_log(alerts)))
+
+    def test_refire_without_clear_is_reported(self):
+        alerts = [
+            _alert("shard_death", 0, 2, "fire"),
+            _alert("shard_death", 0, 3, "fire"),
+        ]
+        self.assertTrue(any("latching" in p for p in validate_alert_log(alerts)))
+
+    def test_rules_latch_per_pool_independently(self):
+        alerts = [
+            _alert("shard_death", 0, 2, "fire"),
+            _alert("shard_death", 1, 2, "fire"),
+        ]
+        self.assertEqual(validate_alert_log(alerts), [])
+
+    def test_fire_may_run_to_the_horizon(self):
+        self.assertEqual(validate_alert_log([_alert("shard_death", 0, 2, "fire")]), [])
+
+    def test_bad_edge_and_pool_types_are_reported(self):
+        self.assertTrue(validate_alert_log([_alert("shard_death", 0, 2, "page")]))
+        self.assertTrue(validate_alert_log([_alert("shard_death", True, 2, "fire")]))
+
+    def test_row_summary_must_agree_with_its_log(self):
+        row = _row([_alert("shard_death", 0, 2, "fire")], injected=2)
+        self.assertEqual(validate_e16_row(row), [])
+        row["alerts_fired"] = 5
+        self.assertTrue(any("alerts_fired" in p for p in validate_e16_row(row)))
+
+    def test_false_positive_accounting_clean_vs_fault(self):
+        # clean row: every fire counts
+        clean = _row([_alert("slo_fast_burn", None, 1, "fire")], injected=-1)
+        self.assertEqual(clean["false_positives"], 1)
+        self.assertEqual(validate_e16_row(clean), [])
+        # fault row: only pre-injection fires count
+        fault = _row(
+            [
+                _alert("slo_fast_burn", None, 1, "fire"),
+                _alert("shard_death", 0, 4, "fire"),
+            ],
+            injected=4,
+        )
+        self.assertEqual(fault["false_positives"], 1)
+        self.assertEqual(validate_e16_row(fault), [])
+        fault["false_positives"] = 0
+        self.assertTrue(any("false_positives" in p for p in validate_e16_row(fault)))
+
+    def test_report_iteration_finds_rows(self):
+        doc = {
+            "experiments": {
+                "e16": [
+                    {"label": "e16/sobel/bdi", "rows": [_row([]), _row([])]},
+                    {"label": "e16/fft/bdi", "rows": [_row([])]},
+                ],
+                "e15": [{"label": "e15/sobel/bdi", "rows": [{}]}],
+            }
+        }
+        rows = list(iter_e16_rows(doc))
+        self.assertEqual(len(rows), 3)
+        self.assertEqual(rows[0][0], "e16/sobel/bdi")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1:
+        sys.exit(main(sys.argv[1:]))
+    unittest.main()

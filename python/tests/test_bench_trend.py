@@ -323,6 +323,91 @@ def test_e15_extraction_and_capacity_invariant():
     assert any("p99_cycles" in f for f in bench_trend.compare(base, worse, 0.20))
 
 
+def e16_report(
+    death_detected=True,
+    death_latency=0,
+    degrade_latency=1,
+    clean_fp=0,
+    degrade_fp=0,
+    p99_death=9000,
+):
+    """An E16 monitoring sweep: one (kernel, scheme), three failure
+    modes over the identical engineered trace."""
+
+    def row(mode, injected, detected, latency, fp, p99):
+        return {
+            "workload": "sobel",
+            "scheme": "bdi",
+            "mode": mode,
+            "pools": 2,
+            "epochs": 8,
+            "requests": 300,
+            "responses": 298,
+            "rejected": 2,
+            "reroutes": 4,
+            "injected_epoch": injected,
+            "detected": detected,
+            "detection_epoch": injected + latency if detected else -1,
+            "detection_latency": latency if detected else -1,
+            "false_positives": fp,
+            "alerts_fired": (1 if detected else 0) + fp,
+            "burn_rate": 9.5 if injected >= 0 else 0.0,
+            "p99_cycles": p99,
+            "slo_cycles": 8000,
+            "overhead_cycles": 0,
+            "alerts": [],
+            "burn_trajectory": [0.0] * 8,
+        }
+
+    return {
+        "schema_version": 1,
+        "config": {"seed": 42},
+        "experiments": {
+            "e16": [
+                {
+                    "label": "e16/sobel/bdi",
+                    "rows": [
+                        row("none", -1, False, -1, clean_fp, 4000),
+                        row("death", 2, death_detected, death_latency, 0, p99_death),
+                        row("degrade", 4, True, degrade_latency, degrade_fp, 12000),
+                    ],
+                }
+            ]
+        },
+    }
+
+
+def test_e16_extraction_and_monitoring_invariant():
+    metrics = bench_trend.extract_metrics(e16_report())
+    assert metrics["e16/sobel/bdi/death"]["detection_latency"] == 0
+    assert metrics["e16/sobel/bdi/degrade"]["detection_latency"] == 1
+    assert metrics["e16/sobel/bdi/none"]["false_positives"] == 0
+    # the shipped fixture satisfies the monitoring invariant: both faults
+    # caught within the bound, nothing fired while healthy
+    assert bench_trend.check_invariants(metrics) == []
+    # an undetected injected fault fails
+    missed = bench_trend.extract_metrics(e16_report(death_detected=False))
+    failures = bench_trend.check_invariants(missed)
+    assert len(failures) == 1 and "never detected" in failures[0]
+    # a detection slower than the bound fails
+    slow = bench_trend.extract_metrics(e16_report(degrade_latency=3))
+    failures = bench_trend.check_invariants(slow)
+    assert len(failures) == 1 and "detection latency" in failures[0]
+    # any alert on a provably healthy fleet fails — clean or pre-injection
+    noisy = bench_trend.extract_metrics(e16_report(clean_fp=1))
+    failures = bench_trend.check_invariants(noisy)
+    assert len(failures) == 1 and "false positives" in failures[0]
+    early = bench_trend.extract_metrics(e16_report(degrade_fp=1))
+    failures = bench_trend.check_invariants(early)
+    assert len(failures) == 1 and "false positives" in failures[0]
+    # no e16 cells -> nothing to enforce
+    assert bench_trend.check_invariants({}) == []
+    # the monitored-fleet p99 joins the hard simulated-cycle gate
+    base = bench_trend.trajectory_point(e16_report(), "base")
+    worse = bench_trend.extract_metrics(e16_report(p99_death=12000))
+    assert any("p99_cycles" in f for f in bench_trend.compare(base, worse, 0.20))
+
+
 def test_fill_and_grid_cycles_are_gated():
     base = bench_trend.trajectory_point(report(), "base")
     worse = bench_trend.extract_metrics(report(fill_bdi=600))  # +50%

@@ -80,6 +80,19 @@ pub struct Config {
     /// Inject E15's scheduled shard-death/degrade failures
     /// (`fleet.failures = true|false`).
     pub fleet_failures: bool,
+    /// E16 traffic horizon in epochs (`monitor.epochs`, ≥ 6 — the
+    /// degrade fault injects at epoch 4).
+    pub monitor_epochs: usize,
+    /// Fast SLO burn-rate window in epochs (`monitor.fast_window`).
+    pub monitor_fast_window: usize,
+    /// Slow SLO burn-rate window in epochs (`monitor.slow_window`).
+    pub monitor_slow_window: usize,
+    /// SLO error budget — tolerated bad-event fraction
+    /// (`monitor.budget`).
+    pub monitor_budget: f64,
+    /// p99 drift ratio that counts as shard degradation
+    /// (`monitor.degrade_factor`).
+    pub monitor_degrade_factor: f64,
 }
 
 /// Is `name` a registered compression scheme? Resolved against
@@ -111,6 +124,11 @@ impl Default for Config {
             fleet_epochs: 10,
             fleet_warmup_cycles: 0,
             fleet_failures: true,
+            monitor_epochs: 8,
+            monitor_fast_window: 1,
+            monitor_slow_window: 3,
+            monitor_budget: 0.05,
+            monitor_degrade_factor: 1.5,
         }
     }
 }
@@ -161,7 +179,7 @@ pub struct KeyDef {
 /// Every key the configuration accepts, in help order — the single
 /// source of truth behind `Config::set`, config files, `--set`
 /// overrides and the CLI's key listing.
-pub static KEYS: [KeyDef; 31] = [
+pub static KEYS: [KeyDef; 36] = [
     KeyDef {
         name: "benchmark",
         help: "benchmark to serve (manifest key)",
@@ -455,6 +473,61 @@ pub static KEYS: [KeyDef; 31] = [
             Ok(())
         },
     },
+    KeyDef {
+        name: "monitor.epochs",
+        help: "E16 traffic horizon in epochs (>= 6)",
+        apply: |c, v| {
+            c.monitor_epochs = v.parse().context("monitor.epochs")?;
+            if c.monitor_epochs < 6 {
+                bail!("monitor.epochs must be at least 6 (degrade injects at epoch 4)");
+            }
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "monitor.fast_window",
+        help: "fast SLO burn-rate window (epochs)",
+        apply: |c, v| {
+            c.monitor_fast_window = v.parse().context("monitor.fast_window")?;
+            if c.monitor_fast_window == 0 {
+                bail!("monitor.fast_window must be positive");
+            }
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "monitor.slow_window",
+        help: "slow SLO burn-rate window (epochs, >= fast)",
+        apply: |c, v| {
+            c.monitor_slow_window = v.parse().context("monitor.slow_window")?;
+            if c.monitor_slow_window == 0 {
+                bail!("monitor.slow_window must be positive");
+            }
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "monitor.budget",
+        help: "SLO error budget (tolerated bad-event fraction)",
+        apply: |c, v| {
+            c.monitor_budget = v.parse().context("monitor.budget")?;
+            if !(c.monitor_budget > 0.0 && c.monitor_budget < 1.0) {
+                bail!("monitor.budget must be in (0, 1)");
+            }
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "monitor.degrade_factor",
+        help: "p99 drift ratio that counts as shard degradation",
+        apply: |c, v| {
+            c.monitor_degrade_factor = v.parse().context("monitor.degrade_factor")?;
+            if c.monitor_degrade_factor <= 1.0 {
+                bail!("monitor.degrade_factor must exceed 1.0");
+            }
+            Ok(())
+        },
+    },
 ];
 
 impl Config {
@@ -579,6 +652,11 @@ impl Config {
         out.push_str(&format!("fleet.epochs = {}\n", self.fleet_epochs));
         out.push_str(&format!("fleet.warmup_cycles = {}\n", self.fleet_warmup_cycles));
         out.push_str(&format!("fleet.failures = {}\n", self.fleet_failures));
+        out.push_str(&format!("monitor.epochs = {}\n", self.monitor_epochs));
+        out.push_str(&format!("monitor.fast_window = {}\n", self.monitor_fast_window));
+        out.push_str(&format!("monitor.slow_window = {}\n", self.monitor_slow_window));
+        out.push_str(&format!("monitor.budget = {}\n", self.monitor_budget));
+        out.push_str(&format!("monitor.degrade_factor = {}\n", self.monitor_degrade_factor));
         out
     }
 
@@ -645,6 +723,12 @@ mod tests {
         assert!(cfg.set("fleet.epochs", "0").is_err());
         assert!(cfg.set("fleet.max_shards", "1").is_err());
         assert!(cfg.set("fleet.failures", "maybe").is_err());
+        assert!(cfg.set("monitor.epochs", "5").is_err(), "degrade injects at epoch 4");
+        assert!(cfg.set("monitor.fast_window", "0").is_err());
+        assert!(cfg.set("monitor.slow_window", "0").is_err());
+        assert!(cfg.set("monitor.budget", "0").is_err());
+        assert!(cfg.set("monitor.budget", "1.5").is_err());
+        assert!(cfg.set("monitor.degrade_factor", "1.0").is_err());
     }
 
     #[test]
@@ -690,6 +774,37 @@ mod tests {
         assert!(!cfg.fleet_failures);
         let text = cfg.to_string_pretty();
         let dir = std::env::temp_dir().join("snnapc_cfg_test7");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.conf");
+        std::fs::write(&p, &text).unwrap();
+        let mut cfg2 = Config::default();
+        cfg2.load_file(&p).unwrap();
+        assert_eq!(cfg, cfg2);
+    }
+
+    #[test]
+    fn monitor_keys_apply_and_roundtrip() {
+        let mut cfg = Config::default();
+        assert_eq!(
+            (cfg.monitor_epochs, cfg.monitor_fast_window, cfg.monitor_slow_window),
+            (8, 1, 3)
+        );
+        assert_eq!((cfg.monitor_budget, cfg.monitor_degrade_factor), (0.05, 1.5));
+        cfg.apply_overrides(&[
+            "monitor.epochs=10".into(),
+            "monitor.fast_window=2".into(),
+            "monitor.slow_window=4".into(),
+            "monitor.budget=0.1".into(),
+            "monitor.degrade_factor=2".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.monitor_epochs, 10);
+        assert_eq!(cfg.monitor_fast_window, 2);
+        assert_eq!(cfg.monitor_slow_window, 4);
+        assert_eq!(cfg.monitor_budget, 0.1);
+        assert_eq!(cfg.monitor_degrade_factor, 2.0);
+        let text = cfg.to_string_pretty();
+        let dir = std::env::temp_dir().join("snnapc_cfg_test8");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("cfg.conf");
         std::fs::write(&p, &text).unwrap();

@@ -42,6 +42,12 @@
 //!   it.
 //! * **Conservation.** `requests == responses + rejected` is enforced
 //!   at the end of every run.
+//! * **Monitoring** (PR 10). [`with_monitoring`](FleetSim::with_monitoring)
+//!   closes one `obs::TimeSeries` window per (epoch, pool) at every
+//!   epoch boundary — arrivals, responses, reroutes, rejections,
+//!   boundary backlog, channel wait, latency quantiles vs an SLO. The
+//!   hook only *reads* state the run computes anyway, so every other
+//!   report field is bit-identical with monitoring on or off.
 //!
 //! Accounting: `shard_cycles` integrates provisioned capacity —
 //! Σ (live shards × epoch_cycles) over the run plus each pool's drain
@@ -51,7 +57,7 @@
 
 use anyhow::{ensure, Result};
 
-use crate::obs::{track, Tracer};
+use crate::obs::{track, TimeSeries, Tracer, WindowSample};
 
 use super::pool::{PoolSim, SimRequest};
 
@@ -136,6 +142,11 @@ pub struct FleetReport {
     pub latencies: Vec<u64>,
     /// Shard count per pool at the end of the run.
     pub final_shards: Vec<usize>,
+    /// Per-epoch monitoring windows, present iff the fleet ran with
+    /// [`FleetSim::with_monitoring`]. Every window is a pure read of
+    /// simulator state: attaching monitoring never changes any other
+    /// field of this report (pinned by `tests/sim_equivalence.rs`).
+    pub timeseries: Option<TimeSeries>,
 }
 
 /// One request in flight at the fleet level.
@@ -170,6 +181,9 @@ pub struct FleetSim<F: FnMut(&PoolTopology) -> Result<PoolSim>> {
     /// rebuild, so one pool's events stay on one ring/spill across
     /// topology changes.
     tracers: Vec<Tracer>,
+    /// SLO for the per-epoch monitoring windows; `None` = monitoring
+    /// off (no windows recorded, no scratch kept).
+    monitor_slo: Option<u64>,
 }
 
 impl<F: FnMut(&PoolTopology) -> Result<PoolSim>> FleetSim<F> {
@@ -178,7 +192,17 @@ impl<F: FnMut(&PoolTopology) -> Result<PoolSim>> FleetSim<F> {
         ensure!(spec.start_shards > 0, "pools need at least one shard");
         ensure!(spec.max_shards >= spec.start_shards, "max_shards below start_shards");
         ensure!(spec.epochs > 0 && spec.epoch_cycles > 0, "fleet needs a traffic horizon");
-        Ok(FleetSim { spec, factory, tracers: Vec::new() })
+        Ok(FleetSim { spec, factory, tracers: Vec::new(), monitor_slo: None })
+    }
+
+    /// Record a per-epoch [`TimeSeries`] during `run`, judging window
+    /// latencies against `slo_cycles`; the report carries it in
+    /// `timeseries`. Monitoring only *reads* state the run computes
+    /// anyway, so every other report field is bit-identical with it on
+    /// or off.
+    pub fn with_monitoring(mut self, slo_cycles: u64) -> Self {
+        self.monitor_slo = Some(slo_cycles);
+        self
     }
 
     /// Attach one tracer per pool (pool events, including the fleet
@@ -258,6 +282,19 @@ impl<F: FnMut(&PoolTopology) -> Result<PoolSim>> FleetSim<F> {
         let mut shard_cycles = 0u64;
         let mut latencies: Vec<u64> = Vec::new();
 
+        // Monitoring scratch: one window per (epoch, pool), closed at
+        // each epoch boundary. Everything fed in is a pure read of the
+        // run's own state, so the measured numbers cannot move.
+        let mut series = self.monitor_slo.map(|slo| TimeSeries::new(slo, spec.epoch_cycles));
+        let mut win_arrivals = vec![0u64; spec.pools];
+        let mut win_reroutes = vec![0u64; spec.pools];
+        let mut win_rejections = vec![0u64; spec.pools];
+        let mut win_latencies: Vec<Vec<u64>> = vec![Vec::new(); spec.pools];
+        // cumulative per-pool channel wait at the last boundary (device
+        // counters reset on rebuild; a drop below the last reading
+        // means a fresh sim, whose total IS the window's delta)
+        let mut prev_wait = vec![0u64; spec.pools];
+
         // The traffic horizon plus enough slack to drain every retry
         // chain (each epoch retries land in the next one).
         let epoch_cap = spec.epochs + spec.max_retries as usize + 2;
@@ -314,6 +351,11 @@ impl<F: FnMut(&PoolTopology) -> Result<PoolSim>> FleetSim<F> {
                 }
                 routed[best].push(pend);
             }
+            if series.is_some() {
+                for (p, slice) in routed.iter().enumerate() {
+                    win_arrivals[p] = slice.len() as u64;
+                }
+            }
 
             // Run every pool's slice in absolute fleet cycles.
             for (p, slice) in routed.into_iter().enumerate() {
@@ -351,6 +393,7 @@ impl<F: FnMut(&PoolTopology) -> Result<PoolSim>> FleetSim<F> {
                         let t = self.tracer(p);
                         if q.retries < spec.max_retries {
                             reroutes += 1;
+                            win_reroutes[p] += 1;
                             t.instant(
                                 track::FLEET_ROUTER,
                                 "reroute",
@@ -366,6 +409,7 @@ impl<F: FnMut(&PoolTopology) -> Result<PoolSim>> FleetSim<F> {
                             });
                         } else {
                             rejected += 1;
+                            win_rejections[p] += 1;
                             t.instant(
                                 track::FLEET_ROUTER,
                                 "reject",
@@ -375,7 +419,11 @@ impl<F: FnMut(&PoolTopology) -> Result<PoolSim>> FleetSim<F> {
                         }
                     } else {
                         responses += 1;
-                        latencies.push(c.done - q.orig_arrival);
+                        let lat = c.done - q.orig_arrival;
+                        if series.is_some() {
+                            win_latencies[p].push(lat);
+                        }
+                        latencies.push(lat);
                     }
                 }
             }
@@ -416,6 +464,33 @@ impl<F: FnMut(&PoolTopology) -> Result<PoolSim>> FleetSim<F> {
                 );
             }
 
+            // Close this epoch's monitoring windows (post-autoscale
+            // shard counts, boundary backlog as queue depth).
+            if let Some(ts) = series.as_mut() {
+                for p in 0..spec.pools {
+                    let st = &states[p];
+                    let cur: u64 = (0..st.sim.shard_count())
+                        .map(|s| st.sim.device(s).mem_wait_cycles())
+                        .sum();
+                    let delta = if cur < prev_wait[p] { cur } else { cur - prev_wait[p] };
+                    prev_wait[p] = cur;
+                    ts.record(WindowSample {
+                        epoch,
+                        pool: p,
+                        shards: st.shards,
+                        arrivals: win_arrivals[p],
+                        reroutes: win_reroutes[p],
+                        rejections: win_rejections[p],
+                        queue_depth: st.busy_until.saturating_sub(epoch_end),
+                        channel_wait: delta,
+                        latencies: std::mem::take(&mut win_latencies[p]),
+                    });
+                    win_arrivals[p] = 0;
+                    win_reroutes[p] = 0;
+                    win_rejections[p] = 0;
+                }
+            }
+
             epoch += 1;
         }
 
@@ -445,6 +520,7 @@ impl<F: FnMut(&PoolTopology) -> Result<PoolSim>> FleetSim<F> {
             makespan,
             latencies,
             final_shards: states.iter().map(|s| s.shards).collect(),
+            timeseries: series,
         })
     }
 }
@@ -592,6 +668,47 @@ mod tests {
         assert_eq!(a.shard_cycles, b.shard_cycles);
         assert_eq!(a.latencies, b.latencies);
         assert_eq!(a.final_shards, b.final_shards);
+    }
+
+    #[test]
+    fn monitoring_records_windows_without_moving_a_number() {
+        let w = workload("sobel").unwrap();
+        let p = program_from_workload(w.as_ref(), Q7_8, 1);
+        let c = per_item(&p);
+        let s = spec(c, 4, vec![Failure { epoch: 1, pool: 0, kind: FailureKind::Death }]);
+        let reqs = trace(&p, 48, s.epoch_cycles * 3, 13);
+        let plain = FleetSim::new(s.clone(), factory(p.clone())).unwrap().run(&reqs).unwrap();
+        let observed =
+            FleetSim::new(s, factory(p)).unwrap().with_monitoring(c * 64).run(&reqs).unwrap();
+        assert!(plain.timeseries.is_none(), "monitoring is opt-in");
+        // every measured field is bit-identical with monitoring on
+        assert_eq!(plain.responses, observed.responses);
+        assert_eq!(plain.rejected, observed.rejected);
+        assert_eq!(plain.reroutes, observed.reroutes);
+        assert_eq!(plain.scale_ups, observed.scale_ups);
+        assert_eq!(plain.shard_cycles, observed.shard_cycles);
+        assert_eq!(plain.makespan, observed.makespan);
+        assert_eq!(plain.latencies, observed.latencies);
+        assert_eq!(plain.final_shards, observed.final_shards);
+        // and the windows account for exactly the run's outcomes
+        let ts = observed.timeseries.expect("monitoring must record windows");
+        assert_eq!(ts.pools(), 2);
+        assert!(ts.epochs() >= 4, "one window set per executed epoch");
+        let (mut resp, mut rer, mut rej, mut arr) = (0u64, 0u64, 0u64, 0u64);
+        for w in ts.windows() {
+            resp += w.responses;
+            rer += w.reroutes;
+            rej += w.rejections;
+            arr += w.arrivals;
+        }
+        assert_eq!(resp, observed.responses);
+        assert_eq!(rer, observed.reroutes);
+        assert_eq!(rej, observed.rejected);
+        assert_eq!(
+            arr,
+            observed.requests + observed.reroutes,
+            "router assignments = fresh arrivals + re-entered retries"
+        );
     }
 
     #[test]

@@ -1,0 +1,617 @@
+//! E16 — fleet health monitoring: how fast do metrics-only detectors
+//! catch the faults the fleet injects?
+//!
+//! E15 proves the fleet *survives* shard death and degrade; an operator
+//! additionally needs to *see* them. This experiment attaches the
+//! PR-10 monitoring layer (`obs::timeseries` + `obs::monitor`) to
+//! `FleetSim` and measures it the only honest way available: against
+//! ground truth. Per (kernel, scheme) cell it runs the **identical**
+//! request stream under three failure modes — `none`, `death` (pool
+//! 0's highest shard dies at epoch 2), `degrade` (pool 0's shard 0
+//! turns slow at epoch 4) — and reports, from the alert log alone:
+//! detection latency in epochs, false positives (any fire while the
+//! fleet was provably healthy — every fire on a clean run, any
+//! pre-injection fire on a fault run), and the SLO burn-rate
+//! trajectory. `scripts/bench_trend.py` enforces the acceptance
+//! criterion: every injected fault detected within ≤ 2 epochs, zero
+//! false positives.
+//!
+//! Traffic is engineered so detection is *decidable*, not lucky:
+//!
+//! * a near-lattice steady class (one request per `per_item` cycles,
+//!   sub-`per_item` jitter) keeps every healthy epoch's windows
+//!   comparable — the degrade rule's baseline;
+//! * a 3×-capacity burst opens the death epoch, guaranteeing the dying
+//!   shard holds post-midpoint completions whose voiding (reroutes)
+//!   is the death signature;
+//! * the degraded shard's sync cost is priced at 2× the SLO, so the
+//!   drifted p99 separates from the concurrent cross-pool baseline by
+//!   far more than the monitor's ratio × absolute-margin guard.
+//!
+//! Monitoring must also be *free*: for the clean mode the cell re-runs
+//! the fleet with monitoring detached and `ensure!`s every report
+//! field bit-identical (the E13/tracer discipline), which is what the
+//! row's `overhead_cycles: 0` asserts. All scheme-independent knobs
+//! (epoch length, SLO, burst size, failure schedule) come from a bare
+//! -device probe, so every scheme sees the same traffic, failures and
+//! thresholds.
+
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use crate::bench_suite::{all_workloads, Workload};
+use crate::coordinator::{
+    BatchPolicy, Failure, FailureKind, FleetRequest, FleetSim, FleetSpec, PoolSim, PoolTopology,
+};
+use crate::fixed::QFormat;
+use crate::mem::ArbiterPolicy;
+use crate::npu::{NpuConfig, NpuDevice, NpuProgram};
+use crate::obs::{Alert, Monitor, MonitorConfig, MonitorReport};
+use crate::systolic::TimingModel;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::e15_fleet::E15_CACHE;
+use super::stack::StackSpec;
+
+/// Fleet shape: two symmetric pools — the degrade rule's concurrent
+/// cross-pool baseline needs a healthy twin.
+pub const POOLS: usize = 2;
+
+/// Shards per pool at the start (the autoscaler moves it from there).
+pub const START_SHARDS: usize = 2;
+
+/// Autoscaler ceiling per pool.
+pub const MAX_SHARDS: usize = 3;
+
+/// Reroute attempts before a voided request is rejected.
+pub const MAX_RETRIES: u32 = 3;
+
+/// Epoch the death fires (and the burst that witnesses it opens).
+pub const DEATH_EPOCH: usize = 2;
+
+/// Epoch the degrade fires.
+pub const DEGRADE_EPOCH: usize = 4;
+
+/// The three failure modes every cell sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureMode {
+    None,
+    Death,
+    Degrade,
+}
+
+pub const MODES: [FailureMode; 3] = [FailureMode::None, FailureMode::Death, FailureMode::Degrade];
+
+impl FailureMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailureMode::None => "none",
+            FailureMode::Death => "death",
+            FailureMode::Degrade => "degrade",
+        }
+    }
+
+    /// The failure schedule this mode injects (always pool 0, so the
+    /// detection question is fixed and the twin pool stays clean).
+    fn failures(&self) -> Vec<Failure> {
+        match self {
+            FailureMode::None => Vec::new(),
+            FailureMode::Death => {
+                vec![Failure { epoch: DEATH_EPOCH, pool: 0, kind: FailureKind::Death }]
+            }
+            FailureMode::Degrade => {
+                vec![Failure { epoch: DEGRADE_EPOCH, pool: 0, kind: FailureKind::Degrade }]
+            }
+        }
+    }
+
+    /// Ground truth for scoring the alert log.
+    fn injected_epoch(&self) -> Option<usize> {
+        match self {
+            FailureMode::None => None,
+            FailureMode::Death => Some(DEATH_EPOCH),
+            FailureMode::Degrade => Some(DEGRADE_EPOCH),
+        }
+    }
+
+    /// The alert rule that counts as detecting this mode.
+    fn rule(&self) -> Option<&'static str> {
+        match self {
+            FailureMode::None => None,
+            FailureMode::Death => Some("shard_death"),
+            FailureMode::Degrade => Some("shard_degrade"),
+        }
+    }
+}
+
+/// The `monitor.*` config knobs (CLI/harness surface).
+#[derive(Debug, Clone)]
+pub struct MonitorTuning {
+    /// Traffic horizon in epochs (≥ 6: degrade injects at epoch 4 and
+    /// needs post-injection windows).
+    pub epochs: usize,
+    /// Fast burn-rate window, in epochs.
+    pub fast_window: usize,
+    /// Slow burn-rate window, in epochs.
+    pub slow_window: usize,
+    /// SLO error budget (tolerated bad-event fraction).
+    pub budget: f64,
+    /// p99 drift ratio that counts as shard degradation.
+    pub degrade_factor: f64,
+}
+
+impl Default for MonitorTuning {
+    fn default() -> MonitorTuning {
+        MonitorTuning {
+            epochs: 8,
+            fast_window: 1,
+            slow_window: 3,
+            budget: 0.05,
+            degrade_factor: 1.5,
+        }
+    }
+}
+
+/// One (kernel, scheme, failure-mode) cell.
+#[derive(Debug, Clone)]
+pub struct E16Row {
+    pub workload: String,
+    pub scheme: String,
+    pub mode: String,
+    pub pools: usize,
+    pub epochs: usize,
+    pub requests: u64,
+    pub responses: u64,
+    pub rejected: u64,
+    pub reroutes: u64,
+    /// Ground-truth injection epoch; -1 for the clean mode.
+    pub injected_epoch: i64,
+    /// The mode's detection rule fired at/after the injection.
+    pub detected: bool,
+    /// Epoch of the detecting fire edge; -1 if none.
+    pub detection_epoch: i64,
+    /// `detection_epoch - injected_epoch`; -1 if not detected (clean
+    /// rows are always -1 — there is nothing to detect).
+    pub detection_latency: i64,
+    /// Fire edges while the fleet was provably healthy: every fire on
+    /// a clean run, pre-injection fires on a fault run. The acceptance
+    /// invariant pins this to 0.
+    pub false_positives: u64,
+    /// Total fire edges in the log.
+    pub alerts_fired: u64,
+    /// Peak fast-window burn rate over the horizon.
+    pub burn_rate: f64,
+    /// p99 latency from original arrival (device cycles).
+    pub p99_cycles: u64,
+    pub slo_cycles: u64,
+    /// Extra simulated cycles attributable to monitoring — pinned 0 at
+    /// runtime by re-running the clean cell with monitoring detached
+    /// and `ensure!`ing every report field identical.
+    pub overhead_cycles: u64,
+    /// The full fire/clear alert log (deterministic order).
+    pub alerts: Vec<Alert>,
+    /// Fast-window burn rate per epoch.
+    pub burn_trajectory: Vec<f64>,
+}
+
+impl E16Row {
+    /// Machine-readable form for the harness report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", self.workload.clone().into()),
+            ("scheme", self.scheme.clone().into()),
+            ("mode", self.mode.clone().into()),
+            ("pools", self.pools.into()),
+            ("epochs", self.epochs.into()),
+            ("requests", self.requests.into()),
+            ("responses", self.responses.into()),
+            ("rejected", self.rejected.into()),
+            ("reroutes", self.reroutes.into()),
+            ("injected_epoch", Json::Num(self.injected_epoch as f64)),
+            ("detected", self.detected.into()),
+            ("detection_epoch", Json::Num(self.detection_epoch as f64)),
+            ("detection_latency", Json::Num(self.detection_latency as f64)),
+            ("false_positives", self.false_positives.into()),
+            ("alerts_fired", self.alerts_fired.into()),
+            ("burn_rate", self.burn_rate.into()),
+            ("p99_cycles", self.p99_cycles.into()),
+            ("slo_cycles", self.slo_cycles.into()),
+            ("overhead_cycles", self.overhead_cycles.into()),
+            ("alerts", Json::Arr(self.alerts.iter().map(Alert::to_json).collect())),
+            (
+                "burn_trajectory",
+                Json::Arr(self.burn_trajectory.iter().map(|&b| b.into()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Scheme-independent per-item cycle estimate (bare device, no
+/// hierarchy) — anchors epoch length, SLO and thresholds so every
+/// scheme is judged against identical numbers.
+fn per_item_cycles(npu: NpuConfig, program: &NpuProgram, batch: usize) -> Result<u64> {
+    let mut probe = NpuDevice::new(npu, program.clone())?;
+    let inputs = vec![vec![0.25f32; program.input_dim()]; batch];
+    Ok((probe.execute_batch(&inputs)?.total_cycles / batch as u64).max(1))
+}
+
+/// The engineered trace: a near-lattice steady class (class 0, one
+/// request per `per_item` with sub-`per_item` jitter, every epoch)
+/// plus a 3×-capacity burst (class 1) opening the death epoch. The
+/// same seed always yields the same trace — failure modes share it.
+fn gen_monitor_trace(
+    program: &NpuProgram,
+    epochs: usize,
+    epoch_cycles: u64,
+    chunk: usize,
+    per_item: u64,
+    seed: u64,
+) -> Vec<FleetRequest> {
+    let dim = program.input_dim();
+    let mut rng = Rng::new(seed);
+    let mut reqs: Vec<FleetRequest> = Vec::new();
+    for e in 0..epochs {
+        let start = e as u64 * epoch_cycles;
+        for i in 0..chunk {
+            let jitter = rng.below((per_item / 2).max(1));
+            reqs.push(FleetRequest {
+                arrival: start + i as u64 * per_item + jitter,
+                input: (0..dim).map(|_| rng.f32() - 0.5).collect(),
+                class: 0,
+            });
+        }
+    }
+    let burst_at = DEATH_EPOCH as u64 * epoch_cycles;
+    for _ in 0..3 * chunk {
+        reqs.push(FleetRequest {
+            arrival: burst_at,
+            input: (0..dim).map(|_| rng.f32() - 0.5).collect(),
+            class: 1,
+        });
+    }
+    // stable sort: equal (arrival, class) keeps generation order
+    reqs.sort_by_key(|r| (r.arrival, r.class));
+    reqs
+}
+
+/// One cell: run the engineered trace under `mode` with monitoring
+/// attached, evaluate the alert engine, and score it against ground
+/// truth. For the clean mode the fleet is additionally re-run with
+/// monitoring detached and every report field `ensure!`d identical.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_on(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    mode: FailureMode,
+    n: usize,
+    batch: usize,
+    seed: u64,
+    tuning: &MonitorTuning,
+) -> Result<E16Row> {
+    ensure!(tuning.epochs >= 6, "monitor.epochs must be ≥ 6 (degrade injects at epoch 4)");
+    ensure!(tuning.fast_window >= 1 && tuning.slow_window >= tuning.fast_window,
+        "monitor windows must satisfy 1 ≤ fast ≤ slow");
+    ensure!(tuning.budget > 0.0, "monitor.budget must be positive");
+    // the grid model keeps the weight-fill (what warm-up prices) explicit
+    let npu = NpuConfig { model: TimingModel::Grid, ..npu };
+    // small batches keep several batches per (epoch, pool) window, so
+    // window quantiles are stable enough to alert on
+    let batch = batch.clamp(1, 4);
+    let per_item = per_item_cycles(npu, program, batch)?;
+    let chunk = n.clamp(8, 32);
+    let epoch_cycles = per_item * chunk as u64;
+    // generous SLO: the engineered traffic never violates it on a
+    // healthy fleet (the zero-false-positive requirement), a degraded
+    // shard always does
+    let slo_cycles = 16 * epoch_cycles;
+    // a degraded shard pays double the SLO again at every batch sync —
+    // drift that no healthy window can mimic
+    let degrade_sync = 2 * slo_cycles;
+
+    let spec = FleetSpec {
+        pools: POOLS,
+        start_shards: START_SHARDS,
+        max_shards: MAX_SHARDS,
+        epochs: tuning.epochs,
+        epoch_cycles,
+        // a quarter epoch, the E15 auto default
+        warmup_cycles: epoch_cycles / 4,
+        max_retries: MAX_RETRIES,
+        route_cost: per_item,
+        failures: mode.failures(),
+    };
+    let trace = gen_monitor_trace(program, tuning.epochs, epoch_cycles, chunk, per_item, seed);
+
+    let base =
+        StackSpec::new(npu, scheme).geometry(E15_CACHE).shared_channel(ArbiterPolicy::Fifo);
+    let policy = BatchPolicy {
+        max_batch: batch,
+        max_wait: Duration::from_micros((epoch_cycles / 16).max(1)), // cycles, by sim convention
+        queue_cap: 1 << 16,
+    };
+    let factory = |topo: &PoolTopology| -> Result<PoolSim> {
+        let mut stack = base.clone().shards(topo.shards);
+        for (s, degraded) in topo.degraded.iter().enumerate() {
+            if *degraded {
+                stack = stack.slow_shard(s, degrade_sync);
+            }
+        }
+        stack.build(program)?.into_pool(policy)
+    };
+
+    let report = FleetSim::new(spec.clone(), &factory)?
+        .with_monitoring(slo_cycles)
+        .run(&trace)?;
+    let ts = report.timeseries.as_ref().expect("monitoring was attached");
+
+    let mcfg = MonitorConfig {
+        fast_window: tuning.fast_window,
+        slow_window: tuning.slow_window,
+        budget: tuning.budget,
+        degrade_factor: tuning.degrade_factor,
+        degrade_margin_cycles: 2 * epoch_cycles,
+        ..MonitorConfig::default()
+    };
+    let verdict: MonitorReport = Monitor::new(mcfg).evaluate(ts);
+
+    // Monitoring must not move a single number: re-run the clean cell
+    // with the monitor detached and pin every field (the fault modes
+    // share the exact same code path, so the clean pin covers them).
+    let mut overhead_cycles = 0u64;
+    if mode == FailureMode::None {
+        let plain = FleetSim::new(spec, &factory)?.run(&trace)?;
+        ensure!(
+            plain.responses == report.responses
+                && plain.rejected == report.rejected
+                && plain.reroutes == report.reroutes
+                && plain.scale_ups == report.scale_ups
+                && plain.scale_downs == report.scale_downs
+                && plain.shard_cycles == report.shard_cycles
+                && plain.makespan == report.makespan
+                && plain.latencies == report.latencies
+                && plain.final_shards == report.final_shards,
+            "monitoring changed the measurement on {}/{}",
+            w.name(),
+            scheme
+        );
+        overhead_cycles = report.shard_cycles - plain.shard_cycles; // provably 0
+    }
+
+    let (detected, detection_epoch) = match mode.rule() {
+        Some(rule) => match verdict.first_fire(rule) {
+            Some(a) => (true, a.epoch as i64),
+            None => (false, -1),
+        },
+        None => (false, -1),
+    };
+    let injected = mode.injected_epoch();
+    let detection_latency = match (detected, injected) {
+        (true, Some(at)) => detection_epoch - at as i64,
+        _ => -1,
+    };
+    let false_positives = match injected {
+        Some(at) => verdict.fires_before(at) as u64,
+        None => verdict.fire_count() as u64,
+    };
+
+    let p99_cycles = crate::obs::timeseries::quantile(&report.latencies, 0.99);
+    Ok(E16Row {
+        workload: w.name().to_string(),
+        scheme: scheme.to_string(),
+        mode: mode.name().to_string(),
+        pools: POOLS,
+        epochs: tuning.epochs,
+        requests: report.requests,
+        responses: report.responses,
+        rejected: report.rejected,
+        reroutes: report.reroutes,
+        injected_epoch: injected.map_or(-1, |e| e as i64),
+        detected,
+        detection_epoch,
+        detection_latency,
+        false_positives,
+        alerts_fired: verdict.fire_count() as u64,
+        burn_rate: verdict.max_burn(),
+        p99_cycles,
+        slo_cycles,
+        overhead_cycles,
+        alerts: verdict.alerts,
+        burn_trajectory: verdict.burn_fast,
+    })
+}
+
+/// The failure-mode sweep for one (kernel, scheme) — one harness job,
+/// three rows, identical traffic.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_all_on(
+    npu: NpuConfig,
+    w: &dyn Workload,
+    program: &NpuProgram,
+    scheme: &str,
+    n: usize,
+    batch: usize,
+    seed: u64,
+    tuning: &MonitorTuning,
+) -> Result<Vec<E16Row>> {
+    MODES
+        .iter()
+        .map(|&mode| measure_on(npu, w, program, scheme, mode, n, batch, seed, tuning))
+        .collect()
+}
+
+/// Full E16 for `run-bench`: every kernel × scheme × failure mode.
+pub fn run(
+    fmt: QFormat,
+    invocations: usize,
+    batch: usize,
+    tuning: &MonitorTuning,
+) -> Result<Vec<E16Row>> {
+    let manifest = super::load_manifest().ok();
+    let mut rows = Vec::new();
+    for w in all_workloads() {
+        let program = match &manifest {
+            Some(m) => super::program_from_artifact(m, w.name(), fmt)
+                .unwrap_or_else(|_| super::program_from_workload(w.as_ref(), fmt, 42)),
+            None => super::program_from_workload(w.as_ref(), fmt, 42),
+        };
+        for scheme in super::e5_bandwidth::SCHEMES {
+            rows.extend(measure_all_on(
+                NpuConfig::default(),
+                w.as_ref(),
+                &program,
+                scheme,
+                invocations,
+                batch,
+                73,
+                tuning,
+            )?);
+        }
+    }
+    Ok(rows)
+}
+
+pub fn print_table(rows: &[E16Row]) {
+    let mut t = Table::new(&[
+        "workload",
+        "scheme",
+        "mode",
+        "req",
+        "rej",
+        "reroute",
+        "detected",
+        "latency(ep)",
+        "false-pos",
+        "max-burn",
+        "p99(cyc)",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.workload.clone(),
+            r.scheme.clone(),
+            r.mode.clone(),
+            format!("{}", r.requests),
+            format!("{}", r.rejected),
+            format!("{}", r.reroutes),
+            if r.injected_epoch < 0 {
+                "n/a".to_string()
+            } else if r.detected {
+                "yes".to_string()
+            } else {
+                "MISS".to_string()
+            },
+            if r.detection_latency < 0 {
+                "-".to_string()
+            } else {
+                format!("{}", r.detection_latency)
+            },
+            format!("{}", r.false_positives),
+            format!("{:.2}", r.burn_rate),
+            format!("{}", r.p99_cycles),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::workload;
+    use crate::fixed::Q7_8;
+
+    fn setup(name: &str) -> (Box<dyn Workload>, NpuProgram) {
+        let w = workload(name).unwrap();
+        let p = super::super::program_from_workload(w.as_ref(), Q7_8, 1);
+        (w, p)
+    }
+
+    fn tuning() -> MonitorTuning {
+        MonitorTuning { epochs: 6, ..MonitorTuning::default() }
+    }
+
+    #[test]
+    fn all_modes_conserve_detect_and_stay_clean() {
+        let (w, p) = setup("sobel");
+        let rows =
+            measure_all_on(NpuConfig::default(), w.as_ref(), &p, "bdi", 8, 4, 7, &tuning())
+                .unwrap();
+        assert_eq!(rows.len(), 3);
+        let modes: Vec<&str> = rows.iter().map(|r| r.mode.as_str()).collect();
+        assert_eq!(modes, vec!["none", "death", "degrade"]);
+        // identical traffic across modes
+        assert!(rows.iter().all(|r| r.requests == rows[0].requests && r.requests > 0));
+        for r in &rows {
+            assert_eq!(r.responses + r.rejected, r.requests, "{} conserves", r.mode);
+            assert_eq!(r.false_positives, 0, "{} fired while healthy: {:?}", r.mode, r.alerts);
+        }
+        let clean = &rows[0];
+        assert_eq!(clean.alerts_fired, 0, "clean run must be silent: {:?}", clean.alerts);
+        assert!(!clean.detected);
+        assert_eq!((clean.detection_latency, clean.overhead_cycles), (-1, 0));
+        assert_eq!(clean.burn_rate, 0.0);
+        let death = &rows[1];
+        assert!(death.reroutes > 0, "the burst must witness the death");
+        assert!(death.detected, "death undetected: {:?}", death.alerts);
+        assert!(
+            (0..=2).contains(&death.detection_latency),
+            "death latency {} epochs",
+            death.detection_latency
+        );
+        let degrade = &rows[2];
+        assert!(degrade.detected, "degrade undetected: {:?}", degrade.alerts);
+        assert!(
+            (0..=2).contains(&degrade.detection_latency),
+            "degrade latency {} epochs",
+            degrade.detection_latency
+        );
+    }
+
+    #[test]
+    fn rows_are_deterministic_across_runs_including_alerts() {
+        let (w, p) = setup("fft");
+        let run = || {
+            measure_all_on(NpuConfig::default(), w.as_ref(), &p, "fpc", 8, 4, 11, &tuning())
+                .unwrap()
+        };
+        let (a, b) = (run(), run());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_json().dump(), y.to_json().dump(), "rows must be byte-identical");
+        }
+    }
+
+    #[test]
+    fn unknown_scheme_is_a_clean_error() {
+        let (w, p) = setup("sobel");
+        let err = measure_on(
+            NpuConfig::default(),
+            w.as_ref(),
+            &p,
+            "zstd",
+            FailureMode::None,
+            8,
+            4,
+            1,
+            &tuning(),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn tuning_is_validated() {
+        let (w, p) = setup("sobel");
+        let npu = NpuConfig::default();
+        let mut t = tuning();
+        t.epochs = 4;
+        assert!(measure_on(npu, w.as_ref(), &p, "bdi", FailureMode::None, 8, 4, 1, &t).is_err());
+        let mut t = tuning();
+        t.budget = 0.0;
+        assert!(measure_on(npu, w.as_ref(), &p, "bdi", FailureMode::None, 8, 4, 1, &t).is_err());
+        let mut t = tuning();
+        t.fast_window = 5;
+        assert!(measure_on(npu, w.as_ref(), &p, "bdi", FailureMode::None, 8, 4, 1, &t).is_err());
+    }
+}

@@ -1,6 +1,6 @@
 //! Unified, multi-threaded experiment harness.
 //!
-//! One registry ([`EXPERIMENTS`]) describes E1..E15; [`build_jobs`] expands
+//! One registry ([`EXPERIMENTS`]) describes E1..E16; [`build_jobs`] expands
 //! a [`HarnessConfig`] into the full sweep grid (every bench_suite kernel
 //! × every compression scheme where the experiment varies by scheme, plus
 //! the synthetic-distribution jobs); [`run`] fans the jobs out over a
@@ -23,14 +23,15 @@ use crate::bench_suite::{all_workloads, workload, Workload};
 use crate::compress::lcp::PAGE_BYTES;
 use crate::fixed::{QFormat, Q7_8};
 use crate::npu::{NpuConfig, NpuProgram};
+use crate::obs::Registry;
 use crate::trace::Synthetic;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::{
-    e10_serving, e11_slo, e12_systolic, e13_accounting, e14_tenancy, e15_fleet, e1_compression,
-    e2_speedup, e3_energy, e4_quality, e5_bandwidth, e6_batching, e7_lcp, e8_ablation, e9_cache,
-    selfbench,
+    e10_serving, e11_slo, e12_systolic, e13_accounting, e14_tenancy, e15_fleet, e16_monitor,
+    e1_compression, e2_speedup, e3_energy, e4_quality, e5_bandwidth, e6_batching, e7_lcp,
+    e8_ablation, e9_cache, selfbench,
 };
 
 /// What a job measures: a bench_suite kernel or a synthetic distribution.
@@ -77,7 +78,7 @@ pub struct Scenario {
 /// A registry entry describing one experiment.
 #[derive(Debug, Clone, Copy)]
 pub struct ExperimentSpec {
-    /// Stable id ("e1".."e15") — the CLI/CI selector and report key.
+    /// Stable id ("e1".."e16") — the CLI/CI selector and report key.
     pub id: &'static str,
     pub title: &'static str,
     /// Whether the sweep fans out one job per compression scheme.
@@ -94,7 +95,7 @@ pub struct ExperimentSpec {
 }
 
 /// All experiments, in report order.
-pub static EXPERIMENTS: [ExperimentSpec; 15] = [
+pub static EXPERIMENTS: [ExperimentSpec; 16] = [
     ExperimentSpec {
         id: "e1",
         title: "compression ratio per workload stream",
@@ -219,6 +220,16 @@ pub static EXPERIMENTS: [ExperimentSpec; 15] = [
         shared_seed_per_kernel: true,
         sweeps_channel_policies: false,
     },
+    ExperimentSpec {
+        id: "e16",
+        title: "fleet health monitoring: burn-rate alerting + fault detection latency",
+        per_scheme: true, // every pool's hierarchies use the scheme
+        synthetics: false,
+        // detection latency is compared across schemes, so scheme cells
+        // of one kernel must see identical traffic and failure schedules
+        shared_seed_per_kernel: true,
+        sweeps_channel_policies: false,
+    },
 ];
 
 /// The simulator self-benchmark (sim-cycles-per-wall-second on pinned
@@ -236,7 +247,7 @@ pub static SELFBENCH: ExperimentSpec = ExperimentSpec {
     sweeps_channel_policies: false,
 };
 
-/// Look an experiment up by id ("e1".."e15", or "selfbench").
+/// Look an experiment up by id ("e1".."e16", or "selfbench").
 pub fn experiment(id: &str) -> Option<&'static ExperimentSpec> {
     if id == SELFBENCH.id {
         return Some(&SELFBENCH);
@@ -244,10 +255,10 @@ pub fn experiment(id: &str) -> Option<&'static ExperimentSpec> {
     EXPERIMENTS.iter().find(|e| e.id == id)
 }
 
-/// Sweep configuration (defaults = the full e1–e15 grid).
+/// Sweep configuration (defaults = the full e1–e16 grid).
 #[derive(Debug, Clone)]
 pub struct HarnessConfig {
-    /// Experiment ids to run (subset of "e1".."e15").
+    /// Experiment ids to run (subset of "e1".."e16").
     pub experiments: Vec<String>,
     /// Kernels to sweep (subset of the bench_suite names).
     pub benchmarks: Vec<String>,
@@ -350,7 +361,7 @@ pub fn build_jobs(cfg: &HarnessConfig) -> Result<Vec<Job>> {
     let mut jobs = Vec::new();
     for id in &cfg.experiments {
         let spec = experiment(id)
-            .with_context(|| format!("unknown experiment {id:?} (expected e1..e15 or selfbench)"))?;
+            .with_context(|| format!("unknown experiment {id:?} (expected e1..e16 or selfbench)"))?;
         let schemes: Vec<&str> = if spec.per_scheme {
             cfg.schemes.iter().map(String::as_str).collect()
         } else {
@@ -614,6 +625,21 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
             )?;
             Ok(rows.iter().map(e15_fleet::E15Row::to_json).collect())
         }
+        ("e16", Target::Bench(b)) => {
+            let w = workload(b).unwrap();
+            let p = program_for(b, sc.qformat, seed)?;
+            let rows = e16_monitor::measure_all_on(
+                sc.npu,
+                w.as_ref(),
+                &p,
+                &sc.scheme,
+                sc.invocations,
+                sc.batch,
+                seed,
+                &e16_monitor::MonitorTuning::default(),
+            )?;
+            Ok(rows.iter().map(e16_monitor::E16Row::to_json).collect())
+        }
         ("e8", Target::Bench(b)) => {
             let w = workload(b).unwrap();
             let p = program_for(b, sc.qformat, seed)?;
@@ -649,6 +675,27 @@ pub fn run_job(job: &Job) -> Result<Vec<Json>> {
     }
 }
 
+/// Execute one job, publishing its outcome counters into `reg`.
+///
+/// `reg` must be a registry *owned by this cell*. A registry shared
+/// across parallel cells — worst of all the process-global one
+/// (`obs::global()`, reserved for `snnapc serve`) — merges their
+/// counters: two cells that each produced three rows become
+/// indistinguishable from one cell that produced six, and a failure in
+/// one cell taints every cell's numbers. The worker pool therefore
+/// creates a fresh [`Registry`] per job and snapshots it into the
+/// [`JobResult`] (pinned by `cells_get_isolated_registries`).
+pub fn run_job_observed(job: &Job, reg: &Registry) -> Result<Vec<Json>> {
+    let rows = run_job(job);
+    let pre = format!("harness.{}", job.experiment);
+    reg.counter_add(&format!("{pre}.cells"), 1);
+    match &rows {
+        Ok(r) => reg.counter_add(&format!("{pre}.rows"), r.len() as u64),
+        Err(_) => reg.counter_add(&format!("{pre}.errors"), 1),
+    }
+    rows
+}
+
 /// The outcome of one job.
 #[derive(Debug)]
 pub struct JobResult {
@@ -656,13 +703,18 @@ pub struct JobResult {
     pub experiment: &'static str,
     pub scenario: Scenario,
     pub elapsed_ms: f64,
+    /// Snapshot of the cell's own isolated metrics registry. Kept out
+    /// of the consolidated report payload (like `elapsed_ms`): it is a
+    /// per-cell diagnostic, not a measurement.
+    pub metrics: Json,
     pub rows: Result<Vec<Json>>,
 }
 
 /// Run jobs on a fixed-size std-thread worker pool. Workers pull from a
 /// shared atomic cursor (no work item is ever lost or run twice); results
 /// come back in job order regardless of scheduling, so reports are
-/// deterministic for a fixed config + seed.
+/// deterministic for a fixed config + seed. Every job observes into its
+/// own fresh [`Registry`] — see [`run_job_observed`].
 pub fn run_jobs(jobs: &[Job], workers: usize) -> Vec<JobResult> {
     let next = AtomicUsize::new(0);
     let out: Mutex<Vec<(usize, JobResult)>> = Mutex::new(Vec::with_capacity(jobs.len()));
@@ -675,13 +727,15 @@ pub fn run_jobs(jobs: &[Job], workers: usize) -> Vec<JobResult> {
                     break;
                 }
                 let job = &jobs[i];
+                let cell = Registry::new();
                 let t0 = Instant::now();
-                let rows = run_job(job);
+                let rows = run_job_observed(job, &cell);
                 let r = JobResult {
                     label: job.label.clone(),
                     experiment: job.experiment,
                     scenario: job.scenario.clone(),
                     elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    metrics: cell.snapshot(),
                     rows,
                 };
                 out.lock().unwrap().push((i, r));
@@ -802,7 +856,7 @@ mod tests {
             ids,
             [
                 "e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12",
-                "e13", "e14", "e15"
+                "e13", "e14", "e15", "e16"
             ]
         );
         assert!(experiment("e5").unwrap().per_scheme);
@@ -817,7 +871,10 @@ mod tests {
         assert!(experiment("e15").unwrap().per_scheme);
         assert!(experiment("e15").unwrap().shared_seed_per_kernel);
         assert!(!experiment("e15").unwrap().sweeps_channel_policies);
-        assert!(experiment("e16").is_none());
+        assert!(experiment("e16").unwrap().per_scheme);
+        assert!(experiment("e16").unwrap().shared_seed_per_kernel);
+        assert!(!experiment("e16").unwrap().sweeps_channel_policies);
+        assert!(experiment("e17").is_none());
     }
 
     #[test]
@@ -860,6 +917,7 @@ mod tests {
         assert_eq!(count("e13"), 7 * 5, "e13 fans out per scheme");
         assert_eq!(count("e14"), 7 * 5, "e14 fans out per scheme");
         assert_eq!(count("e15"), 7 * 5, "e15 fans out per scheme");
+        assert_eq!(count("e16"), 7 * 5, "e16 fans out per scheme");
         // only e11 jobs carry the channel-policy sweep
         for j in &jobs {
             if j.experiment == "e11" {
@@ -919,8 +977,12 @@ mod tests {
         for (a, b) in jobs.iter().zip(&again) {
             assert_eq!(a.scenario.seed, b.scenario.seed, "{}", a.label);
         }
-        let shares_seed =
-            |j: &&Job| j.experiment == "e11" || j.experiment == "e13" || j.experiment == "e15";
+        let shares_seed = |j: &&Job| {
+            j.experiment == "e11"
+                || j.experiment == "e13"
+                || j.experiment == "e15"
+                || j.experiment == "e16"
+        };
         let mut seeds: Vec<u64> =
             jobs.iter().filter(|j| !shares_seed(j)).map(|j| j.scenario.seed).collect();
         let independent = seeds.len();
@@ -928,11 +990,11 @@ mod tests {
         seeds.dedup();
         assert_eq!(seeds.len(), independent, "per-job seeds must be distinct");
 
-        // e11/e13/e15 scheme cells share one seed per kernel (their
+        // e11/e13/e15/e16 scheme cells share one seed per kernel (their
         // headline metrics are compared across schemes, so every cell
         // must replay identical programs and traffic), but kernels
         // still draw independent streams
-        for id in ["e11", "e13", "e15"] {
+        for id in ["e11", "e13", "e15", "e16"] {
             let group: Vec<&Job> = jobs.iter().filter(|j| j.experiment == id).collect();
             assert!(!group.is_empty());
             for a in &group {
@@ -953,6 +1015,55 @@ mod tests {
         let cfg2 = HarnessConfig { seed: 43, ..cfg };
         let other = build_jobs(&cfg2).unwrap();
         assert!(jobs.iter().zip(&other).all(|(a, b)| a.scenario.seed != b.scenario.seed));
+    }
+
+    #[test]
+    fn cells_get_isolated_registries() {
+        let cfg = HarnessConfig {
+            experiments: vec!["e2".into()],
+            benchmarks: vec!["sobel".into(), "fft".into()],
+            ..tiny_cfg()
+        };
+        let jobs = build_jobs(&cfg).unwrap();
+        assert_eq!(jobs.len(), 2);
+
+        // the bug this guards against: one registry shared across cells
+        // merges their counters — the two cells below become
+        // indistinguishable from one cell that ran twice
+        let shared = Registry::new();
+        for job in &jobs {
+            run_job_observed(job, &shared).unwrap();
+        }
+        let bled = shared.snapshot();
+        assert_eq!(
+            bled.get("harness.e2.cells").and_then(|c| c.get("value")).and_then(Json::as_f64),
+            Some(2.0),
+            "a shared registry accumulates across cells"
+        );
+
+        // the worker pool gives every cell its own registry: each
+        // snapshot sees exactly its own cell, with disjoint counts
+        let results = run_jobs(&jobs, 2);
+        for r in &results {
+            let cells = r
+                .metrics
+                .get("harness.e2.cells")
+                .and_then(|c| c.get("value"))
+                .and_then(Json::as_f64);
+            assert_eq!(cells, Some(1.0), "{}: cell metrics must be isolated", r.label);
+            let rows = r
+                .metrics
+                .get("harness.e2.rows")
+                .and_then(|c| c.get("value"))
+                .and_then(Json::as_f64);
+            assert_eq!(
+                rows,
+                Some(r.rows.as_ref().unwrap().len() as f64),
+                "{}: row count attributes to its own cell",
+                r.label
+            );
+            assert!(r.metrics.get("harness.e2.errors").is_none());
+        }
     }
 
     #[test]

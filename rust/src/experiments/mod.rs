@@ -1,4 +1,4 @@
-//! Experiment implementations E1..E15 (see DESIGN.md §2).
+//! Experiment implementations E1..E16 (see DESIGN.md §2).
 //!
 //! Each experiment is a pure function from configuration to printable
 //! rows, so the CLI (`snnapc run-bench`), the criterion-style bench
@@ -11,7 +11,7 @@
 //! serving-shaped experiments.
 //!
 //! [`harness`] layers a registry + worker pool on top: one command runs
-//! the whole e1–e15 sweep (kernels × schemes) in parallel and emits a
+//! the whole e1–e16 sweep (kernels × schemes) in parallel and emits a
 //! single machine-readable JSON report (`snnapc experiments --all`).
 
 pub mod e1_compression;
@@ -21,6 +21,7 @@ pub mod e12_systolic;
 pub mod e13_accounting;
 pub mod e14_tenancy;
 pub mod e15_fleet;
+pub mod e16_monitor;
 pub mod e2_speedup;
 pub mod e3_energy;
 pub mod e4_quality;

@@ -4,9 +4,10 @@
 //!   info            show artifact manifest + effective config
 //!   serve           start the sharded batching pool and drive it with a
 //!                   synthetic open-loop client (requests/s, duration)
-//!   experiments     run the e1..e15 sweep in parallel and emit one
+//!   experiments     run the e1..e16 sweep in parallel and emit one
 //!                   consolidated JSON report (the harness)
-//!   run-bench       print experiment tables: e1..e15 or all (serial)
+//!   run-bench       print experiment tables: e1..e16 or all (serial)
+//!   report-diff     per-cell metric deltas between two harness reports
 //!   compress-file   per-scheme compression report for any file
 //!   trace           dump + compress a benchmark's NPU streams
 //!   config          print the effective configuration (reloadable)
@@ -20,6 +21,7 @@
 //!   snnapc run-bench --experiment e10
 //!   snnapc compress-file artifacts/jmeint.weights.bin
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -64,7 +66,7 @@ COMMANDS:
     --trace FILE            record a Perfetto/chrome-trace JSON of the run
                             (batch spans per shard, channel grant/burst
                             spans, cache/DRAM counters, registry snapshot)
-  experiments               parallel e1..e15 sweep + one JSON report
+  experiments               parallel e1..e16 sweep + one JSON report
     --all                   run every experiment (default when no
                             --experiment is given)
     --experiment LIST       subset, e.g. e1 or e1,e9,e10,e11,e14
@@ -109,9 +111,18 @@ COMMANDS:
                             warm-up cost, injected shard death/degrade
                             — and reports p99, reroutes, shard-cycles
                             and cost-per-QPS-at-SLO; fleet.* keys shape
-                            the run)
+                            the run;
+                            e16 attaches the fleet health monitor —
+                            per-epoch time-series windows, multi-window
+                            SLO burn-rate alerts, metrics-only shard
+                            death/degrade detectors — and scores the
+                            alert log against injected faults:
+                            detection latency in epochs, false
+                            positives, burn trajectories; monitoring on
+                            vs off is bit-identical; monitor.* keys
+                            shape the run)
   run-bench                 print experiment tables (serial)
-    --experiment e1..e15|all which experiment (default all)
+    --experiment e1..e16|all which experiment (default all)
     --invocations N         stream length knob (default 256)
   selfbench                 simulator throughput self-benchmark (serial):
                             sim-cycles-per-wall-second per hot path
@@ -122,6 +133,11 @@ COMMANDS:
     --seed N                base RNG seed (default 42)
     --out FILE              also write the harness-format JSON report
                             (feed to scripts/bench_trend.py)
+  report-diff A.json B.json per-cell metric deltas between two harness
+                            reports (numeric/boolean row fields, keyed
+                            label[row].metric; prints what moved)
+    --fail-over PCT         exit nonzero if any metric moved more than
+                            PCT percent (turns the diff into a gate)
   compress-file FILE        per-scheme report for a file
   trace                     dump a benchmark's NPU streams
     --benchmark NAME        workload (default sobel)
@@ -136,8 +152,11 @@ GLOBAL:
                             npu.decode_rate shape the PE grid;
                             fleet.pools/fleet.max_shards/fleet.epochs/
                             fleet.warmup_cycles/fleet.failures shape
-                            E15; an unknown key is a hard error that
-                            lists every valid key)
+                            E15; monitor.epochs/monitor.fast_window/
+                            monitor.slow_window/monitor.budget/
+                            monitor.degrade_factor shape E16's alerting
+                            thresholds; an unknown key is a hard error
+                            that lists every valid key)
 ";
 
 fn build_config(args: &Args) -> Result<Config> {
@@ -522,6 +541,17 @@ fn fleet_tuning(cfg: &Config) -> ex::e15_fleet::FleetTuning {
     }
 }
 
+/// E16 monitoring knobs from the `monitor.*` config keys.
+fn monitor_tuning(cfg: &Config) -> ex::e16_monitor::MonitorTuning {
+    ex::e16_monitor::MonitorTuning {
+        epochs: cfg.monitor_epochs,
+        fast_window: cfg.monitor_fast_window,
+        slow_window: cfg.monitor_slow_window,
+        budget: cfg.monitor_budget,
+        degrade_factor: cfg.monitor_degrade_factor,
+    }
+}
+
 fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
     let which = args.opt("experiment").unwrap_or("all");
     let invocations = opt_positive(args, "invocations", 256)?;
@@ -623,6 +653,109 @@ fn cmd_run_bench(cfg: &Config, args: &Args) -> Result<()> {
             &fleet_tuning(cfg),
         )?);
     }
+    if run_all || which == "e16" {
+        println!("\n== E16: fleet health monitoring (burn-rate alerts, fault detection) ==");
+        ex::e16_monitor::print_table(&ex::e16_monitor::run(
+            cfg.qformat,
+            invocations,
+            cfg.policy.max_batch,
+            &monitor_tuning(cfg),
+        )?);
+    }
+    Ok(())
+}
+
+/// Parse one harness report file.
+fn load_report(path: &str) -> Result<Json> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+}
+
+/// Flatten a harness report's measurement payload into
+/// `label[row].metric -> value` pairs. Numeric and boolean row fields
+/// are kept (booleans as 0/1); nested structures (alert logs, stage
+/// breakdowns) are skipped — they diff as their scalar summaries.
+fn flatten_cells(report: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    let Some(Json::Obj(experiments)) = report.get("experiments") else {
+        return out;
+    };
+    for cells in experiments.values() {
+        for cell in cells.as_arr().into_iter().flatten() {
+            let label = cell.get("label").and_then(|l| l.as_str()).unwrap_or("?");
+            let rows = cell.get("rows").and_then(|r| r.as_arr()).into_iter().flatten();
+            for (i, row) in rows.enumerate() {
+                if let Json::Obj(fields) = row {
+                    for (k, v) in fields {
+                        let num = match v {
+                            Json::Num(n) => Some(*n),
+                            Json::Bool(b) => Some(if *b { 1.0 } else { 0.0 }),
+                            _ => None,
+                        };
+                        if let Some(n) = num {
+                            out.insert(format!("{label}[{i}].{k}"), n);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `snnapc report-diff A.json B.json`: per-cell metric deltas between
+/// two harness reports — the perf-trajectory complement to
+/// `scripts/bench_trend.py` (that gates a fixed metric set against a
+/// pinned baseline; this shows everything that moved between any two
+/// reports). `--fail-over PCT` turns the diff into a gate.
+fn cmd_report_diff(args: &Args) -> Result<()> {
+    let (a_path, b_path) = match args.positional.as_slice() {
+        [a, b] => (a.as_str(), b.as_str()),
+        _ => bail!("usage: snnapc report-diff A.json B.json [--fail-over PCT]"),
+    };
+    let fail_over: Option<f64> = match args.opt("fail-over") {
+        Some(v) => {
+            let pct: f64 = v.parse().context("--fail-over")?;
+            anyhow::ensure!(pct >= 0.0, "--fail-over must be non-negative (got {pct})");
+            Some(pct)
+        }
+        None => None,
+    };
+    let a = flatten_cells(&load_report(a_path)?);
+    let b = flatten_cells(&load_report(b_path)?);
+    anyhow::ensure!(!a.is_empty(), "{a_path} holds no diffable cells");
+    anyhow::ensure!(!b.is_empty(), "{b_path} holds no diffable cells");
+
+    let only_a = a.keys().filter(|k| !b.contains_key(*k)).count();
+    let only_b = b.keys().filter(|k| !a.contains_key(*k)).count();
+    let mut t = Table::new(&["metric", "a", "b", "delta%"]);
+    let (mut compared, mut changed) = (0usize, 0usize);
+    let mut worst = 0.0f64;
+    for (k, &va) in &a {
+        let Some(&vb) = b.get(k) else { continue };
+        compared += 1;
+        if va == vb {
+            continue;
+        }
+        // a metric appearing from zero has no finite percentage; infinity
+        // keeps it ahead of any --fail-over threshold
+        let pct = if va == 0.0 { f64::INFINITY } else { (vb - va) / va * 100.0 };
+        changed += 1;
+        worst = worst.max(pct.abs());
+        t.row(&[k.clone(), format!("{va}"), format!("{vb}"), format!("{pct:+.2}%")]);
+    }
+    if changed > 0 {
+        t.print();
+    }
+    println!(
+        "{compared} metrics compared, {changed} changed, {only_a} only in {a_path}, {only_b} only in {b_path}"
+    );
+    if let Some(limit) = fail_over {
+        if worst > limit {
+            bail!("metric drift {worst:.2}% exceeds --fail-over {limit}%");
+        }
+    }
     Ok(())
 }
 
@@ -683,6 +816,7 @@ fn main() -> Result<()> {
         "experiments" => cmd_experiments(&cfg, &args),
         "run-bench" => cmd_run_bench(&cfg, &args),
         "selfbench" => cmd_selfbench(&cfg, &args),
+        "report-diff" => cmd_report_diff(&args),
         "compress-file" => cmd_compress_file(&args),
         "trace" => cmd_trace(&cfg, &args),
         "config" => {
@@ -798,6 +932,74 @@ mod tests {
         assert_eq!(t.pools, Some(3));
         assert!(!t.failures);
         assert_eq!((t.max_shards, t.epochs, t.warmup_cycles), (6, 10, 0));
+    }
+
+    #[test]
+    fn monitor_tuning_maps_the_monitor_config_keys() {
+        let mut cfg = Config::default();
+        let t = monitor_tuning(&cfg);
+        assert_eq!((t.epochs, t.fast_window, t.slow_window), (8, 1, 3));
+        assert_eq!((t.budget, t.degrade_factor), (0.05, 1.5));
+        cfg.apply_overrides(&["monitor.epochs=12".into(), "monitor.budget=0.2".into()]).unwrap();
+        let t = monitor_tuning(&cfg);
+        assert_eq!(t.epochs, 12);
+        assert_eq!(t.budget, 0.2);
+    }
+
+    fn fake_report(dir: &Path, name: &str, ratio: f64, extra: bool) -> String {
+        let mut row = vec![("ratio", Json::Num(ratio)), ("met_slo", Json::Bool(true))];
+        if extra {
+            row.push(("added", Json::Num(1.0)));
+        }
+        let report = Json::obj(vec![
+            ("schema_version", 1usize.into()),
+            (
+                "experiments",
+                Json::obj(vec![(
+                    "e1",
+                    Json::Arr(vec![Json::obj(vec![
+                        ("label", "e1/sobel".into()),
+                        ("rows", Json::Arr(vec![Json::obj(row)])),
+                    ])]),
+                )]),
+            ),
+        ]);
+        let p = dir.join(name);
+        std::fs::write(&p, report.dump()).unwrap();
+        p.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn report_diff_flattens_compares_and_gates() {
+        let dir = std::env::temp_dir().join("snnapc_report_diff_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = fake_report(&dir, "a.json", 2.0, false);
+        let b = fake_report(&dir, "b.json", 3.0, true);
+
+        let flat = flatten_cells(&load_report(&a).unwrap());
+        assert_eq!(flat.get("e1/sobel[0].ratio"), Some(&2.0));
+        assert_eq!(flat.get("e1/sobel[0].met_slo"), Some(&1.0), "booleans diff as 0/1");
+
+        // ratio moved 2.0 -> 3.0 = +50%; the gate trips below that and
+        // passes above it, and the asymmetric `added` field must not trip it
+        let argv = |s: &str| args(s);
+        assert!(cmd_report_diff(&argv(&format!("report-diff {a} {b}"))).is_ok());
+        assert!(cmd_report_diff(&argv(&format!("report-diff {a} {b} --fail-over 60"))).is_ok());
+        let err = cmd_report_diff(&argv(&format!("report-diff {a} {b} --fail-over 10")))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exceeds"), "{err}");
+        // identical reports never trip a zero-tolerance gate
+        assert!(cmd_report_diff(&argv(&format!("report-diff {a} {a} --fail-over 0"))).is_ok());
+    }
+
+    #[test]
+    fn report_diff_rejects_bad_usage() {
+        let one = args("report-diff only.json");
+        let err = cmd_report_diff(&one).unwrap_err().to_string();
+        assert!(err.contains("usage"), "{err}");
+        let missing = args("report-diff nope-a.json nope-b.json");
+        assert!(cmd_report_diff(&missing).is_err());
     }
 
     #[test]

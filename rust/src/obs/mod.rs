@@ -22,6 +22,15 @@
 //! * [`track`] — the fixed track-id layout used by every
 //!   instrumentation hook, so traces from any experiment line up the
 //!   same way in the viewer.
+//! * [`TimeSeries`] — fixed virtual-time windows (fleet epochs) over
+//!   the registry's counters: per-pool arrivals/responses/reroutes/
+//!   rejections, queue depth, channel wait and latency quantiles,
+//!   closed deterministically at every epoch boundary of
+//!   `FleetSim::run` (PR 10).
+//! * [`Monitor`] — SRE-style alerting over a time-series: multi-window
+//!   SLO burn-rate rules plus metrics-only shard-death/degrade
+//!   detectors, emitting a deterministic fire/clear alert log — the
+//!   layer E16 measures detection latency on (PR 10).
 //!
 //! Instrumentation hooks live in `PoolSim::execute` (per-batch stage
 //! spans + per-request accounting instants), `ChannelHub::grant`
@@ -31,10 +40,14 @@
 //! state; with tracing enabled or disabled every experiment number is
 //! bit-identical (pinned by `tests/sim_equivalence.rs`).
 
+pub mod monitor;
 pub mod registry;
+pub mod timeseries;
 pub mod tracer;
 
+pub use monitor::{Alert, AlertEdge, Monitor, MonitorConfig, MonitorReport};
 pub use registry::{global, Registry};
+pub use timeseries::{PoolWindow, TimeSeries, WindowSample};
 pub use tracer::{chrome_trace_from_spill, Phase, TraceEvent, Tracer};
 
 /// Fixed trace-track layout (`tid` in the Chrome export; `pid` is

@@ -1,0 +1,529 @@
+//! SRE-style alerting over the fleet [`TimeSeries`] (PR 10).
+//!
+//! Four rule families, all *metrics-only* — the monitor sees exactly
+//! what an operator's dashboard would (the per-epoch windows), never
+//! the simulator's ground-truth failure schedule, which is what makes
+//! E16's detection-latency measurement honest:
+//!
+//! * **`slo_fast_burn` / `slo_slow_burn`** — multi-window error-budget
+//!   burn rates, the classic SRE pair. Per window the bad-event count
+//!   is `over_slo + rejections` and the total is `responses +
+//!   rejections`; the burn rate over a trailing window of `fast_window`
+//!   (resp. `slow_window`) epochs is `bad_fraction / budget`. The fast
+//!   rule trips on sharp cliffs (high threshold, short window), the
+//!   slow rule on sustained leaks (low threshold, long window).
+//! * **`shard_death`** (per pool) — throughput collapse: completions
+//!   this pool already produced were voided and had to reroute or be
+//!   rejected. In the fleet simulator reroutes/rejections *only* arise
+//!   from a shard death voiding post-midpoint completions, so this
+//!   detector is exact: zero false positives on clean runs, and a
+//!   reroute spike is the direct metrics witness of the collapse.
+//! * **`shard_degrade`** (per pool) — latency drift without arrival
+//!   change: a pool's p99 pulls away from the *concurrent* fleet
+//!   baseline (the max p99 among the other pools in the same epoch)
+//!   by more than `degrade_factor` ×, with an absolute
+//!   `degrade_margin_cycles` guard so small-sample quantile jitter
+//!   between symmetric pools can never trip it, gated on comparable
+//!   arrivals (within 2× of each other) so load imbalance is not
+//!   mistaken for degradation. Comparing across pools in the same
+//!   epoch instead of across time cancels every scheme/kernel service
+//!   -time scale factor; it needs ≥ 2 pools (the rule is inert on a
+//!   single-pool fleet).
+//!
+//! Rules are **latched** per (rule, pool): the log records a `fire`
+//! edge when a rule's condition first holds and a `clear` edge when it
+//! next stops holding, never repeats while the state is unchanged, and
+//! is emitted in deterministic (epoch, rule, pool) order — two runs on
+//! the same series produce byte-identical JSON.
+
+use crate::util::json::Json;
+
+use super::timeseries::TimeSeries;
+
+/// Alerting thresholds. The defaults follow the SRE-workbook shape
+/// (fast = 1 window at high burn, slow = several windows at low burn);
+/// E16 maps the `monitor.*` config keys here.
+#[derive(Debug, Clone)]
+pub struct MonitorConfig {
+    /// Fast burn-rate window, in epochs.
+    pub fast_window: usize,
+    /// Slow burn-rate window, in epochs.
+    pub slow_window: usize,
+    /// Error budget: tolerated bad-event fraction (e.g. 0.05 = 5%).
+    pub budget: f64,
+    /// Fast-window burn-rate threshold.
+    pub fast_burn: f64,
+    /// Slow-window burn-rate threshold.
+    pub slow_burn: f64,
+    /// Voided completions (reroutes + rejections) in one window that
+    /// count as a death signature.
+    pub death_events_min: u64,
+    /// p99 ratio over the concurrent cross-pool baseline that counts
+    /// as degradation.
+    pub degrade_factor: f64,
+    /// Absolute p99 gap (cycles) the degrade rule additionally
+    /// requires, so quantile jitter between symmetric pools can never
+    /// fire it. Callers with an epoch clock should set this to a
+    /// multiple of `epoch_cycles` (E16 uses 2×).
+    pub degrade_margin_cycles: u64,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> MonitorConfig {
+        MonitorConfig {
+            fast_window: 1,
+            slow_window: 3,
+            budget: 0.05,
+            fast_burn: 8.0,
+            slow_burn: 2.0,
+            death_events_min: 1,
+            degrade_factor: 1.5,
+            degrade_margin_cycles: 0,
+        }
+    }
+}
+
+/// Alert edge direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertEdge {
+    Fire,
+    Clear,
+}
+
+impl AlertEdge {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlertEdge::Fire => "fire",
+            AlertEdge::Clear => "clear",
+        }
+    }
+}
+
+/// One fire/clear edge in the alert log.
+#[derive(Debug, Clone)]
+pub struct Alert {
+    /// `slo_fast_burn` | `slo_slow_burn` | `shard_death` |
+    /// `shard_degrade`.
+    pub rule: &'static str,
+    /// Pool scope; `None` for fleet-wide (the burn-rate rules).
+    pub pool: Option<usize>,
+    /// Epoch whose window evaluation produced this edge.
+    pub epoch: usize,
+    pub edge: AlertEdge,
+    /// The rule's measured value at the edge (burn rate, voided count,
+    /// p99 ratio).
+    pub value: f64,
+    /// The threshold it was judged against.
+    pub threshold: f64,
+}
+
+impl Alert {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rule", self.rule.into()),
+            ("pool", self.pool.map_or(Json::Null, Json::from)),
+            ("epoch", self.epoch.into()),
+            ("edge", self.edge.name().into()),
+            ("value", self.value.into()),
+            ("threshold", self.threshold.into()),
+        ])
+    }
+}
+
+/// The monitor's verdict on one time-series: the edge log plus the
+/// burn-rate trajectories (one value per epoch, fast and slow window).
+#[derive(Debug, Clone)]
+pub struct MonitorReport {
+    pub alerts: Vec<Alert>,
+    pub burn_fast: Vec<f64>,
+    pub burn_slow: Vec<f64>,
+}
+
+impl MonitorReport {
+    /// First `fire` edge of `rule`, if any.
+    pub fn first_fire(&self, rule: &str) -> Option<&Alert> {
+        self.alerts.iter().find(|a| a.rule == rule && a.edge == AlertEdge::Fire)
+    }
+
+    /// Total number of `fire` edges.
+    pub fn fire_count(&self) -> usize {
+        self.alerts.iter().filter(|a| a.edge == AlertEdge::Fire).count()
+    }
+
+    /// `fire` edges strictly before `epoch` — everything that fired
+    /// while the fleet was provably healthy.
+    pub fn fires_before(&self, epoch: usize) -> usize {
+        self.alerts
+            .iter()
+            .filter(|a| a.edge == AlertEdge::Fire && a.epoch < epoch)
+            .count()
+    }
+
+    /// Peak fast-window burn rate over the horizon.
+    pub fn max_burn(&self) -> f64 {
+        self.burn_fast.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("alerts", Json::Arr(self.alerts.iter().map(Alert::to_json).collect())),
+            ("fires", self.fire_count().into()),
+            ("burn_fast", Json::Arr(self.burn_fast.iter().map(|&b| b.into()).collect())),
+            ("burn_slow", Json::Arr(self.burn_slow.iter().map(|&b| b.into()).collect())),
+        ])
+    }
+}
+
+/// The alerting engine: stateless between [`evaluate`](Monitor::evaluate)
+/// calls, deterministic within one.
+#[derive(Debug, Clone, Default)]
+pub struct Monitor {
+    cfg: MonitorConfig,
+}
+
+impl Monitor {
+    pub fn new(cfg: MonitorConfig) -> Monitor {
+        Monitor { cfg }
+    }
+
+    /// Burn rate over the trailing `window` epochs ending at `epoch`
+    /// (inclusive); 0 until the window has filled.
+    fn burn(&self, ts: &TimeSeries, epoch: usize, window: usize) -> f64 {
+        if window == 0 || epoch + 1 < window {
+            return 0.0;
+        }
+        let (mut bad, mut total) = (0u64, 0u64);
+        for e in (epoch + 1 - window)..=epoch {
+            let (responses, over_slo, rejections) = ts.fleet_epoch_totals(e);
+            bad += over_slo + rejections;
+            total += responses + rejections;
+        }
+        if total == 0 || self.cfg.budget <= 0.0 {
+            return 0.0;
+        }
+        (bad as f64 / total as f64) / self.cfg.budget
+    }
+
+    /// Evaluate every rule over every epoch of the series, producing
+    /// the latched fire/clear edge log and burn trajectories.
+    pub fn evaluate(&self, ts: &TimeSeries) -> MonitorReport {
+        let epochs = ts.epochs();
+        let pools = ts.pools();
+        let mut alerts: Vec<Alert> = Vec::new();
+        let mut burn_fast = Vec::with_capacity(epochs);
+        let mut burn_slow = Vec::with_capacity(epochs);
+        // latched active-state per rule: [fast, slow] fleet-wide, then
+        // per-pool death/degrade
+        let mut active_fast = false;
+        let mut active_slow = false;
+        let mut active_death = vec![false; pools];
+        let mut active_degrade = vec![false; pools];
+
+        let mut edge = |alerts: &mut Vec<Alert>,
+                        active: &mut bool,
+                        cond: bool,
+                        rule: &'static str,
+                        pool: Option<usize>,
+                        epoch: usize,
+                        value: f64,
+                        threshold: f64| {
+            if cond != *active {
+                *active = cond;
+                let dir = if cond { AlertEdge::Fire } else { AlertEdge::Clear };
+                alerts.push(Alert { rule, pool, epoch, edge: dir, value, threshold });
+            }
+        };
+
+        for e in 0..epochs {
+            let bf = self.burn(ts, e, self.cfg.fast_window);
+            let bs = self.burn(ts, e, self.cfg.slow_window);
+            burn_fast.push(bf);
+            burn_slow.push(bs);
+            edge(
+                &mut alerts,
+                &mut active_fast,
+                bf >= self.cfg.fast_burn,
+                "slo_fast_burn",
+                None,
+                e,
+                bf,
+                self.cfg.fast_burn,
+            );
+            edge(
+                &mut alerts,
+                &mut active_slow,
+                bs >= self.cfg.slow_burn,
+                "slo_slow_burn",
+                None,
+                e,
+                bs,
+                self.cfg.slow_burn,
+            );
+
+            for p in 0..pools {
+                let Some(w) = ts.window(e, p) else { continue };
+
+                // shard death: voided completions are the witness
+                let voided = w.reroutes + w.rejections;
+                edge(
+                    &mut alerts,
+                    &mut active_death[p],
+                    voided >= self.cfg.death_events_min,
+                    "shard_death",
+                    Some(p),
+                    e,
+                    voided as f64,
+                    self.cfg.death_events_min as f64,
+                );
+
+                // shard degrade: p99 drift vs the concurrent cross-pool
+                // baseline, under comparable arrivals
+                let baseline = (0..pools)
+                    .filter(|&q| q != p)
+                    .filter_map(|q| ts.window(e, q))
+                    .filter(|o| {
+                        o.responses > 0
+                            && w.arrivals > 0
+                            && o.arrivals > 0
+                            && w.arrivals.max(o.arrivals) <= 2 * w.arrivals.min(o.arrivals)
+                    })
+                    .map(|o| o.p99)
+                    .max();
+                let (cond, ratio) = match baseline {
+                    Some(base) if w.responses > 0 => {
+                        let ratio = if base == 0 {
+                            if w.p99 == 0 { 1.0 } else { f64::INFINITY }
+                        } else {
+                            w.p99 as f64 / base as f64
+                        };
+                        let drift = w.p99.saturating_sub(base);
+                        (
+                            ratio > self.cfg.degrade_factor
+                                && drift > self.cfg.degrade_margin_cycles,
+                            ratio,
+                        )
+                    }
+                    _ => (false, 1.0),
+                };
+                edge(
+                    &mut alerts,
+                    &mut active_degrade[p],
+                    cond,
+                    "shard_degrade",
+                    Some(p),
+                    e,
+                    ratio,
+                    self.cfg.degrade_factor,
+                );
+            }
+        }
+        MonitorReport { alerts, burn_fast, burn_slow }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::timeseries::WindowSample;
+
+    /// A two-pool series with per-epoch latency lists; SLO = 100.
+    fn series(per_pool: Vec<[Vec<u64>; 2]>) -> TimeSeries {
+        let mut ts = TimeSeries::new(100, 1000);
+        for (e, pools) in per_pool.into_iter().enumerate() {
+            for (p, latencies) in pools.into_iter().enumerate() {
+                ts.record(WindowSample {
+                    epoch: e,
+                    pool: p,
+                    shards: 2,
+                    arrivals: latencies.len() as u64,
+                    latencies,
+                    ..WindowSample::default()
+                });
+            }
+        }
+        ts
+    }
+
+    #[test]
+    fn healthy_series_stays_silent() {
+        let ts = series(vec![
+            [vec![10, 20, 30, 40], vec![15, 25, 35, 45]],
+            [vec![12, 22, 32, 42], vec![11, 21, 31, 41]],
+            [vec![10, 20, 30, 40], vec![15, 25, 35, 45]],
+        ]);
+        let r = Monitor::default().evaluate(&ts);
+        assert_eq!(r.fire_count(), 0, "no rule may fire on a healthy fleet: {:?}", r.alerts);
+        assert!(r.max_burn() == 0.0);
+        assert_eq!(r.burn_fast.len(), 3);
+    }
+
+    #[test]
+    fn burn_rules_fire_and_clear_on_an_slo_cliff() {
+        // epoch 1: every response blows the 100-cycle SLO -> fast burn
+        // = (1.0 bad fraction / 0.05 budget) = 20 >= 8. Epoch 2 is
+        // healthy again -> the fast rule clears; the slow (3-epoch)
+        // window still carries the cliff -> slow stays active.
+        let ts = series(vec![
+            [vec![10; 8], vec![10; 8]],
+            [vec![500; 8], vec![500; 8]],
+            [vec![10; 8], vec![10; 8]],
+        ]);
+        let r = Monitor::default().evaluate(&ts);
+        let fire = r.first_fire("slo_fast_burn").expect("fast rule must fire");
+        assert_eq!(fire.epoch, 1);
+        assert!((fire.value - 20.0).abs() < 1e-9, "burn {}", fire.value);
+        let clear = r
+            .alerts
+            .iter()
+            .find(|a| a.rule == "slo_fast_burn" && a.edge == AlertEdge::Clear)
+            .expect("fast rule must clear");
+        assert_eq!(clear.epoch, 2);
+        let slow = r.first_fire("slo_slow_burn").expect("slow rule sees the 3-epoch window");
+        assert_eq!(slow.epoch, 2, "slow window fills at epoch 2");
+        assert!(r.max_burn() >= 20.0);
+    }
+
+    #[test]
+    fn rejections_burn_budget_without_latency() {
+        let mut ts = series(vec![[vec![10; 4], vec![10; 4]]]);
+        ts.record(WindowSample {
+            epoch: 1,
+            pool: 0,
+            shards: 2,
+            arrivals: 8,
+            rejections: 8,
+            latencies: vec![10; 4],
+            ..WindowSample::default()
+        });
+        ts.record(WindowSample {
+            epoch: 1,
+            pool: 1,
+            shards: 2,
+            arrivals: 4,
+            latencies: vec![10; 4],
+            ..WindowSample::default()
+        });
+        let r = Monitor::default().evaluate(&ts);
+        // 8 bad of 16 total = 0.5 fraction -> burn 10 >= 8
+        let fire = r.first_fire("slo_fast_burn").expect("rejections alone must burn");
+        assert_eq!(fire.epoch, 1);
+    }
+
+    #[test]
+    fn death_detector_is_exact_on_voided_completions() {
+        let mut ts = series(vec![[vec![10; 4], vec![10; 4]]]);
+        ts.record(WindowSample {
+            epoch: 1,
+            pool: 0,
+            shards: 2,
+            arrivals: 4,
+            reroutes: 3,
+            latencies: vec![10; 2],
+            ..WindowSample::default()
+        });
+        ts.record(WindowSample {
+            epoch: 1,
+            pool: 1,
+            shards: 2,
+            arrivals: 4,
+            latencies: vec![10; 4],
+            ..WindowSample::default()
+        });
+        let r = Monitor::default().evaluate(&ts);
+        let fire = r.first_fire("shard_death").expect("reroutes are the death witness");
+        assert_eq!((fire.epoch, fire.pool), (1, Some(0)));
+        assert_eq!(fire.value, 3.0);
+        assert!(r.first_fire("shard_degrade").is_none(), "p99s are comparable");
+    }
+
+    #[test]
+    fn degrade_detector_needs_ratio_and_margin() {
+        // pool 0 drifts to 5x the concurrent baseline with a 360-cycle
+        // absolute gap: fires with margin 300, not with margin 500.
+        let drifted = vec![
+            [vec![80; 8], vec![85; 8]],
+            [vec![450; 8], vec![90; 8]],
+        ];
+        let mk = |margin| {
+            Monitor::new(MonitorConfig { degrade_margin_cycles: margin, ..Default::default() })
+        };
+        let ts = series(drifted.clone());
+        let r = mk(300).evaluate(&ts);
+        let fire = r.first_fire("shard_degrade").expect("5x drift past the margin");
+        assert_eq!((fire.epoch, fire.pool), (1, Some(0)));
+        assert!(fire.value > 4.0);
+        assert_eq!(
+            mk(500).evaluate(&series(drifted)).first_fire("shard_degrade").map(|a| a.epoch),
+            None,
+            "the absolute margin guards small drifts"
+        );
+    }
+
+    #[test]
+    fn degrade_ignores_incomparable_arrivals() {
+        // pool 0 sees 3x the arrivals of pool 1 — outside the 2x band,
+        // so its higher p99 is load, not degradation.
+        let mut ts = TimeSeries::new(100, 1000);
+        ts.record(WindowSample {
+            epoch: 0,
+            pool: 0,
+            shards: 2,
+            arrivals: 12,
+            latencies: vec![400; 12],
+            ..WindowSample::default()
+        });
+        ts.record(WindowSample {
+            epoch: 0,
+            pool: 1,
+            shards: 2,
+            arrivals: 4,
+            latencies: vec![50; 4],
+            ..WindowSample::default()
+        });
+        let r = Monitor::default().evaluate(&ts);
+        assert!(r.first_fire("shard_degrade").is_none());
+    }
+
+    #[test]
+    fn edges_are_latched_and_json_is_deterministic() {
+        let build = || {
+            series(vec![
+                [vec![10; 4], vec![10; 4]],
+                [vec![500; 4], vec![500; 4]],
+                [vec![500; 4], vec![500; 4]],
+                [vec![10; 4], vec![10; 4]],
+            ])
+        };
+        let r = Monitor::default().evaluate(&build());
+        let fast: Vec<_> = r.alerts.iter().filter(|a| a.rule == "slo_fast_burn").collect();
+        assert_eq!(fast.len(), 2, "one fire + one clear, no repeats while latched");
+        assert_eq!(fast[0].edge, AlertEdge::Fire);
+        assert_eq!(fast[1].edge, AlertEdge::Clear);
+        assert!(fast[0].epoch < fast[1].epoch);
+        assert_eq!(
+            r.to_json().dump(),
+            Monitor::default().evaluate(&build()).to_json().dump(),
+            "same series -> byte-identical alert log"
+        );
+        // epochs are nondecreasing in the log (the schema the python
+        // validator enforces)
+        assert!(r.alerts.windows(2).all(|w| w[0].epoch <= w[1].epoch));
+    }
+
+    #[test]
+    fn single_pool_fleet_keeps_degrade_inert() {
+        let mut ts = TimeSeries::new(100, 1000);
+        for e in 0..3 {
+            ts.record(WindowSample {
+                epoch: e,
+                pool: 0,
+                shards: 2,
+                arrivals: 4,
+                latencies: vec![(e as u64 + 1) * 400; 4],
+                ..WindowSample::default()
+            });
+        }
+        let r = Monitor::default().evaluate(&ts);
+        assert!(r.first_fire("shard_degrade").is_none(), "no concurrent baseline, no rule");
+    }
+}

@@ -1,0 +1,318 @@
+//! Windowed time-series over the fleet's epoch clock (PR 10).
+//!
+//! The [`Registry`](super::Registry) answers "what are the totals right
+//! now"; alerting needs "what happened *per window*". A [`TimeSeries`]
+//! is the bridge: the fleet simulator closes one [`PoolWindow`] per
+//! (epoch, pool) at every epoch boundary of `FleetSim::run`, capturing
+//! that window's arrivals, responses, reroutes, rejections, carried
+//! backlog, shared-channel wait and a latency summary (p50/p95/p99 +
+//! the count of responses over the SLO). Everything recorded is a pure
+//! *read* of simulator state, so attaching a time-series never moves a
+//! measured number (pinned by `tests/sim_equivalence.rs`), and the
+//! whole series serializes to one deterministic JSON object the
+//! monitor (`obs::monitor`) and the E16 report consume.
+//!
+//! Timestamps follow the repo-wide convention: 1 device cycle ≡ 1
+//! virtual µs, and a window spans exactly `epoch_cycles` of virtual
+//! time — the fleet's epoch IS the alerting window unit.
+
+use crate::util::json::Json;
+
+use super::registry::Registry;
+
+/// Raw per-window observations handed to [`TimeSeries::record`] — the
+/// series computes the derived summary (quantiles, over-SLO count).
+#[derive(Debug, Clone, Default)]
+pub struct WindowSample {
+    pub epoch: usize,
+    pub pool: usize,
+    /// Shard count at the window's close (post-autoscale).
+    pub shards: usize,
+    /// Requests the router assigned to this pool this epoch (fresh
+    /// arrivals plus retries re-entering at the boundary).
+    pub arrivals: u64,
+    /// Completions voided by a shard death and retried next epoch.
+    pub reroutes: u64,
+    /// Voided completions that exhausted their retries.
+    pub rejections: u64,
+    /// Backlog cycles carried past the epoch boundary (the router's
+    /// and autoscaler's queue-depth signal).
+    pub queue_depth: u64,
+    /// Shared-DRAM-channel wait cycles accrued by this pool's shards
+    /// during the window.
+    pub channel_wait: u64,
+    /// Latency (from original arrival) of every response produced for
+    /// work routed to this pool this epoch.
+    pub latencies: Vec<u64>,
+}
+
+/// One closed per-(epoch, pool) window.
+#[derive(Debug, Clone)]
+pub struct PoolWindow {
+    pub epoch: usize,
+    pub pool: usize,
+    pub shards: usize,
+    pub arrivals: u64,
+    pub responses: u64,
+    pub reroutes: u64,
+    pub rejections: u64,
+    pub queue_depth: u64,
+    pub channel_wait: u64,
+    /// Responses whose latency exceeded the series' SLO.
+    pub over_slo: u64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+}
+
+/// Nearest-rank quantile on an ascending-sorted slice (the same
+/// convention `e10_serving::percentile` uses); 0 on an empty window.
+pub fn quantile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() as f64) * q).ceil() as usize;
+    sorted[idx.saturating_sub(1).min(sorted.len() - 1)]
+}
+
+/// The per-epoch fleet time-series: windows ordered by (epoch, pool),
+/// one per pool per executed epoch (drain epochs past the traffic
+/// horizon included).
+#[derive(Debug, Clone)]
+pub struct TimeSeries {
+    slo_cycles: u64,
+    epoch_cycles: u64,
+    windows: Vec<PoolWindow>,
+}
+
+impl TimeSeries {
+    pub fn new(slo_cycles: u64, epoch_cycles: u64) -> TimeSeries {
+        TimeSeries { slo_cycles, epoch_cycles, windows: Vec::new() }
+    }
+
+    /// The SLO every window's `over_slo` was judged against.
+    pub fn slo_cycles(&self) -> u64 {
+        self.slo_cycles
+    }
+
+    /// Virtual-time width of one window.
+    pub fn epoch_cycles(&self) -> u64 {
+        self.epoch_cycles
+    }
+
+    /// Close one window. Samples must arrive in (epoch, pool) order —
+    /// the fleet's epoch loop guarantees it, and the series enforces it
+    /// so the JSON export is ordered by construction.
+    pub fn record(&mut self, mut s: WindowSample) {
+        // (map_or, not Option::is_none_or: that's a 1.82 API and the
+        // crate's MSRV is 1.74)
+        debug_assert!(
+            self.windows.last().map_or(true, |w| (w.epoch, w.pool) < (s.epoch, s.pool)),
+            "windows must close in (epoch, pool) order"
+        );
+        s.latencies.sort_unstable();
+        let over_slo = s.latencies.iter().filter(|&&l| l > self.slo_cycles).count() as u64;
+        self.windows.push(PoolWindow {
+            epoch: s.epoch,
+            pool: s.pool,
+            shards: s.shards,
+            arrivals: s.arrivals,
+            responses: s.latencies.len() as u64,
+            reroutes: s.reroutes,
+            rejections: s.rejections,
+            queue_depth: s.queue_depth,
+            channel_wait: s.channel_wait,
+            over_slo,
+            p50: quantile(&s.latencies, 0.50),
+            p95: quantile(&s.latencies, 0.95),
+            p99: quantile(&s.latencies, 0.99),
+        });
+    }
+
+    pub fn windows(&self) -> &[PoolWindow] {
+        &self.windows
+    }
+
+    /// Number of executed epochs covered (max epoch + 1).
+    pub fn epochs(&self) -> usize {
+        self.windows.last().map_or(0, |w| w.epoch + 1)
+    }
+
+    /// Number of distinct pools observed.
+    pub fn pools(&self) -> usize {
+        self.windows.iter().map(|w| w.pool + 1).max().unwrap_or(0)
+    }
+
+    /// One (epoch, pool) window, if that epoch executed.
+    pub fn window(&self, epoch: usize, pool: usize) -> Option<&PoolWindow> {
+        self.windows.iter().find(|w| w.epoch == epoch && w.pool == pool)
+    }
+
+    /// Fleet-wide (responses, over_slo, rejections) sums for one epoch
+    /// — the burn-rate rule's per-epoch good/bad event totals.
+    pub fn fleet_epoch_totals(&self, epoch: usize) -> (u64, u64, u64) {
+        let mut t = (0, 0, 0);
+        for w in self.windows.iter().filter(|w| w.epoch == epoch) {
+            t.0 += w.responses;
+            t.1 += w.over_slo;
+            t.2 += w.rejections;
+        }
+        t
+    }
+
+    /// Deterministic JSON: `{"slo_cycles", "epoch_cycles", "windows":
+    /// [...]}` with windows in (epoch, pool) order.
+    pub fn to_json(&self) -> Json {
+        let windows: Vec<Json> = self
+            .windows
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("epoch", w.epoch.into()),
+                    ("pool", w.pool.into()),
+                    ("shards", w.shards.into()),
+                    ("arrivals", w.arrivals.into()),
+                    ("responses", w.responses.into()),
+                    ("reroutes", w.reroutes.into()),
+                    ("rejections", w.rejections.into()),
+                    ("queue_depth", w.queue_depth.into()),
+                    ("channel_wait", w.channel_wait.into()),
+                    ("over_slo", w.over_slo.into()),
+                    ("p50", w.p50.into()),
+                    ("p95", w.p95.into()),
+                    ("p99", w.p99.into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("slo_cycles", self.slo_cycles.into()),
+            ("epoch_cycles", self.epoch_cycles.into()),
+            ("windows", Json::Arr(windows)),
+        ])
+    }
+
+    /// Publish the latest window per pool (gauges) and whole-run totals
+    /// (counters) into a [`Registry`] under `fleet.pool<p>.*` /
+    /// `fleet.total.*` — the registry half of the monitoring layer, so
+    /// one snapshot carries both the subsystem totals and the fleet's
+    /// current health.
+    pub fn publish(&self, reg: &Registry) {
+        let pools = self.pools();
+        for p in 0..pools {
+            if let Some(w) = self.windows.iter().rev().find(|w| w.pool == p) {
+                let pre = format!("fleet.pool{p}");
+                reg.gauge_set(&format!("{pre}.shards"), w.shards as f64);
+                reg.gauge_set(&format!("{pre}.arrivals"), w.arrivals as f64);
+                reg.gauge_set(&format!("{pre}.queue_depth"), w.queue_depth as f64);
+                reg.gauge_set(&format!("{pre}.p99"), w.p99 as f64);
+            }
+        }
+        let (mut responses, mut over_slo, mut rejections) = (0u64, 0u64, 0u64);
+        for w in &self.windows {
+            responses += w.responses;
+            over_slo += w.over_slo;
+            rejections += w.rejections;
+        }
+        reg.counter_set("fleet.total.responses", responses);
+        reg.counter_set("fleet.total.over_slo", over_slo);
+        reg.counter_set("fleet.total.rejections", rejections);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(epoch: usize, pool: usize, latencies: Vec<u64>) -> WindowSample {
+        WindowSample {
+            epoch,
+            pool,
+            shards: 2,
+            arrivals: latencies.len() as u64,
+            latencies,
+            ..WindowSample::default()
+        }
+    }
+
+    #[test]
+    fn quantile_matches_nearest_rank() {
+        assert_eq!(quantile(&[], 0.99), 0);
+        assert_eq!(quantile(&[7], 0.5), 7);
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(quantile(&v, 0.50), 50);
+        assert_eq!(quantile(&v, 0.95), 95);
+        assert_eq!(quantile(&v, 0.99), 99);
+        assert_eq!(quantile(&v, 1.0), 100);
+    }
+
+    #[test]
+    fn windows_summarize_latencies_against_the_slo() {
+        let mut ts = TimeSeries::new(100, 1000);
+        ts.record(sample(0, 0, vec![150, 50, 90, 101]));
+        let w = &ts.windows()[0];
+        assert_eq!(w.responses, 4);
+        assert_eq!(w.over_slo, 2, "150 and 101 exceed the 100-cycle SLO");
+        assert_eq!(w.p50, 90);
+        assert_eq!(w.p99, 150);
+        assert_eq!(ts.epochs(), 1);
+        assert_eq!(ts.pools(), 1);
+    }
+
+    #[test]
+    fn fleet_totals_sum_across_pools() {
+        let mut ts = TimeSeries::new(10, 100);
+        ts.record(sample(0, 0, vec![5, 20]));
+        ts.record(sample(0, 1, vec![30]));
+        ts.record(sample(1, 0, vec![1]));
+        assert_eq!(ts.fleet_epoch_totals(0), (3, 2, 0));
+        assert_eq!(ts.fleet_epoch_totals(1), (1, 0, 0));
+        assert_eq!(ts.window(0, 1).unwrap().p99, 30);
+        assert!(ts.window(2, 0).is_none());
+    }
+
+    #[test]
+    fn json_is_deterministic_and_ordered() {
+        let build = || {
+            let mut ts = TimeSeries::new(10, 100);
+            ts.record(sample(0, 0, vec![3, 1, 2]));
+            ts.record(sample(0, 1, vec![8]));
+            ts.record(sample(1, 0, Vec::new()));
+            ts
+        };
+        let (a, b) = (build(), build());
+        assert_eq!(a.to_json().dump(), b.to_json().dump());
+        let j = a.to_json();
+        let wins = j.get("windows").unwrap().as_arr().unwrap();
+        assert_eq!(wins.len(), 3);
+        assert_eq!(wins[0].get("epoch").unwrap().as_usize(), Some(0));
+        assert_eq!(wins[2].get("epoch").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("slo_cycles").unwrap().as_usize(), Some(10));
+    }
+
+    #[test]
+    fn publish_lands_gauges_and_totals_in_the_registry() {
+        let mut ts = TimeSeries::new(10, 100);
+        ts.record(sample(0, 0, vec![5, 20]));
+        ts.record(sample(1, 0, vec![7]));
+        let reg = Registry::new();
+        ts.publish(&reg);
+        let snap = reg.snapshot();
+        assert_eq!(
+            snap.get("fleet.pool0.p99").and_then(|g| g.get("value")).and_then(Json::as_f64),
+            Some(7.0),
+            "gauges reflect the latest window"
+        );
+        assert_eq!(
+            snap.get("fleet.total.responses")
+                .and_then(|c| c.get("value"))
+                .and_then(Json::as_f64),
+            Some(3.0)
+        );
+        assert_eq!(
+            snap.get("fleet.total.over_slo")
+                .and_then(|c| c.get("value"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+    }
+}

@@ -13,12 +13,16 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
+use anyhow::Result;
 use snnap_c::bench_suite::workload;
-use snnap_c::coordinator::{BatchPolicy, ClientScript, PoolSim, SimReport, SimRequest};
+use snnap_c::coordinator::{
+    BatchPolicy, ClientScript, Failure, FailureKind, FleetRequest, FleetSim, FleetSpec, PoolSim,
+    PoolTopology, SimReport, SimRequest,
+};
 use snnap_c::experiments::e9_cache::{build_hierarchy, build_hierarchy_on, dram_for};
 use snnap_c::experiments::program_from_workload;
 use snnap_c::experiments::stack::StackSpec;
-use snnap_c::experiments::{e10_serving, e11_slo, e14_tenancy, e15_fleet, selfbench};
+use snnap_c::experiments::{e10_serving, e11_slo, e14_tenancy, e15_fleet, e16_monitor, selfbench};
 use snnap_c::fixed::Q7_8;
 use snnap_c::mem::{lock_hub, ArbiterPolicy, ChannelConfig, ChannelHub, DramChannel, SharedChannel};
 use snnap_c::npu::{NpuConfig, NpuDevice, NpuProgram};
@@ -599,6 +603,123 @@ fn e15_fleet_rows_are_deterministic_and_conserve_requests_under_failures() {
         );
         assert!(r.requests > 0 && r.shard_cycles > 0, "the fleet must actually serve");
     }
+}
+
+/// PR-10 monitoring contract, half 1: attaching the per-epoch
+/// time-series layer to `FleetSim` must not move a single number —
+/// windows are pure reads of state the run computes anyway. Runs the
+/// E15/E16 serving stack (shared channel, compressed hierarchies,
+/// degraded-shard rebuilds) with both failure kinds injected, so the
+/// reroute/retry and topology-rebuild paths are pinned too.
+#[test]
+fn fleet_monitoring_on_or_off_is_bit_identical_on_the_serving_stack() {
+    let w = workload("sobel").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 9);
+    let mut probe = NpuDevice::new(NpuConfig::default(), program.clone()).unwrap();
+    let inputs = vec![vec![0.25f32; program.input_dim()]; 4];
+    let per_item = (probe.execute_batch(&inputs).unwrap().total_cycles / 4).max(1);
+    let epoch_cycles = per_item * 8;
+    let spec = FleetSpec {
+        pools: 2,
+        start_shards: 2,
+        max_shards: 3,
+        epochs: 5,
+        epoch_cycles,
+        warmup_cycles: per_item,
+        max_retries: 2,
+        route_cost: per_item,
+        failures: vec![
+            Failure { epoch: 1, pool: 0, kind: FailureKind::Death },
+            Failure { epoch: 3, pool: 1, kind: FailureKind::Degrade },
+        ],
+    };
+    let pol = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 1 << 16,
+    };
+    let base = StackSpec::new(NpuConfig::default(), "bdi+fpc")
+        .geometry(e15_fleet::E15_CACHE)
+        .shared_channel(ArbiterPolicy::Fifo);
+    let factory = |topo: &PoolTopology| -> Result<PoolSim> {
+        let mut stack = base.clone().shards(topo.shards);
+        for (s, degraded) in topo.degraded.iter().enumerate() {
+            if *degraded {
+                stack = stack.slow_shard(s, epoch_cycles);
+            }
+        }
+        stack.build(&program)?.into_pool(pol)
+    };
+    let mut rng = Rng::new(21);
+    let dim = program.input_dim();
+    let n = 48usize;
+    let trace: Vec<FleetRequest> = (0..n)
+        .map(|i| FleetRequest {
+            arrival: i as u64 * (epoch_cycles * 4) / n as u64,
+            input: (0..dim).map(|_| rng.f32() - 0.5).collect(),
+            class: (i % 2) as u32,
+        })
+        .collect();
+    let plain = FleetSim::new(spec.clone(), &factory).unwrap().run(&trace).unwrap();
+    let observed = FleetSim::new(spec, &factory)
+        .unwrap()
+        .with_monitoring(8 * epoch_cycles)
+        .run(&trace)
+        .unwrap();
+    assert!(plain.timeseries.is_none(), "monitoring is opt-in");
+    assert_eq!(plain.requests, observed.requests, "requests");
+    assert_eq!(plain.responses, observed.responses, "responses");
+    assert_eq!(plain.rejected, observed.rejected, "rejected");
+    assert_eq!(plain.reroutes, observed.reroutes, "reroutes");
+    assert_eq!(plain.scale_ups, observed.scale_ups, "scale_ups");
+    assert_eq!(plain.scale_downs, observed.scale_downs, "scale_downs");
+    assert_eq!(plain.shard_cycles, observed.shard_cycles, "shard_cycles");
+    assert_eq!(plain.makespan, observed.makespan, "makespan");
+    assert_eq!(plain.latencies, observed.latencies, "latencies");
+    assert_eq!(plain.final_shards, observed.final_shards, "final_shards");
+    let ts = observed.timeseries.expect("monitoring must record windows");
+    assert_eq!(ts.pools(), 2);
+    assert!(ts.epochs() >= 5, "one window set per executed epoch");
+    let total: u64 = ts.windows().iter().map(|win| win.responses).sum();
+    assert_eq!(total, observed.responses, "windows account for every response");
+}
+
+/// PR-10 monitoring contract, half 2: the E16 sweep is seeded end to
+/// end — two same-seed runs serialize byte-identically, *including*
+/// the alert log and burn trajectories — and its headline holds: both
+/// injected faults are caught from the metrics alone, the clean run
+/// stays silent, and conservation survives every mode.
+#[test]
+fn e16_rows_are_byte_identical_at_equal_seeds_including_the_alert_log() {
+    let w = workload("sobel").unwrap();
+    let program = program_from_workload(w.as_ref(), Q7_8, 9);
+    let tuning = e16_monitor::MonitorTuning { epochs: 6, ..Default::default() };
+    let run = || {
+        e16_monitor::measure_all_on(
+            NpuConfig::default(),
+            w.as_ref(),
+            &program,
+            "bdi",
+            8,
+            4,
+            33,
+            &tuning,
+        )
+        .unwrap()
+    };
+    let rows = run();
+    let dump = |rs: &[e16_monitor::E16Row]| {
+        rs.iter().map(|r| r.to_json().dump()).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(dump(&rows), dump(&run()), "same-seed E16 reports must be byte-identical");
+    assert!(dump(&rows).contains("\"alerts\""), "the alert log rides the row JSON");
+    for r in &rows {
+        assert_eq!(r.responses + r.rejected, r.requests, "{}: conservation", r.mode);
+        assert_eq!(r.false_positives, 0, "{}: alert fired while healthy", r.mode);
+    }
+    assert_eq!(rows[0].alerts_fired, 0, "clean run must be silent");
+    assert!(rows[1].detected, "injected death must be detected");
+    assert!(rows[2].detected, "injected degrade must be detected");
 }
 
 #[test]

@@ -45,8 +45,10 @@ scheme must beat ``none`` on both weight-fill cycles and DRAM bytes
 (the E12 acceptance criterion); and when the report carries E15 fleet
 cells, at least one compressed scheme must meet the serving SLO with
 strictly fewer provisioned shard-cycles than ``none`` (compression buys
-fleet capacity, not just latency) — so the job fails on real
-regressions even in the bootstrap state. A report row missing a required metric key
+fleet capacity, not just latency); and when the report carries E16
+monitoring cells, every injected shard death/degrade must be detected
+within 2 epochs and no alert may fire on a provably healthy fleet —
+so the job fails on real regressions even in the bootstrap state. A report row missing a required metric key
 is a pipeline error named per (experiment, key), exit 2 — never a raw
 ``KeyError`` traceback. Only the standard library is used.
 
@@ -98,7 +100,9 @@ def extract_metrics(report: dict) -> dict:
     informational; the priced ``p99_cycles`` joins the hard cycle gate),
     ``e15/<label>/x<pools>`` (fleet p99 joins the hard cycle gate;
     shard-cycles / cost-per-QPS / reroutes feed the E15 capacity
-    invariant), and ``selfbench/<label>/<component>`` (exact
+    invariant), ``e16/<label>/<mode>`` (monitored-fleet p99 joins the
+    hard cycle gate; detection latency / false positives feed the E16
+    monitoring invariant), and ``selfbench/<label>/<component>`` (exact
     ``sim_cycles`` gated hard; wall-clock throughput gated with the
     noise floor + retry policy).
     """
@@ -172,6 +176,18 @@ def extract_metrics(report: dict) -> dict:
                 "rejected": require(row, "rejected", key),
                 "met_slo": require(row, "met_slo", key),
             }
+    for entry in experiments.get("e16", []):
+        for row in entry.get("rows", []):
+            key = f"{entry['label']}/{require(row, 'mode', entry['label'])}"
+            out[key] = {
+                "p99_cycles": require(row, "p99_cycles", key),
+                "injected_epoch": require(row, "injected_epoch", key),
+                "detected": require(row, "detected", key),
+                "detection_latency": require(row, "detection_latency", key),
+                "false_positives": require(row, "false_positives", key),
+                "alerts_fired": require(row, "alerts_fired", key),
+                "burn_rate": require(row, "burn_rate", key),
+            }
     for entry in experiments.get("selfbench", []):
         for row in entry.get("rows", []):
             key = f"{entry['label']}/{require(row, 'component', entry['label'])}"
@@ -207,6 +223,12 @@ def check_invariants(metrics: dict) -> list:
       construction — at least one compressed scheme must meet the SLO
       using strictly fewer provisioned shard-cycles than ``none``.
       A no-op when the report carries no comparable E15 cells.
+    * E16 monitoring (the PR-10 acceptance criterion): every E16 cell
+      with an injected fault (``injected_epoch >= 0``) must be detected
+      with ``detection_latency`` in [0, 2] epochs, and no cell — clean
+      or faulted — may carry a false positive (an alert fired while the
+      fleet was provably healthy). A no-op when the report carries no
+      E16 cells.
 
     Returns failure messages; empty when the invariants hold or the
     relevant cells are absent.
@@ -215,6 +237,7 @@ def check_invariants(metrics: dict) -> list:
         check_e12_invariant(metrics)
         + check_e14_invariant(metrics)
         + check_e15_invariant(metrics)
+        + check_e16_invariant(metrics)
     )
 
 
@@ -322,6 +345,59 @@ def check_e15_invariant(metrics: dict) -> list:
         "meeting the SLO with strictly fewer shard-cycles than `none` "
         "(compression should buy fleet capacity, not just latency)"
     ]
+
+
+#: E16 invariant bound: an injected fault must raise its alert within
+#: this many epochs of the injection (the fast burn window is 1 epoch
+#: and both detectors read the injection epoch's own window, so 2 is
+#: already generous — a miss means the detector broke).
+DETECTION_LATENCY_BOUND = 2
+
+
+def check_e16_invariant(metrics: dict) -> list:
+    # e16 keys look like e16/<kernel>/<scheme>/<mode>; the three mode
+    # cells of one (kernel, scheme) saw the identical request stream,
+    # so ground truth is exact: a fault row must alert promptly, and
+    # nothing may ever fire while the fleet was provably healthy
+    cells = {}
+    for key, row in metrics.items():
+        parts = key.split("/")
+        if len(parts) != 4 or parts[0] != "e16":
+            continue
+        cells[key] = row
+    if not cells:
+        return []
+    failures = []
+    faults = 0
+    worst_latency = 0
+    for key, row in sorted(cells.items()):
+        if row["false_positives"] > 0:
+            failures.append(
+                f"{key}: {row['false_positives']:.0f} alert(s) fired while the "
+                f"fleet was provably healthy (false positives must be 0)"
+            )
+        if row["injected_epoch"] < 0:
+            continue  # clean mode: silence is checked above
+        faults += 1
+        if not row["detected"]:
+            failures.append(
+                f"{key}: injected fault at epoch {row['injected_epoch']:.0f} "
+                f"was never detected"
+            )
+        elif not 0 <= row["detection_latency"] <= DETECTION_LATENCY_BOUND:
+            failures.append(
+                f"{key}: detection latency {row['detection_latency']:.0f} epochs "
+                f"outside [0, {DETECTION_LATENCY_BOUND}]"
+            )
+        else:
+            worst_latency = max(worst_latency, row["detection_latency"])
+    if not failures:
+        print(
+            f"invariant ok: e16 detected all {faults} injected fault(s) within "
+            f"{worst_latency:.0f} epoch(s), zero false positives across "
+            f"{len(cells)} cells"
+        )
+    return failures
 
 
 def compare(baseline: dict, current_metrics: dict, max_regress: float) -> list:
